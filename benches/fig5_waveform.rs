@@ -1,0 +1,52 @@
+//! Figure 5 reproduction: A-NEURON circuit waveform (input, integration
+//! voltage, output spike) plus verification of the paper's operating
+//! point (97 nW, 6.72 ns).
+
+use menage::analog::{ANeuron, AnalogParams};
+use menage::bench::{ascii_chart, emit_series, Bencher};
+use menage::util::rng::Rng;
+
+fn main() {
+    let mut an = ANeuron::new(1, AnalogParams::paper());
+    an.enable_capture();
+    let mut rng = Rng::new(11);
+    for step in 0..60 {
+        let packet = if (step / 10) % 2 == 0 && rng.bernoulli(0.8) {
+            rng.uniform(0.2, 0.45)
+        } else {
+            0.0
+        };
+        an.process(0, packet, 1.0, 0.0);
+        an.lif_leak(0.9);
+    }
+    let wf = an.waveform().to_vec();
+    let t_ns: Vec<f64> = wf.iter().map(|p| p.t * 1e9).collect();
+    let v_in: Vec<f64> = wf.iter().map(|p| p.v_in).collect();
+    let v_integ: Vec<f64> = wf.iter().map(|p| p.v_integ).collect();
+    let v_out: Vec<f64> = wf.iter().map(|p| p.v_out).collect();
+
+    emit_series("fig5_input", &t_ns, &v_in);
+    emit_series("fig5_integration", &t_ns, &v_integ);
+    emit_series("fig5_output", &t_ns, &v_out);
+    println!("{}", ascii_chart("fig5: integration voltage (V)", &v_integ, 8));
+    println!("{}", ascii_chart("fig5: output spikes (V)", &v_out, 3));
+
+    let pulses = v_out.iter().filter(|&&v| v > 0.5).count();
+    let power_nw = an.average_power() * 1e9;
+    println!(
+        "operating point: {:.1} nW (paper 97 nW), {:.2} ns/op (paper 6.72 ns), \
+         {pulses} output pulses",
+        power_nw,
+        an.params.neuron_delay * 1e9
+    );
+    assert!((power_nw - 97.0).abs() < 1.0, "power calibration drifted");
+
+    // Timing: how fast the behavioural model simulates A-NEURON ops.
+    let b = Bencher::default();
+    let mut an2 = ANeuron::new(16, AnalogParams::paper());
+    let r = b.run("aneuron_process_op", || an2.process(3, 0.1, 1.0, 0.0));
+    println!(
+        "simulation speed: {:.1} M A-NEURON ops/s",
+        r.throughput(1.0) / 1e6
+    );
+}

@@ -1,0 +1,126 @@
+//! Figures 6 & 7 reproduction: average MEM_S&N utilization per time step
+//! while one input streams through Accel₁ (N-MNIST) and Accel₂
+//! (CIFAR10-DVS), per MX-NEURACORE.
+//!
+//! The paper's headline observations to reproduce:
+//!   * utilization stays low most of the time (event sparsity);
+//!   * bursts appear at specific steps/layers when many spikes coincide;
+//!   * CIFAR10-DVS ≫ N-MNIST activity and hence memory usage.
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::bench::{ascii_chart, emit_series};
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::datasets::{Dataset, DatasetKind};
+use menage::mapping::Strategy;
+use menage::runtime::artifacts_dir;
+use menage::snn::{QuantNetwork, SpikeTrain};
+use menage::trace::MemoryTrace;
+use menage::util::rng::Rng;
+use menage::util::tensorfile::TensorFile;
+
+fn network(base: &str, mcfg: &ModelConfig) -> QuantNetwork {
+    TensorFile::load(artifacts_dir().join(format!("{base}.weights.mtz")))
+        .and_then(|tf| QuantNetwork::from_tensorfile(base, &tf))
+        .unwrap_or_else(|_| {
+            let mut rng = Rng::new(7);
+            QuantNetwork::random(mcfg, 0.5, &mut rng)
+        })
+}
+
+fn eval_inputs(base: &str, kind: DatasetKind, t: usize, n: usize) -> Vec<SpikeTrain> {
+    if let Ok(tf) = TensorFile::load(artifacts_dir().join(format!("{base}.eval.mtz"))) {
+        if let Ok(ev) = tf.get("events") {
+            let dims = ev.dims().to_vec();
+            if dims[1] == t {
+                let raw = ev.as_u8().unwrap();
+                let (cnt, t, d) = (dims[0].min(n), dims[1], dims[2]);
+                return (0..cnt)
+                    .map(|i| {
+                        let mut st = SpikeTrain::new(d, t);
+                        for (ti, step) in st.spikes.iter_mut().enumerate() {
+                            for j in 0..d {
+                                if raw[i * t * d + ti * d + j] != 0 {
+                                    step.push(j as u32);
+                                }
+                            }
+                        }
+                        st
+                    })
+                    .collect();
+            }
+        }
+    }
+    let ds = Dataset::new(kind, 5, t);
+    ds.balanced_split(n, 0).into_iter().map(|s| s.events).collect()
+}
+
+fn run_fig(
+    fig: &str,
+    base: &str,
+    mcfg: &ModelConfig,
+    cfg: &AcceleratorConfig,
+    kind: DatasetKind,
+    samples: usize,
+) -> MemoryTrace {
+    let net = network(base, mcfg);
+    let inputs = eval_inputs(base, kind, net.timesteps, samples);
+    let mut chip =
+        Menage::build(&net, cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    for st in &inputs {
+        chip.run(st).unwrap();
+    }
+    let trace = MemoryTrace::from_chip(&chip, kind.name(), net.timesteps, inputs.len());
+    println!(
+        "\n== {fig}: {} on {} ({} samples averaged) ==",
+        kind.name(),
+        cfg.name,
+        inputs.len()
+    );
+    for core in &trace.cores {
+        let x: Vec<f64> = (0..core.kb_per_step.len()).map(|i| i as f64).collect();
+        emit_series(&format!("{fig}_core{}", core.core), &x, &core.kb_per_step);
+        println!(
+            "{}",
+            ascii_chart(
+                &format!("{fig} core {} MEM_S&N KB/step", core.core),
+                &core.kb_per_step,
+                5
+            )
+        );
+    }
+    println!("mean {:.1} KB, peak {:.1} KB", trace.mean_kb(), trace.peak_kb());
+    trace
+}
+
+fn main() {
+    let f6 = run_fig(
+        "fig6",
+        "nmnist",
+        &ModelConfig::nmnist_mlp(),
+        &AcceleratorConfig::accel1(),
+        DatasetKind::NMnist,
+        16,
+    );
+    let f7 = run_fig(
+        "fig7",
+        "cifar_small",
+        &ModelConfig::cifar10dvs_mlp_small(),
+        &AcceleratorConfig::accel2(),
+        DatasetKind::Cifar10DvsSmall,
+        12,
+    );
+
+    println!("\n== shape checks ==");
+    println!(
+        "CIFAR10-DVS mean ({:.1} KB) > N-MNIST mean ({:.1} KB): {}",
+        f7.mean_kb(),
+        f6.mean_kb(),
+        if f7.mean_kb() > f6.mean_kb() { "holds" } else { "FAILS" }
+    );
+    println!(
+        "bursty (peak/mean) — fig6: {:.1}×, fig7: {:.1}×",
+        f6.peak_kb() / f6.mean_kb().max(1e-9),
+        f7.peak_kb() / f7.mean_kb().max(1e-9)
+    );
+}

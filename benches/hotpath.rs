@@ -1,0 +1,72 @@
+//! Hot-path microbenchmarks (§Perf): simulator event-dispatch throughput,
+//! reference-model throughput, end-to-end sample latency, and coordinator
+//! scaling — the numbers the performance pass optimizes and EXPERIMENTS.md
+//! §Perf records.
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::bench::Bencher;
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::coordinator::Coordinator;
+use menage::datasets::{Dataset, DatasetKind};
+use menage::mapping::Strategy;
+use menage::snn::{reference_forward, QuantNetwork, SpikeTrain};
+use menage::util::rng::Rng;
+
+fn main() {
+    let mut mcfg = ModelConfig::nmnist_mlp();
+    mcfg.timesteps = 10;
+    let mut rng = Rng::new(3);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let cfg = AcceleratorConfig::accel1();
+    let ds = Dataset::new(DatasetKind::NMnist, 5, mcfg.timesteps);
+    let samples: Vec<SpikeTrain> =
+        ds.balanced_split(8, 0).into_iter().map(|s| s.events).collect();
+
+    let b = Bencher::default();
+
+    // Reference model (the digital golden): samples/s and synaptic events/s.
+    let r = b.run("reference_forward", || {
+        reference_forward(&net, &samples[0]).unwrap()
+    });
+    println!("  reference: {:.1} samples/s", r.throughput(1.0));
+
+    // Cycle-accurate chip: per-sample latency and synaptic-event rate.
+    let mut chip =
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let mut i = 0usize;
+    let r = b.run("chip_run_sample", || {
+        i = (i + 1) % samples.len();
+        chip.run(&samples[i]).unwrap()
+    });
+    let macs_per_run = chip.total_macs() as f64 / chip.inputs_processed as f64;
+    println!(
+        "  simulator: {:.1} samples/s, {:.1} M synaptic events/s (sim speed)",
+        r.throughput(1.0),
+        r.throughput(macs_per_run) / 1e6
+    );
+
+    // Mapping (build-time path).
+    b.run("menage_build_full", || {
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap()
+    });
+
+    // Coordinator scaling: 1 vs 4 workers on a 256-sample batch.
+    for workers in [1usize, 4] {
+        let chip =
+            Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+        let batch: Vec<(SpikeTrain, Option<usize>)> = (0..256)
+            .map(|k| (samples[k % samples.len()].clone(), Some(0)))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let mut coord = Coordinator::new(&chip, workers);
+        let res = coord.run_batch(batch).unwrap();
+        let dt = t0.elapsed();
+        coord.shutdown();
+        println!(
+            "  coordinator x{workers}: {} samples in {dt:?} → {:.1} samples/s",
+            res.len(),
+            res.len() as f64 / dt.as_secs_f64()
+        );
+    }
+}

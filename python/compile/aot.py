@@ -1,0 +1,145 @@
+"""AOT compile path: train → prune → quantize → export (Algorithm 1).
+
+Artifacts written to ``--out`` (default ``../artifacts``):
+
+* ``<model>.hlo.txt``     — the quantized inference function (Pallas-fused,
+  weights baked as constants) lowered to HLO **text** — the interchange
+  format the rust runtime's xla_extension 0.5.1 accepts (jax ≥ 0.5 emits
+  protos with 64-bit ids that it rejects; the text parser reassigns ids —
+  see /opt/xla-example/README.md).
+* ``<model>.weights.mtz`` — quantized weights + scales + LIF metadata, read
+  by the rust mapper (`QuantNetwork::from_tensorfile`).
+* ``<model>.eval.mtz``    — the held-out synthetic eval split (events,
+  labels) plus the JAX model's own predictions, so rust can cross-check
+  the simulator and the PJRT golden model on identical inputs.
+* ``manifest.json``       — summary (accuracies, sparsity, shapes).
+
+Python runs ONCE at build time; the rust binary is self-contained after.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import mtz
+from . import train as trainmod
+from .model import BETA, V_RESET, V_TH, make_inference_fn, snn_forward_quant
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals
+    # as `constant({...})`, which would not round-trip through the rust
+    # text parser — the baked weights must be printed in full.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_model(name: str, result: dict, out_dir: str, log=print) -> dict:
+    cfg = result["config"]
+    qparams = result["qparams"]
+    os.makedirs(out_dir, exist_ok=True)
+
+    # --- weights for the rust mapper -------------------------------------
+    tensors: dict[str, np.ndarray] = {
+        "meta_lif": np.asarray([BETA, V_TH, V_RESET], np.float32),
+        "meta_timesteps": np.asarray([cfg.timesteps], np.int32),
+    }
+    for i, (w_q, scale) in enumerate(qparams):
+        tensors[f"w{i}"] = w_q
+        tensors[f"scale{i}"] = np.asarray([scale], np.float32)
+    wpath = os.path.join(out_dir, f"{name}.weights.mtz")
+    mtz.save(wpath, tensors)
+    log(f"[aot] wrote {wpath}")
+
+    # --- eval split + golden predictions ---------------------------------
+    qp = [(jnp.asarray(w), jnp.float32(s)) for w, s in qparams]
+
+    @jax.jit
+    def golden_counts(e):
+        counts, _ = snn_forward_quant(qp, e, use_pallas=False)
+        return counts
+
+    xs, ys = result["eval_x"], result["eval_y"]
+    counts = np.stack(
+        [np.asarray(golden_counts(jnp.asarray(x, jnp.float32))) for x in xs]
+    )
+    epath = os.path.join(out_dir, f"{name}.eval.mtz")
+    mtz.save(
+        epath,
+        {
+            "events": xs.astype(np.uint8),
+            "labels": ys.astype(np.int32),
+            "golden_counts": counts.astype(np.float32),
+        },
+    )
+    log(f"[aot] wrote {epath}")
+
+    # --- HLO text of the Pallas-fused inference function -----------------
+    infer = make_inference_fn(qp, use_pallas=True, interpret=True)
+    spec = jax.ShapeDtypeStruct((cfg.timesteps, cfg.layer_sizes[0]), jnp.float32)
+    lowered = jax.jit(infer).lower(spec)
+    hlo = to_hlo_text(lowered)
+    hpath = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hpath, "w") as f:
+        f.write(hlo)
+    log(f"[aot] wrote {hpath} ({len(hlo)/1e6:.1f} MB)")
+
+    return {
+        "name": name,
+        "layer_sizes": list(cfg.layer_sizes),
+        "timesteps": cfg.timesteps,
+        "acc_dense": result["acc_dense"],
+        "acc_quant": result["acc_quant"],
+        "eval_samples": int(len(ys)),
+        "hlo": os.path.basename(hpath),
+        "weights": os.path.basename(wpath),
+        "eval": os.path.basename(epath),
+    }
+
+
+MODELS = {
+    "nmnist": trainmod.nmnist_quick,
+    "cifar_small": trainmod.cifar_small_quick,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="nmnist,cifar_small")
+    ap.add_argument("--steps", type=int, default=None, help="override train steps")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    manifest = {}
+    for name in args.models.split(","):
+        name = name.strip()
+        if name not in MODELS:
+            sys.exit(f"unknown model {name!r}; have {sorted(MODELS)}")
+        cfg = MODELS[name]()
+        cfg.seed = args.seed
+        if args.steps is not None:
+            cfg.steps = args.steps
+        result = trainmod.run(cfg)
+        manifest[name] = export_model(name, result, args.out)
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

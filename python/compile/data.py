@@ -1,0 +1,165 @@
+"""Synthetic event-stream datasets (python twin of rust `datasets.rs`).
+
+Same design as the rust generators — seven-segment digit saccades for the
+N-MNIST stand-in, drifting oriented gratings for the CIFAR10-DVS stand-in —
+with matched *statistics* (the training pipeline does not need bit-identical
+streams with rust; cross-language identity is provided instead by exporting
+the evaluation split to ``artifacts/*.eval.mtz``, which both sides read).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_SEGMENTS = np.array(
+    [
+        # a  b  c  d  e  f  g
+        [1, 1, 1, 1, 1, 1, 0],  # 0
+        [0, 1, 1, 0, 0, 0, 0],  # 1
+        [1, 1, 0, 1, 1, 0, 1],  # 2
+        [1, 1, 1, 1, 0, 0, 1],  # 3
+        [0, 1, 1, 0, 0, 1, 1],  # 4
+        [1, 0, 1, 1, 0, 1, 1],  # 5
+        [1, 0, 1, 1, 1, 1, 1],  # 6
+        [1, 1, 1, 0, 0, 0, 0],  # 7
+        [1, 1, 1, 1, 1, 1, 1],  # 8
+        [1, 1, 1, 1, 0, 1, 1],  # 9
+    ],
+    dtype=bool,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    """Geometry + rate parameters of one synthetic dataset."""
+
+    name: str
+    side: int
+    noise_rate: float
+    signal_rate: float
+
+    @property
+    def input_dim(self) -> int:
+        return self.side * self.side * 2
+
+    num_classes: int = 10
+
+
+NMNIST = DatasetSpec(name="nmnist_syn", side=34, noise_rate=0.0015, signal_rate=0.35)
+CIFAR10DVS = DatasetSpec(name="cifar10dvs_syn", side=128, noise_rate=0.004, signal_rate=0.55)
+CIFAR10DVS_SMALL = DatasetSpec(
+    name="cifar10dvs_small_syn", side=32, noise_rate=0.004, signal_rate=0.55
+)
+
+
+def digit_template(label: int, side: int) -> np.ndarray:
+    """Seven-segment digit raster in [0,1], shape [side, side]."""
+    img = np.zeros((side, side), dtype=np.float32)
+    segs = _SEGMENTS[label]
+    x0, x1 = side // 4, side - side // 4 - 1
+    y0, y1 = side // 6, side - side // 6 - 1
+    ym = (y0 + y1) // 2
+    w = 2
+    if segs[0]:
+        img[y0 : y0 + w, x0 : x1 + 1] = 1.0
+    if segs[3]:
+        img[y1 - w + 1 : y1 + 1, x0 : x1 + 1] = 1.0
+    if segs[6]:
+        img[ym : ym + w, x0 : x1 + 1] = 1.0
+    if segs[5]:
+        img[y0 : ym + 1, x0 : x0 + w] = 1.0
+    if segs[1]:
+        img[y0 : ym + 1, x1 - w + 1 : x1 + 1] = 1.0
+    if segs[4]:
+        img[ym : y1 + 1, x0 : x0 + w] = 1.0
+    if segs[2]:
+        img[ym : y1 + 1, x1 - w + 1 : x1 + 1] = 1.0
+    return img
+
+
+def _shift(img: np.ndarray, ox: int, oy: int) -> np.ndarray:
+    """Zero-padded integer shift."""
+    out = np.zeros_like(img)
+    side = img.shape[0]
+    xs = slice(max(0, ox), min(side, side + ox))
+    xd = slice(max(0, -ox), min(side, side - ox))
+    ys = slice(max(0, oy), min(side, side + oy))
+    yd = slice(max(0, -oy), min(side, side - oy))
+    out[ys, xs] = img[yd, xd]
+    return out
+
+
+def gen_nmnist(spec: DatasetSpec, label: int, timesteps: int, rng: np.random.Generator) -> np.ndarray:
+    """Synthetic N-MNIST sample: bool events ``[T, side*side*2]``."""
+    side = spec.side
+    template = digit_template(label, side)
+    saccades = [(1, 0), (0, 1), (-1, -1)]
+    per_phase = max(1, (timesteps + 2) // 3)
+    events = np.zeros((timesteps, spec.input_dim), dtype=bool)
+    for t in range(timesteps):
+        phase = min(t // per_phase, 2)
+        dx, dy = saccades[phase]
+        tp = (t % per_phase) - per_phase // 2
+        ox, oy = dx * tp // 3, dy * tp // 3
+        here = _shift(template, ox, oy)
+        ahead = _shift(template, ox - dx, oy - dy)
+        diff = here - ahead
+        p_on = spec.noise_rate + spec.signal_rate * np.clip(diff, 0, None) + 0.03 * here
+        p_off = spec.noise_rate + spec.signal_rate * np.clip(-diff, 0, None)
+        u = rng.random((2, side, side))
+        on = u[0] < np.minimum(p_on, 0.95)
+        off = u[1] < np.minimum(p_off, 0.95)
+        events[t, : side * side] = on.ravel()
+        events[t, side * side :] = off.ravel()
+    return events
+
+
+def gen_dvs_texture(
+    spec: DatasetSpec, label: int, timesteps: int, rng: np.random.Generator
+) -> np.ndarray:
+    """Synthetic CIFAR10-DVS sample: bool events ``[T, side*side*2]``."""
+    side = spec.side
+    angle = label * np.pi / 10.0
+    freq = 2.0 + (label % 5) * 1.5
+    harmonic = 2.0 if label % 2 == 0 else 3.0
+    c, s = np.cos(angle), np.sin(angle)
+    vx, vy = rng.uniform(-1.5, 1.5, 2)
+    phase0 = rng.uniform(0, 2 * np.pi)
+    yy, xx = np.mgrid[0:side, 0:side].astype(np.float32)
+    events = np.zeros((timesteps, spec.input_dim), dtype=bool)
+
+    def grating(t):
+        xf = (xx + vx * t) / side
+        yf = (yy + vy * t) / side
+        u = c * xf + s * yf
+        v = -s * xf + c * yf
+        return np.sin(2 * np.pi * freq * u + phase0) + 0.5 * np.sin(
+            2 * np.pi * freq * harmonic * v
+        )
+
+    for t in range(timesteps):
+        # Temporal derivative of the drifting grating creates the events.
+        d = grating(t + 1) - grating(t)
+        p_on = spec.noise_rate + spec.signal_rate * np.clip(d, 0, None)
+        p_off = spec.noise_rate + spec.signal_rate * np.clip(-d, 0, None)
+        u = rng.random((2, side, side))
+        events[t, : side * side] = (u[0] < np.minimum(p_on, 0.95)).ravel()
+        events[t, side * side :] = (u[1] < np.minimum(p_off, 0.95)).ravel()
+    return events
+
+
+def generate_split(
+    spec: DatasetSpec, n: int, timesteps: int, seed: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Balanced split: ``(events bool [n, T, dim], labels int64 [n])``."""
+    rng = np.random.default_rng(seed)
+    gen = gen_nmnist if spec.side == 34 else gen_dvs_texture
+    xs = np.zeros((n, timesteps, spec.input_dim), dtype=bool)
+    ys = np.zeros((n,), dtype=np.int64)
+    for i in range(n):
+        label = i % spec.num_classes
+        xs[i] = gen(spec, label, timesteps, rng)
+        ys[i] = label
+    return xs, ys

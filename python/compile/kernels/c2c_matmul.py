@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: standalone C2C-ladder matmul (paper eq. 2).
+
+Computes the synaptic currents ``(w_q @ spikes) * scale`` through the
+bit-decomposed C2C transfer function: each weight is reconstructed as
+``sign(w) * sum_i bit_i(|w|) * 2^(i-8) * 256`` — numerically identical to
+``w`` for ideal ladders, but written so a per-bit mismatch vector can be
+injected to study capacitor-mismatch sensitivity (the `bit_gain` operand;
+ones = ideal).
+
+Used by the ablation benches and the pytest suite; the production model
+path uses the fused `lif_step` kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_OUT = 128
+NBITS = 8
+
+
+def _c2c_kernel(w_ref, s_ref, scale_ref, gain_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)  # [tile, in]
+    s = s_ref[...]
+    sign = jnp.sign(w)
+    mag = jnp.abs(w)
+    # Bit-decompose |w| through the ladder: sum_i bit_i * 2^(i-8) * gain_i.
+    acc = jnp.zeros_like(w)
+    for i in range(NBITS):
+        bit = jnp.floor(mag / (2.0 ** i)) % 2.0
+        acc = acc + bit * (2.0 ** (i - NBITS)) * gain_ref[i]
+    w_eff = sign * acc * (2.0 ** NBITS)  # back to weight units
+    out_ref[...] = jnp.dot(w_eff, s) * scale_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def c2c_matmul(w_q, spikes, scale, bit_gain=None, *, interpret: bool = True):
+    """C2C-ladder synaptic current.
+
+    Args:
+      w_q: int8 ``[out, in]``.
+      spikes: f32 ``[in]``.
+      scale: f32 scalar.
+      bit_gain: optional f32 ``[8]`` per-bit ladder gains (ones = ideal
+        C2C; perturb to model capacitor mismatch).
+      interpret: keep True on CPU.
+
+    Returns:
+      f32 ``[out]`` currents.
+    """
+    out_dim, in_dim = w_q.shape
+    if bit_gain is None:
+        bit_gain = jnp.ones((NBITS,), jnp.float32)
+    grid = (pl.cdiv(out_dim, TILE_OUT),)
+    return pl.pallas_call(
+        _c2c_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_OUT, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((in_dim,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((NBITS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_OUT,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((out_dim,), jnp.float32),
+        interpret=interpret,
+    )(w_q, spikes, jnp.asarray([scale], jnp.float32), bit_gain)

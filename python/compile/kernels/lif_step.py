@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: fused C2C-MAC + LIF update for one layer step.
+
+This is the compute hot-spot of the rate-coded SNN (DESIGN.md
+§Hardware-Adaptation): an int8-weight x f32-spike matmul fused with the
+LIF membrane update so the membrane state never leaves VMEM between the
+MAC and the threshold — the TPU rendering of MENAGE's
+"C2C ladder next to the SRAM, capacitor inside the A-NEURON" structure.
+
+Tiling: the grid walks output-neuron tiles (the virtual-neuron axis). Each
+grid step keeps one `[TILE_OUT, in]` weight tile (int8, the "weight SRAM"),
+the full spike vector, and a `[TILE_OUT]` membrane tile (the "capacitor
+bank") resident in VMEM. For the paper's largest layer (32768 -> 1000,
+int8) a 128-row tile is 128 x 32768 B = 4 MiB — comfortably inside a TPU
+core's 16 MiB VMEM alongside the f32 operands.
+
+The kernel MUST be lowered with ``interpret=True`` here: the CPU PJRT
+client cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-neuron tile (rows of the weight matrix per grid step).
+TILE_OUT = 128
+
+
+def _lif_kernel(w_ref, s_ref, v_ref, scale_ref, beta_ref, th_ref, reset_ref,
+                spk_out_ref, v_out_ref):
+    """One output tile: cur = (W_tile @ s) * scale; LIF update."""
+    w = w_ref[...].astype(jnp.float32)          # [TILE_OUT, in] from int8
+    s = s_ref[...]                               # [in]
+    acc = jnp.dot(w, s)                          # MXU-shaped contraction
+    cur = acc * scale_ref[0]
+    v_new = beta_ref[0] * v_ref[...] + cur
+    fired = v_new >= th_ref[0]
+    spk_out_ref[...] = fired.astype(jnp.float32)
+    v_out_ref[...] = jnp.where(fired, reset_ref[0], v_new)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lif_step(w_q, spikes, v, scale, beta, v_th, v_reset, *, interpret: bool = True):
+    """Fused LIF layer step.
+
+    Args:
+      w_q: int8 ``[out, in]`` quantized weights.
+      spikes: f32 ``[in]`` input spike vector.
+      v: f32 ``[out]`` membrane potentials.
+      scale, beta, v_th, v_reset: f32 scalars (passed as 1-element arrays
+        internally so they live in SMEM-like operands).
+      interpret: keep True on CPU (Mosaic custom-calls don't run on the
+        CPU PJRT client).
+
+    Returns:
+      ``(spikes_out f32 [out], v_next f32 [out])``.
+    """
+    out_dim, in_dim = w_q.shape
+    grid = (pl.cdiv(out_dim, TILE_OUT),)
+    as1 = lambda x: jnp.asarray([x], dtype=jnp.float32)  # noqa: E731
+
+    return pl.pallas_call(
+        _lif_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_OUT, in_dim), lambda i: (i, 0)),  # weight tile
+            pl.BlockSpec((in_dim,), lambda i: (0,)),             # full spikes
+            pl.BlockSpec((TILE_OUT,), lambda i: (i,)),           # membrane tile
+            pl.BlockSpec((1,), lambda i: (0,)),                  # scale
+            pl.BlockSpec((1,), lambda i: (0,)),                  # beta
+            pl.BlockSpec((1,), lambda i: (0,)),                  # v_th
+            pl.BlockSpec((1,), lambda i: (0,)),                  # v_reset
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_OUT,), lambda i: (i,)),
+            pl.BlockSpec((TILE_OUT,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((out_dim,), jnp.float32),
+            jax.ShapeDtypeStruct((out_dim,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_q, spikes, v, as1(scale), as1(beta), as1(v_th), as1(v_reset))

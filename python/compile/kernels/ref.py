@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (Layer 1).
+
+These are the bit-for-bit references the pytest suite checks the kernels
+against, and they double as the arithmetic definition the rust simulator's
+``snn::reference_forward`` mirrors (integer weight sum -> one f32 scale
+multiply -> LIF update).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def c2c_matmul_ref(w_q: jnp.ndarray, spikes: jnp.ndarray, scale) -> jnp.ndarray:
+    """Synaptic current through the C2C ladder array (paper eq. 2).
+
+    Args:
+      w_q: int8 quantized weights ``[out, in]``.
+      spikes: f32 spike vector ``[in]`` (0/1 entries; rate-coded pulses).
+      scale: f32 scalar dequantization scale.
+
+    Returns:
+      f32 ``[out]`` currents: ``(w_q @ spikes) * scale``.
+
+    The sum is exact in f32 because ``|sum over active w_q| < 2^24`` holds
+    for all supported layer widths — matching the ideal analog C2C charge
+    sum on the integration capacitor.
+    """
+    acc = jnp.matmul(w_q.astype(jnp.float32), spikes.astype(jnp.float32))
+    return acc * jnp.float32(scale)
+
+
+def lif_step_ref(
+    w_q: jnp.ndarray,
+    spikes: jnp.ndarray,
+    v: jnp.ndarray,
+    scale,
+    beta: float,
+    v_th: float,
+    v_reset: float,
+):
+    """One discrete-time LIF layer step (the A-NEURON sweep semantics).
+
+    ``v' = beta * v + (w_q @ spikes) * scale``; fire where ``v' >= v_th``;
+    fired neurons reset to ``v_reset``.
+
+    Returns ``(spikes_out f32 [out], v_next f32 [out])``.
+    """
+    cur = c2c_matmul_ref(w_q, spikes, scale)
+    v_new = jnp.float32(beta) * v + cur
+    fired = (v_new >= v_th).astype(jnp.float32)
+    v_next = jnp.where(v_new >= v_th, jnp.float32(v_reset), v_new)
+    return fired, v_next

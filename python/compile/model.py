@@ -1,0 +1,170 @@
+"""Layer-2 JAX SNN model: training forward/backward + quantized inference.
+
+Two views of the same network:
+
+* **Training view** (`snn_forward_train`) — float weights, surrogate
+  gradient through the spike nonlinearity (fast-sigmoid, as in SNNTorch),
+  BPTT via `lax.scan`. Used by `train.py` (Algorithm 1, step 1).
+* **Inference view** (`snn_forward_quant`) — int8 weights + per-layer
+  scales, calling the Layer-1 Pallas kernel per layer per step. This is
+  the function `aot.py` lowers to HLO text for the rust runtime, and its
+  arithmetic is what the rust accelerator simulator must reproduce.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lif_step import lif_step
+from .kernels.ref import lif_step_ref
+
+# LIF constants shared with the rust side (ModelConfig defaults).
+BETA = 0.9
+V_TH = 1.0
+V_RESET = 0.0
+
+
+def init_params(layer_sizes, key, w_std=None, gain=1.0):
+    """He-style init of float weights, list of ``[out, in]`` arrays.
+
+    `gain` > 1 keeps deep SNNs alive: spiking layers attenuate activity
+    (only supra-threshold sums propagate), so plain He init silences layer
+    3+ — scaling the init restores per-layer firing (measured in
+    tests/test_model.py::test_deep_network_stays_alive).
+    """
+    params = []
+    for nin, nout in zip(layer_sizes[:-1], layer_sizes[1:]):
+        key, sub = jax.random.split(key)
+        std = w_std or gain * (2.0 / nin) ** 0.5
+        params.append(jax.random.normal(sub, (nout, nin), jnp.float32) * std)
+    return params
+
+
+# Fast-sigmoid surrogate slope. SNNTorch's default 25 is fine for shallow
+# nets but starves gradients through the 5-layer CIFAR10-DVS MLP (measured:
+# training collapses to silence); 5.0 trains both of Table I's topologies.
+SURROGATE_SLOPE = 5.0
+
+
+@jax.custom_jvp
+def spike_fn(v):
+    """Heaviside spike with fast-sigmoid surrogate gradient."""
+    return (v >= V_TH).astype(jnp.float32)
+
+
+@spike_fn.defjvp
+def _spike_fn_jvp(primals, tangents):
+    (v,), (dv,) = primals, tangents
+    out = (v >= V_TH).astype(jnp.float32)
+    surr = 1.0 / (SURROGATE_SLOPE * jnp.abs(v - V_TH) + 1.0) ** 2
+    return out, surr * dv
+
+
+def snn_forward_train(params, events):
+    """Training forward: float weights, surrogate spikes.
+
+    Args:
+      params: list of f32 ``[out, in]`` weights.
+      events: f32 ``[T, in]`` input spike raster.
+
+    Returns:
+      ``(logits f32 [n_classes], spike_counts list)`` — logits are output
+      spike counts (rate decoding).
+    """
+    sizes = [p.shape[0] for p in params]
+
+    def step(carry, x_t):
+        vs = carry
+        new_vs = []
+        s = x_t
+        outs = []
+        for w, v in zip(params, vs):
+            cur = w @ s
+            v_new = BETA * v + cur
+            spk = spike_fn(v_new)
+            v_next = jnp.where(spk > 0, V_RESET, v_new)
+            new_vs.append(v_next)
+            s = spk
+            outs.append(spk)
+        return new_vs, outs[-1]
+
+    v0 = [jnp.zeros((n,), jnp.float32) for n in sizes]
+    _, out_spikes = jax.lax.scan(step, v0, events)
+    return out_spikes.sum(axis=0), out_spikes
+
+
+def loss_fn(params, events, label):
+    """Cross-entropy on spike-count logits (rate decoding)."""
+    logits, _ = snn_forward_train(params, events)
+    logp = jax.nn.log_softmax(logits)
+    return -logp[label]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def batched_loss(params, events_b, labels_b):
+    losses = jax.vmap(lambda e, l: loss_fn(params, e, l))(events_b, labels_b)
+    return losses.mean()
+
+
+grad_fn = jax.jit(jax.value_and_grad(batched_loss))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def predict_train(params, events_b):
+    logits = jax.vmap(lambda e: snn_forward_train(params, e)[0])(events_b)
+    return logits.argmax(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Quantized inference (the function that gets AOT-lowered for rust).
+# ---------------------------------------------------------------------------
+
+
+def snn_forward_quant(qparams, events, *, use_pallas=True, interpret=True):
+    """Quantized inference forward.
+
+    Args:
+      qparams: list of ``(w_q int8 [out,in], scale f32 scalar)``.
+      events: f32 ``[T, in]``.
+      use_pallas: route the per-layer step through the Pallas kernel
+        (True for the artifact path) or the jnp oracle (golden checks).
+
+    Returns:
+      ``(counts f32 [n_classes], out_spikes f32 [T, n_classes])``.
+    """
+    sizes = [w.shape[0] for w, _ in qparams]
+    kernel = lif_step if use_pallas else None
+
+    def step(vs, x_t):
+        new_vs = []
+        s = x_t
+        for (w_q, scale), v in zip(qparams, vs):
+            if kernel is not None:
+                spk, v_next = kernel(
+                    w_q, s, v, scale, BETA, V_TH, V_RESET, interpret=interpret
+                )
+            else:
+                spk, v_next = lif_step_ref(w_q, s, v, scale, BETA, V_TH, V_RESET)
+            new_vs.append(v_next)
+            s = spk
+        return new_vs, s
+
+    v0 = [jnp.zeros((n,), jnp.float32) for n in sizes]
+    _, out_spikes = jax.lax.scan(step, v0, events)
+    return out_spikes.sum(axis=0), out_spikes
+
+
+def make_inference_fn(qparams, *, use_pallas=True, interpret=True):
+    """Close over quantized weights: returns ``f(events) -> (counts, spikes)``
+    suitable for `jax.jit(...).lower()` — weights become HLO constants, so
+    the rust runtime only feeds the event raster."""
+
+    def fn(events):
+        return snn_forward_quant(
+            qparams, events, use_pallas=use_pallas, interpret=interpret
+        )
+
+    return fn

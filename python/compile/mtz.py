@@ -1,0 +1,63 @@
+"""Writer/reader for the ``.mtz`` binary tensor container.
+
+Byte-level twin of ``rust/src/util/tensorfile.rs`` (see its header for the
+format). Little-endian, magic ``MTZ1``.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+_MAGIC = b"MTZ1"
+_DTYPE_TAG = {np.dtype("float32"): 0, np.dtype("int8"): 1, np.dtype("int32"): 2, np.dtype("uint8"): 3}
+_TAG_DTYPE = {v: k for k, v in _DTYPE_TAG.items()}
+
+
+def save(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write `tensors` to `path` (keys sorted for determinism)."""
+    with open(path, "wb") as f:
+        f.write(_MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            if arr.dtype not in _DTYPE_TAG:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_TAG[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    """Read a ``.mtz`` file back into a dict of arrays."""
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:4] != _MAGIC:
+        raise ValueError("bad magic")
+    off = 4
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + nlen].decode("utf-8")
+        off += nlen
+        tag, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}Q", data, off)
+        off += 8 * ndim
+        dtype = _TAG_DTYPE[tag]
+        n = int(np.prod(dims)) if ndim else 1
+        nbytes = n * dtype.itemsize
+        arr = np.frombuffer(data[off : off + nbytes], dtype=dtype).reshape(dims)
+        off += nbytes
+        out[name] = arr
+    if off != len(data):
+        raise ValueError("trailing bytes")
+    return out

@@ -1,0 +1,59 @@
+"""Algorithm 1 step 2: unstructured L1 pruning + 8-bit post-training
+quantization, in JAX/numpy.
+
+Matches the paper's flow exactly: train dense -> zero the globally (per
+layer) smallest-|w| fraction -> symmetric per-tensor int8 quantization
+(scale = max|w| / 127). The quantized (w_q, scale) pairs feed both the
+AOT-lowered inference function and the rust mapper via the ``.mtz`` export.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def prune_l1(params: list[np.ndarray], frac: float) -> list[np.ndarray]:
+    """Zero the smallest-magnitude `frac` of weights in each layer."""
+    assert 0.0 <= frac <= 1.0
+    out = []
+    for w in params:
+        w = np.asarray(w, dtype=np.float32).copy()
+        k = int(round(w.size * frac))
+        if k > 0:
+            thresh = np.partition(np.abs(w).ravel(), k - 1)[k - 1]
+            w[np.abs(w) <= thresh] = 0.0
+        out.append(w)
+    return out
+
+
+def quantize_int8(params: list[np.ndarray]) -> list[tuple[np.ndarray, np.float32]]:
+    """Symmetric per-tensor int8 PTQ: ``w ≈ w_q * scale``."""
+    q = []
+    for w in params:
+        w = np.asarray(w, dtype=np.float32)
+        max_abs = float(np.max(np.abs(w))) if w.size else 0.0
+        scale = np.float32(max_abs / 127.0) if max_abs > 0 else np.float32(1.0)
+        w_q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+        q.append((w_q, scale))
+    return q
+
+
+def dequantize(qparams):
+    """Inverse for error analysis: float reconstructions."""
+    return [w_q.astype(np.float32) * scale for w_q, scale in qparams]
+
+
+def quant_error(params, qparams) -> float:
+    """Max relative reconstruction error across layers (sanity metric)."""
+    errs = []
+    for w, wd in zip(params, dequantize(qparams)):
+        denom = max(1e-9, float(np.max(np.abs(w))))
+        errs.append(float(np.max(np.abs(w - wd))) / denom)
+    return max(errs) if errs else 0.0
+
+
+def sparsity(params: list[np.ndarray]) -> float:
+    """Fraction of zero weights across all layers."""
+    total = sum(int(np.asarray(w).size) for w in params)
+    zeros = sum(int((np.asarray(w) == 0).sum()) for w in params)
+    return zeros / max(1, total)

@@ -1,0 +1,185 @@
+"""Algorithm 1 steps 1–3: train, prune, quantize, extract (build-time only).
+
+Trains the paper's MLP SNNs with surrogate-gradient BPTT (JAX twin of the
+SNNTorch flow) on the synthetic event datasets, applies L1 pruning + 8-bit
+PTQ, and reports accuracy before/after (Table I's accuracy rows).
+
+optax is unavailable offline, so a minimal Adam lives here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as datamod
+from . import quantize as q
+from .model import batched_loss, grad_fn, init_params, predict_train, snn_forward_quant
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    layer_sizes: tuple
+    timesteps: int
+    train_samples: int
+    test_samples: int
+    batch: int
+    steps: int
+    lr: float = 1e-3
+    prune_frac: float = 0.5
+    seed: int = 0
+    # init_params gain: >1 keeps deep spiking nets alive (see model.py).
+    init_gain: float = 1.0
+    # masked fine-tuning steps after pruning (recovers most of the drop).
+    finetune_steps: int = 60
+
+
+def nmnist_quick() -> TrainConfig:
+    """Quick preset: full N-MNIST topology, small synthetic corpus."""
+    return TrainConfig(
+        layer_sizes=(2312, 200, 100, 40, 10),
+        timesteps=20,
+        train_samples=240,
+        test_samples=80,
+        batch=16,
+        steps=180,
+    )
+
+
+def cifar_small_quick() -> TrainConfig:
+    """Quick preset: scaled-down CIFAR10-DVS topology (32×32 input)."""
+    return TrainConfig(
+        layer_sizes=(2048, 1000, 500, 200, 100, 10),
+        timesteps=16,
+        train_samples=200,
+        test_samples=80,
+        batch=8,
+        steps=250,
+        lr=5e-4,
+        init_gain=3.0,
+    )
+
+
+def spec_for(cfg: TrainConfig) -> datamod.DatasetSpec:
+    dim = cfg.layer_sizes[0]
+    for spec in (datamod.NMNIST, datamod.CIFAR10DVS, datamod.CIFAR10DVS_SMALL):
+        if spec.input_dim == dim:
+            return spec
+    raise ValueError(f"no dataset spec with input dim {dim}")
+
+
+class Adam:
+    """Minimal Adam over a list of arrays."""
+
+    def __init__(self, params, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+        self.m = [jnp.zeros_like(p) for p in params]
+        self.v = [jnp.zeros_like(p) for p in params]
+        self.t = 0
+
+    def step(self, params, grads):
+        self.t += 1
+        out = []
+        for i, (p, g) in enumerate(zip(params, grads)):
+            self.m[i] = self.b1 * self.m[i] + (1 - self.b1) * g
+            self.v[i] = self.b2 * self.v[i] + (1 - self.b2) * g * g
+            mhat = self.m[i] / (1 - self.b1 ** self.t)
+            vhat = self.v[i] / (1 - self.b2 ** self.t)
+            out.append(p - self.lr * mhat / (jnp.sqrt(vhat) + self.eps))
+        return out
+
+
+def accuracy_train_view(params, xs, ys, batch=32) -> float:
+    correct = 0
+    for i in range(0, len(xs), batch):
+        xb = jnp.asarray(xs[i : i + batch], jnp.float32)
+        pred = predict_train(params, xb)
+        correct += int((np.asarray(pred) == ys[i : i + batch]).sum())
+    return correct / len(xs)
+
+
+def accuracy_quant_view(qparams, xs, ys) -> float:
+    """Quantized-inference accuracy (jnp oracle path, no pallas — fast)."""
+    qp = [(jnp.asarray(w), jnp.float32(s)) for w, s in qparams]
+
+    @jax.jit
+    def pred(e):
+        counts, _ = snn_forward_quant(qp, e, use_pallas=False)
+        return counts.argmax()
+
+    correct = 0
+    for x, y in zip(xs, ys):
+        correct += int(pred(jnp.asarray(x, jnp.float32)) == y)
+    return correct / len(xs)
+
+
+def run(cfg: TrainConfig, log=print) -> dict:
+    """Full Algorithm-1 pipeline. Returns a result dict with params,
+    qparams, accuracies, and the eval split."""
+    spec = spec_for(cfg)
+    log(f"[train] dataset={spec.name} layers={cfg.layer_sizes} T={cfg.timesteps}")
+    t0 = time.time()
+    xs_tr, ys_tr = datamod.generate_split(spec, cfg.train_samples, cfg.timesteps, cfg.seed)
+    xs_te, ys_te = datamod.generate_split(
+        spec, cfg.test_samples, cfg.timesteps, cfg.seed + 10_000
+    )
+    log(f"[train] data generated in {time.time()-t0:.1f}s "
+        f"(train rate {xs_tr.mean():.4f})")
+
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_params(cfg.layer_sizes, key, gain=cfg.init_gain)
+    opt = Adam(params, lr=cfg.lr)
+    rng = np.random.default_rng(cfg.seed)
+    t0 = time.time()
+    losses = []
+    for step in range(cfg.steps):
+        idx = rng.integers(0, len(xs_tr), cfg.batch)
+        xb = jnp.asarray(xs_tr[idx], jnp.float32)
+        yb = jnp.asarray(ys_tr[idx])
+        loss, grads = grad_fn(params, xb, yb)
+        params = opt.step(params, grads)
+        losses.append(float(loss))
+        if step % 25 == 0 or step == cfg.steps - 1:
+            log(f"[train] step {step:4d} loss {float(loss):.4f} "
+                f"({time.time()-t0:.0f}s)")
+
+    acc_dense = accuracy_train_view(params, xs_te, ys_te)
+    log(f"[train] dense accuracy: {acc_dense:.4f}")
+
+    # Prune + quantize (Algorithm 1 step 2), with masked fine-tuning to
+    # recover the pruning drop (zeros stay zero).
+    pruned = q.prune_l1([np.asarray(p) for p in params], cfg.prune_frac)
+    if cfg.finetune_steps > 0:
+        masks = [jnp.asarray((w != 0).astype(np.float32)) for w in pruned]
+        ft_params = [jnp.asarray(w) for w in pruned]
+        ft_opt = Adam(ft_params, lr=cfg.lr * 0.5)
+        for step in range(cfg.finetune_steps):
+            idx = rng.integers(0, len(xs_tr), cfg.batch)
+            xb = jnp.asarray(xs_tr[idx], jnp.float32)
+            yb = jnp.asarray(ys_tr[idx])
+            _, grads = grad_fn(ft_params, xb, yb)
+            ft_params = ft_opt.step(ft_params, grads)
+            ft_params = [p * m for p, m in zip(ft_params, masks)]
+        pruned = [np.asarray(p) for p in ft_params]
+        log(f"[train] fine-tuned {cfg.finetune_steps} steps after pruning")
+    qparams = q.quantize_int8(pruned)
+    acc_quant = accuracy_quant_view(qparams, xs_te, ys_te)
+    log(f"[train] pruned+quantized accuracy: {acc_quant:.4f} "
+        f"(sparsity {q.sparsity(pruned):.2f}, "
+        f"qerr {q.quant_error(pruned, qparams):.4f})")
+
+    return {
+        "config": cfg,
+        "spec": spec,
+        "params": [np.asarray(p) for p in params],
+        "qparams": qparams,
+        "acc_dense": acc_dense,
+        "acc_quant": acc_quant,
+        "losses": losses,
+        "eval_x": xs_te,
+        "eval_y": ys_te,
+    }

@@ -1,0 +1,60 @@
+"""Synthetic dataset tests: shapes, sparsity calibration, class signal."""
+
+import numpy as np
+
+from compile import data as D
+
+
+def test_dims_match_paper_models():
+    assert D.NMNIST.input_dim == 2312  # 34*34*2
+    assert D.CIFAR10DVS.input_dim == 32768  # 128*128*2
+    assert D.CIFAR10DVS_SMALL.input_dim == 2048
+
+
+def test_split_shapes_and_balance():
+    xs, ys = D.generate_split(D.NMNIST, 30, 6, seed=1)
+    assert xs.shape == (30, 6, 2312) and xs.dtype == bool
+    assert ys.shape == (30,)
+    for c in range(10):
+        assert (ys == c).sum() == 3
+
+
+def test_determinism():
+    a, _ = D.generate_split(D.NMNIST, 5, 4, seed=7)
+    b, _ = D.generate_split(D.NMNIST, 5, 4, seed=7)
+    assert (a == b).all()
+    c, _ = D.generate_split(D.NMNIST, 5, 4, seed=8)
+    assert (a != c).any()
+
+
+def test_nmnist_sparser_than_cifar():
+    nm, _ = D.generate_split(D.NMNIST, 10, 8, seed=2)
+    cf, _ = D.generate_split(D.CIFAR10DVS_SMALL, 10, 8, seed=2)
+    assert cf.mean() > 2.0 * nm.mean(), (cf.mean(), nm.mean())
+    assert 0.001 < nm.mean() < 0.2
+    assert cf.mean() < 0.5
+
+
+def test_templates_distinct():
+    t = [D.digit_template(c, 34) for c in range(10)]
+    for i in range(10):
+        for j in range(i + 1, 10):
+            assert np.abs(t[i] - t[j]).sum() > 10.0
+
+
+def test_classes_have_signal():
+    """Per-class mean event maps must be distinguishable."""
+    xs, ys = D.generate_split(D.NMNIST, 40, 6, seed=3)
+    means = np.stack([xs[ys == c].mean(axis=(0, 1)) for c in (0, 1)])
+    cos = (means[0] @ means[1]) / (
+        np.linalg.norm(means[0]) * np.linalg.norm(means[1]) + 1e-9
+    )
+    assert cos < 0.95, f"classes 0/1 too similar: {cos}"
+
+
+def test_events_are_sparse_bool_with_both_polarities():
+    xs, _ = D.generate_split(D.CIFAR10DVS_SMALL, 5, 5, seed=4)
+    side2 = 32 * 32
+    on = xs[..., :side2].sum()
+    off = xs[..., side2:].sum()
+    assert on > 0 and off > 0

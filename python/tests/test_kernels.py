@@ -1,0 +1,117 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, rates and LIF parameters — the CORE correctness
+signal for the compile path (system prompt: hypothesis sweeps the kernel's
+shapes/dtypes and assert_allclose against ref.py).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.c2c_matmul import c2c_matmul
+from compile.kernels.lif_step import lif_step
+from compile.kernels.ref import c2c_matmul_ref, lif_step_ref
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def _case(seed, out_dim, in_dim, rate):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-127, 128, (out_dim, in_dim), dtype=np.int8)
+    s = (rng.random(in_dim) < rate).astype(np.float32)
+    v = rng.normal(0, 0.4, out_dim).astype(np.float32)
+    return jnp.asarray(w), jnp.asarray(s), jnp.asarray(v)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31),
+    out_dim=st.integers(1, 300),
+    in_dim=st.integers(1, 400),
+    rate=st.floats(0.0, 1.0),
+)
+def test_lif_step_matches_ref(seed, out_dim, in_dim, rate):
+    w, s, v = _case(seed, out_dim, in_dim, rate)
+    spk, vn = lif_step(w, s, v, 0.01, 0.9, 1.0, 0.0)
+    spk_r, vn_r = lif_step_ref(w, s, v, 0.01, 0.9, 1.0, 0.0)
+    assert_allclose(np.asarray(spk), np.asarray(spk_r), atol=0)
+    assert_allclose(np.asarray(vn), np.asarray(vn_r), rtol=1e-6, atol=1e-6)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31),
+    out_dim=st.integers(1, 300),
+    in_dim=st.integers(1, 400),
+    rate=st.floats(0.0, 1.0),
+)
+def test_c2c_matmul_matches_ref(seed, out_dim, in_dim, rate):
+    w, s, _ = _case(seed, out_dim, in_dim, rate)
+    out = c2c_matmul(w, s, 0.01)
+    ref = c2c_matmul_ref(w, s, 0.01)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31),
+    beta=st.floats(0.0, 1.0),
+    th=st.floats(0.1, 3.0),
+    reset=st.floats(-0.5, 0.05),
+)
+def test_lif_step_param_sweep(seed, beta, th, reset):
+    hypothesis.assume(th > reset)
+    w, s, v = _case(seed, 64, 96, 0.3)
+    spk, vn = lif_step(w, s, v, 0.02, beta, th, reset)
+    spk_r, vn_r = lif_step_ref(w, s, v, 0.02, beta, th, reset)
+    assert_allclose(np.asarray(spk), np.asarray(spk_r), atol=0)
+    assert_allclose(np.asarray(vn), np.asarray(vn_r), rtol=1e-5, atol=1e-6)
+
+
+def test_lif_step_tile_boundaries():
+    """Exercise out_dim below/at/above the 128-row tile."""
+    for out_dim in (1, 127, 128, 129, 256, 300):
+        w, s, v = _case(7, out_dim, 50, 0.5)
+        spk, vn = lif_step(w, s, v, 0.01, 0.9, 1.0, 0.0)
+        spk_r, vn_r = lif_step_ref(w, s, v, 0.01, 0.9, 1.0, 0.0)
+        assert_allclose(np.asarray(spk), np.asarray(spk_r), atol=0)
+        assert_allclose(np.asarray(vn), np.asarray(vn_r), rtol=1e-6, atol=1e-6)
+
+
+def test_c2c_bit_gain_ideal_is_identity():
+    w, s, _ = _case(3, 100, 80, 0.4)
+    ideal = c2c_matmul(w, s, 0.01, bit_gain=jnp.ones(8))
+    ref = c2c_matmul_ref(w, s, 0.01)
+    assert_allclose(np.asarray(ideal), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_c2c_bit_gain_mismatch_perturbs_proportionally():
+    w, s, _ = _case(11, 100, 80, 0.4)
+    gains = jnp.asarray(1.0 + 0.002 * np.random.default_rng(0).standard_normal(8),
+                        jnp.float32)
+    real = np.asarray(c2c_matmul(w, s, 0.01, bit_gain=gains))
+    ref = np.asarray(c2c_matmul_ref(w, s, 0.01))
+    denom = np.maximum(np.abs(ref), 1e-3)
+    assert np.max(np.abs(real - ref) / denom) < 0.05
+
+
+def test_zero_spikes_give_zero_current():
+    w, _, v = _case(5, 60, 40, 0.0)
+    s = jnp.zeros(40, jnp.float32)
+    spk, vn = lif_step(w, s, v, 0.01, 0.9, 1.0, 0.0)
+    assert np.asarray(spk).sum() == 0
+    assert_allclose(np.asarray(vn), 0.9 * np.asarray(v), rtol=1e-6)
+
+
+def test_extreme_weights_saturate_correctly():
+    """All-max weights with dense spikes: every neuron fires, resets."""
+    w = jnp.full((32, 64), 127, jnp.int8)
+    s = jnp.ones(64, jnp.float32)
+    v = jnp.zeros(32, jnp.float32)
+    spk, vn = lif_step(w, s, v, 0.01, 0.9, 1.0, 0.0)
+    assert np.asarray(spk).sum() == 32
+    assert_allclose(np.asarray(vn), 0.0, atol=0)

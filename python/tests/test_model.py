@@ -1,0 +1,96 @@
+"""L2 model tests: shapes, surrogate gradients, quantized-path agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.model import (
+    batched_loss,
+    grad_fn,
+    init_params,
+    make_inference_fn,
+    snn_forward_quant,
+    snn_forward_train,
+)
+from compile.quantize import prune_l1, quantize_int8
+
+SIZES = (50, 24, 10)
+
+
+def _events(t=6, dim=50, rate=0.3, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.random((t, dim)) < rate).astype(np.float32))
+
+
+def test_train_forward_shapes():
+    params = init_params(SIZES, jax.random.PRNGKey(0))
+    assert [p.shape for p in params] == [(24, 50), (10, 24)]
+    logits, spikes = snn_forward_train(params, _events())
+    assert logits.shape == (10,)
+    assert spikes.shape == (6, 10)
+    assert float(logits.sum()) == float(spikes.sum())
+
+
+def test_surrogate_gradients_flow():
+    params = init_params(SIZES, jax.random.PRNGKey(1), w_std=0.5)
+    xb = jnp.stack([_events(seed=s) for s in range(4)])
+    yb = jnp.asarray([0, 1, 2, 3])
+    loss, grads = grad_fn(params, xb, yb)
+    assert np.isfinite(float(loss))
+    # Surrogate must produce non-zero gradients in every layer.
+    for g in grads:
+        assert float(jnp.abs(g).max()) > 0.0, "dead gradient"
+
+
+def test_loss_decreases_on_overfit():
+    """A few gradient steps on one batch must reduce the loss."""
+    params = init_params(SIZES, jax.random.PRNGKey(2), w_std=0.5)
+    xb = jnp.stack([_events(seed=s, rate=0.4) for s in range(4)])
+    yb = jnp.asarray([1, 3, 5, 7])
+    l0 = float(batched_loss(params, xb, yb))
+    for _ in range(30):
+        _, grads = grad_fn(params, xb, yb)
+        params = [p - 0.5 * g for p, g in zip(params, grads)]
+    l1 = float(batched_loss(params, xb, yb))
+    assert l1 < l0, f"{l1} >= {l0}"
+
+
+def _qparams(seed=3):
+    params = init_params(SIZES, jax.random.PRNGKey(seed), w_std=0.5)
+    qs = quantize_int8(prune_l1([np.asarray(p) for p in params], 0.3))
+    return [(jnp.asarray(w), jnp.float32(s)) for w, s in qs]
+
+
+def test_quant_forward_pallas_equals_oracle():
+    qp = _qparams()
+    ev = _events(rate=0.5)
+    c_pal, s_pal = snn_forward_quant(qp, ev, use_pallas=True)
+    c_ref, s_ref = snn_forward_quant(qp, ev, use_pallas=False)
+    assert_allclose(np.asarray(c_pal), np.asarray(c_ref), atol=0)
+    assert_allclose(np.asarray(s_pal), np.asarray(s_ref), atol=0)
+
+
+def test_inference_fn_closure_matches_direct():
+    qp = _qparams(4)
+    ev = _events(seed=9)
+    fn = make_inference_fn(qp)
+    c1, _ = jax.jit(fn)(ev)
+    c2, _ = snn_forward_quant(qp, ev, use_pallas=True)
+    assert_allclose(np.asarray(c1), np.asarray(c2), atol=0)
+
+
+def test_quant_forward_deterministic():
+    qp = _qparams(5)
+    ev = _events(seed=11)
+    a, _ = snn_forward_quant(qp, ev, use_pallas=False)
+    b, _ = snn_forward_quant(qp, ev, use_pallas=False)
+    assert_allclose(np.asarray(a), np.asarray(b), atol=0)
+
+
+def test_silent_input_no_spikes():
+    qp = _qparams(6)
+    ev = jnp.zeros((5, 50), jnp.float32)
+    counts, spikes = snn_forward_quant(qp, ev, use_pallas=False)
+    assert float(np.asarray(counts).sum()) == 0.0
+    assert float(np.asarray(spikes).sum()) == 0.0

@@ -1,0 +1,58 @@
+"""`.mtz` container: roundtrip + binary-format invariants shared with rust."""
+
+import numpy as np
+import pytest
+
+from compile import mtz
+
+
+def _sample():
+    return {
+        "w0": np.arange(-3, 3, dtype=np.int8).reshape(2, 3),
+        "scale0": np.asarray([0.03125], np.float32),
+        "counts": np.asarray([0, -1, 2**31 - 1, 7], np.int32),
+        "mask": np.asarray([[0, 1], [1, 0]], np.uint8),
+    }
+
+
+def test_roundtrip(tmp_path):
+    p = str(tmp_path / "t.mtz")
+    mtz.save(p, _sample())
+    back = mtz.load(p)
+    for k, v in _sample().items():
+        assert back[k].dtype == v.dtype
+        assert (back[k] == v).all()
+
+
+def test_header_layout(tmp_path):
+    """Pin the exact byte layout rust's tensorfile.rs parses."""
+    p = str(tmp_path / "one.mtz")
+    mtz.save(p, {"a": np.asarray([5], np.int8)})
+    raw = open(p, "rb").read()
+    assert raw[:4] == b"MTZ1"
+    assert raw[4:8] == (1).to_bytes(4, "little")  # tensor count
+    assert raw[8:12] == (1).to_bytes(4, "little")  # name length
+    assert raw[12:13] == b"a"
+    assert raw[13] == 1  # dtype tag i8
+    assert raw[14] == 1  # ndim
+    assert raw[15:23] == (1).to_bytes(8, "little")  # dim
+    assert raw[23:] == b"\x05"
+
+
+def test_rejects_bad_magic(tmp_path):
+    p = str(tmp_path / "bad.mtz")
+    open(p, "wb").write(b"XXXX")
+    with pytest.raises(ValueError):
+        mtz.load(p)
+
+
+def test_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(ValueError):
+        mtz.save(str(tmp_path / "x.mtz"), {"f64": np.zeros(2, np.float64)})
+
+
+def test_empty_tensor(tmp_path):
+    p = str(tmp_path / "e.mtz")
+    mtz.save(p, {"e": np.zeros((0, 5), np.float32)})
+    back = mtz.load(p)
+    assert back["e"].shape == (0, 5)

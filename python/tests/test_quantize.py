@@ -1,0 +1,75 @@
+"""Pruning + PTQ tests (Algorithm 1 step 2)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from compile.quantize import dequantize, prune_l1, quant_error, quantize_int8, sparsity
+
+hypothesis.settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
+hypothesis.settings.load_profile("ci")
+
+
+def _params(seed=0, shapes=((30, 20), (10, 30))):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(0, 0.5, s).astype(np.float32) for s in shapes]
+
+
+@hypothesis.given(frac=st.floats(0.0, 1.0), seed=st.integers(0, 1000))
+def test_prune_hits_target_fraction(frac, seed):
+    params = _params(seed)
+    pruned = prune_l1(params, frac)
+    s = sparsity(pruned)
+    assert s >= frac - 0.02, f"sparsity {s} < target {frac}"
+    # Pruning keeps the largest magnitudes.
+    for w, p in zip(params, pruned):
+        kept = np.abs(w[p != 0])
+        dropped = np.abs(w[(p == 0) & (w != 0)])
+        if kept.size and dropped.size:
+            assert kept.min() >= dropped.max() - 1e-6
+
+
+def test_prune_zero_and_full():
+    params = _params(1)
+    assert sparsity(prune_l1(params, 0.0)) < 0.01
+    assert sparsity(prune_l1(params, 1.0)) == 1.0
+
+
+@hypothesis.given(seed=st.integers(0, 1000))
+def test_quantize_roundtrip_error_bounded(seed):
+    params = _params(seed)
+    q = quantize_int8(params)
+    # Symmetric int8: max error ≤ scale/2 → relative ≤ 1/(2·127) ≈ 0.4%.
+    assert quant_error(params, q) <= 0.5 / 127.0 + 1e-6
+
+
+def test_quantize_preserves_zeros():
+    params = prune_l1(_params(2), 0.6)
+    q = quantize_int8(params)
+    for (w_q, _), p in zip(q, params):
+        assert ((w_q == 0) == (p == 0)).all()
+
+
+def test_quantize_range_and_dtype():
+    q = quantize_int8(_params(3))
+    for w_q, scale in q:
+        assert w_q.dtype == np.int8
+        assert w_q.min() >= -127 and w_q.max() <= 127
+        assert scale > 0
+        # The max-|w| weight maps to ±127.
+        assert np.abs(w_q).max() == 127
+
+
+def test_dequantize_shapes():
+    params = _params(4)
+    deq = dequantize(quantize_int8(params))
+    for w, d in zip(params, deq):
+        assert w.shape == d.shape
+        assert d.dtype == np.float32
+
+
+def test_all_zero_layer_quantizes_safely():
+    q = quantize_int8([np.zeros((4, 4), np.float32)])
+    w_q, scale = q[0]
+    assert (w_q == 0).all()
+    assert scale == 1.0

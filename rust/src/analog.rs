@@ -1,0 +1,652 @@
+//! Behavioural models of MENAGE's mixed-signal circuits.
+//!
+//! The paper characterises its analog blocks with HSpice; this module is
+//! the substitution (DESIGN.md §2): behavioural — not transistor-level —
+//! models that expose the same externally visible transfer functions,
+//! non-idealities and timing/energy operating points the paper reports:
+//!
+//! * [`C2cLadder`] — the A-SYN multiplier, `V_out = V_ref · Σ W_i·2^(i-n)`
+//!   (paper eq. 2) with optional per-stage capacitor mismatch.
+//! * [`OpAmpIntegrator`] — the A-NEURON front-end: finite gain, slew and
+//!   saturation; integrates scaled synaptic charge onto the active virtual
+//!   neuron's capacitor.
+//! * [`Comparator`] — the A-NEURON back-end: threshold crossing with
+//!   hysteresis and propagation delay; produces the output pulse.
+//! * [`VirtualNeuronBank`] — the N storage capacitors of one A-NEURON with
+//!   per-step leak discharge (the controller's "discharge command").
+//! * [`ANeuron`] — the assembled neuron engine; `fire-restore-integrate-
+//!   store` sequence per dispatched event batch, with waveform capture for
+//!   Figure 5.
+//!
+//! All voltages in volts, times in seconds. The paper's operating point —
+//! 97 nW and 6.72 ns per A-NEURON operation at 103.2 MHz — parameterises
+//! the defaults ([`AnalogParams::paper`]); `AnalogParams::ideal()` removes
+//! every non-ideality so the accelerator simulator can be checked
+//! bit-exactly against the reference model.
+
+use crate::util::rng::Rng;
+
+/// Non-ideality and operating-point parameters for the analog blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalogParams {
+    /// Reference voltage fed to C2C ladders (V).
+    pub v_ref: f64,
+    /// Supply rail: op-amp output saturates at ±v_sat.
+    pub v_sat: f64,
+    /// Op-amp open-loop DC gain (ideal → ∞; finite gain causes a small
+    /// integration error v/A).
+    pub opamp_gain: f64,
+    /// Op-amp slew rate (V/s); bounds how much the integrator can move in
+    /// one clock period.
+    pub slew_rate: f64,
+    /// Comparator hysteresis half-width (V).
+    pub comparator_hysteresis: f64,
+    /// Comparator propagation delay (s). Paper: contributes to 6.72 ns.
+    pub comparator_delay: f64,
+    /// Fractional σ of C2C per-stage capacitor mismatch (0 = ideal).
+    pub c2c_mismatch_sigma: f64,
+    /// Per-step fractional charge leak of a storage capacitor *while
+    /// holding* (droop between visits).
+    pub hold_leak: f64,
+    /// Charge-injection offset per sample/restore switch event (V).
+    pub switch_injection: f64,
+    /// A-NEURON energy per integrate-and-fire operation (J). Paper: 97 nW
+    /// at 6.72 ns per op → 97 nW × 6.72 ns ≈ 0.652 fJ per op.
+    pub neuron_energy_per_op: f64,
+    /// A-NEURON operation latency (s). Paper: 6.72 ns.
+    pub neuron_delay: f64,
+}
+
+impl AnalogParams {
+    /// Paper operating point (90 nm, HSpice-characterised) with mild,
+    /// realistic non-idealities.
+    pub fn paper() -> Self {
+        Self {
+            v_ref: 1.0,
+            v_sat: 1.2,
+            opamp_gain: 5e3,
+            slew_rate: 2.5e9, // 2.5 V/ns-class: full-scale in < clock period
+            comparator_hysteresis: 2e-3,
+            comparator_delay: 0.9e-9,
+            c2c_mismatch_sigma: 0.002,
+            hold_leak: 2e-4,
+            switch_injection: 0.5e-3,
+            neuron_energy_per_op: 97e-9 * 6.72e-9, // ≈ 0.652 fJ
+            neuron_delay: 6.72e-9,
+        }
+    }
+
+    /// Perfectly ideal analog blocks — used by equivalence tests against
+    /// the digital reference model.
+    pub fn ideal() -> Self {
+        Self {
+            v_ref: 1.0,
+            v_sat: f64::INFINITY,
+            opamp_gain: f64::INFINITY,
+            slew_rate: f64::INFINITY,
+            comparator_hysteresis: 0.0,
+            comparator_delay: 0.0,
+            c2c_mismatch_sigma: 0.0,
+            hold_leak: 0.0,
+            switch_injection: 0.0,
+            neuron_energy_per_op: 97e-9 * 6.72e-9,
+            neuron_delay: 6.72e-9,
+        }
+    }
+}
+
+impl Default for AnalogParams {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+/// C2C capacitor-ladder multiplying DAC (paper eq. 2, Figure 3).
+///
+/// One analog input (`v_ref`) and an n-bit digital input `w` produce
+/// `v_out = v_ref · Σ_{i=0}^{n-1} w_i · 2^{i-n}` — i.e. `v_ref · w / 2ⁿ`
+/// for unsigned `w`. MENAGE drives it with 8-bit signed weights: sign is
+/// handled by the surrounding switched-capacitor stage (add/subtract
+/// charge), magnitude by the ladder.
+#[derive(Debug, Clone)]
+pub struct C2cLadder {
+    bits: u32,
+    /// Per-bit effective weight, nominally 2^(i-n), perturbed by mismatch.
+    bit_weight: Vec<f64>,
+}
+
+impl C2cLadder {
+    /// Ideal ladder with `bits` stages.
+    pub fn new(bits: u32) -> Self {
+        let bit_weight =
+            (0..bits).map(|i| 2f64.powi(i as i32 - bits as i32)).collect();
+        Self { bits, bit_weight }
+    }
+
+    /// Ladder with per-stage capacitor mismatch ~ N(0, σ) (relative).
+    /// MOM-capacitor ladders (paper §III-B) have σ well under 1%.
+    pub fn with_mismatch(bits: u32, sigma: f64, rng: &mut Rng) -> Self {
+        let mut l = Self::new(bits);
+        if sigma > 0.0 {
+            for w in l.bit_weight.iter_mut() {
+                *w *= 1.0 + rng.normal(0.0, sigma);
+            }
+        }
+        l
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Multiply: unsigned digital magnitude × v_ref (paper eq. 2).
+    pub fn convert(&self, w_mag: u8, v_ref: f64) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..self.bits.min(8) {
+            if (w_mag >> i) & 1 == 1 {
+                acc += self.bit_weight[i as usize];
+            }
+        }
+        acc * v_ref
+    }
+
+    /// Signed convenience: `convert(|w|) · sign(w)` — the switched-cap
+    /// polarity stage of the A-SYN.
+    pub fn convert_signed(&self, w: i8, v_ref: f64) -> f64 {
+        let mag = w.unsigned_abs();
+        let v = self.convert(mag, v_ref);
+        if w < 0 {
+            -v
+        } else {
+            v
+        }
+    }
+}
+
+/// Op-amp integrator behavioural model: finite gain, slew limiting, rail
+/// saturation.
+#[derive(Debug, Clone)]
+pub struct OpAmpIntegrator {
+    gain: f64,
+    slew_rate: f64,
+    v_sat: f64,
+}
+
+impl OpAmpIntegrator {
+    pub fn new(p: &AnalogParams) -> Self {
+        Self { gain: p.opamp_gain, slew_rate: p.slew_rate, v_sat: p.v_sat }
+    }
+
+    /// Integrate a charge packet that would ideally move the output by
+    /// `dv`, over window `dt`. Returns the achieved new output voltage.
+    pub fn integrate(&self, v_now: f64, dv: f64, dt: f64) -> f64 {
+        // Finite-gain error: the virtual ground sits at -v/A, skimming a
+        // fraction of the packet.
+        let gain_err = if self.gain.is_finite() { 1.0 - 1.0 / self.gain } else { 1.0 };
+        let mut step = dv * gain_err;
+        // Slew limiting.
+        let max_step = self.slew_rate * dt;
+        if step.abs() > max_step {
+            step = step.signum() * max_step;
+        }
+        // Rail clamp.
+        (v_now + step).clamp(-self.v_sat, self.v_sat)
+    }
+}
+
+/// Latched comparator with hysteresis and propagation delay.
+#[derive(Debug, Clone)]
+pub struct Comparator {
+    hysteresis: f64,
+    pub delay: f64,
+    /// Last output state (for hysteresis).
+    state: bool,
+}
+
+impl Comparator {
+    pub fn new(p: &AnalogParams) -> Self {
+        Self { hysteresis: p.comparator_hysteresis, delay: p.comparator_delay, state: false }
+    }
+
+    /// Evaluate at a clock edge: `v` against `v_th`. Returns the (post-
+    /// delay) logic level.
+    pub fn compare(&mut self, v: f64, v_th: f64) -> bool {
+        let th = if self.state {
+            v_th - self.hysteresis
+        } else {
+            v_th + self.hysteresis
+        };
+        self.state = v >= th;
+        self.state
+    }
+
+    pub fn reset(&mut self) {
+        self.state = false;
+    }
+}
+
+/// The N storage capacitors ("virtual neurons") of one A-NEURON.
+#[derive(Debug, Clone)]
+pub struct VirtualNeuronBank {
+    /// Stored membrane voltage per capacitor.
+    v: Vec<f64>,
+    hold_leak: f64,
+}
+
+impl VirtualNeuronBank {
+    pub fn new(n: usize, p: &AnalogParams) -> Self {
+        Self { v: vec![0.0; n], hold_leak: p.hold_leak }
+    }
+
+    pub fn len(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.v.is_empty()
+    }
+
+    pub fn read(&self, k: usize) -> f64 {
+        self.v[k]
+    }
+
+    pub fn write(&mut self, k: usize, v: f64) {
+        self.v[k] = v;
+    }
+
+    /// Hold droop applied to every capacitor except the active one (it is
+    /// connected to the op-amp, not floating).
+    pub fn droop(&mut self, active: Option<usize>) {
+        if self.hold_leak == 0.0 {
+            return;
+        }
+        for (k, v) in self.v.iter_mut().enumerate() {
+            if Some(k) != active {
+                *v *= 1.0 - self.hold_leak;
+            }
+        }
+    }
+
+    /// The controller's per-time-step leak command: discharge every
+    /// capacitor by the factor implementing the LIF β (paper §III-A:
+    /// "a portion of the stored voltage ... is discharged at each time
+    /// step").
+    pub fn lif_leak(&mut self, beta: f64) {
+        for v in self.v.iter_mut() {
+            *v *= beta;
+        }
+    }
+
+    /// Reset capacitor `k` to the reset potential.
+    pub fn reset(&mut self, k: usize, v_reset: f64) {
+        self.v[k] = v_reset;
+    }
+}
+
+/// A captured waveform sample for Figure 5.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WavePoint {
+    /// Simulation time (s).
+    pub t: f64,
+    /// A-SYN output (integrator input) voltage.
+    pub v_in: f64,
+    /// Integrator (op-amp 1) output — the membrane voltage.
+    pub v_integ: f64,
+    /// Comparator (op-amp 2) output pulse, as a logic voltage.
+    pub v_out: f64,
+}
+
+/// One assembled A-NEURON engine (Figure 2): integrator + comparator +
+/// virtual-neuron capacitor bank, with optional waveform capture and
+/// energy accounting.
+#[derive(Debug, Clone)]
+pub struct ANeuron {
+    pub params: AnalogParams,
+    integ: OpAmpIntegrator,
+    comp: Comparator,
+    pub bank: VirtualNeuronBank,
+    /// Total energy consumed (J).
+    pub energy: f64,
+    /// Total busy time (s).
+    pub busy_time: f64,
+    /// Number of integrate-and-fire operations performed.
+    pub ops: u64,
+    /// Waveform capture buffer (enabled via [`Self::enable_capture`]).
+    capture: Option<Vec<WavePoint>>,
+    /// Current simulation time for capture (advanced by the caller).
+    pub now: f64,
+}
+
+impl ANeuron {
+    pub fn new(virtual_neurons: usize, params: AnalogParams) -> Self {
+        Self {
+            integ: OpAmpIntegrator::new(&params),
+            comp: Comparator::new(&params),
+            bank: VirtualNeuronBank::new(virtual_neurons, &params),
+            energy: 0.0,
+            busy_time: 0.0,
+            ops: 0,
+            capture: None,
+            now: 0.0,
+            params,
+        }
+    }
+
+    /// Start capturing waveforms (Figure 5).
+    pub fn enable_capture(&mut self) {
+        self.capture = Some(Vec::new());
+    }
+
+    pub fn waveform(&self) -> &[WavePoint] {
+        self.capture.as_deref().unwrap_or(&[])
+    }
+
+    /// Process one dispatched event batch for virtual neuron `k`:
+    /// restore the stored voltage, integrate the summed synaptic packet
+    /// `v_packet` (A-SYN bank output), compare against threshold, store
+    /// back or reset. Returns `true` if the neuron fired.
+    ///
+    /// This is the paper's restore→integrate→store sequence (§III-A) and
+    /// costs one A-NEURON operation (6.72 ns / 0.652 fJ at the paper's
+    /// operating point).
+    pub fn process(&mut self, k: usize, v_packet: f64, v_th: f64, v_reset: f64) -> bool {
+        let dt = self.params.neuron_delay;
+        // Restore: switch the capacitor onto the op-amp feedback path;
+        // charge injection perturbs the restored voltage.
+        let v_restored = self.bank.read(k) + self.params.switch_injection;
+        // Integrate the packet.
+        let v_new = self.integ.integrate(v_restored, v_packet, dt);
+        // Compare.
+        let fired = self.comp.compare(v_new, v_th);
+        // Store back (or reset on fire). Second switch event injects again.
+        let v_stored = if fired {
+            v_reset
+        } else {
+            v_new - self.params.switch_injection
+        };
+        self.bank.write(k, v_stored);
+        // Hold droop on the idle capacitors.
+        self.bank.droop(Some(k));
+        // Accounting.
+        self.energy += self.params.neuron_energy_per_op;
+        self.busy_time += dt;
+        self.ops += 1;
+        if let Some(cap) = self.capture.as_mut() {
+            let t0 = self.now;
+            cap.push(WavePoint { t: t0, v_in: v_packet, v_integ: v_restored, v_out: 0.0 });
+            cap.push(WavePoint {
+                t: t0 + dt * 0.6,
+                v_in: v_packet,
+                v_integ: v_new,
+                v_out: 0.0,
+            });
+            cap.push(WavePoint {
+                t: t0 + dt * 0.6 + self.params.comparator_delay,
+                v_in: 0.0,
+                v_integ: if fired { v_reset } else { v_new },
+                v_out: if fired { self.params.v_ref } else { 0.0 },
+            });
+        }
+        self.now += dt;
+        fired
+    }
+
+    /// Apply the controller's per-time-step leak command to all virtual
+    /// neurons of this engine.
+    pub fn lif_leak(&mut self, beta: f64) {
+        self.bank.lif_leak(beta);
+        if let Some(cap) = self.capture.as_mut() {
+            // Leak shows as a droop sample on the integration trace.
+            if let Some(&last) = cap.last() {
+                cap.push(WavePoint {
+                    t: self.now,
+                    v_in: 0.0,
+                    v_integ: last.v_integ * beta,
+                    v_out: 0.0,
+                });
+            }
+        }
+    }
+
+    /// Average power over the busy time (W) — comparable to the paper's
+    /// 97 nW figure when exercised continuously.
+    pub fn average_power(&self) -> f64 {
+        if self.busy_time == 0.0 {
+            0.0
+        } else {
+            self.energy / self.busy_time
+        }
+    }
+}
+
+/// The A-SYN engine (Figure 3): SRAM-backed weight row driving a C2C
+/// ladder. [`Self::mac`] turns a signed weight into an analog packet
+/// voltage contribution.
+#[derive(Debug, Clone)]
+pub struct ASyn {
+    pub ladder: C2cLadder,
+    v_ref: f64,
+    /// Energy per MAC (C2C conversion + SRAM read), J.
+    pub energy_per_mac: f64,
+    pub energy: f64,
+    pub macs: u64,
+}
+
+impl ASyn {
+    pub fn new(bits: u32, params: &AnalogParams, rng: Option<&mut Rng>) -> Self {
+        let ladder = match rng {
+            Some(r) if params.c2c_mismatch_sigma > 0.0 => {
+                C2cLadder::with_mismatch(bits, params.c2c_mismatch_sigma, r)
+            }
+            _ => C2cLadder::new(bits),
+        };
+        Self {
+            ladder,
+            v_ref: params.v_ref,
+            // C2C MAC energy: dominated by ladder cap charging + SRAM read.
+            // Sized so the synapse array tracks the paper's TOPS/W balance
+            // (see energy.rs for the full budget).
+            energy_per_mac: 0.30e-15,
+            energy: 0.0,
+            macs: 0,
+        }
+    }
+
+    /// One multiply: signed 8-bit weight → analog voltage contribution,
+    /// where `scale_to_volts` maps one quantized unit to membrane volts.
+    pub fn mac(&mut self, w: i8, scale_to_volts: f64) -> f64 {
+        self.energy += self.energy_per_mac;
+        self.macs += 1;
+        // Ladder computes |w|/2ⁿ · v_ref; multiply back by 2ⁿ·scale/v_ref
+        // to land in membrane-volt units: net effect w · scale (plus
+        // mismatch error if configured).
+        let n = 2f64.powi(self.ladder.bits() as i32);
+        self.ladder.convert_signed(w, self.v_ref) * n * scale_to_volts / self.v_ref
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c2c_matches_equation2() {
+        let l = C2cLadder::new(8);
+        // V_out = V_ref · Σ W_i 2^{i-n}; for w = 255: (2⁸-1)/2⁸.
+        let v = l.convert(255, 1.0);
+        assert!((v - 255.0 / 256.0).abs() < 1e-12);
+        assert_eq!(l.convert(0, 1.0), 0.0);
+        let v128 = l.convert(128, 1.0);
+        assert!((v128 - 0.5).abs() < 1e-12);
+        // Linear in v_ref.
+        assert!((l.convert(77, 2.0) - 2.0 * l.convert(77, 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn c2c_signed() {
+        let l = C2cLadder::new(8);
+        assert!(l.convert_signed(-64, 1.0) < 0.0);
+        assert!((l.convert_signed(-64, 1.0) + l.convert_signed(64, 1.0)).abs() < 1e-12);
+        // i8::MIN magnitude 128 wraps to 128 via unsigned_abs — but the
+        // ladder is 8-bit (max 255), bit 7 set → 0.5·v_ref. Must not panic.
+        let v = l.convert_signed(i8::MIN, 1.0);
+        assert!((v + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn c2c_mismatch_bounded() {
+        let mut rng = Rng::new(5);
+        let l = C2cLadder::with_mismatch(8, 0.002, &mut rng);
+        for w in [1u8, 37, 128, 255] {
+            let ideal = C2cLadder::new(8).convert(w, 1.0);
+            let real = l.convert(w, 1.0);
+            assert!(
+                (real - ideal).abs() / ideal.max(1e-9) < 0.02,
+                "w={w}: {real} vs {ideal}"
+            );
+        }
+        // Zero sigma = exactly ideal.
+        let l0 = C2cLadder::with_mismatch(8, 0.0, &mut rng);
+        assert_eq!(l0.convert(200, 1.0), C2cLadder::new(8).convert(200, 1.0));
+    }
+
+    #[test]
+    fn integrator_ideal_is_exact() {
+        let p = AnalogParams::ideal();
+        let o = OpAmpIntegrator::new(&p);
+        let v = o.integrate(0.25, 0.5, 1e-9);
+        assert_eq!(v, 0.75);
+        let v = o.integrate(0.75, -1.0, 1e-9);
+        assert_eq!(v, -0.25);
+    }
+
+    #[test]
+    fn integrator_saturates_and_slews() {
+        let mut p = AnalogParams::paper();
+        p.v_sat = 1.0;
+        p.slew_rate = 1e9; // 1 V/ns
+        p.opamp_gain = f64::INFINITY;
+        let o = OpAmpIntegrator::new(&p);
+        // Slew: in 0.5 ns can move at most 0.5 V.
+        let v = o.integrate(0.0, 2.0, 0.5e-9);
+        assert!((v - 0.5).abs() < 1e-12, "v={v}");
+        // Saturation clamp.
+        let v = o.integrate(0.9, 0.5, 1e-6);
+        assert_eq!(v, 1.0);
+    }
+
+    #[test]
+    fn integrator_finite_gain_skims() {
+        let mut p = AnalogParams::ideal();
+        p.opamp_gain = 100.0;
+        let o = OpAmpIntegrator::new(&p);
+        let v = o.integrate(0.0, 1.0, 1.0);
+        assert!((v - 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comparator_hysteresis() {
+        let mut p = AnalogParams::paper();
+        p.comparator_hysteresis = 0.1;
+        let mut c = Comparator::new(&p);
+        assert!(!c.compare(1.05, 1.0)); // below v_th + hyst
+        assert!(c.compare(1.15, 1.0)); // crosses
+        assert!(c.compare(0.95, 1.0)); // stays high until v_th - hyst
+        assert!(!c.compare(0.85, 1.0)); // drops
+        c.reset();
+        assert!(!c.compare(1.05, 1.0));
+    }
+
+    #[test]
+    fn bank_leak_and_droop() {
+        let mut p = AnalogParams::ideal();
+        p.hold_leak = 0.1;
+        let mut b = VirtualNeuronBank::new(3, &p);
+        b.write(0, 1.0);
+        b.write(1, 1.0);
+        b.write(2, 1.0);
+        b.droop(Some(1));
+        assert!((b.read(0) - 0.9).abs() < 1e-12);
+        assert_eq!(b.read(1), 1.0); // active, no droop
+        b.lif_leak(0.5);
+        assert!((b.read(1) - 0.5).abs() < 1e-12);
+        b.reset(1, 0.0);
+        assert_eq!(b.read(1), 0.0);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn aneuron_ideal_matches_lif_math() {
+        // Ideal A-NEURON must replicate v ← βv + i / fire / reset exactly.
+        let mut an = ANeuron::new(4, AnalogParams::ideal());
+        let (th, reset) = (1.0, 0.0);
+        // Two packets of 0.6 on capacitor 2: fires on the second.
+        assert!(!an.process(2, 0.6, th, reset));
+        assert!((an.bank.read(2) - 0.6).abs() < 1e-12);
+        assert!(an.process(2, 0.6, th, reset));
+        assert_eq!(an.bank.read(2), 0.0);
+        assert_eq!(an.ops, 2);
+        // Leak β=0.9 across the bank.
+        an.process(0, 0.5, th, reset);
+        an.lif_leak(0.9);
+        assert!((an.bank.read(0) - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aneuron_power_matches_paper_operating_point() {
+        let mut an = ANeuron::new(1, AnalogParams::paper());
+        for _ in 0..1000 {
+            an.process(0, 0.01, 1.0, 0.0);
+        }
+        let p = an.average_power();
+        assert!((p - 97e-9).abs() / 97e-9 < 1e-9, "avg power {p} != 97nW");
+        assert!((an.busy_time - 1000.0 * 6.72e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn aneuron_capture_produces_fig5_shape() {
+        let mut an = ANeuron::new(1, AnalogParams::paper());
+        an.enable_capture();
+        // Drive sub-threshold packets then a firing one.
+        an.process(0, 0.4, 1.0, 0.0);
+        an.process(0, 0.4, 1.0, 0.0);
+        let fired = an.process(0, 0.4, 1.0, 0.0);
+        assert!(fired);
+        let wf = an.waveform();
+        assert!(!wf.is_empty());
+        // Monotone time.
+        assert!(wf.windows(2).all(|w| w[1].t >= w[0].t));
+        // Integration voltage rose then reset; output pulsed exactly once.
+        let pulses = wf.iter().filter(|p| p.v_out > 0.5).count();
+        assert_eq!(pulses, 1);
+        let vmax = wf.iter().map(|p| p.v_integ).fold(0.0, f64::max);
+        assert!(vmax > 0.8, "integration ramp visible, vmax={vmax}");
+    }
+
+    #[test]
+    fn asyn_mac_equals_w_times_scale_when_ideal() {
+        let p = AnalogParams::ideal();
+        let mut asyn = ASyn::new(8, &p, None);
+        let scale = 0.01;
+        for w in [-128i8, -77, -1, 0, 1, 77, 127] {
+            let v = asyn.mac(w, scale);
+            assert!(
+                (v - w as f64 * scale).abs() < 1e-12,
+                "w={w}: v={v} expected {}",
+                w as f64 * scale
+            );
+        }
+        assert_eq!(asyn.macs, 7);
+        assert!(asyn.energy > 0.0);
+    }
+
+    #[test]
+    fn asyn_mismatch_error_small() {
+        let p = AnalogParams::paper();
+        let mut rng = Rng::new(3);
+        let mut asyn = ASyn::new(8, &p, Some(&mut rng));
+        let scale = 0.01;
+        let v = asyn.mac(100, scale);
+        assert!((v / (100.0 * scale) - 1.0).abs() < 0.02, "v={v}");
+    }
+}

@@ -1,0 +1,276 @@
+//! In-tree micro/macro-bench harness (criterion is unavailable offline).
+//!
+//! Each `benches/*.rs` target is a plain `fn main()` that uses [`Bencher`]
+//! for timing and [`Table`] to print the paper's tables/figure series in a
+//! stable, grep-able format. Output conventions:
+//!
+//! * `BENCH <name> mean=<t> p50=<t> p99=<t> iters=<n>` — timing lines
+//! * aligned ASCII tables for the paper artifacts (Table I/II)
+//! * `SERIES <name> x=[..] y=[..]` — figure series (Figures 5–7), also
+//!   dumped as JSON next to the bench output when `MENAGE_BENCH_DIR` is set.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Quantiles;
+
+/// Format a duration compactly (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Timing result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// Mean throughput given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+}
+
+/// Adaptive-iteration bencher: warms up, then runs until `budget` elapses
+/// (min 10 / max `max_iters` iterations), reporting the distribution.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for CI-ish runs (also used by `cargo test` smoke tests).
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(200),
+            max_iters: 10_000,
+        }
+    }
+
+    /// Benchmark `f`, which must do one unit of work per call. The closure's
+    /// return value is passed through `std::hint::black_box`.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut q = Quantiles::new();
+        let mut total = Duration::ZERO;
+        let mut iters = 0u64;
+        let start = Instant::now();
+        while (start.elapsed() < self.budget || iters < 10) && iters < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            let dt = t0.elapsed();
+            q.add(dt.as_secs_f64());
+            total += dt;
+            iters += 1;
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(total.as_secs_f64() / iters as f64),
+            p50: Duration::from_secs_f64(q.quantile(0.5)),
+            p99: Duration::from_secs_f64(q.quantile(0.99)),
+            min: Duration::from_secs_f64(q.quantile(0.0)),
+        };
+        println!(
+            "BENCH {name} mean={} p50={} p99={} min={} iters={}",
+            fmt_duration(res.mean),
+            fmt_duration(res.p50),
+            fmt_duration(res.p99),
+            fmt_duration(res.min),
+            res.iters
+        );
+        res
+    }
+}
+
+/// Aligned ASCII table printer for the paper's tables.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = widths[i] - c.chars().count();
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        println!("\n== {} ==", self.title);
+        println!("{sep}");
+        println!("{}", line(&self.headers));
+        println!("{sep}");
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+        println!("{sep}");
+    }
+}
+
+/// Print (and optionally persist) a figure series.
+pub fn emit_series(name: &str, x: &[f64], y: &[f64]) {
+    assert_eq!(x.len(), y.len());
+    let xs: Vec<String> = x.iter().map(|v| format!("{v:.4}")).collect();
+    let ys: Vec<String> = y.iter().map(|v| format!("{v:.6}")).collect();
+    println!("SERIES {name} x=[{}] y=[{}]", xs.join(","), ys.join(","));
+    if let Ok(dir) = std::env::var("MENAGE_BENCH_DIR") {
+        let j = Json::obj(vec![
+            ("name", name.into()),
+            ("x", Json::arr_f64(x)),
+            ("y", Json::arr_f64(y)),
+        ]);
+        let path = std::path::Path::new(&dir).join(format!("{name}.json"));
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(path, j.to_string());
+    }
+}
+
+/// Render a series as an ASCII sparkline chart (for bench stdout).
+pub fn ascii_chart(name: &str, y: &[f64], height: usize) -> String {
+    if y.is_empty() {
+        return format!("{name}: (empty)\n");
+    }
+    let max = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(1e-12);
+    let min = y.iter().cloned().fold(f64::INFINITY, f64::min).min(0.0);
+    let span = (max - min).max(1e-12);
+    let mut out = format!("{name} (min={min:.3}, max={max:.3})\n");
+    for row in (0..height).rev() {
+        let lo = min + span * row as f64 / height as f64;
+        let mut line = String::new();
+        for &v in y {
+            line.push(if v >= lo + span / (2.0 * height as f64) && v > min {
+                '█'
+            } else if v >= lo {
+                '▄'
+            } else {
+                ' '
+            });
+        }
+        out.push_str(&format!("{lo:>10.3} |{line}\n"));
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(y.len())));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_work() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            max_iters: 1000,
+        };
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.iters >= 10);
+        assert!(r.mean >= Duration::ZERO);
+        assert!(r.p99 >= r.p50);
+        let tp = r.throughput(100.0);
+        assert!(tp > 0.0);
+    }
+
+    #[test]
+    fn table_prints_aligned() {
+        let mut t = Table::new("Test", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        t.print(); // visually checked; assert no panic + shape
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(fmt_duration(Duration::from_millis(2500)), "2.500s");
+    }
+
+    #[test]
+    fn chart_renders() {
+        let s = ascii_chart("spikes", &[0.0, 0.5, 1.0, 0.25], 4);
+        assert!(s.contains("spikes"));
+        assert!(s.lines().count() >= 5);
+        assert_eq!(ascii_chart("e", &[], 3), "e: (empty)\n");
+    }
+
+    #[test]
+    fn emit_series_runs() {
+        emit_series("test_series", &[0.0, 1.0], &[2.0, 3.0]);
+    }
+}

@@ -1,0 +1,560 @@
+//! Configuration system: accelerator, model and run configs.
+//!
+//! Configs are plain structs with the paper's two presets (Accel₁ / Accel₂,
+//! §IV-A) and can be loaded from a TOML-subset file parsed by the in-tree
+//! [`toml_lite`] parser (sections, `key = value` with strings, numbers,
+//! booleans and flat arrays — exactly what accelerator configs need).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Hardware description of one MENAGE instance (Figure 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Human-readable name ("accel1", "accel2", ...).
+    pub name: String,
+    /// Number of MX-NEURACORE engines (one per model layer).
+    pub num_cores: usize,
+    /// A-NEURON engines per MX-NEURACORE (paper: M).
+    pub a_neurons_per_core: usize,
+    /// Storage capacitors (virtual neurons) per A-NEURON (paper: N).
+    pub virtual_per_a_neuron: usize,
+    /// A-SYN engines per MX-NEURACORE (C2C ladder multipliers). The paper
+    /// pairs one A-SYN bank with the A-NEURON bank; we keep it explicit.
+    pub a_syns_per_core: usize,
+    /// Total weight SRAM per MX-NEURACORE, in bytes (8-bit weights).
+    pub weight_mem_bytes: usize,
+    /// System clock (paper: 103.2 MHz from the MX-NEURACORE simulation).
+    pub clock_hz: f64,
+    /// Event-memory (MEM_E) depth, in events.
+    pub event_mem_depth: usize,
+    /// MEM_S&N row count per core.
+    pub memsn_rows: usize,
+    /// Per-source-neuron fan-out limit used by ILP constraint (7).
+    pub fanout_limit: usize,
+    /// Weight bit width (paper: 8).
+    pub weight_bits: u32,
+    /// Technology node label (reporting only; paper: 90nm).
+    pub tech_node: String,
+}
+
+impl AcceleratorConfig {
+    /// Accel₁ (paper §IV-A): 4 MX-NEURACOREs, 10 A-NEURONs × 16 virtual
+    /// neurons, 400 KB weight SRAM per core — sized for the N-MNIST MLP.
+    pub fn accel1() -> Self {
+        Self {
+            name: "accel1".into(),
+            num_cores: 4,
+            a_neurons_per_core: 10,
+            virtual_per_a_neuron: 16,
+            a_syns_per_core: 10,
+            weight_mem_bytes: 400 * 1024,
+            clock_hz: 103.2e6,
+            event_mem_depth: 4096,
+            memsn_rows: 65536,
+            fanout_limit: 4096,
+            weight_bits: 8,
+            tech_node: "90nm".into(),
+        }
+    }
+
+    /// Accel₂ (paper §IV-A): 5 MX-NEURACOREs, 20 A-NEURONs × 32 virtual
+    /// neurons, 20 MB weight SRAM per core — sized for the CIFAR10-DVS MLP.
+    pub fn accel2() -> Self {
+        Self {
+            name: "accel2".into(),
+            num_cores: 5,
+            a_neurons_per_core: 20,
+            virtual_per_a_neuron: 32,
+            a_syns_per_core: 20,
+            weight_mem_bytes: 20 * 1024 * 1024,
+            clock_hz: 103.2e6,
+            event_mem_depth: 65536,
+            memsn_rows: 1 << 21,
+            fanout_limit: 65536,
+            weight_bits: 8,
+            tech_node: "90nm".into(),
+        }
+    }
+
+    /// Virtual-neuron capacity of one core: M × N model neurons
+    /// simultaneously resident.
+    pub fn core_capacity(&self) -> usize {
+        self.a_neurons_per_core * self.virtual_per_a_neuron
+    }
+
+    /// Weight SRAM capacity in weights.
+    pub fn weight_capacity(&self) -> usize {
+        self.weight_mem_bytes * 8 / self.weight_bits as usize
+    }
+
+    /// Clock period in seconds.
+    pub fn clock_period(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_cores == 0
+            || self.a_neurons_per_core == 0
+            || self.virtual_per_a_neuron == 0
+            || self.a_syns_per_core == 0
+        {
+            bail!("{}: all engine counts must be positive", self.name);
+        }
+        if self.clock_hz <= 0.0 {
+            bail!("{}: clock must be positive", self.name);
+        }
+        if !(1..=16).contains(&self.weight_bits) {
+            bail!("{}: weight_bits must be in 1..=16", self.name);
+        }
+        if self.event_mem_depth == 0 || self.memsn_rows == 0 {
+            bail!("{}: memories must be non-empty", self.name);
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file (section `[accelerator]`).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml_lite::parse(text)?;
+        let s = doc.section("accelerator")?;
+        let base = match s.get_str("preset").ok() {
+            Some("accel1") => Self::accel1(),
+            Some("accel2") => Self::accel2(),
+            Some(other) => bail!("unknown preset {other:?}"),
+            None => Self::accel1(),
+        };
+        let cfg = Self {
+            name: s.get_str("name").map(str::to_string).unwrap_or(base.name),
+            num_cores: s.get_usize("num_cores").unwrap_or(base.num_cores),
+            a_neurons_per_core: s
+                .get_usize("a_neurons_per_core")
+                .unwrap_or(base.a_neurons_per_core),
+            virtual_per_a_neuron: s
+                .get_usize("virtual_per_a_neuron")
+                .unwrap_or(base.virtual_per_a_neuron),
+            a_syns_per_core: s.get_usize("a_syns_per_core").unwrap_or(base.a_syns_per_core),
+            weight_mem_bytes: s.get_usize("weight_mem_bytes").unwrap_or(base.weight_mem_bytes),
+            clock_hz: s.get_f64("clock_hz").unwrap_or(base.clock_hz),
+            event_mem_depth: s.get_usize("event_mem_depth").unwrap_or(base.event_mem_depth),
+            memsn_rows: s.get_usize("memsn_rows").unwrap_or(base.memsn_rows),
+            fanout_limit: s.get_usize("fanout_limit").unwrap_or(base.fanout_limit),
+            weight_bits: s.get_usize("weight_bits").map(|v| v as u32).unwrap_or(base.weight_bits),
+            tech_node: s.get_str("tech_node").map(str::to_string).unwrap_or(base.tech_node),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Model (network) description — layer widths plus LIF parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Layer widths including input and output, e.g. `[2312, 200, 100, 40, 10]`.
+    pub layer_sizes: Vec<usize>,
+    /// Simulation time steps per input.
+    pub timesteps: usize,
+    /// LIF leak factor β (discrete-time: v ← βv + i).
+    pub beta: f64,
+    /// Firing threshold.
+    pub v_threshold: f64,
+    /// Reset potential.
+    pub v_reset: f64,
+}
+
+impl ModelConfig {
+    /// N-MNIST MLP from Table I: input 34×34×2 = 2312, hidden 200/100/40,
+    /// output 10 (0.49 M parameters).
+    pub fn nmnist_mlp() -> Self {
+        Self {
+            name: "nmnist_mlp".into(),
+            layer_sizes: vec![2312, 200, 100, 40, 10],
+            timesteps: 30,
+            beta: 0.9,
+            v_threshold: 1.0,
+            v_reset: 0.0,
+        }
+    }
+
+    /// CIFAR10-DVS MLP from Table I: input 128×128×2 = 32768, hidden
+    /// 1000/500/200/100, output 10 (33.4 M parameters).
+    pub fn cifar10dvs_mlp() -> Self {
+        Self {
+            name: "cifar10dvs_mlp".into(),
+            layer_sizes: vec![32768, 1000, 500, 200, 100, 10],
+            timesteps: 50,
+            beta: 0.9,
+            v_threshold: 1.0,
+            v_reset: 0.0,
+        }
+    }
+
+    /// A scaled-down CIFAR10-DVS variant (16× smaller input) used by quick
+    /// tests and CI so the full pipeline stays exercisable in seconds.
+    pub fn cifar10dvs_mlp_small() -> Self {
+        Self {
+            name: "cifar10dvs_mlp_small".into(),
+            layer_sizes: vec![2048, 1000, 500, 200, 100, 10],
+            timesteps: 20,
+            beta: 0.9,
+            v_threshold: 1.0,
+            v_reset: 0.0,
+        }
+    }
+
+    /// Number of weight parameters (dense).
+    pub fn num_params(&self) -> usize {
+        self.layer_sizes.windows(2).map(|w| w[0] * w[1]).sum()
+    }
+
+    /// Number of synaptic layers.
+    pub fn num_layers(&self) -> usize {
+        self.layer_sizes.len().saturating_sub(1)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.layer_sizes.len() < 2 {
+            bail!("{}: need at least input and output layers", self.name);
+        }
+        if self.layer_sizes.iter().any(|&s| s == 0) {
+            bail!("{}: zero-width layer", self.name);
+        }
+        if self.timesteps == 0 {
+            bail!("{}: timesteps must be positive", self.name);
+        }
+        if !(0.0..=1.0).contains(&self.beta) {
+            bail!("{}: beta must be in [0,1]", self.name);
+        }
+        if self.v_threshold <= self.v_reset {
+            bail!("{}: threshold must exceed reset", self.name);
+        }
+        Ok(())
+    }
+
+    /// Parse from TOML-subset text (section `[model]`).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml_lite::parse(text)?;
+        let s = doc.section("model")?;
+        let base = match s.get_str("preset").ok() {
+            Some("nmnist_mlp") => Self::nmnist_mlp(),
+            Some("cifar10dvs_mlp") => Self::cifar10dvs_mlp(),
+            Some("cifar10dvs_mlp_small") => Self::cifar10dvs_mlp_small(),
+            Some(other) => bail!("unknown preset {other:?}"),
+            None => Self::nmnist_mlp(),
+        };
+        let cfg = Self {
+            name: s.get_str("name").map(str::to_string).unwrap_or(base.name),
+            layer_sizes: s.get_usize_arr("layer_sizes").unwrap_or(base.layer_sizes),
+            timesteps: s.get_usize("timesteps").unwrap_or(base.timesteps),
+            beta: s.get_f64("beta").unwrap_or(base.beta),
+            v_threshold: s.get_f64("v_threshold").unwrap_or(base.v_threshold),
+            v_reset: s.get_f64("v_reset").unwrap_or(base.v_reset),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// TOML subset parser: `[section]` headers; `key = value` where value is a
+/// string, number, boolean, or flat array of numbers. Comments with `#`.
+pub mod toml_lite {
+    use super::*;
+
+    /// A parsed value.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Value {
+        Str(String),
+        Num(f64),
+        Bool(bool),
+        Arr(Vec<f64>),
+    }
+
+    /// One `[section]`.
+    #[derive(Debug, Clone, Default)]
+    pub struct Section {
+        pub entries: BTreeMap<String, Value>,
+    }
+
+    impl Section {
+        pub fn get(&self, key: &str) -> Result<&Value> {
+            self.entries.get(key).ok_or_else(|| anyhow!("missing key {key:?}"))
+        }
+        pub fn get_str(&self, key: &str) -> Result<&str> {
+            match self.get(key)? {
+                Value::Str(s) => Ok(s),
+                v => bail!("{key}: expected string, got {v:?}"),
+            }
+        }
+        pub fn get_f64(&self, key: &str) -> Result<f64> {
+            match self.get(key)? {
+                Value::Num(n) => Ok(*n),
+                v => bail!("{key}: expected number, got {v:?}"),
+            }
+        }
+        pub fn get_usize(&self, key: &str) -> Result<usize> {
+            let n = self.get_f64(key)?;
+            if n < 0.0 || n.fract() != 0.0 {
+                bail!("{key}: expected non-negative integer, got {n}");
+            }
+            Ok(n as usize)
+        }
+        pub fn get_bool(&self, key: &str) -> Result<bool> {
+            match self.get(key)? {
+                Value::Bool(b) => Ok(*b),
+                v => bail!("{key}: expected bool, got {v:?}"),
+            }
+        }
+        pub fn get_usize_arr(&self, key: &str) -> Result<Vec<usize>> {
+            match self.get(key)? {
+                Value::Arr(a) => a
+                    .iter()
+                    .map(|&n| {
+                        if n < 0.0 || n.fract() != 0.0 {
+                            bail!("{key}: array element {n} is not a non-negative integer")
+                        } else {
+                            Ok(n as usize)
+                        }
+                    })
+                    .collect(),
+                v => bail!("{key}: expected array, got {v:?}"),
+            }
+        }
+    }
+
+    /// A parsed document.
+    #[derive(Debug, Clone, Default)]
+    pub struct Doc {
+        pub sections: BTreeMap<String, Section>,
+    }
+
+    impl Doc {
+        pub fn section(&self, name: &str) -> Result<&Section> {
+            self.sections.get(name).ok_or_else(|| {
+                anyhow!("missing section [{name}] (have: {:?})", self.sections.keys())
+            })
+        }
+    }
+
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        let mut current = String::new();
+        doc.sections.insert(String::new(), Section::default());
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section header", ln + 1))?
+                    .trim()
+                    .to_string();
+                doc.sections.entry(name.clone()).or_default();
+                current = name;
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", ln + 1))?;
+            let key = k.trim().to_string();
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: value for {key:?}", ln + 1))?;
+            doc.sections.get_mut(&current).unwrap().entries.insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    fn strip_comment(line: &str) -> &str {
+        // '#' inside quoted strings is respected.
+        let mut in_str = false;
+        for (i, c) in line.char_indices() {
+            match c {
+                '"' => in_str = !in_str,
+                '#' if !in_str => return &line[..i],
+                _ => {}
+            }
+        }
+        line
+    }
+
+    fn parse_value(v: &str) -> Result<Value> {
+        if let Some(inner) = v.strip_prefix('"') {
+            let s = inner
+                .strip_suffix('"')
+                .ok_or_else(|| anyhow!("unterminated string"))?;
+            return Ok(Value::Str(s.to_string()));
+        }
+        if v == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if v == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Some(inner) = v.strip_prefix('[') {
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("unterminated array"))?
+                .trim();
+            if inner.is_empty() {
+                return Ok(Value::Arr(vec![]));
+            }
+            let xs: Result<Vec<f64>> = inner
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .replace('_', "")
+                        .parse::<f64>()
+                        .map_err(|_| anyhow!("bad number {s:?}"))
+                })
+                .collect();
+            return Ok(Value::Arr(xs?));
+        }
+        v.replace('_', "")
+            .parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| anyhow!("cannot parse value {v:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        let a1 = AcceleratorConfig::accel1();
+        assert_eq!(a1.num_cores, 4);
+        assert_eq!(a1.a_neurons_per_core, 10);
+        assert_eq!(a1.virtual_per_a_neuron, 16);
+        assert_eq!(a1.weight_mem_bytes, 400 * 1024);
+        assert_eq!(a1.core_capacity(), 160);
+        a1.validate().unwrap();
+
+        let a2 = AcceleratorConfig::accel2();
+        assert_eq!(a2.num_cores, 5);
+        assert_eq!(a2.a_neurons_per_core, 20);
+        assert_eq!(a2.virtual_per_a_neuron, 32);
+        assert_eq!(a2.weight_mem_bytes, 20 * 1024 * 1024);
+        assert_eq!(a2.core_capacity(), 640);
+        a2.validate().unwrap();
+        assert!((a1.clock_hz - 103.2e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn model_param_counts_match_table1() {
+        let m = ModelConfig::nmnist_mlp();
+        // 2312·200 + 200·100 + 100·40 + 40·10 = 486 800 ≈ 0.49 M
+        assert_eq!(m.num_params(), 486_800);
+        assert_eq!(m.num_layers(), 4);
+        m.validate().unwrap();
+
+        let c = ModelConfig::cifar10dvs_mlp();
+        // 32768·1000 + 1000·500 + 500·200 + 200·100 + 100·10 = 33 389 000 ≈ 33.4 M
+        assert_eq!(c.num_params(), 33_389_000);
+        assert_eq!(c.num_layers(), 5);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_nonsense() {
+        let mut a = AcceleratorConfig::accel1();
+        a.num_cores = 0;
+        assert!(a.validate().is_err());
+        let mut a = AcceleratorConfig::accel1();
+        a.weight_bits = 0;
+        assert!(a.validate().is_err());
+        let mut m = ModelConfig::nmnist_mlp();
+        m.layer_sizes = vec![10];
+        assert!(m.validate().is_err());
+        let mut m = ModelConfig::nmnist_mlp();
+        m.beta = 1.5;
+        assert!(m.validate().is_err());
+        let mut m = ModelConfig::nmnist_mlp();
+        m.v_threshold = -1.0;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn toml_lite_parses() {
+        let doc = toml_lite::parse(
+            r#"
+            # top comment
+            [accelerator]
+            name = "custom"      # trailing comment
+            num_cores = 4
+            clock_hz = 103.2e6
+            layer = [1, 2, 3]
+            flag = true
+            "#,
+        )
+        .unwrap();
+        let s = doc.section("accelerator").unwrap();
+        assert_eq!(s.get_str("name").unwrap(), "custom");
+        assert_eq!(s.get_usize("num_cores").unwrap(), 4);
+        assert_eq!(s.get_f64("clock_hz").unwrap(), 103.2e6);
+        assert_eq!(s.get_usize_arr("layer").unwrap(), vec![1, 2, 3]);
+        assert!(s.get_bool("flag").unwrap());
+        assert!(s.get("missing").is_err());
+        assert!(doc.section("nope").is_err());
+    }
+
+    #[test]
+    fn toml_lite_rejects_malformed() {
+        assert!(toml_lite::parse("[unterminated").is_err());
+        assert!(toml_lite::parse("key value").is_err());
+        assert!(toml_lite::parse("k = [1, 2").is_err());
+        assert!(toml_lite::parse("k = \"oops").is_err());
+        assert!(toml_lite::parse("k = nope").is_err());
+    }
+
+    #[test]
+    fn accelerator_from_toml_with_preset_and_overrides() {
+        let cfg = AcceleratorConfig::from_toml(
+            r#"
+            [accelerator]
+            preset = "accel2"
+            name = "accel2_wide"
+            a_neurons_per_core = 40
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "accel2_wide");
+        assert_eq!(cfg.a_neurons_per_core, 40);
+        assert_eq!(cfg.num_cores, 5); // inherited from accel2
+        assert!(AcceleratorConfig::from_toml("[accelerator]\npreset = \"zzz\"").is_err());
+    }
+
+    #[test]
+    fn model_from_toml() {
+        let m = ModelConfig::from_toml(
+            r#"
+            [model]
+            preset = "nmnist_mlp"
+            timesteps = 10
+            layer_sizes = [100, 20, 10]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(m.timesteps, 10);
+        assert_eq!(m.layer_sizes, vec![100, 20, 10]);
+        assert_eq!(m.num_params(), 2200);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = toml_lite::parse("[s]\nk = \"a#b\"").unwrap();
+        assert_eq!(doc.section("s").unwrap().get_str("k").unwrap(), "a#b");
+    }
+}

@@ -1,0 +1,339 @@
+//! L3 coordinator: the inference service wrapped around the simulator.
+//!
+//! MENAGE's contribution is the hardware architecture, so the coordinator
+//! is deliberately thin (per the architecture brief): process lifecycle, a
+//! multi-worker request loop with batching, metrics, and the golden-model
+//! cross-check. tokio is not available in the offline vendor set, so the
+//! runtime is std::thread workers + mpsc channels — an arrangement that is
+//! arguably better suited to a CPU-bound simulator anyway (no async I/O on
+//! the hot path).
+//!
+//! Topology:
+//!
+//! ```text
+//!            requests                 results
+//!   client ───────────► [dispatcher] ────────► client
+//!                         │  round-robin
+//!              ┌──────────┼──────────┐
+//!          [worker 0] [worker 1] … [worker W-1]
+//!           Menage      Menage       Menage      (one chip clone each)
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::accel::Menage;
+use crate::snn::SpikeTrain;
+use crate::util::stats::Summary;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub input: SpikeTrain,
+    /// Optional ground-truth label (accuracy accounting).
+    pub label: Option<usize>,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub predicted: usize,
+    /// Modeled on-accelerator cycles.
+    pub cycles: u64,
+    /// Wall-clock simulation latency.
+    pub sim_latency: Duration,
+    pub label: Option<usize>,
+}
+
+/// Aggregated service metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub completed: AtomicU64,
+    pub correct: AtomicU64,
+    pub labelled: AtomicU64,
+    /// Simulated cycles across completed requests.
+    pub total_cycles: AtomicU64,
+    pub latency: Mutex<Summary>,
+}
+
+impl Metrics {
+    pub fn accuracy(&self) -> f64 {
+        let l = self.labelled.load(Ordering::Relaxed);
+        if l == 0 {
+            return f64::NAN;
+        }
+        self.correct.load(Ordering::Relaxed) as f64 / l as f64
+    }
+
+    pub fn throughput(&self, elapsed: Duration) -> f64 {
+        self.completed.load(Ordering::Relaxed) as f64 / elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+enum WorkerMsg {
+    Work(Request),
+    Shutdown,
+}
+
+/// Multi-worker inference service over cloned [`Menage`] chips.
+pub struct Coordinator {
+    workers: Vec<JoinHandle<Menage>>,
+    senders: Vec<Sender<WorkerMsg>>,
+    results_rx: Receiver<Result<Response>>,
+    pub metrics: Arc<Metrics>,
+    next_id: u64,
+    next_worker: usize,
+    in_flight: usize,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Spawn `num_workers` workers, each owning a clone of `chip`.
+    pub fn new(chip: &Menage, num_workers: usize) -> Self {
+        assert!(num_workers > 0);
+        let metrics = Arc::new(Metrics::default());
+        let (results_tx, results_rx) = mpsc::channel::<Result<Response>>();
+        let mut workers = Vec::with_capacity(num_workers);
+        let mut senders = Vec::with_capacity(num_workers);
+        for _ in 0..num_workers {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            let results_tx = results_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            let mut chip = chip.clone();
+            workers.push(std::thread::spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        WorkerMsg::Shutdown => break,
+                        WorkerMsg::Work(req) => {
+                            let t0 = Instant::now();
+                            let res = chip.run(&req.input).map(|out| {
+                                let predicted = out.predicted_class();
+                                let sim_latency = t0.elapsed();
+                                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                                metrics
+                                    .total_cycles
+                                    .fetch_add(out.cycles, Ordering::Relaxed);
+                                if let Some(label) = req.label {
+                                    metrics.labelled.fetch_add(1, Ordering::Relaxed);
+                                    if label == predicted {
+                                        metrics.correct.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                                metrics
+                                    .latency
+                                    .lock()
+                                    .unwrap()
+                                    .add(sim_latency.as_secs_f64());
+                                Response {
+                                    id: req.id,
+                                    predicted,
+                                    cycles: out.cycles,
+                                    sim_latency,
+                                    label: req.label,
+                                }
+                            });
+                            if results_tx.send(res).is_err() {
+                                break; // coordinator dropped
+                            }
+                        }
+                    }
+                }
+                chip
+            }));
+            senders.push(tx);
+        }
+        Self {
+            workers,
+            senders,
+            results_rx,
+            metrics,
+            next_id: 0,
+            next_worker: 0,
+            in_flight: 0,
+            started: Instant::now(),
+        }
+    }
+
+    /// Submit a request (round-robin across workers). Returns its id.
+    pub fn submit(&mut self, input: SpikeTrain, label: Option<usize>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let w = self.next_worker;
+        self.next_worker = (self.next_worker + 1) % self.senders.len();
+        self.senders[w]
+            .send(WorkerMsg::Work(Request { id, input, label }))
+            .expect("worker channel closed");
+        self.in_flight += 1;
+        id
+    }
+
+    /// Block until one result is available.
+    pub fn recv(&mut self) -> Result<Response> {
+        let res = self
+            .results_rx
+            .recv()
+            .map_err(|_| anyhow!("all workers terminated"))??;
+        self.in_flight -= 1;
+        Ok(res)
+    }
+
+    /// Drain all in-flight requests.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::with_capacity(self.in_flight);
+        while self.in_flight > 0 {
+            out.push(self.recv()?);
+        }
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+
+    /// Submit a whole labelled batch and wait for every result.
+    pub fn run_batch(
+        &mut self,
+        inputs: Vec<(SpikeTrain, Option<usize>)>,
+    ) -> Result<Vec<Response>> {
+        for (input, label) in inputs {
+            self.submit(input, label);
+        }
+        self.drain()
+    }
+
+    /// Requests/sec since construction.
+    pub fn throughput(&self) -> f64 {
+        self.metrics.throughput(self.started.elapsed())
+    }
+
+    /// Shut down workers and return their chips (with accumulated stats);
+    /// the first chip's statistics cover ~1/W of the traffic each.
+    pub fn shutdown(self) -> Vec<Menage> {
+        for tx in &self.senders {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+        self.workers
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::AnalogParams;
+    use crate::config::{AcceleratorConfig, ModelConfig};
+    use crate::mapping::Strategy;
+    use crate::snn::{reference_forward, QuantNetwork};
+    use crate::util::rng::Rng;
+
+    fn test_chip() -> (Menage, QuantNetwork) {
+        let mcfg = ModelConfig {
+            name: "c".into(),
+            layer_sizes: vec![30, 16, 8],
+            timesteps: 6,
+            beta: 0.9,
+            v_threshold: 1.0,
+            v_reset: 0.0,
+        };
+        let mut cfg = AcceleratorConfig::accel1();
+        cfg.num_cores = 2;
+        cfg.a_neurons_per_core = 4;
+        cfg.a_syns_per_core = 4;
+        cfg.virtual_per_a_neuron = 4;
+        let mut rng = Rng::new(8);
+        let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+        let chip =
+            Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 2).unwrap();
+        (chip, net)
+    }
+
+    fn inputs(n: usize) -> Vec<(SpikeTrain, Option<usize>)> {
+        (0..n)
+            .map(|s| {
+                let mut rng = Rng::new(1000 + s as u64);
+                let mut st = SpikeTrain::new(30, 6);
+                for step in st.spikes.iter_mut() {
+                    for i in 0..30 {
+                        if rng.bernoulli(0.25) {
+                            step.push(i as u32);
+                        }
+                    }
+                }
+                (st, Some(s % 8))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_completes_and_orders() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::new(&chip, 3);
+        let res = coord.run_batch(inputs(20)).unwrap();
+        assert_eq!(res.len(), 20);
+        for (i, r) in res.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.predicted < 8);
+            assert!(r.cycles > 0);
+        }
+        assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), 20);
+        assert!(coord.throughput() > 0.0);
+        let chips = coord.shutdown();
+        assert_eq!(chips.len(), 3);
+        let total: u64 = chips.iter().map(|c| c.inputs_processed).sum();
+        assert_eq!(total, 20);
+    }
+
+    #[test]
+    fn results_match_reference_regardless_of_worker() {
+        let (chip, net) = test_chip();
+        let mut coord = Coordinator::new(&chip, 4);
+        let ins = inputs(12);
+        let golden: Vec<usize> = ins
+            .iter()
+            .map(|(st, _)| reference_forward(&net, st).unwrap().predicted_class())
+            .collect();
+        let res = coord.run_batch(ins).unwrap();
+        for (r, g) in res.iter().zip(&golden) {
+            assert_eq!(r.predicted, *g, "request {}", r.id);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn metrics_accuracy_accounting() {
+        let (chip, net) = test_chip();
+        let mut coord = Coordinator::new(&chip, 2);
+        // Label every input with the reference prediction → accuracy 1.0.
+        let ins: Vec<(SpikeTrain, Option<usize>)> = inputs(10)
+            .into_iter()
+            .map(|(st, _)| {
+                let label = reference_forward(&net, &st).unwrap().predicted_class();
+                (st, Some(label))
+            })
+            .collect();
+        coord.run_batch(ins).unwrap();
+        assert_eq!(coord.metrics.accuracy(), 1.0);
+        assert_eq!(coord.metrics.labelled.load(Ordering::Relaxed), 10);
+        let lat = coord.metrics.latency.lock().unwrap().clone();
+        assert_eq!(lat.count(), 10);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn single_worker_is_deterministic() {
+        let (chip, _) = test_chip();
+        let run = |chip: &Menage| {
+            let mut coord = Coordinator::new(chip, 1);
+            let res = coord.run_batch(inputs(6)).unwrap();
+            coord.shutdown();
+            res.iter().map(|r| (r.predicted, r.cycles)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(&chip), run(&chip));
+    }
+}

@@ -1,0 +1,330 @@
+//! Energy/performance model — produces the TOPS/W numbers of Table II.
+//!
+//! The paper extracts digital power from Synopsys DC (90 nm) and analog
+//! power from HSpice, then reports end-to-end energy efficiency:
+//! 3.4 TOPS/W (Accel₁ / N-MNIST) and 12.1 TOPS/W (Accel₂ / CIFAR10-DVS).
+//! We replace the EDA flow with an explicit per-component energy budget
+//! (DESIGN.md §2): every counted operation of the cycle-accurate simulator
+//! is priced with a 90 nm-plausible constant, and the constants are
+//! calibrated (once, globally — not per experiment) so the two headline
+//! design points land near the paper's numbers. Baseline rows of Table II
+//! are the *published* numbers, exactly as the paper cites them.
+//!
+//! Why Accel₂ is more efficient than Accel₁ despite the bigger memories:
+//! wider MEM_S&N rows drive 20 A-SYN/A-NEURON columns per row read instead
+//! of 10, and CIFAR10-DVS's much higher event rate amortizes the
+//! controller/static overhead over ~50× more MACs per step — both effects
+//! fall straight out of the budget below.
+
+use crate::accel::Menage;
+
+/// Per-component energy constants (Joules) and static power (Watts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyModel {
+    /// A-SYN C2C MAC (ladder charge + polarity stage).
+    pub e_mac: f64,
+    /// A-NEURON operation (integrate or sweep; paper op point 0.652 fJ).
+    pub e_neuron_op: f64,
+    /// Weight SRAM read, per 8-bit weight.
+    pub e_weight_read: f64,
+    /// MEM_S&N row read, per engine column (scales with M).
+    pub e_sn_col_read: f64,
+    /// MEM_E2A lookup per dispatched event.
+    pub e_e2a_read: f64,
+    /// MEM_E push+pop per event.
+    pub e_event_mem: f64,
+    /// Controller FSM + clock tree, per active cycle per core.
+    pub e_ctrl_cycle: f64,
+    /// Static (leakage) power per MX-NEURACORE.
+    pub p_static_core: f64,
+    /// Clock period (s).
+    pub clock_period: f64,
+    /// Real-time duration of one global time step (s). Event-based
+    /// recordings play out in real time (a DVS bins events over tens of
+    /// microseconds); the chip burns leakage over the whole recording,
+    /// not just the busy cycles — this is what makes the sparse N-MNIST
+    /// workload less efficient (3.4 TOPS/W) than the dense CIFAR10-DVS
+    /// one (12.1) in the paper.
+    pub timestep_real: f64,
+}
+
+impl EnergyModel {
+    /// 90 nm-calibrated constants (see module docs; calibration recorded in
+    /// EXPERIMENTS.md §Table II).
+    pub fn paper_90nm(clock_hz: f64) -> Self {
+        Self {
+            e_mac: 0.30e-15,
+            e_neuron_op: 97e-9 * 6.72e-9,
+            e_weight_read: 120e-15,
+            e_sn_col_read: 12.0e-15,
+            e_e2a_read: 35e-15,
+            e_event_mem: 20e-15,
+            e_ctrl_cycle: 140e-15,
+            p_static_core: 10e-6,
+            clock_period: 1.0 / clock_hz,
+            timestep_real: 50e-6,
+        }
+    }
+}
+
+/// Energy breakdown of a finished run (Joules).
+#[derive(Debug, Clone, Default)]
+pub struct EnergyBreakdown {
+    pub analog_mac: f64,
+    pub analog_neuron: f64,
+    pub weight_sram: f64,
+    pub sn_sram: f64,
+    pub e2a_sram: f64,
+    pub event_mem: f64,
+    pub controller: f64,
+    pub static_leak: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.analog_mac
+            + self.analog_neuron
+            + self.weight_sram
+            + self.sn_sram
+            + self.e2a_sram
+            + self.event_mem
+            + self.controller
+            + self.static_leak
+    }
+}
+
+/// Full efficiency report for a workload run on a [`Menage`] chip.
+#[derive(Debug, Clone)]
+pub struct EfficiencyReport {
+    pub breakdown: EnergyBreakdown,
+    /// Total synaptic operations (MAC counted as 2 ops: multiply + add —
+    /// the standard TOPS accounting).
+    pub total_ops: u64,
+    /// Wall-clock seconds at the modeled clock.
+    pub seconds: f64,
+    /// Tera-operations per second.
+    pub tops: f64,
+    /// Tera-operations per second per Watt (the paper's headline metric).
+    pub tops_per_watt: f64,
+    /// Average power (W).
+    pub avg_power: f64,
+}
+
+/// Price a chip's accumulated statistics with the energy model.
+pub fn report(chip: &Menage, model: &EnergyModel) -> EfficiencyReport {
+    let mut b = EnergyBreakdown::default();
+    let mut total_cycles_busy = 0u64;
+    let mut max_core_cycles = 0u64;
+    for core in &chip.cores {
+        let s = &core.stats;
+        b.analog_mac += s.macs as f64 * model.e_mac;
+        b.analog_neuron +=
+            (s.integrations + s.fire_ops) as f64 * model.e_neuron_op;
+        b.weight_sram += s.macs as f64 * model.e_weight_read;
+        b.sn_sram +=
+            s.sn_rows_read as f64 * model.e_sn_col_read * chip.config.a_neurons_per_core as f64;
+        b.e2a_sram += s.events_dispatched as f64 * model.e_e2a_read;
+        b.event_mem += s.events_dispatched as f64 * model.e_event_mem;
+        b.controller += s.cycles as f64 * model.e_ctrl_cycle;
+        total_cycles_busy += s.cycles;
+        max_core_cycles = max_core_cycles.max(s.cycles);
+    }
+    // Busy (compute) time: cores run concurrently, set by the busiest core.
+    let seconds = max_core_cycles as f64 * model.clock_period;
+    let _ = total_cycles_busy;
+    // Static leakage burns over the *real-time* duration of the event
+    // streams (see EnergyModel::timestep_real), in all cores.
+    let realtime = chip.inputs_processed as f64
+        * chip.timesteps as f64
+        * model.timestep_real;
+    b.static_leak =
+        model.p_static_core * chip.cores.len() as f64 * realtime.max(seconds);
+
+    let total_ops = 2 * chip.total_macs();
+    let energy = b.total();
+    let tops = if seconds > 0.0 { total_ops as f64 / seconds / 1e12 } else { 0.0 };
+    let tops_per_watt = if energy > 0.0 { total_ops as f64 / energy / 1e12 } else { 0.0 };
+    let avg_power = if seconds > 0.0 { energy / seconds } else { 0.0 };
+    EfficiencyReport { breakdown: b, total_ops, seconds, tops, tops_per_watt, avg_power }
+}
+
+/// One row of Table II.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub author: &'static str,
+    pub neural_ops: &'static str,
+    pub tops_per_watt: String,
+    pub bit_width: &'static str,
+    pub technology: &'static str,
+    pub dataset: &'static str,
+    pub neurons: &'static str,
+}
+
+/// The published prior-work rows of Table II (cited, not simulated — the
+/// paper compares against reported numbers too).
+pub fn table2_baselines() -> Vec<Table2Row> {
+    vec![
+        Table2Row {
+            author: "Liu et al. 2023 [29]",
+            neural_ops: "Mixed Signal LIF",
+            tops_per_watt: "1.88".into(),
+            bit_width: "4",
+            technology: "180nm",
+            dataset: "MIT-BIH Arrhythmia",
+            neurons: "102",
+        },
+        Table2Row {
+            author: "Qi et al. 2024 [36]",
+            neural_ops: "Mixed Signal LIF",
+            tops_per_watt: "0.67-5.4".into(),
+            bit_width: "8",
+            technology: "55nm",
+            dataset: "N/A",
+            neurons: "128-256",
+        },
+        Table2Row {
+            author: "Zhang et al. 2024 [37]",
+            neural_ops: "Digital LIF",
+            tops_per_watt: "0.66".into(),
+            bit_width: "8-10",
+            technology: "28nm",
+            dataset: "N-MNIST, DVS-Gesture, N-TIDIGIT, SeNic",
+            neurons: "522",
+        },
+        Table2Row {
+            author: "Liu et al. 2024 [38]",
+            neural_ops: "Digital LIF",
+            tops_per_watt: "0.26".into(),
+            bit_width: "N/A",
+            technology: "22nm",
+            dataset: "N-MNIST, DVS-Gesture",
+            neurons: "N/A",
+        },
+    ]
+}
+
+/// Paper-reported MENAGE rows (targets for the reproduction).
+pub const PAPER_ACCEL1_TOPS_W: f64 = 3.4;
+pub const PAPER_ACCEL2_TOPS_W: f64 = 12.1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::AnalogParams;
+    use crate::config::{AcceleratorConfig, ModelConfig};
+    use crate::mapping::Strategy;
+    use crate::snn::{QuantNetwork, SpikeTrain};
+    use crate::util::rng::Rng;
+
+    fn run_workload(m: usize, n: usize, rate: f64) -> (Menage, EnergyModel) {
+        let mcfg = ModelConfig {
+            name: "w".into(),
+            layer_sizes: vec![40, 24, 8],
+            timesteps: 10,
+            beta: 0.9,
+            v_threshold: 1.0,
+            v_reset: 0.0,
+        };
+        let mut cfg = AcceleratorConfig::accel1();
+        cfg.num_cores = 2;
+        cfg.a_neurons_per_core = m;
+        cfg.a_syns_per_core = m;
+        cfg.virtual_per_a_neuron = n;
+        let mut rng = Rng::new(5);
+        let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+        let mut chip =
+            Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 3).unwrap();
+        let mut input = SpikeTrain::new(40, 10);
+        let mut r2 = Rng::new(9);
+        for step in input.spikes.iter_mut() {
+            for i in 0..40 {
+                if r2.bernoulli(rate) {
+                    step.push(i as u32);
+                }
+            }
+        }
+        chip.run(&input).unwrap();
+        let model = EnergyModel::paper_90nm(cfg.clock_hz);
+        (chip, model)
+    }
+
+    #[test]
+    fn report_is_consistent() {
+        let (chip, model) = run_workload(4, 6, 0.3);
+        let r = report(&chip, &model);
+        assert!(r.breakdown.total() > 0.0);
+        assert_eq!(r.total_ops, 2 * chip.total_macs());
+        assert!(r.seconds > 0.0);
+        assert!(r.tops > 0.0);
+        assert!(r.tops_per_watt > 0.0);
+        // P = E/t consistency.
+        assert!((r.avg_power - r.breakdown.total() / r.seconds).abs() < 1e-12);
+        // TOPS/W = TOPS / P.
+        assert!((r.tops_per_watt - r.tops / r.avg_power).abs() / r.tops_per_watt < 1e-9);
+    }
+
+    #[test]
+    fn higher_activity_is_more_efficient() {
+        // More MACs per cycle amortize controller + static overhead — the
+        // effect behind Accel₂ > Accel₁ in the paper.
+        let (quiet, model) = run_workload(4, 6, 0.05);
+        let (busy, _) = run_workload(4, 6, 0.6);
+        let rq = report(&quiet, &model);
+        let rb = report(&busy, &model);
+        assert!(
+            rb.tops_per_watt > rq.tops_per_watt,
+            "busy {} ≤ quiet {}",
+            rb.tops_per_watt,
+            rq.tops_per_watt
+        );
+    }
+
+    #[test]
+    fn tops_per_watt_in_plausible_range() {
+        let (chip, model) = run_workload(8, 8, 0.4);
+        let r = report(&chip, &model);
+        // Mixed-signal neuromorphic designs land between ~0.1 and ~100
+        // TOPS/W; the calibrated budget must stay in that decade band.
+        assert!(
+            r.tops_per_watt > 0.1 && r.tops_per_watt < 100.0,
+            "TOPS/W = {}",
+            r.tops_per_watt
+        );
+    }
+
+    #[test]
+    fn baselines_match_paper_table2() {
+        let rows = table2_baselines();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].tops_per_watt, "1.88");
+        assert_eq!(rows[2].technology, "28nm");
+        assert_eq!(PAPER_ACCEL1_TOPS_W, 3.4);
+        assert_eq!(PAPER_ACCEL2_TOPS_W, 12.1);
+    }
+
+    #[test]
+    fn zero_work_report_is_finite() {
+        let mcfg = ModelConfig {
+            name: "z".into(),
+            layer_sizes: vec![10, 4],
+            timesteps: 2,
+            beta: 0.9,
+            v_threshold: 1.0,
+            v_reset: 0.0,
+        };
+        let mut cfg = AcceleratorConfig::accel1();
+        cfg.num_cores = 1;
+        cfg.a_neurons_per_core = 2;
+        cfg.a_syns_per_core = 2;
+        cfg.virtual_per_a_neuron = 2;
+        let mut rng = Rng::new(1);
+        let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+        let chip =
+            Menage::build(&net, &cfg, Strategy::Greedy, &AnalogParams::ideal(), 1).unwrap();
+        let model = EnergyModel::paper_90nm(cfg.clock_hz);
+        let r = report(&chip, &model);
+        assert_eq!(r.total_ops, 0);
+        assert!(r.tops_per_watt == 0.0 && r.tops == 0.0);
+        assert!(r.breakdown.total() >= 0.0);
+    }
+}

@@ -1,0 +1,271 @@
+//! Best-first branch & bound over the simplex relaxation.
+//!
+//! Classic LP-based B&B: solve the relaxation, pick the most-fractional
+//! integer variable, branch `x ≤ ⌊v⌋` / `x ≥ ⌈v⌉`, prune by bound against
+//! the incumbent. Node order is best-bound-first (min-heap on relaxation
+//! objective for minimization).
+//!
+//! This is the exact path for MENAGE's small per-layer mapping ILPs and for
+//! the unit/property tests that cross-check the min-cost-flow fast path.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::lp::solve_relaxation;
+use super::{Problem, Sense, Solution, Status};
+
+const INT_TOL: f64 = 1e-6;
+
+/// Branch & bound configuration.
+#[derive(Debug, Clone)]
+pub struct BnbConfig {
+    /// Maximum number of explored nodes before returning the incumbent.
+    pub max_nodes: usize,
+    /// Absolute optimality gap at which a node is pruned.
+    pub gap_tol: f64,
+}
+
+impl Default for BnbConfig {
+    fn default() -> Self {
+        Self { max_nodes: 200_000, gap_tol: 1e-6 }
+    }
+}
+
+struct Node {
+    /// Bound of the node's relaxation (in minimization form).
+    bound: f64,
+    /// Bound overrides accumulated along the branch: (var, lo, hi).
+    overrides: Vec<(usize, f64, f64)>,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse for best(lowest)-bound-first.
+        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Solve `p` to integer optimality (within the node budget).
+pub fn solve(p: &Problem, cfg: &BnbConfig) -> Solution {
+    let flip = match p.sense.unwrap_or(Sense::Minimize) {
+        Sense::Minimize => 1.0,
+        Sense::Maximize => -1.0,
+    };
+    let n = p.num_vars();
+
+    let root = solve_relaxation(p, &[]);
+    match root.status {
+        Status::Infeasible => return Solution::infeasible(n),
+        Status::Unbounded => {
+            return Solution {
+                status: Status::Unbounded,
+                objective: -flip * f64::INFINITY,
+                x: vec![0.0; n],
+                nodes_explored: 1,
+            }
+        }
+        _ => {}
+    }
+
+    let mut heap = BinaryHeap::new();
+    heap.push(Node { bound: flip * root.objective, overrides: vec![] });
+
+    let mut incumbent: Option<Solution> = None;
+    let mut best = f64::INFINITY; // minimization form
+    let mut nodes = 0usize;
+
+    while let Some(node) = heap.pop() {
+        if node.bound >= best - cfg.gap_tol {
+            continue; // pruned by bound
+        }
+        nodes += 1;
+        if nodes > cfg.max_nodes {
+            break;
+        }
+        let rel = solve_relaxation(p, &node.overrides);
+        if rel.status != Status::Optimal {
+            continue;
+        }
+        let bound = flip * rel.objective;
+        if bound >= best - cfg.gap_tol {
+            continue;
+        }
+        // Most-fractional integer variable.
+        let mut branch_var: Option<(usize, f64)> = None;
+        let mut best_frac = INT_TOL;
+        for v in 0..n {
+            if p.domains[v].is_integer() {
+                let f = (rel.x[v] - rel.x[v].round()).abs();
+                if f > best_frac {
+                    best_frac = f;
+                    branch_var = Some((v, rel.x[v]));
+                }
+            }
+        }
+        match branch_var {
+            None => {
+                // Integral — candidate incumbent.
+                if bound < best {
+                    best = bound;
+                    let mut x = rel.x.clone();
+                    for (v, xv) in x.iter_mut().enumerate() {
+                        if p.domains[v].is_integer() {
+                            *xv = xv.round();
+                        }
+                    }
+                    incumbent = Some(Solution {
+                        status: Status::Optimal,
+                        objective: p.objective_value(&x),
+                        x,
+                        nodes_explored: nodes,
+                    });
+                }
+            }
+            Some((v, val)) => {
+                let floor = val.floor();
+                let mut lo_ov = node.overrides.clone();
+                lo_ov.push((v, f64::NEG_INFINITY, floor));
+                heap.push(Node { bound, overrides: lo_ov });
+                let mut hi_ov = node.overrides;
+                hi_ov.push((v, floor + 1.0, f64::INFINITY));
+                heap.push(Node { bound, overrides: hi_ov });
+            }
+        }
+    }
+
+    match incumbent {
+        Some(mut s) => {
+            s.nodes_explored = nodes;
+            if nodes > cfg.max_nodes {
+                s.status = Status::LimitReached;
+            }
+            s
+        }
+        None => {
+            if nodes > cfg.max_nodes {
+                Solution {
+                    status: Status::LimitReached,
+                    objective: f64::INFINITY,
+                    x: vec![0.0; n],
+                    nodes_explored: nodes,
+                }
+            } else {
+                Solution::infeasible(n)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::{Cmp, Domain};
+
+    fn near(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-5
+    }
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a + 13b + 7c s.t. 3a + 4b + 2c <= 6, binary
+        let mut p = Problem::maximize();
+        let a = p.add_binary("a", 10.0);
+        let b = p.add_binary("b", 13.0);
+        let c = p.add_binary("c", 7.0);
+        p.add_constraint("w", vec![(a, 3.0), (b, 4.0), (c, 2.0)], Cmp::Le, 6.0);
+        let s = solve(&p, &BnbConfig::default());
+        assert_eq!(s.status, Status::Optimal);
+        assert!(near(s.objective, 20.0), "obj={}", s.objective); // b + c
+        assert!(s.is_one(b) && s.is_one(c) && !s.is_one(a));
+    }
+
+    #[test]
+    fn integer_rounding_matters() {
+        // max x s.t. 2x <= 7, x integer -> x = 3 (LP gives 3.5)
+        let mut p = Problem::maximize();
+        let x = p.add_var("x", Domain::Integer { lo: 0, hi: 100 }, 1.0);
+        p.add_constraint("c", vec![(x, 2.0)], Cmp::Le, 7.0);
+        let s = solve(&p, &BnbConfig::default());
+        assert_eq!(s.status, Status::Optimal);
+        assert_eq!(s.int(x), 3);
+    }
+
+    #[test]
+    fn infeasible_ilp() {
+        // x + y = 1.5 with x,y binary is LP-feasible but IP-infeasible... —
+        // actually x=1,y=0.5 LP feasible; integer infeasible.
+        let mut p = Problem::minimize();
+        let x = p.add_binary("x", 1.0);
+        let y = p.add_binary("y", 1.0);
+        p.add_constraint("c", vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 1.5);
+        let s = solve(&p, &BnbConfig::default());
+        assert_eq!(s.status, Status::Infeasible);
+    }
+
+    #[test]
+    fn assignment_3x3_exact() {
+        // Costs: min trace assignment.
+        let cost = [[4.0, 2.0, 8.0], [4.0, 3.0, 7.0], [3.0, 1.0, 6.0]];
+        let mut p = Problem::minimize();
+        let mut v = [[0usize; 3]; 3];
+        for (i, vi) in v.iter_mut().enumerate() {
+            for (j, vij) in vi.iter_mut().enumerate() {
+                *vij = p.add_binary(format!("x{i}{j}"), cost[i][j]);
+            }
+        }
+        for i in 0..3 {
+            p.add_constraint(
+                format!("row{i}"),
+                (0..3).map(|j| (v[i][j], 1.0)).collect(),
+                Cmp::Eq,
+                1.0,
+            );
+            p.add_constraint(
+                format!("col{i}"),
+                (0..3).map(|j| (v[j][i], 1.0)).collect(),
+                Cmp::Eq,
+                1.0,
+            );
+        }
+        let s = solve(&p, &BnbConfig::default());
+        assert_eq!(s.status, Status::Optimal);
+        // Optimal: (0,1)=2,(1,0)=4? rows to cols: r0->c1 (2), r1->c0 (4), r2->c2 (6) = 12
+        // alt: r0->c0(4), r1->c2(7), r2->c1(1) = 12. Either way 12... check 11:
+        // r0->c1(2), r1->c2(7), r2->c0(3) = 12. min is 12? r0c0 4 r1c1 3 r2c2 6 = 13.
+        assert!(near(s.objective, 12.0), "obj={}", s.objective);
+        assert!(p.is_feasible(&s.x, 1e-6));
+    }
+
+    #[test]
+    fn respects_gap_and_returns_feasible() {
+        // Bigger knapsack; verify feasibility of result.
+        let w = [5.0, 4.0, 6.0, 3.0, 7.0, 2.0, 8.0, 1.0];
+        let val = [10.0, 40.0, 30.0, 50.0, 35.0, 25.0, 45.0, 5.0];
+        let mut p = Problem::maximize();
+        let vars: Vec<_> =
+            (0..8).map(|i| p.add_binary(format!("x{i}"), val[i])).collect();
+        p.add_constraint(
+            "cap",
+            vars.iter().enumerate().map(|(i, &v)| (v, w[i])).collect(),
+            Cmp::Le,
+            15.0,
+        );
+        let s = solve(&p, &BnbConfig::default());
+        assert_eq!(s.status, Status::Optimal);
+        assert!(p.is_feasible(&s.x, 1e-6));
+        // Greedy by density: x3(3,50) x1(4,40) x5(2,25) x7(1,5) = 10w/120v, +x2? w 16 no.
+        // Try x3,x1,x5,x7 =120 w=10, add x0(5,10) w=15 v=130.
+        assert!(s.objective >= 130.0 - 1e-6, "obj={}", s.objective);
+    }
+}

@@ -1,0 +1,386 @@
+//! Two-phase primal simplex over a dense tableau.
+//!
+//! This is the LP relaxation engine underneath [`super::branch_bound`]. The
+//! per-layer relaxations MENAGE's mapper poses are small (≤ a few thousand
+//! nonzeros), so a dense tableau with Bland's anti-cycling rule is simple,
+//! robust, and fast enough; the large instances never reach this code —
+//! they take the min-cost-flow fast path in [`super::mcmf`].
+//!
+//! Standard-form handling:
+//! * every variable `x` with domain `[lo, hi]` is shifted to `x' = x - lo ≥ 0`
+//!   and, when `hi < ∞`, given an upper-bound row `x' ≤ hi - lo`;
+//! * `≤` rows get a slack, `≥` rows get a surplus + artificial, `=` rows get
+//!   an artificial;
+//! * phase 1 minimizes the artificial sum, phase 2 the true objective.
+
+use super::{Cmp, Problem, Sense, Solution, Status};
+
+const EPS: f64 = 1e-9;
+
+/// Solve the LP relaxation of `p` (integrality dropped).
+///
+/// `overrides` optionally tightens variable bounds (used by branch & bound
+/// to impose branching decisions without copying the problem).
+pub fn solve_relaxation(p: &Problem, overrides: &[(usize, f64, f64)]) -> Solution {
+    let n = p.num_vars();
+    let mut lo = vec![0.0f64; n];
+    let mut hi = vec![0.0f64; n];
+    for i in 0..n {
+        lo[i] = p.domains[i].lo();
+        hi[i] = p.domains[i].hi();
+    }
+    for &(v, l, h) in overrides {
+        lo[v] = lo[v].max(l);
+        hi[v] = hi[v].min(h);
+        if lo[v] > hi[v] + EPS {
+            return Solution::infeasible(n);
+        }
+    }
+
+    // Build rows: original constraints with shifted variables, then
+    // upper-bound rows for finite hi.
+    struct Row {
+        coeffs: Vec<f64>, // dense over structural vars
+        cmp: Cmp,
+        rhs: f64,
+    }
+    let mut rows: Vec<Row> = Vec::with_capacity(p.constraints.len() + n);
+    for c in &p.constraints {
+        let mut coeffs = vec![0.0; n];
+        let mut shift = 0.0;
+        for &(v, a) in &c.terms {
+            coeffs[v] += a;
+        }
+        for v in 0..n {
+            shift += coeffs[v] * lo[v];
+        }
+        rows.push(Row { coeffs, cmp: c.cmp, rhs: c.rhs - shift });
+    }
+    for v in 0..n {
+        if hi[v].is_finite() {
+            let mut coeffs = vec![0.0; n];
+            coeffs[v] = 1.0;
+            rows.push(Row { coeffs, cmp: Cmp::Le, rhs: hi[v] - lo[v] });
+        }
+    }
+
+    // Normalize rhs ≥ 0 by flipping rows.
+    for r in rows.iter_mut() {
+        if r.rhs < 0.0 {
+            for a in r.coeffs.iter_mut() {
+                *a = -*a;
+            }
+            r.rhs = -r.rhs;
+            r.cmp = match r.cmp {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            };
+        }
+    }
+
+    let m = rows.len();
+    // Column layout: [structural n][slack/surplus s][artificial a][rhs]
+    let mut n_slack = 0usize;
+    let mut n_art = 0usize;
+    for r in &rows {
+        match r.cmp {
+            Cmp::Le => n_slack += 1,
+            Cmp::Ge => {
+                n_slack += 1;
+                n_art += 1;
+            }
+            Cmp::Eq => n_art += 1,
+        }
+    }
+    let total = n + n_slack + n_art;
+    let mut t = vec![vec![0.0f64; total + 1]; m]; // tableau rows
+    let mut basis = vec![0usize; m];
+    let mut s_idx = n;
+    let mut a_idx = n + n_slack;
+    let mut art_cols: Vec<usize> = Vec::with_capacity(n_art);
+    for (i, r) in rows.iter().enumerate() {
+        t[i][..n].copy_from_slice(&r.coeffs);
+        t[i][total] = r.rhs;
+        match r.cmp {
+            Cmp::Le => {
+                t[i][s_idx] = 1.0;
+                basis[i] = s_idx;
+                s_idx += 1;
+            }
+            Cmp::Ge => {
+                t[i][s_idx] = -1.0;
+                s_idx += 1;
+                t[i][a_idx] = 1.0;
+                basis[i] = a_idx;
+                art_cols.push(a_idx);
+                a_idx += 1;
+            }
+            Cmp::Eq => {
+                t[i][a_idx] = 1.0;
+                basis[i] = a_idx;
+                art_cols.push(a_idx);
+                a_idx += 1;
+            }
+        }
+    }
+
+    // Objective in minimization form over shifted variables.
+    let flip = match p.sense.unwrap_or(Sense::Minimize) {
+        Sense::Minimize => 1.0,
+        Sense::Maximize => -1.0,
+    };
+    let mut cost = vec![0.0f64; total];
+    for v in 0..n {
+        cost[v] = flip * p.objective[v];
+    }
+
+    // --- Phase 1 ---
+    if n_art > 0 {
+        let mut c1 = vec![0.0f64; total];
+        for &a in &art_cols {
+            c1[a] = 1.0;
+        }
+        let ok = simplex(&mut t, &mut basis, &c1, total);
+        if !ok {
+            return Solution::infeasible(n);
+        }
+        // Objective value of phase 1 = sum of artificials at basis.
+        let obj1: f64 = basis
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| art_cols.contains(&b))
+            .map(|(i, _)| t[i][total])
+            .sum();
+        if obj1 > 1e-7 {
+            return Solution::infeasible(n);
+        }
+        // Drive remaining artificial basics out if possible.
+        for i in 0..m {
+            if art_cols.contains(&basis[i]) && t[i][total].abs() <= 1e-7 {
+                if let Some(j) = (0..n + n_slack).find(|&j| t[i][j].abs() > EPS) {
+                    pivot(&mut t, &mut basis, i, j);
+                }
+            }
+        }
+    }
+
+    // --- Phase 2 --- (forbid artificial columns by huge cost)
+    for &a in &art_cols {
+        cost[a] = 1e12;
+    }
+    let ok = simplex(&mut t, &mut basis, &cost, total);
+    if !ok {
+        // Unbounded in phase 2.
+        return Solution {
+            status: Status::Unbounded,
+            objective: f64::NEG_INFINITY * flip,
+            x: vec![0.0; n],
+            nodes_explored: 0,
+        };
+    }
+
+    let mut xshift = vec![0.0f64; total];
+    for i in 0..m {
+        xshift[basis[i]] = t[i][total];
+    }
+    let mut x = vec![0.0f64; n];
+    for v in 0..n {
+        x[v] = xshift[v] + lo[v];
+        // Clean numerical dust.
+        if (x[v] - x[v].round()).abs() < 1e-9 {
+            x[v] = x[v].round();
+        }
+    }
+    let objective = p.objective_value(&x);
+    Solution { status: Status::Optimal, objective, x, nodes_explored: 0 }
+}
+
+/// In-place primal simplex with Bland's rule. Returns false on unbounded.
+fn simplex(t: &mut [Vec<f64>], basis: &mut [usize], cost: &[f64], total: usize) -> bool {
+    let m = t.len();
+    let mut iters = 0usize;
+    let max_iters = 50_000 + 200 * (m + total);
+    loop {
+        iters += 1;
+        if iters > max_iters {
+            // Degenerate stall; accept current (feasible) basis.
+            return true;
+        }
+        // Reduced costs: c_j - c_B B⁻¹ A_j, computed from the tableau
+        // (tableau rows already hold B⁻¹A).
+        let mut entering = None;
+        for j in 0..total {
+            if basis.contains(&j) {
+                continue;
+            }
+            let mut rc = cost[j];
+            for i in 0..m {
+                rc -= cost[basis[i]] * t[i][j];
+            }
+            if rc < -1e-8 {
+                entering = Some(j); // Bland: first improving index
+                break;
+            }
+        }
+        let Some(j) = entering else { return true };
+        // Ratio test (Bland tie-break on basis index).
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for i in 0..m {
+            if t[i][j] > EPS {
+                let ratio = t[i][total] / t[i][j];
+                if ratio < best - EPS
+                    || (ratio < best + EPS
+                        && leave.map_or(true, |l| basis[i] < basis[l]))
+                {
+                    best = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(i) = leave else { return false }; // unbounded
+        pivot(t, basis, i, j);
+    }
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize) {
+    let m = t.len();
+    let width = t[0].len();
+    let pv = t[row][col];
+    debug_assert!(pv.abs() > EPS);
+    for j in 0..width {
+        t[row][j] /= pv;
+    }
+    for i in 0..m {
+        if i != row {
+            let f = t[i][col];
+            if f.abs() > EPS {
+                for j in 0..width {
+                    t[i][j] -= f * t[row][j];
+                }
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::Domain;
+
+    fn near(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-6
+    }
+
+    #[test]
+    fn simple_max_lp() {
+        // max 3x + 2y s.t. x + y <= 4, x + 3y <= 6, x,y in [0, inf)
+        let mut p = Problem::maximize();
+        let x = p.add_var("x", Domain::Continuous { lo: 0.0, hi: f64::INFINITY }, 3.0);
+        let y = p.add_var("y", Domain::Continuous { lo: 0.0, hi: f64::INFINITY }, 2.0);
+        p.add_constraint("c1", vec![(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+        p.add_constraint("c2", vec![(x, 1.0), (y, 3.0)], Cmp::Le, 6.0);
+        let s = solve_relaxation(&p, &[]);
+        assert_eq!(s.status, Status::Optimal);
+        assert!(near(s.objective, 12.0), "obj={}", s.objective); // x=4, y=0
+        assert!(near(s.x[x], 4.0));
+        assert!(near(s.x[y], 0.0));
+    }
+
+    #[test]
+    fn min_with_ge_constraints() {
+        // min 2x + 3y s.t. x + y >= 10, x >= 2, y >= 3
+        let mut p = Problem::minimize();
+        let x = p.add_var("x", Domain::Continuous { lo: 2.0, hi: f64::INFINITY }, 2.0);
+        let y = p.add_var("y", Domain::Continuous { lo: 3.0, hi: f64::INFINITY }, 3.0);
+        p.add_constraint("sum", vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 10.0);
+        let s = solve_relaxation(&p, &[]);
+        assert_eq!(s.status, Status::Optimal);
+        assert!(near(s.objective, 2.0 * 7.0 + 3.0 * 3.0), "obj={}", s.objective); // x=7,y=3
+    }
+
+    #[test]
+    fn equality_constraint() {
+        // min x + y s.t. x + 2y = 8, 0<=x,y<=10
+        let mut p = Problem::minimize();
+        let x = p.add_var("x", Domain::Continuous { lo: 0.0, hi: 10.0 }, 1.0);
+        let y = p.add_var("y", Domain::Continuous { lo: 0.0, hi: 10.0 }, 1.0);
+        p.add_constraint("eq", vec![(x, 1.0), (y, 2.0)], Cmp::Eq, 8.0);
+        let s = solve_relaxation(&p, &[]);
+        assert_eq!(s.status, Status::Optimal);
+        assert!(near(s.objective, 4.0)); // x=0, y=4
+    }
+
+    #[test]
+    fn infeasible_lp() {
+        let mut p = Problem::minimize();
+        let x = p.add_var("x", Domain::Continuous { lo: 0.0, hi: 1.0 }, 1.0);
+        p.add_constraint("c", vec![(x, 1.0)], Cmp::Ge, 2.0);
+        let s = solve_relaxation(&p, &[]);
+        assert_eq!(s.status, Status::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_lp() {
+        let mut p = Problem::maximize();
+        let x = p.add_var("x", Domain::Continuous { lo: 0.0, hi: f64::INFINITY }, 1.0);
+        p.add_constraint("c", vec![(x, -1.0)], Cmp::Le, 0.0); // -x <= 0 always true
+        let s = solve_relaxation(&p, &[]);
+        assert_eq!(s.status, Status::Unbounded);
+    }
+
+    #[test]
+    fn bound_overrides_apply() {
+        let mut p = Problem::maximize();
+        let x = p.add_var("x", Domain::Continuous { lo: 0.0, hi: 10.0 }, 1.0);
+        let s = solve_relaxation(&p, &[(x, 0.0, 3.0)]);
+        assert_eq!(s.status, Status::Optimal);
+        assert!(near(s.x[x], 3.0));
+        // Conflicting override -> infeasible
+        let s = solve_relaxation(&p, &[(x, 5.0, 3.0)]);
+        assert_eq!(s.status, Status::Infeasible);
+    }
+
+    #[test]
+    fn shifted_lower_bounds() {
+        // min x s.t. x >= -5 (domain), x >= -3 (row) -> x = -3
+        let mut p = Problem::minimize();
+        let x = p.add_var("x", Domain::Continuous { lo: -5.0, hi: 5.0 }, 1.0);
+        p.add_constraint("c", vec![(x, 1.0)], Cmp::Ge, -3.0);
+        let s = solve_relaxation(&p, &[]);
+        assert_eq!(s.status, Status::Optimal);
+        assert!(near(s.x[x], -3.0), "x={}", s.x[x]);
+    }
+
+    #[test]
+    fn degenerate_assignment_relaxation_is_integral() {
+        // 2 items, 2 bins, capacities 1 — LP relaxation of an assignment
+        // problem is integral (totally unimodular).
+        let mut p = Problem::minimize();
+        let mut v = vec![];
+        for i in 0..2 {
+            for j in 0..2 {
+                v.push(p.add_var(format!("x{i}{j}"), Domain::Continuous { lo: 0.0, hi: 1.0 }, if i == j { 0.0 } else { 1.0 }));
+            }
+        }
+        for i in 0..2 {
+            p.add_constraint(
+                format!("assign{i}"),
+                vec![(v[i * 2], 1.0), (v[i * 2 + 1], 1.0)],
+                Cmp::Eq,
+                1.0,
+            );
+        }
+        for j in 0..2 {
+            p.add_constraint(format!("cap{j}"), vec![(v[j], 1.0), (v[2 + j], 1.0)], Cmp::Le, 1.0);
+        }
+        let s = solve_relaxation(&p, &[]);
+        assert_eq!(s.status, Status::Optimal);
+        assert!(near(s.objective, 0.0));
+        for &vi in &v {
+            assert!(near(s.x[vi], s.x[vi].round()));
+        }
+    }
+}

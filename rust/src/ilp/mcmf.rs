@@ -1,0 +1,247 @@
+//! Min-cost max-flow: successive shortest augmenting paths with Johnson
+//! potentials (Dijkstra on reduced costs).
+//!
+//! Why it lives in the ILP module: the MENAGE assignment ILP (eqs. 3–7) is,
+//! after collapsing the capacitor index k (capacitors within one A-NEURON
+//! are interchangeable), a transportation problem
+//!
+//! ```text
+//!   source ── (cap 1, cost c_ij) ──> neuron i ──> engine j ── (cap N) ──> sink
+//! ```
+//!
+//! whose constraint matrix is totally unimodular; the integral min-cost
+//! flow equals the ILP optimum. This is how the CIFAR10-DVS layers
+//! (10⁵–10⁶ raw binaries) are solved in milliseconds instead of hours.
+
+/// A directed edge in the flow network.
+#[derive(Debug, Clone)]
+struct Edge {
+    to: usize,
+    cap: i64,
+    cost: i64,
+    /// Index of the reverse edge in `graph[to]`.
+    rev: usize,
+}
+
+/// Min-cost max-flow network.
+#[derive(Debug, Clone, Default)]
+pub struct McmfGraph {
+    graph: Vec<Vec<Edge>>,
+}
+
+/// Result of a flow computation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlowResult {
+    pub flow: i64,
+    pub cost: i64,
+}
+
+impl McmfGraph {
+    /// Network with `n` nodes and no edges.
+    pub fn new(n: usize) -> Self {
+        Self { graph: vec![Vec::new(); n] }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// Whether the network has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.graph.is_empty()
+    }
+
+    /// Add edge `from -> to` with capacity `cap` and unit cost `cost`.
+    /// Returns a handle `(from, index)` usable with [`Self::edge_flow`].
+    pub fn add_edge(&mut self, from: usize, to: usize, cap: i64, cost: i64) -> (usize, usize) {
+        assert!(from < self.graph.len() && to < self.graph.len());
+        assert!(from != to, "self-loops unsupported");
+        let fwd = self.graph[from].len();
+        let bwd = self.graph[to].len();
+        self.graph[from].push(Edge { to, cap, cost, rev: bwd });
+        self.graph[to].push(Edge { to: from, cap: 0, cost: -cost, rev: fwd });
+        (from, fwd)
+    }
+
+    /// Flow currently on the edge returned by [`Self::add_edge`].
+    pub fn edge_flow(&self, handle: (usize, usize)) -> i64 {
+        let e = &self.graph[handle.0][handle.1];
+        // Flow = residual capacity on the reverse edge.
+        self.graph[e.to][e.rev].cap
+    }
+
+    /// Push up to `limit` units of flow from `s` to `t`, minimizing cost.
+    ///
+    /// Costs may be negative as long as the initial graph has no negative
+    /// cycle; a Bellman–Ford pass seeds the potentials.
+    pub fn min_cost_flow(&mut self, s: usize, t: usize, limit: i64) -> FlowResult {
+        let n = self.graph.len();
+        let mut potential = vec![0i64; n];
+
+        // Bellman–Ford to initialize potentials (handles negative costs).
+        {
+            let mut dist = vec![i64::MAX / 4; n];
+            dist[s] = 0;
+            for _ in 0..n {
+                let mut changed = false;
+                for u in 0..n {
+                    if dist[u] >= i64::MAX / 4 {
+                        continue;
+                    }
+                    for e in &self.graph[u] {
+                        if e.cap > 0 && dist[u] + e.cost < dist[e.to] {
+                            dist[e.to] = dist[u] + e.cost;
+                            changed = true;
+                        }
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+            potential = dist;
+        }
+
+        let mut total_flow = 0i64;
+        let mut total_cost = 0i64;
+
+        while total_flow < limit {
+            // Dijkstra on reduced costs.
+            let mut dist = vec![i64::MAX; n];
+            let mut prev: Vec<Option<(usize, usize)>> = vec![None; n];
+            let mut heap = std::collections::BinaryHeap::new();
+            dist[s] = 0;
+            heap.push(std::cmp::Reverse((0i64, s)));
+            while let Some(std::cmp::Reverse((d, u))) = heap.pop() {
+                if d > dist[u] {
+                    continue;
+                }
+                for (ei, e) in self.graph[u].iter().enumerate() {
+                    if e.cap > 0 && potential[u] < i64::MAX / 4 && potential[e.to] < i64::MAX / 4 {
+                        let nd = d + e.cost + potential[u] - potential[e.to];
+                        if nd < dist[e.to] {
+                            dist[e.to] = nd;
+                            prev[e.to] = Some((u, ei));
+                            heap.push(std::cmp::Reverse((nd, e.to)));
+                        }
+                    }
+                }
+            }
+            if dist[t] == i64::MAX {
+                break; // no augmenting path
+            }
+            for v in 0..n {
+                if dist[v] < i64::MAX && potential[v] < i64::MAX / 4 {
+                    potential[v] += dist[v];
+                }
+            }
+            // Bottleneck along the path.
+            let mut push = limit - total_flow;
+            let mut v = t;
+            while let Some((u, ei)) = prev[v] {
+                push = push.min(self.graph[u][ei].cap);
+                v = u;
+            }
+            // Apply.
+            let mut v = t;
+            while let Some((u, ei)) = prev[v] {
+                let rev = self.graph[u][ei].rev;
+                self.graph[u][ei].cap -= push;
+                self.graph[v][rev].cap += push;
+                total_cost += push * self.graph[u][ei].cost;
+                v = u;
+            }
+            total_flow += push;
+        }
+
+        FlowResult { flow: total_flow, cost: total_cost }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_path() {
+        let mut g = McmfGraph::new(3);
+        g.add_edge(0, 1, 5, 2);
+        g.add_edge(1, 2, 3, 1);
+        let r = g.min_cost_flow(0, 2, 10);
+        assert_eq!(r, FlowResult { flow: 3, cost: 9 });
+    }
+
+    #[test]
+    fn chooses_cheaper_path_first() {
+        // Two parallel 0->2 paths: via 1 (cost 1+1), direct (cost 5).
+        let mut g = McmfGraph::new(3);
+        let e_direct = g.add_edge(0, 2, 10, 5);
+        g.add_edge(0, 1, 2, 1);
+        g.add_edge(1, 2, 2, 1);
+        let r = g.min_cost_flow(0, 2, 3);
+        assert_eq!(r.flow, 3);
+        assert_eq!(r.cost, 2 * 2 + 1 * 5);
+        assert_eq!(g.edge_flow(e_direct), 1);
+    }
+
+    #[test]
+    fn respects_limit() {
+        let mut g = McmfGraph::new(2);
+        g.add_edge(0, 1, 100, 1);
+        let r = g.min_cost_flow(0, 1, 7);
+        assert_eq!(r, FlowResult { flow: 7, cost: 7 });
+    }
+
+    #[test]
+    fn assignment_via_flow_matches_bnb() {
+        // Same 3x3 assignment as the B&B test; optimal cost 12.
+        let cost = [[4i64, 2, 8], [4, 3, 7], [3, 1, 6]];
+        // nodes: 0 = s, 1..=3 rows, 4..=6 cols, 7 = t
+        let mut g = McmfGraph::new(8);
+        for i in 0..3 {
+            g.add_edge(0, 1 + i, 1, 0);
+            g.add_edge(4 + i, 7, 1, 0);
+        }
+        for i in 0..3 {
+            for j in 0..3 {
+                g.add_edge(1 + i, 4 + j, 1, cost[i][j]);
+            }
+        }
+        let r = g.min_cost_flow(0, 7, 3);
+        assert_eq!(r, FlowResult { flow: 3, cost: 12 });
+    }
+
+    #[test]
+    fn negative_costs_ok() {
+        // Profitable edge (negative cost) must be exploited.
+        let mut g = McmfGraph::new(3);
+        g.add_edge(0, 1, 1, -5);
+        g.add_edge(1, 2, 1, 2);
+        g.add_edge(0, 2, 1, 0);
+        let r = g.min_cost_flow(0, 2, 2);
+        assert_eq!(r.flow, 2);
+        assert_eq!(r.cost, -3);
+    }
+
+    #[test]
+    fn disconnected_sink() {
+        let mut g = McmfGraph::new(4);
+        g.add_edge(0, 1, 5, 1);
+        // node 2,3 disconnected
+        let r = g.min_cost_flow(0, 3, 5);
+        assert_eq!(r.flow, 0);
+    }
+
+    #[test]
+    fn transportation_capacity_saturation() {
+        // 5 units demand, two "engines" with caps 2 and 3 and costs 1, 2.
+        let mut g = McmfGraph::new(4);
+        g.add_edge(0, 1, 2, 1);
+        g.add_edge(0, 2, 3, 2);
+        g.add_edge(1, 3, 2, 0);
+        g.add_edge(2, 3, 3, 0);
+        let r = g.min_cost_flow(0, 3, 5);
+        assert_eq!(r, FlowResult { flow: 5, cost: 2 + 6 });
+    }
+}

@@ -1,0 +1,257 @@
+//! Integer linear programming substrate.
+//!
+//! The paper solves its neuron-assignment ILP (eqs. 3–7) with PuLP/CBC.
+//! Nothing like that exists in this environment, so we implement the solver
+//! stack ourselves:
+//!
+//! * [`lp`] — a two-phase primal simplex solver over a dense tableau with
+//!   Bland anti-cycling. Adequate for the per-layer relaxations that the
+//!   branch & bound explores (hundreds of variables).
+//! * [`branch_bound`] — best-first branch & bound on fractional variables,
+//!   producing provably optimal integer solutions for small/medium models.
+//! * [`mcmf`] — a min-cost max-flow solver (successive shortest paths with
+//!   Johnson potentials). The MENAGE assignment collapses — after exploiting
+//!   capacitor symmetry — to a transportation problem whose constraint
+//!   matrix is totally unimodular, so the flow solution *is* the ILP
+//!   optimum. This is the scalable path used for the CIFAR10-DVS layers
+//!   (~10⁵–10⁶ raw binaries).
+//!
+//! The [`Problem`] builder is deliberately tiny and explicit; the mapping
+//! layer is its only in-crate consumer, but the API is general enough for
+//! the ablation benches to pose arbitrary side problems.
+
+pub mod branch_bound;
+pub mod lp;
+pub mod mcmf;
+
+
+/// Variable identifier (index into the problem's variable vector).
+pub type VarId = usize;
+
+/// Optimization direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Minimize,
+    Maximize,
+}
+
+/// Linear constraint comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    /// `Σ aᵢxᵢ ≤ b`
+    Le,
+    /// `Σ aᵢxᵢ = b`
+    Eq,
+    /// `Σ aᵢxᵢ ≥ b`
+    Ge,
+}
+
+/// Variable domain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Domain {
+    /// Continuous in `[lo, hi]`.
+    Continuous { lo: f64, hi: f64 },
+    /// Integer in `[lo, hi]` (inclusive).
+    Integer { lo: i64, hi: i64 },
+    /// Binary `{0, 1}` — shorthand for `Integer { 0, 1 }`.
+    Binary,
+}
+
+impl Domain {
+    /// Lower bound as f64.
+    pub fn lo(&self) -> f64 {
+        match *self {
+            Domain::Continuous { lo, .. } => lo,
+            Domain::Integer { lo, .. } => lo as f64,
+            Domain::Binary => 0.0,
+        }
+    }
+    /// Upper bound as f64.
+    pub fn hi(&self) -> f64 {
+        match *self {
+            Domain::Continuous { hi, .. } => hi,
+            Domain::Integer { hi, .. } => hi as f64,
+            Domain::Binary => 1.0,
+        }
+    }
+    /// Whether the domain requires integrality.
+    pub fn is_integer(&self) -> bool {
+        !matches!(self, Domain::Continuous { .. })
+    }
+}
+
+/// A sparse linear constraint `Σ coeff·var  (≤ | = | ≥)  rhs`.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub terms: Vec<(VarId, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+    /// Optional human-readable tag (used in infeasibility reports).
+    pub name: String,
+}
+
+/// An ILP/LP problem under construction.
+#[derive(Debug, Clone, Default)]
+pub struct Problem {
+    pub sense: Option<Sense>,
+    /// Objective coefficients, one per variable (0 when untouched).
+    pub objective: Vec<f64>,
+    /// Constant term of the objective (book-keeping only).
+    pub objective_offset: f64,
+    pub domains: Vec<Domain>,
+    pub names: Vec<String>,
+    pub constraints: Vec<Constraint>,
+}
+
+impl Problem {
+    /// Empty minimization problem.
+    pub fn minimize() -> Self {
+        Self { sense: Some(Sense::Minimize), ..Default::default() }
+    }
+
+    /// Empty maximization problem.
+    pub fn maximize() -> Self {
+        Self { sense: Some(Sense::Maximize), ..Default::default() }
+    }
+
+    /// Add a variable; returns its id.
+    pub fn add_var(&mut self, name: impl Into<String>, domain: Domain, obj_coeff: f64) -> VarId {
+        let id = self.domains.len();
+        self.domains.push(domain);
+        self.names.push(name.into());
+        self.objective.push(obj_coeff);
+        id
+    }
+
+    /// Add a binary variable with the given objective coefficient.
+    pub fn add_binary(&mut self, name: impl Into<String>, obj_coeff: f64) -> VarId {
+        self.add_var(name, Domain::Binary, obj_coeff)
+    }
+
+    /// Add a constraint; duplicate variable ids in `terms` are summed.
+    pub fn add_constraint(
+        &mut self,
+        name: impl Into<String>,
+        terms: Vec<(VarId, f64)>,
+        cmp: Cmp,
+        rhs: f64,
+    ) {
+        debug_assert!(terms.iter().all(|&(v, _)| v < self.domains.len()));
+        self.constraints.push(Constraint { terms, cmp, rhs, name: name.into() });
+    }
+
+    /// Number of variables.
+    pub fn num_vars(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// Number of constraints.
+    pub fn num_constraints(&self) -> usize {
+        self.constraints.len()
+    }
+
+    /// Evaluate the objective (including the constant offset) at `x`.
+    pub fn objective_value(&self, x: &[f64]) -> f64 {
+        self.objective_offset
+            + self.objective.iter().zip(x).map(|(c, v)| c * v).sum::<f64>()
+    }
+
+    /// Check feasibility of an assignment within `tol`.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.len() != self.num_vars() {
+            return false;
+        }
+        for (i, d) in self.domains.iter().enumerate() {
+            if x[i] < d.lo() - tol || x[i] > d.hi() + tol {
+                return false;
+            }
+            if d.is_integer() && (x[i] - x[i].round()).abs() > tol {
+                return false;
+            }
+        }
+        self.constraints.iter().all(|c| {
+            let lhs: f64 = c.terms.iter().map(|&(v, a)| a * x[v]).sum();
+            match c.cmp {
+                Cmp::Le => lhs <= c.rhs + tol,
+                Cmp::Eq => (lhs - c.rhs).abs() <= tol,
+                Cmp::Ge => lhs >= c.rhs - tol,
+            }
+        })
+    }
+}
+
+/// Solver termination status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Optimal,
+    Infeasible,
+    Unbounded,
+    /// Node/iteration limit hit; `Solution::x` holds the incumbent if any.
+    LimitReached,
+}
+
+/// Solution of an LP or ILP solve.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub status: Status,
+    pub objective: f64,
+    pub x: Vec<f64>,
+    /// Branch-and-bound statistics (0 for pure LP solves).
+    pub nodes_explored: usize,
+}
+
+impl Solution {
+    pub fn infeasible(n: usize) -> Self {
+        Self { status: Status::Infeasible, objective: f64::INFINITY, x: vec![0.0; n], nodes_explored: 0 }
+    }
+
+    /// Value of variable `v` rounded to the nearest integer.
+    pub fn int(&self, v: VarId) -> i64 {
+        self.x[v].round() as i64
+    }
+
+    /// Whether variable `v` is (rounded) one.
+    pub fn is_one(&self, v: VarId) -> bool {
+        self.x[v] > 0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problem_builder_basics() {
+        let mut p = Problem::minimize();
+        let x = p.add_binary("x", 1.0);
+        let y = p.add_var("y", Domain::Continuous { lo: 0.0, hi: 10.0 }, 2.0);
+        p.add_constraint("c0", vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 1.0);
+        assert_eq!(p.num_vars(), 2);
+        assert_eq!(p.num_constraints(), 1);
+        assert!(p.is_feasible(&[1.0, 0.0], 1e-9));
+        assert!(!p.is_feasible(&[0.0, 0.5], 1e-9)); // y=0.5 fine but constraint ok... x binary 0 ok, 0+0.5<1 -> infeasible
+        assert_eq!(p.objective_value(&[1.0, 3.0]), 7.0);
+    }
+
+    #[test]
+    fn domain_bounds() {
+        assert_eq!(Domain::Binary.lo(), 0.0);
+        assert_eq!(Domain::Binary.hi(), 1.0);
+        assert!(Domain::Binary.is_integer());
+        let d = Domain::Integer { lo: -3, hi: 7 };
+        assert_eq!(d.lo(), -3.0);
+        assert_eq!(d.hi(), 7.0);
+        let c = Domain::Continuous { lo: 0.5, hi: 2.5 };
+        assert!(!c.is_integer());
+    }
+
+    #[test]
+    fn feasibility_checks_integrality() {
+        let mut p = Problem::minimize();
+        let x = p.add_var("x", Domain::Integer { lo: 0, hi: 5 }, 1.0);
+        p.add_constraint("c", vec![(x, 1.0)], Cmp::Le, 4.0);
+        assert!(p.is_feasible(&[3.0], 1e-9));
+        assert!(!p.is_feasible(&[2.5], 1e-9));
+        assert!(!p.is_feasible(&[5.0], 1e-9)); // violates c
+    }
+}

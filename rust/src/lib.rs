@@ -1,0 +1,55 @@
+//! # MENAGE — Mixed-Signal Event-Driven Neuromorphic Accelerator
+//!
+//! A full-system reproduction of *"MENAGE: Mixed-Signal Event-Driven
+//! Neuromorphic Accelerator for Edge Applications"* (Abdollahi, Kamal,
+//! Pedram, 2024).
+//!
+//! The crate contains every substrate the paper's evaluation depends on:
+//!
+//! * [`ilp`] — a from-scratch integer linear programming solver (revised
+//!   simplex LP relaxation + branch & bound) plus a min-cost-flow fast path
+//!   used by the mapping layer.
+//! * [`analog`] — behavioural models of the mixed-signal circuits: op-amp
+//!   integrator, comparator, C2C capacitor ladder, sample/hold capacitors
+//!   with leak (replaces the paper's HSpice runs).
+//! * [`snn`] — quantized spiking-network containers (layers, LIF parameters,
+//!   pruning masks, spike trains) shared by the mapper and the simulator.
+//! * [`datasets`] — synthetic event-stream generators standing in for
+//!   N-MNIST and CIFAR10-DVS (see DESIGN.md for the substitution argument).
+//! * [`mapping`] — the paper's ILP formulation (eqs. 3–7), heuristic
+//!   baselines, and the *distiller* that turns a mapping solution into the
+//!   controller memory images (MEM_E2A / MEM_S&N).
+//! * [`neuracore`] — cycle-accurate MX-NEURACORE simulator: event memory,
+//!   polling controller FSM, A-SYN bank, A-NEURON bank with virtual neurons.
+//! * [`accel`] — the full chip: a chain of MX-NEURACOREs with inter-core
+//!   spike links and a run-to-completion engine.
+//! * [`energy`] — the energy/performance model that produces the TOPS/W
+//!   numbers of Table II, including the published baseline rows.
+//! * [`trace`] — memory-utilization and event traces (Figures 6–7).
+//! * [`runtime`] — PJRT bridge that loads the JAX-lowered golden model
+//!   (`artifacts/*.hlo.txt`) and executes it from rust.
+//! * [`coordinator`] — the thin L3 driver: async inference request loop,
+//!   batching across simulator workers, metrics.
+//! * [`config`] — TOML-backed accelerator / model / run configuration with
+//!   the paper's Accel₁ and Accel₂ presets.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod accel;
+pub mod analog;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod energy;
+pub mod ilp;
+pub mod mapping;
+pub mod neuracore;
+pub mod runtime;
+pub mod snn;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,429 @@
+//! `menage` — CLI for the MENAGE accelerator reproduction.
+//!
+//! Subcommands (clap is not in the offline vendor set; args are parsed by
+//! the in-tree parser below):
+//!
+//! ```text
+//! menage simulate  --model nmnist --accel accel1 [--samples N] [--workers W]
+//!                  [--strategy ilp_flow|greedy|first_fit|round_robin]
+//!                  [--analog ideal|paper] [--golden] [--synthetic]
+//! menage map       --model nmnist --accel accel1 [--strategy S]
+//! menage waveform  [--out waveform.json]
+//! menage info      --model nmnist
+//! ```
+//!
+//! `simulate` is the end-to-end driver: load the python-trained weights
+//! (or generate a synthetic network with `--synthetic`), ILP-map onto the
+//! accelerator, run the eval split through the cycle-accurate simulator
+//! via the multi-worker coordinator, and report accuracy, cycles, and
+//! TOPS/W. `--golden` additionally loads the JAX-lowered HLO through PJRT
+//! and cross-checks predictions.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::bench::Table;
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::coordinator::Coordinator;
+use menage::datasets::{Dataset, DatasetKind};
+use menage::energy::{report, EnergyModel};
+use menage::mapping::{map_network, Strategy};
+use menage::runtime::{artifacts_dir, cpu_client, GoldenModel};
+use menage::snn::{QuantNetwork, SpikeTrain};
+use menage::trace::MemoryTrace;
+use menage::util::json::Json;
+use menage::util::rng::Rng;
+use menage::util::tensorfile::TensorFile;
+
+/// Minimal `--key value` / `--flag` argument parser.
+struct Args {
+    cmd: String,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = BTreeMap::new();
+        let mut flags = Vec::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --option, got {a:?}"))?;
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Self { cmd, kv, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+        }
+    }
+
+    fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+/// Resolve a model name to its config + dataset kind + artifact base name.
+fn resolve_model(name: &str) -> Result<(ModelConfig, DatasetKind, &'static str)> {
+    Ok(match name {
+        "nmnist" => (ModelConfig::nmnist_mlp(), DatasetKind::NMnist, "nmnist"),
+        "cifar_small" | "cifar10dvs_small" => (
+            ModelConfig::cifar10dvs_mlp_small(),
+            DatasetKind::Cifar10DvsSmall,
+            "cifar_small",
+        ),
+        "cifar" | "cifar10dvs" => {
+            (ModelConfig::cifar10dvs_mlp(), DatasetKind::Cifar10Dvs, "cifar")
+        }
+        _ => bail!("unknown model {name:?} (nmnist | cifar_small | cifar)"),
+    })
+}
+
+fn resolve_accel(name: &str) -> Result<AcceleratorConfig> {
+    Ok(match name {
+        "accel1" => AcceleratorConfig::accel1(),
+        "accel2" => AcceleratorConfig::accel2(),
+        path => AcceleratorConfig::from_file(path)
+            .with_context(|| format!("--accel {path:?} is neither a preset nor a config file"))?,
+    })
+}
+
+/// Load the trained network from artifacts, or synthesize one.
+fn load_network(base: &str, mcfg: &ModelConfig, synthetic: bool) -> Result<QuantNetwork> {
+    if synthetic {
+        let mut rng = Rng::new(7);
+        return Ok(QuantNetwork::random(mcfg, 0.5, &mut rng));
+    }
+    let path = artifacts_dir().join(format!("{base}.weights.mtz"));
+    let tf = TensorFile::load(&path).with_context(|| {
+        format!(
+            "loading {} — run `make artifacts` first or pass --synthetic",
+            path.display()
+        )
+    })?;
+    QuantNetwork::from_tensorfile(base, &tf)
+}
+
+/// Load the eval split exported by aot.py: (inputs, labels, golden counts).
+fn load_eval(base: &str, limit: usize) -> Result<Vec<(SpikeTrain, usize, Vec<f32>)>> {
+    let path = artifacts_dir().join(format!("{base}.eval.mtz"));
+    let tf = TensorFile::load(&path)?;
+    let ev = tf.get("events")?;
+    let dims = ev.dims().to_vec(); // [n, T, dim]
+    if dims.len() != 3 {
+        bail!("events tensor must be 3-D");
+    }
+    let data = ev.as_u8()?;
+    let labels = tf.get("labels")?.as_i32()?;
+    let golden = tf.get("golden_counts")?.as_f32()?;
+    let (n, t, d) = (dims[0].min(limit), dims[1], dims[2]);
+    let classes = golden.len() / dims[0];
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut st = SpikeTrain::new(d, t);
+        for (ti, step) in st.spikes.iter_mut().enumerate() {
+            let row = &data[i * t * d + ti * d..i * t * d + (ti + 1) * d];
+            for (j, &v) in row.iter().enumerate() {
+                if v != 0 {
+                    step.push(j as u32);
+                }
+            }
+        }
+        out.push((
+            st,
+            labels[i] as usize,
+            golden[i * classes..(i + 1) * classes].to_vec(),
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let (mcfg, kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
+    println!("model: {}", mcfg.name);
+    println!("  layers:     {:?}", mcfg.layer_sizes);
+    println!("  params:     {}", mcfg.num_params());
+    println!("  timesteps:  {}", mcfg.timesteps);
+    println!("  dataset:    {} (input dim {})", kind.name(), kind.input_dim());
+    if let Ok(net) = load_network(base, &mcfg, false) {
+        println!("  trained artifact: {} nnz / sparsity {:.2}", net.nnz(), net.sparsity());
+    } else {
+        println!("  trained artifact: not found (run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let (mcfg, _, base) = resolve_model(&args.get_or("model", "nmnist"))?;
+    let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
+    let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
+    let net = load_network(base, &mcfg, args.has("synthetic"))?;
+    let t0 = std::time::Instant::now();
+    let mappings = map_network(&net, &cfg, strategy)?;
+    let dt = t0.elapsed();
+    let mut table = Table::new(
+        format!("{} on {} via {}", net.name, cfg.name, strategy.name()),
+        &["layer", "neurons", "rounds", "assigned", "unassigned", "peak load"],
+    );
+    for (l, (mp, layer)) in mappings.iter().zip(&net.layers).enumerate() {
+        mp.validate(layer, &cfg)?;
+        table.row(&[
+            l.to_string(),
+            layer.out_dim.to_string(),
+            mp.rounds.len().to_string(),
+            mp.assigned_count().to_string(),
+            mp.unassigned.len().to_string(),
+            mp.peak_engine_load(layer, cfg.a_neurons_per_core).to_string(),
+        ]);
+    }
+    table.print();
+    println!("mapping time: {dt:?}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (mcfg, kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
+    let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
+    let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
+    let analog = match args.get_or("analog", "ideal").as_str() {
+        "ideal" => AnalogParams::ideal(),
+        "paper" => AnalogParams::paper(),
+        other => bail!("--analog must be ideal|paper, got {other:?}"),
+    };
+    let workers = args.get_usize("workers", 4)?;
+    let samples = args.get_usize("samples", 40)?;
+    let synthetic = args.has("synthetic");
+
+    let net = load_network(base, &mcfg, synthetic)?;
+    println!(
+        "loaded {}: {} params, {} nnz (sparsity {:.2}), T={}",
+        net.name,
+        net.num_params(),
+        net.nnz(),
+        net.sparsity(),
+        net.timesteps
+    );
+    let chip = Menage::build(&net, &cfg, strategy, &analog, 7)?;
+    for (l, core) in chip.cores.iter().enumerate() {
+        println!(
+            "  core {l}: {} rounds, {} SN rows, {} weight bytes",
+            core.rounds(),
+            core.image_sn_rows(),
+            core.weight_bytes()
+        );
+    }
+
+    // Inputs: trained eval split or synthetic events.
+    let eval = if synthetic {
+        let ds = Dataset::new(kind, 3, net.timesteps);
+        ds.balanced_split(samples, 0)
+            .into_iter()
+            .map(|s| (s.events, s.label, vec![]))
+            .collect()
+    } else {
+        load_eval(base, samples)?
+    };
+    println!("running {} samples on {} workers…", eval.len(), workers);
+
+    let mut coord = Coordinator::new(&chip, workers);
+    let t0 = std::time::Instant::now();
+    let batch: Vec<(SpikeTrain, Option<usize>)> = eval
+        .iter()
+        .map(|(st, label, _)| (st.clone(), Some(*label)))
+        .collect();
+    let responses = coord.run_batch(batch)?;
+    let wall = t0.elapsed();
+
+    // Optional golden cross-check through PJRT.
+    let mut golden_agree = None;
+    if args.has("golden") {
+        let client = cpu_client()?;
+        let hlo = artifacts_dir().join(format!("{base}.hlo.txt"));
+        let gm = GoldenModel::load(
+            &client,
+            &hlo,
+            net.timesteps,
+            net.input_dim(),
+            net.output_dim(),
+        )?;
+        let mut agree = 0usize;
+        for ((st, _, _), resp) in eval.iter().zip(&responses) {
+            if gm.predict(st)? == resp.predicted {
+                agree += 1;
+            }
+        }
+        golden_agree = Some(agree as f64 / eval.len() as f64);
+    }
+
+    let chips = coord.shutdown();
+    // Merge stats from all workers into one report.
+    let merged = merge_chips(chips);
+    let model = EnergyModel::paper_90nm(cfg.clock_hz);
+    let eff = report(&merged, &model);
+    let trace = MemoryTrace::from_chip(&merged, kind.name(), net.timesteps, eval.len());
+
+    println!("\n== results ==");
+    println!("accuracy:        {:.4}", merged_accuracy(&responses));
+    if let Some(g) = golden_agree {
+        println!("golden agreement: {g:.4} (simulator vs PJRT-executed JAX model)");
+    }
+    println!("wall time:       {wall:?} ({:.1} samples/s)", eval.len() as f64 / wall.as_secs_f64());
+    println!("modeled cycles:  {} ({:.3} ms at {:.1} MHz)",
+        responses.iter().map(|r| r.cycles).sum::<u64>(),
+        responses.iter().map(|r| r.cycles).sum::<u64>() as f64 * cfg.clock_period() * 1e3,
+        cfg.clock_hz / 1e6);
+    println!("total MACs:      {}", merged.total_macs());
+    println!("energy:          {:.3} µJ", eff.breakdown.total() * 1e6);
+    println!("TOPS/W:          {:.2}", eff.tops_per_watt);
+    println!("MEM_S&N mean:    {:.1} KB (peak {:.1} KB)", trace.mean_kb(), trace.peak_kb());
+
+    if let Some(out) = args.get("out") {
+        let j = Json::obj(vec![
+            ("accuracy", merged_accuracy(&responses).into()),
+            ("tops_per_watt", eff.tops_per_watt.into()),
+            ("total_macs", (merged.total_macs() as usize).into()),
+            ("trace", trace.to_json()),
+        ]);
+        std::fs::write(out, j.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn merged_accuracy(responses: &[menage::coordinator::Response]) -> f64 {
+    let labelled = responses.iter().filter(|r| r.label.is_some()).count();
+    if labelled == 0 {
+        return f64::NAN;
+    }
+    responses
+        .iter()
+        .filter(|r| r.label == Some(r.predicted))
+        .count() as f64
+        / labelled as f64
+}
+
+/// Merge per-worker chips into one stats carrier (stats are additive).
+fn merge_chips(mut chips: Vec<Menage>) -> Menage {
+    let mut base = chips.remove(0);
+    for other in chips {
+        for (a, b) in base.cores.iter_mut().zip(other.cores) {
+            a.stats.cycles += b.stats.cycles;
+            a.stats.events_dispatched += b.stats.events_dispatched;
+            a.stats.sn_rows_read += b.stats.sn_rows_read;
+            a.stats.macs += b.stats.macs;
+            a.stats.integrations += b.stats.integrations;
+            a.stats.fire_ops += b.stats.fire_ops;
+            a.stats.spikes_out += b.stats.spikes_out;
+            a.stats.dropped_events += b.stats.dropped_events;
+            a.stats
+                .sn_rows_touched_per_step
+                .extend(b.stats.sn_rows_touched_per_step);
+            a.stats.cycles_per_step.extend(b.stats.cycles_per_step);
+        }
+        base.inputs_processed += other.inputs_processed;
+    }
+    base
+}
+
+fn cmd_waveform(args: &Args) -> Result<()> {
+    use menage::analog::ANeuron;
+    let mut an = ANeuron::new(1, AnalogParams::paper());
+    an.enable_capture();
+    let mut rng = Rng::new(11);
+    for _ in 0..40 {
+        let packet = if rng.bernoulli(0.7) { rng.uniform(0.1, 0.5) } else { 0.0 };
+        an.process(0, packet, 1.0, 0.0);
+        an.lif_leak(0.9);
+    }
+    let wf = an.waveform();
+    println!("captured {} waveform points over {:.1} ns", wf.len(), an.now * 1e9);
+    println!("average power: {:.1} nW (paper: 97 nW)", an.average_power() * 1e9);
+    if let Some(out) = args.get("out") {
+        let j = Json::Arr(
+            wf.iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("t", p.t.into()),
+                        ("v_in", p.v_in.into()),
+                        ("v_integ", p.v_integ.into()),
+                        ("v_out", p.v_out.into()),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write(out, j.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "menage — MENAGE mixed-signal neuromorphic accelerator reproduction
+
+USAGE:
+  menage info      --model <nmnist|cifar_small|cifar>
+  menage map       --model M --accel <accel1|accel2|cfg.toml> [--strategy S] [--synthetic]
+  menage simulate  --model M --accel A [--samples N] [--workers W]
+                   [--strategy ilp_flow|ilp_exact|greedy|first_fit|round_robin]
+                   [--analog ideal|paper] [--golden] [--synthetic] [--out FILE]
+  menage waveform  [--out FILE]
+
+Run `make artifacts` first to produce trained weights + HLO under artifacts/."
+    );
+}
+
+fn main() {
+    let args = match Args::parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let r = match args.cmd.as_str() {
+        "info" => cmd_info(&args),
+        "map" => cmd_map(&args),
+        "simulate" => cmd_simulate(&args),
+        "waveform" => cmd_waveform(&args),
+        "help" | "--help" | "-h" => {
+            help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

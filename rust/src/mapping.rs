@@ -1,0 +1,961 @@
+//! ILP-based model-to-accelerator mapping (paper §III-D) and the
+//! *distiller* that turns solutions into controller memory images.
+//!
+//! The paper assigns every destination-layer neuron `i` to a capacitor `k`
+//! of an A-NEURON `j` via binaries `x_{i,j,k}` (eq. 3) minimizing
+//! unassigned neurons (eq. 4) under engine capacity (eq. 5), unique
+//! assignment (eq. 6) and source fan-out (eq. 7). When a layer has more
+//! neurons than the M·N capacitors, the controller processes the layer in
+//! **rounds**, reassigning capacitors once a neuron's connections are
+//! processed ("the capacitor tied to that neuron must be reassigned") —
+//! so the full mapping is a sequence of per-round assignments.
+//!
+//! Solver strategies:
+//! * [`Strategy::IlpExact`] — the literal eqs. (3)–(7) ILP via the in-tree
+//!   branch & bound. Provably optimal; practical for small layers and used
+//!   to certify the fast path.
+//! * [`Strategy::IlpFlow`] — the production path. Capacitors within one
+//!   A-NEURON are interchangeable, so collapsing `k` yields a
+//!   transportation problem (totally unimodular ⇒ LP = ILP optimum),
+//!   solved as min-cost max-flow with convex per-engine costs that also
+//!   balance neurons across engines. A weighted-load local-refinement
+//!   pass then balances expected *event* load (communication overhead,
+//!   §III-D).
+//! * [`Strategy::Greedy`] / [`Strategy::FirstFit`] / [`Strategy::RoundRobin`]
+//!   — baselines for the mapping ablation (DESIGN.md X2).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::AcceleratorConfig;
+use crate::ilp::branch_bound::{self, BnbConfig};
+use crate::ilp::mcmf::McmfGraph;
+use crate::ilp::{Cmp, Problem, Status};
+use crate::snn::{QuantLayer, QuantNetwork};
+
+/// Mapping strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    IlpExact,
+    IlpFlow,
+    Greedy,
+    FirstFit,
+    RoundRobin,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::IlpExact => "ilp_exact",
+            Strategy::IlpFlow => "ilp_flow",
+            Strategy::Greedy => "greedy",
+            Strategy::FirstFit => "first_fit",
+            Strategy::RoundRobin => "round_robin",
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "ilp_exact" => Strategy::IlpExact,
+            "ilp_flow" | "ilp" => Strategy::IlpFlow,
+            "greedy" => Strategy::Greedy,
+            "first_fit" => Strategy::FirstFit,
+            "round_robin" => Strategy::RoundRobin,
+            _ => bail!("unknown mapping strategy {s:?}"),
+        })
+    }
+
+    pub fn all() -> [Strategy; 5] {
+        [
+            Strategy::IlpExact,
+            Strategy::IlpFlow,
+            Strategy::Greedy,
+            Strategy::FirstFit,
+            Strategy::RoundRobin,
+        ]
+    }
+}
+
+/// A slot is one capacitor of one A-NEURON.
+pub type Slot = (u16, u16); // (engine j, capacitor k)
+
+/// Assignment of destination neurons to slots for one round.
+#[derive(Debug, Clone, Default)]
+pub struct RoundAssignment {
+    /// `slot_of[i]` for each destination neuron handled this round.
+    pub slot_of: BTreeMap<u32, Slot>,
+}
+
+impl RoundAssignment {
+    /// Per-engine neuron counts.
+    pub fn engine_counts(&self, m: usize) -> Vec<usize> {
+        let mut c = vec![0usize; m];
+        for &(j, _) in self.slot_of.values() {
+            c[j as usize] += 1;
+        }
+        c
+    }
+}
+
+/// Complete mapping of one layer onto one MX-NEURACORE.
+#[derive(Debug, Clone)]
+pub struct LayerMapping {
+    pub rounds: Vec<RoundAssignment>,
+    /// Destination neurons that could not be assigned in any round
+    /// (objective (4) — empty whenever rounds are allowed and fan-out
+    /// limits are satisfiable).
+    pub unassigned: Vec<u32>,
+    /// Strategy that produced this mapping.
+    pub strategy: Strategy,
+    /// ILP nodes explored (exact path) — solver effort metric.
+    pub solver_nodes: usize,
+}
+
+impl LayerMapping {
+    /// Check the paper's constraints (5)–(7) hold for every round.
+    pub fn validate(&self, layer: &QuantLayer, cfg: &AcceleratorConfig) -> Result<()> {
+        let m = cfg.a_neurons_per_core;
+        let n = cfg.virtual_per_a_neuron;
+        let mut seen = vec![false; layer.out_dim];
+        for (ri, round) in self.rounds.iter().enumerate() {
+            let mut slot_used: BTreeMap<Slot, u32> = BTreeMap::new();
+            let mut engine_load = vec![0usize; m];
+            for (&i, &(j, k)) in &round.slot_of {
+                if i as usize >= layer.out_dim {
+                    bail!("round {ri}: neuron {i} out of range");
+                }
+                if j as usize >= m || k as usize >= n {
+                    bail!("round {ri}: slot ({j},{k}) out of range");
+                }
+                // Unique assignment across the whole mapping (eq. 6).
+                if seen[i as usize] {
+                    bail!("neuron {i} assigned twice");
+                }
+                seen[i as usize] = true;
+                // One neuron per capacitor per round.
+                if let Some(prev) = slot_used.insert((j, k), i) {
+                    bail!("round {ri}: slot ({j},{k}) holds {prev} and {i}");
+                }
+                engine_load[j as usize] += 1;
+            }
+            // Engine capacity (eq. 5).
+            for (j, &load) in engine_load.iter().enumerate() {
+                if load > n {
+                    bail!("round {ri}: engine {j} overloaded ({load} > {n})");
+                }
+            }
+            // Fan-out (eq. 7): connections from each source to this round's
+            // assigned neurons must respect the limit.
+            let mut fanout = vec![0usize; layer.in_dim];
+            for s in 0..layer.in_dim {
+                for &(d, _) in layer.targets_of(s) {
+                    if round.slot_of.contains_key(&d) {
+                        fanout[s] += 1;
+                    }
+                }
+            }
+            if let Some((s, &f)) =
+                fanout.iter().enumerate().find(|(_, &f)| f > cfg.fanout_limit)
+            {
+                bail!("round {ri}: source {s} fan-out {f} exceeds limit {}", cfg.fanout_limit);
+            }
+        }
+        // Completeness: every neuron with incoming connections must be
+        // assigned or explicitly reported unassigned.
+        let mut has_input = vec![false; layer.out_dim];
+        for s in 0..layer.in_dim {
+            for &(d, _) in layer.targets_of(s) {
+                has_input[d as usize] = true;
+            }
+        }
+        for (i, (&s, &h)) in seen.iter().zip(&has_input).enumerate() {
+            let listed = self.unassigned.contains(&(i as u32));
+            if h && !s && !listed {
+                bail!("neuron {i} has inputs but is neither assigned nor reported unassigned");
+            }
+        }
+        Ok(())
+    }
+
+    /// Total assigned neurons.
+    pub fn assigned_count(&self) -> usize {
+        self.rounds.iter().map(|r| r.slot_of.len()).sum()
+    }
+
+    /// Peak weighted (in-degree) engine load across rounds — the
+    /// communication-balance metric the refinement pass minimizes.
+    pub fn peak_engine_load(&self, layer: &QuantLayer, m: usize) -> usize {
+        let in_deg = in_degrees(layer);
+        let mut peak = 0usize;
+        for round in &self.rounds {
+            let mut load = vec![0usize; m];
+            for (&i, &(j, _)) in &round.slot_of {
+                load[j as usize] += in_deg[i as usize];
+            }
+            peak = peak.max(load.into_iter().max().unwrap_or(0));
+        }
+        peak
+    }
+}
+
+/// In-degree (number of incoming non-zero synapses) per destination neuron.
+pub fn in_degrees(layer: &QuantLayer) -> Vec<usize> {
+    let mut deg = vec![0usize; layer.out_dim];
+    for s in 0..layer.in_dim {
+        for &(d, _) in layer.targets_of(s) {
+            deg[d as usize] += 1;
+        }
+    }
+    deg
+}
+
+/// Map one layer onto one MX-NEURACORE with the chosen strategy.
+///
+/// Neurons with no incoming connections are skipped (they can never fire;
+/// mapping them would waste capacitors — the paper prunes them away).
+pub fn map_layer(
+    layer: &QuantLayer,
+    cfg: &AcceleratorConfig,
+    strategy: Strategy,
+) -> Result<LayerMapping> {
+    let m = cfg.a_neurons_per_core;
+    let n = cfg.virtual_per_a_neuron;
+    let capacity = m * n;
+    let in_deg = in_degrees(layer);
+    // Active neurons, heaviest first (heavy neurons are hardest to place
+    // and drive the balance objective).
+    let mut active: Vec<u32> = (0..layer.out_dim as u32)
+        .filter(|&i| in_deg[i as usize] > 0)
+        .collect();
+    active.sort_by_key(|&i| std::cmp::Reverse(in_deg[i as usize]));
+
+    // Source lists per destination (transposed CSR) — needed for the
+    // fan-out budget bookkeeping below.
+    let mut sources_of: Vec<Vec<u32>> = vec![Vec::new(); layer.out_dim];
+    for s in 0..layer.in_dim {
+        for &(d, _) in layer.targets_of(s) {
+            sources_of[d as usize].push(s as u32);
+        }
+    }
+
+    // Partition into rounds of ≤ capacity respecting per-round fan-out
+    // budgets (eq. 7): greedy bin packing in heavy-first order.
+    let mut rounds_members: Vec<Vec<u32>> = Vec::new();
+    let mut unassigned: Vec<u32> = Vec::new();
+    {
+        let mut remaining = active.clone();
+        while !remaining.is_empty() {
+            let mut round: Vec<u32> = Vec::new();
+            let mut fanout = vec![0usize; layer.in_dim];
+            let mut deferred: Vec<u32> = Vec::new();
+            for &i in &remaining {
+                if round.len() >= capacity {
+                    deferred.push(i);
+                    continue;
+                }
+                // Would adding i violate any source budget?
+                let ok = sources_of[i as usize]
+                    .iter()
+                    .all(|&s| fanout[s as usize] + 1 <= cfg.fanout_limit);
+                if ok {
+                    for &s in &sources_of[i as usize] {
+                        fanout[s as usize] += 1;
+                    }
+                    round.push(i);
+                } else {
+                    deferred.push(i);
+                }
+            }
+            if round.is_empty() {
+                // fanout_limit == 0: the rest can never be placed.
+                unassigned = deferred;
+                break;
+            }
+            rounds_members.push(round);
+            remaining = deferred;
+        }
+    }
+
+    // Assign slots within each round.
+    let mut solver_nodes = 0usize;
+    let mut rounds = Vec::with_capacity(rounds_members.len());
+    for members in &rounds_members {
+        let assign = match strategy {
+            Strategy::IlpExact => {
+                let (a, nodes) =
+                    assign_ilp_exact(layer, members, m, n, cfg.fanout_limit)?;
+                solver_nodes += nodes;
+                a
+            }
+            Strategy::IlpFlow => assign_flow(members, m, n, &in_deg),
+            Strategy::Greedy => assign_greedy(members, m, n, &in_deg),
+            Strategy::FirstFit => assign_first_fit(members, m, n),
+            Strategy::RoundRobin => assign_round_robin(members, m, n),
+        };
+        rounds.push(assign);
+    }
+
+    Ok(LayerMapping { rounds, unassigned, strategy, solver_nodes })
+}
+
+/// Map every layer of a network onto the accelerator's core chain.
+pub fn map_network(
+    net: &QuantNetwork,
+    cfg: &AcceleratorConfig,
+    strategy: Strategy,
+) -> Result<Vec<LayerMapping>> {
+    if net.layers.len() > cfg.num_cores {
+        bail!(
+            "network has {} layers but {} provides only {} MX-NEURACOREs",
+            net.layers.len(),
+            cfg.name,
+            cfg.num_cores
+        );
+    }
+    net.layers.iter().map(|l| map_layer(l, cfg, strategy)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Strategy implementations (one round each; `members.len() ≤ m·n`).
+// ---------------------------------------------------------------------------
+
+/// Literal eqs. (3)–(7) ILP via branch & bound (small instances).
+fn assign_ilp_exact(
+    layer: &QuantLayer,
+    members: &[u32],
+    m: usize,
+    n: usize,
+    fanout_limit: usize,
+) -> Result<(RoundAssignment, usize)> {
+    let mut p = Problem::minimize();
+    // x_{i,j,k}: member index ii (position in `members`), engine j, cap k.
+    let mut var = vec![vec![vec![0usize; n]; m]; members.len()];
+    for (ii, &i) in members.iter().enumerate() {
+        for (j, vj) in var[ii].iter_mut().enumerate() {
+            for (k, v) in vj.iter_mut().enumerate() {
+                // Objective (4): minimize Σ (1 - x) ≡ maximize Σ x.
+                *v = p.add_binary(format!("x_{i}_{j}_{k}"), -1.0);
+            }
+        }
+    }
+    p.objective_offset = (members.len() * m * n) as f64;
+    // (5) engine capacity.
+    for j in 0..m {
+        let mut terms = Vec::with_capacity(members.len() * n);
+        for ii in 0..members.len() {
+            for k in 0..n {
+                terms.push((var[ii][j][k], 1.0));
+            }
+        }
+        p.add_constraint(format!("cap_{j}"), terms, Cmp::Le, n as f64);
+    }
+    // (6) unique assignment — `≤ 1` plus the maximizing objective: the
+    // paper's equality reading would make partial assignment infeasible
+    // under capacity pressure, but eq. (4) explicitly tolerates unassigned
+    // neurons, so ≤ is the consistent interpretation.
+    for (ii, &i) in members.iter().enumerate() {
+        let mut terms = Vec::with_capacity(m * n);
+        for j in 0..m {
+            for k in 0..n {
+                terms.push((var[ii][j][k], 1.0));
+            }
+        }
+        p.add_constraint(format!("uniq_{i}"), terms, Cmp::Le, 1.0);
+    }
+    // One neuron per capacitor.
+    for j in 0..m {
+        for k in 0..n {
+            let terms: Vec<_> =
+                (0..members.len()).map(|ii| (var[ii][j][k], 1.0)).collect();
+            p.add_constraint(format!("slot_{j}_{k}"), terms, Cmp::Le, 1.0);
+        }
+    }
+    // (7) fan-out per source neuron.
+    for s in 0..layer.in_dim {
+        let connected: Vec<usize> = members
+            .iter()
+            .enumerate()
+            .filter(|(_, &i)| layer.targets_of(s).iter().any(|&(d, _)| d == i))
+            .map(|(ii, _)| ii)
+            .collect();
+        if connected.len() > fanout_limit {
+            let mut terms = Vec::with_capacity(connected.len() * m * n);
+            for &ii in &connected {
+                for j in 0..m {
+                    for k in 0..n {
+                        terms.push((var[ii][j][k], 1.0));
+                    }
+                }
+            }
+            p.add_constraint(format!("fanout_{s}"), terms, Cmp::Le, fanout_limit as f64);
+        }
+    }
+    let sol = branch_bound::solve(&p, &BnbConfig::default());
+    if sol.status != Status::Optimal && sol.status != Status::LimitReached {
+        bail!("exact ILP solve failed: {:?}", sol.status);
+    }
+    let mut round = RoundAssignment::default();
+    for (ii, &i) in members.iter().enumerate() {
+        'place: for j in 0..m {
+            for k in 0..n {
+                if sol.is_one(var[ii][j][k]) {
+                    round.slot_of.insert(i, (j as u16, k as u16));
+                    break 'place;
+                }
+            }
+        }
+    }
+    Ok((round, sol.nodes_explored))
+}
+
+/// Production path: transportation problem via min-cost max-flow.
+///
+/// Nodes: source → one node per member (cap 1) → engine nodes → sink.
+/// Engine→sink is expanded into N unit edges with convexly increasing
+/// costs, which (a) keeps the problem totally unimodular and (b) balances
+/// neuron counts across engines. A local-refinement pass then swaps
+/// assignments to balance *weighted* (in-degree) load.
+fn assign_flow(members: &[u32], m: usize, n: usize, in_deg: &[usize]) -> RoundAssignment {
+    let nm = members.len();
+    // node ids: 0 = source, 1..=nm members, nm+1..=nm+m engines, nm+m+1 sink
+    let s = 0usize;
+    let member_node = |ii: usize| 1 + ii;
+    let engine_node = |j: usize| 1 + nm + j;
+    let t = 1 + nm + m;
+    let mut g = McmfGraph::new(t + 1);
+    for ii in 0..nm {
+        g.add_edge(s, member_node(ii), 1, 0);
+    }
+    let mut member_engine_edges = vec![vec![(0usize, 0usize); m]; nm];
+    for (ii, edges) in member_engine_edges.iter_mut().enumerate() {
+        for (j, e) in edges.iter_mut().enumerate() {
+            *e = g.add_edge(member_node(ii), engine_node(j), 1, 0);
+        }
+    }
+    for j in 0..m {
+        for k in 0..n {
+            // Convex cost: k-th neuron on an engine costs k (balances counts).
+            g.add_edge(engine_node(j), t, 1, k as i64);
+        }
+    }
+    g.min_cost_flow(s, t, nm as i64);
+
+    // Read engine choice per member from edge flows.
+    let mut engine_of = vec![usize::MAX; nm];
+    for (ii, edges) in member_engine_edges.iter().enumerate() {
+        for (j, &e) in edges.iter().enumerate() {
+            if g.edge_flow(e) > 0 {
+                engine_of[ii] = j;
+                break;
+            }
+        }
+    }
+    // Local refinement: balance weighted load by moving members from the
+    // heaviest engine to the lightest while it helps (capacitors within an
+    // engine are symmetric, so any move keeping counts ≤ n is feasible).
+    let mut count = vec![0usize; m];
+    let mut wload = vec![0i64; m];
+    for (ii, &j) in engine_of.iter().enumerate() {
+        count[j] += 1;
+        wload[j] += in_deg[members[ii] as usize] as i64;
+    }
+    for _ in 0..4 * nm.max(1) {
+        let (hi, _) = wload.iter().enumerate().max_by_key(|&(_, &w)| w).unwrap();
+        let (lo, _) = wload.iter().enumerate().min_by_key(|&(_, &w)| w).unwrap();
+        if hi == lo {
+            break;
+        }
+        let gap = wload[hi] - wload[lo];
+        if gap <= 1 {
+            break;
+        }
+        if count[lo] < n {
+            // Move: best member whose weight is closest to half the gap.
+            let candidate = engine_of
+                .iter()
+                .enumerate()
+                .filter(|&(_, &j)| j == hi)
+                .map(|(ii, _)| (ii, in_deg[members[ii] as usize] as i64))
+                .filter(|&(_, w)| w > 0 && w < gap)
+                .min_by_key(|&(_, w)| (gap - 2 * w).abs());
+            if let Some((ii, w)) = candidate {
+                engine_of[ii] = lo;
+                count[hi] -= 1;
+                count[lo] += 1;
+                wload[hi] -= w;
+                wload[lo] += w;
+                continue;
+            }
+        }
+        // Swap: pair (a on hi, b on lo) with 0 < w_a - w_b < gap, transfer
+        // closest to half the gap.
+        let heavy: Vec<(usize, i64)> = engine_of
+            .iter()
+            .enumerate()
+            .filter(|&(_, &j)| j == hi)
+            .map(|(ii, _)| (ii, in_deg[members[ii] as usize] as i64))
+            .collect();
+        let light: Vec<(usize, i64)> = engine_of
+            .iter()
+            .enumerate()
+            .filter(|&(_, &j)| j == lo)
+            .map(|(ii, _)| (ii, in_deg[members[ii] as usize] as i64))
+            .collect();
+        let mut best: Option<(usize, usize, i64)> = None;
+        for &(a, wa) in &heavy {
+            for &(b, wb) in &light {
+                let d = wa - wb;
+                if d > 0 && d < gap {
+                    let score = (gap - 2 * d).abs();
+                    if best.map_or(true, |(_, _, bd)| score < (gap - 2 * bd).abs()) {
+                        best = Some((a, b, d));
+                    }
+                }
+            }
+        }
+        match best {
+            Some((a, b, d)) => {
+                engine_of[a] = lo;
+                engine_of[b] = hi;
+                wload[hi] -= d;
+                wload[lo] += d;
+            }
+            None => break,
+        }
+    }
+    let mut round = RoundAssignment::default();
+    let mut next_cap = vec![0u16; m];
+    for (ii, &i) in members.iter().enumerate() {
+        let j = engine_of[ii];
+        debug_assert!(j != usize::MAX, "flow must place every member");
+        let k = next_cap[j];
+        next_cap[j] += 1;
+        round.slot_of.insert(i, (j as u16, k));
+    }
+    round
+}
+
+/// Greedy: heaviest neuron to the least-loaded engine (weighted load).
+fn assign_greedy(members: &[u32], m: usize, n: usize, in_deg: &[usize]) -> RoundAssignment {
+    let mut order: Vec<u32> = members.to_vec();
+    order.sort_by_key(|&i| std::cmp::Reverse(in_deg[i as usize]));
+    let mut round = RoundAssignment::default();
+    let mut count = vec![0usize; m];
+    let mut load = vec![0usize; m];
+    for i in order {
+        // Least weighted load among engines with free capacitors.
+        let j = (0..m)
+            .filter(|&j| count[j] < n)
+            .min_by_key(|&j| (load[j], j))
+            .expect("round size ≤ m·n guarantees a free slot");
+        round.slot_of.insert(i, (j as u16, count[j] as u16));
+        load[j] += in_deg[i as usize];
+        count[j] += 1;
+    }
+    round
+}
+
+/// First-fit: members in index order fill engine 0 before engine 1, etc.
+fn assign_first_fit(members: &[u32], m: usize, n: usize) -> RoundAssignment {
+    let mut sorted: Vec<u32> = members.to_vec();
+    sorted.sort_unstable();
+    let mut round = RoundAssignment::default();
+    for (pos, &i) in sorted.iter().enumerate() {
+        let j = pos / n;
+        let k = pos % n;
+        if j >= m {
+            break;
+        }
+        round.slot_of.insert(i, (j as u16, k as u16));
+    }
+    round
+}
+
+/// Round-robin: members distributed cyclically across engines.
+fn assign_round_robin(members: &[u32], m: usize, n: usize) -> RoundAssignment {
+    let mut sorted: Vec<u32> = members.to_vec();
+    sorted.sort_unstable();
+    let mut round = RoundAssignment::default();
+    let mut count = vec![0u16; m];
+    for (pos, &i) in sorted.iter().enumerate() {
+        // Find next engine with space starting from pos % m.
+        let mut j = pos % m;
+        let mut tries = 0;
+        while count[j] as usize >= n && tries < m {
+            j = (j + 1) % m;
+            tries += 1;
+        }
+        if tries == m {
+            break;
+        }
+        round.slot_of.insert(i, (j as u16, count[j]));
+        count[j] += 1;
+    }
+    round
+}
+
+// ---------------------------------------------------------------------------
+// Distiller: mapping → controller memory images (paper Figure 4).
+// ---------------------------------------------------------------------------
+
+/// One engine column of a MEM_S&N row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SnEntry {
+    /// Virtual-neuron (capacitor) index inside the A-NEURON.
+    pub virt: u16,
+    /// Address of the synaptic weight in the A-SYN weight SRAM.
+    pub weight_addr: u32,
+    /// Destination neuron id (simulation convenience; the silicon encodes
+    /// it implicitly via (engine, virt, round)).
+    pub dst: u32,
+}
+
+/// One MEM_S&N row: per A-NEURON column group, an optional
+/// (virtual index, weight address) pair; the paper's `NI_j` binary flag is
+/// `per_engine[j].is_some()`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SnRow {
+    pub per_engine: Vec<Option<SnEntry>>,
+}
+
+/// MEM_E2A entry: `B_i` rows starting at address `A_i` (paper Figure 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct E2aEntry {
+    pub count: u32,
+    pub start: u32,
+}
+
+/// Control memories for one round of one MX-NEURACORE.
+#[derive(Debug, Clone, Default)]
+pub struct RoundImage {
+    /// Indexed by source neuron id.
+    pub e2a: Vec<E2aEntry>,
+    pub sn_rows: Vec<SnRow>,
+    /// (engine, virt) → destination neuron resident this round.
+    pub residents: BTreeMap<Slot, u32>,
+}
+
+/// Full control-memory image for one MX-NEURACORE.
+#[derive(Debug, Clone)]
+pub struct CoreImage {
+    pub rounds: Vec<RoundImage>,
+    /// A-SYN weight SRAM contents.
+    pub weight_mem: Vec<i8>,
+    /// Dequantization scale of the layer.
+    pub scale: f32,
+    /// Number of A-NEURON engines (M) the image was distilled for.
+    pub num_engines: usize,
+    /// in/out dims of the layer (for checking).
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+impl CoreImage {
+    /// Peak MEM_S&N rows across rounds (capacity check + Figs 6–7 input).
+    pub fn peak_sn_rows(&self) -> usize {
+        self.rounds.iter().map(|r| r.sn_rows.len()).max().unwrap_or(0)
+    }
+}
+
+/// Distill a layer mapping into the controller memory image (Figure 4).
+///
+/// For each round and each source neuron, connections to resident
+/// destination neurons are packed into MEM_S&N rows — one destination per
+/// engine column per row, exactly the paper's layout ("since a source
+/// neuron may be connected to more than M available A-NEURONs, its
+/// connections may be defined in a couple of rows").
+pub fn distill(
+    layer: &QuantLayer,
+    mapping: &LayerMapping,
+    cfg: &AcceleratorConfig,
+) -> Result<CoreImage> {
+    let m = cfg.a_neurons_per_core;
+    let mut weight_mem: Vec<i8> = Vec::new();
+    let mut rounds = Vec::with_capacity(mapping.rounds.len());
+
+    for round in &mapping.rounds {
+        let mut img = RoundImage {
+            e2a: vec![E2aEntry::default(); layer.in_dim],
+            sn_rows: Vec::new(),
+            residents: round.slot_of.iter().map(|(&i, &slot)| (slot, i)).collect(),
+        };
+        for s in 0..layer.in_dim {
+            // Connections from s to neurons resident this round, grouped by
+            // engine.
+            let mut per_engine: Vec<Vec<(u16, u32, i8)>> = vec![Vec::new(); m];
+            for &(d, w) in layer.targets_of(s) {
+                if let Some(&(j, k)) = round.slot_of.get(&d) {
+                    per_engine[j as usize].push((k, d, w));
+                }
+            }
+            let rows_needed = per_engine.iter().map(|v| v.len()).max().unwrap_or(0);
+            if rows_needed == 0 {
+                continue;
+            }
+            let start = img.sn_rows.len() as u32;
+            for r in 0..rows_needed {
+                let mut row = SnRow { per_engine: vec![None; m] };
+                for (j, conns) in per_engine.iter().enumerate() {
+                    if let Some(&(k, d, w)) = conns.get(r) {
+                        let weight_addr = weight_mem.len() as u32;
+                        weight_mem.push(w);
+                        row.per_engine[j] =
+                            Some(SnEntry { virt: k, weight_addr, dst: d });
+                    }
+                }
+                img.sn_rows.push(row);
+            }
+            img.e2a[s] = E2aEntry { count: rows_needed as u32, start };
+        }
+        if img.sn_rows.len() > cfg.memsn_rows {
+            bail!(
+                "round needs {} MEM_S&N rows, core provides {}",
+                img.sn_rows.len(),
+                cfg.memsn_rows
+            );
+        }
+        rounds.push(img);
+    }
+
+    if weight_mem.len() > cfg.weight_capacity() {
+        bail!(
+            "layer needs {} weights, core weight SRAM holds {}",
+            weight_mem.len(),
+            cfg.weight_capacity()
+        );
+    }
+
+    Ok(CoreImage {
+        rounds,
+        weight_mem,
+        scale: layer.scale,
+        num_engines: m,
+        in_dim: layer.in_dim,
+        out_dim: layer.out_dim,
+    })
+}
+
+/// Distill every layer of a mapped network.
+pub fn distill_network(
+    net: &QuantNetwork,
+    mappings: &[LayerMapping],
+    cfg: &AcceleratorConfig,
+) -> Result<Vec<CoreImage>> {
+    if mappings.len() != net.layers.len() {
+        bail!("{} mappings for {} layers", mappings.len(), net.layers.len());
+    }
+    net.layers
+        .iter()
+        .zip(mappings)
+        .map(|(l, mp)| distill(l, mp, cfg))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::LifParams;
+    use crate::util::rng::Rng;
+
+    fn small_cfg(m: usize, n: usize) -> AcceleratorConfig {
+        let mut c = AcceleratorConfig::accel1();
+        c.a_neurons_per_core = m;
+        c.a_syns_per_core = m;
+        c.virtual_per_a_neuron = n;
+        c
+    }
+
+    fn random_layer(in_dim: usize, out_dim: usize, sparsity: f64, seed: u64) -> QuantLayer {
+        let mut rng = Rng::new(seed);
+        let mut w = vec![0i8; in_dim * out_dim];
+        for x in w.iter_mut() {
+            if !rng.bernoulli(sparsity) {
+                *x = rng.range_inclusive(-127, 127) as i8;
+            }
+        }
+        QuantLayer::new(in_dim, out_dim, w, 0.01, LifParams::default()).unwrap()
+    }
+
+    #[test]
+    fn all_strategies_produce_valid_mappings() {
+        let layer = random_layer(20, 30, 0.5, 1);
+        let cfg = small_cfg(4, 4); // capacity 16 < 30 -> ≥2 rounds
+        for strat in Strategy::all() {
+            if strat == Strategy::IlpExact {
+                continue; // exercised separately on a smaller instance
+            }
+            let mp = map_layer(&layer, &cfg, strat).unwrap();
+            mp.validate(&layer, &cfg)
+                .unwrap_or_else(|e| panic!("{}: {e}", strat.name()));
+            assert!(mp.rounds.len() >= 2, "{}: rounds={}", strat.name(), mp.rounds.len());
+            assert!(mp.unassigned.is_empty());
+        }
+    }
+
+    #[test]
+    fn ilp_exact_small_layer() {
+        let layer = random_layer(6, 8, 0.3, 2);
+        let cfg = small_cfg(2, 2); // capacity 4 -> 2 rounds
+        let mp = map_layer(&layer, &cfg, Strategy::IlpExact).unwrap();
+        mp.validate(&layer, &cfg).unwrap();
+        assert_eq!(mp.assigned_count(), 8);
+        assert!(mp.solver_nodes > 0);
+    }
+
+    #[test]
+    fn flow_matches_exact_assignment_count() {
+        // On instances where everything fits, both must assign everything
+        // (the eq. (4) optimum is 0 unassigned).
+        for seed in 0..5 {
+            let layer = random_layer(10, 6, 0.4, seed);
+            let cfg = small_cfg(3, 3);
+            let exact = map_layer(&layer, &cfg, Strategy::IlpExact).unwrap();
+            let flow = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
+            assert_eq!(exact.assigned_count(), flow.assigned_count(), "seed {seed}");
+            flow.validate(&layer, &cfg).unwrap();
+            exact.validate(&layer, &cfg).unwrap();
+        }
+    }
+
+    #[test]
+    fn flow_balances_no_worse_than_first_fit() {
+        let layer = random_layer(40, 24, 0.3, 7);
+        let cfg = small_cfg(4, 6);
+        let flow = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
+        let ff = map_layer(&layer, &cfg, Strategy::FirstFit).unwrap();
+        let m = cfg.a_neurons_per_core;
+        assert!(
+            flow.peak_engine_load(&layer, m) <= ff.peak_engine_load(&layer, m),
+            "flow peak {} > first-fit peak {}",
+            flow.peak_engine_load(&layer, m),
+            ff.peak_engine_load(&layer, m)
+        );
+    }
+
+    #[test]
+    fn skips_dead_neurons() {
+        // weights row-major [out][in]: dst0<-src0 (5), dst1 dead, dst2<-src1 (7)
+        let layer = QuantLayer::new(
+            2,
+            3,
+            vec![5, 0, 0, 0, 0, 7],
+            0.1,
+            LifParams::default(),
+        )
+        .unwrap();
+        let cfg = small_cfg(2, 2);
+        let mp = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
+        let assigned: Vec<u32> =
+            mp.rounds.iter().flat_map(|r| r.slot_of.keys().copied()).collect();
+        assert!(assigned.contains(&0));
+        assert!(!assigned.contains(&1), "dead neuron mapped");
+        assert!(assigned.contains(&2));
+        mp.validate(&layer, &cfg).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_broken_mappings() {
+        let layer = random_layer(5, 4, 0.2, 3);
+        let cfg = small_cfg(2, 2);
+        let mut mp = map_layer(&layer, &cfg, Strategy::Greedy).unwrap();
+        // Duplicate assignment.
+        let first = *mp.rounds[0].slot_of.keys().next().unwrap();
+        mp.rounds.push(RoundAssignment {
+            slot_of: [(first, (0u16, 0u16))].into_iter().collect(),
+        });
+        assert!(mp.validate(&layer, &cfg).is_err());
+    }
+
+    #[test]
+    fn distiller_layout_matches_figure4() {
+        // 3 sources, 4 dsts on 2 engines × 2 caps; src0 connects to all 4
+        // dsts -> needs ≥2 rows (≤2 engine columns per row).
+        let mut w = vec![0i8; 4 * 3];
+        for d in 0..4 {
+            w[d * 3] = (d + 1) as i8; // src 0 -> every dst
+        }
+        w[3 + 1] = 9; // dst1 <- src1
+        let layer = QuantLayer::new(3, 4, w, 0.1, LifParams::default()).unwrap();
+        let cfg = small_cfg(2, 2);
+        let mp = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
+        let img = distill(&layer, &mp, &cfg).unwrap();
+        assert_eq!(img.rounds.len(), 1);
+        let r = &img.rounds[0];
+        // src0: 4 connections over 2 engines -> B_0 = 2 rows.
+        assert_eq!(r.e2a[0].count, 2, "src0 rows");
+        assert_eq!(r.e2a[1].count, 1, "src1 rows");
+        assert_eq!(r.e2a[2].count, 0, "src2 has no connections");
+        // Every connection appears exactly once with the right weight.
+        let mut weights: Vec<i8> = r
+            .sn_rows
+            .iter()
+            .flat_map(|row| row.per_engine.iter().flatten())
+            .map(|e| img.weight_mem[e.weight_addr as usize])
+            .collect();
+        weights.sort_unstable();
+        assert_eq!(weights, vec![1, 2, 3, 4, 9]);
+    }
+
+    #[test]
+    fn distiller_respects_capacity_limits() {
+        let layer = random_layer(8, 8, 0.0, 4); // dense
+        let mut cfg = small_cfg(4, 2);
+        cfg.memsn_rows = 1; // absurdly small
+        let mp = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
+        assert!(distill(&layer, &mp, &cfg).is_err());
+        let mut cfg2 = small_cfg(4, 2);
+        cfg2.weight_mem_bytes = 4; // 4 weights max
+        let mp2 = map_layer(&layer, &cfg2, Strategy::IlpFlow).unwrap();
+        assert!(distill(&layer, &mp2, &cfg2).is_err());
+    }
+
+    #[test]
+    fn residents_inverse_of_slots() {
+        let layer = random_layer(12, 10, 0.4, 9);
+        let cfg = small_cfg(3, 4);
+        let mp = map_layer(&layer, &cfg, Strategy::Greedy).unwrap();
+        let img = distill(&layer, &mp, &cfg).unwrap();
+        for (round, rimg) in mp.rounds.iter().zip(&img.rounds) {
+            for (&i, &slot) in &round.slot_of {
+                assert_eq!(rimg.residents.get(&slot), Some(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn map_network_checks_core_count() {
+        let mut rng = Rng::new(1);
+        let cfg_model = crate::config::ModelConfig {
+            name: "t".into(),
+            layer_sizes: vec![10, 8, 6, 4, 2, 2],
+            timesteps: 3,
+            beta: 0.9,
+            v_threshold: 1.0,
+            v_reset: 0.0,
+        };
+        let net = QuantNetwork::random(&cfg_model, 0.5, &mut rng);
+        let cfg = small_cfg(2, 4); // accel1 base: 4 cores < 5 layers
+        assert!(map_network(&net, &cfg, Strategy::Greedy).is_err());
+    }
+
+    #[test]
+    fn fanout_constraint_partitions_rounds() {
+        // One source fans out to 6 dsts; fanout_limit 2 forces ≥3 rounds.
+        let w = vec![1i8; 6]; // [out=6][in=1]
+        let layer = QuantLayer::new(1, 6, w, 0.1, LifParams::default()).unwrap();
+        let mut cfg = small_cfg(3, 4); // capacity 12 — no capacity pressure
+        cfg.fanout_limit = 2;
+        let mp = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
+        assert!(mp.rounds.len() >= 3, "rounds={}", mp.rounds.len());
+        mp.validate(&layer, &cfg).unwrap();
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(Strategy::parse("ilp").unwrap(), Strategy::IlpFlow);
+        assert_eq!(Strategy::parse("greedy").unwrap(), Strategy::Greedy);
+        assert!(Strategy::parse("bogus").is_err());
+    }
+}

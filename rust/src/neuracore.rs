@@ -1,0 +1,655 @@
+//! Cycle-accurate MX-NEURACORE simulator (paper §III, Figures 1 & 4).
+//!
+//! One MX-NEURACORE executes one model layer. Per global time step the
+//! core:
+//!
+//! 1. latches incoming events into MEM_E on the clock's rising edge;
+//! 2. the polling controller pops one event per cycle (unless a previous
+//!    event is still being dispatched — "the controller does not fetch any
+//!    new event from the MEM_E"), looks up MEM_E2A to find `B_i` MEM_S&N
+//!    rows starting at `A_i`;
+//! 3. streams those rows, one per cycle: each row drives up to M A-SYN
+//!    engines in parallel (C2C MAC) whose charge packets accumulate on the
+//!    addressed virtual-neuron capacitors of the M A-NEURONs;
+//! 4. at the end of the step the controller sweeps the resident virtual
+//!    neurons: leak + integrate + compare-to-threshold → emit spike events
+//!    for the next core → reset (the paper's restore/integrate/store plus
+//!    the discharge command).
+//!
+//! Numerics: the charge accumulated during a step is tracked as the exact
+//! integer sum of quantized weights (what an ideal C2C ladder deposits);
+//! the sweep computes `v ← β·v + Σw·scale` in f32 — *bit-identical* to
+//! [`crate::snn::reference_forward`]. Analog non-idealities (C2C mismatch,
+//! op-amp saturation, switch injection, hold droop) are carried as a
+//! separate additive error term that is exactly zero in
+//! [`AnalogParams::ideal`] mode, so ideal-mode equivalence with the
+//! reference is structural, not accidental.
+//!
+//! Rounds: when the layer was mapped in R > 1 rounds (more neurons than
+//! M·N capacitors), the controller replays the step's events once per
+//! round with the round's MEM image — the paper's capacitor reassignment.
+//! Cycle and energy accounting include the replay cost.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::analog::{ASyn, AnalogParams};
+use crate::config::AcceleratorConfig;
+use crate::mapping::CoreImage;
+use crate::snn::LifParams;
+use crate::util::rng::Rng;
+
+/// Per-step and cumulative statistics of one core (feeds the energy model
+/// and Figures 6–7).
+#[derive(Debug, Clone, Default)]
+pub struct CoreStats {
+    /// Clock cycles consumed, cumulative.
+    pub cycles: u64,
+    /// Events popped from MEM_E (per-round replays counted once per round).
+    pub events_dispatched: u64,
+    /// MEM_S&N rows streamed.
+    pub sn_rows_read: u64,
+    /// Synaptic MACs performed (A-SYN operations).
+    pub macs: u64,
+    /// A-NEURON integrate operations (one per deposited packet).
+    pub integrations: u64,
+    /// A-NEURON sweep (restore/compare/store or leak) operations.
+    pub fire_ops: u64,
+    /// Output spikes emitted.
+    pub spikes_out: u64,
+    /// MEM_E occupancy high-water mark.
+    pub peak_event_queue: usize,
+    /// MEM_E overflow drops (backpressure failure).
+    pub dropped_events: u64,
+    /// Per-time-step MEM_S&N rows *touched* (utilization series for
+    /// Figures 6–7).
+    pub sn_rows_touched_per_step: Vec<u64>,
+    /// Per-time-step cycle counts.
+    pub cycles_per_step: Vec<u64>,
+}
+
+/// Membrane state of one mapping round: exact f32 membranes plus the
+/// step's integer charge accumulator and the analog error sidecar.
+#[derive(Debug, Clone)]
+struct RoundState {
+    /// f32 membrane per slot (j·N + k), reference-exact arithmetic.
+    mem: Vec<f32>,
+    /// Integer charge accumulated this step (Σ quantized weights).
+    acc: Vec<i32>,
+    /// Accumulated analog deviation per slot (0 in ideal mode).
+    err: Vec<f64>,
+}
+
+/// One MX-NEURACORE instance with loaded control memories.
+#[derive(Debug, Clone)]
+pub struct NeuraCore {
+    /// Core index in the chain (= layer index).
+    pub index: usize,
+    /// Distilled control memories. `Arc`: images are immutable at run time
+    /// and large (MEM_S&N rows + weight SRAM), so coordinator workers share
+    /// one copy — chip cloning is O(state), not O(model).
+    image: Arc<CoreImage>,
+    /// Flattened `(slot, dst)` residents per round — the end-of-step sweep
+    /// iterates this instead of the BTreeMap (perf pass §Perf item 5).
+    residents_flat: Vec<Vec<((u16, u16), u32)>>,
+    /// Compact CSR mirror of each round's MEM_S&N: row `r` covers
+    /// `row_entries[round][rows_index[round][r] .. rows_index[round][r+1]]`
+    /// as `(engine, virt, weight)` — the dispatch loop skips empty engine
+    /// columns entirely and reads the weight inline (the silicon's weight-
+    /// SRAM read is still priced via the MAC count) (perf §Perf item 2/6).
+    rows_index: Vec<Vec<u32>>,
+    row_entries: Vec<Vec<(u8, u16, i8)>>,
+    lif: LifParams,
+    analog: AnalogParams,
+    /// A-SYN engines (one per A-NEURON column, paper Figure 1); provide
+    /// C2C mismatch modeling and MAC energy accounting.
+    syns: Vec<ASyn>,
+    /// Per-round membrane state (the "parked" capacitor charge).
+    state: Vec<RoundState>,
+    /// MEM_E: pending events for the current step.
+    event_queue: Vec<u32>,
+    event_mem_depth: usize,
+    /// Capacitors per A-NEURON (N).
+    caps_per_engine: usize,
+    pub stats: CoreStats,
+    /// Scratch per-engine occupancy counter (hot-path reuse).
+    sweep_count: Vec<u64>,
+    /// Scratch per-engine MAC counter, flushed to the A-SYN energy
+    /// accounts once per step (perf: keeps the dispatch inner loop free of
+    /// bookkeeping float adds).
+    mac_count: Vec<u64>,
+}
+
+impl NeuraCore {
+    /// Build a core from a distilled image. `analog` selects ideal vs
+    /// paper-calibrated non-ideal circuit behaviour; `rng` seeds per-engine
+    /// C2C mismatch when non-ideal.
+    pub fn new(
+        index: usize,
+        image: CoreImage,
+        lif: LifParams,
+        analog: &AnalogParams,
+        cfg: &AcceleratorConfig,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        if image.num_engines != cfg.a_neurons_per_core {
+            bail!(
+                "image distilled for {} engines, core has {}",
+                image.num_engines,
+                cfg.a_neurons_per_core
+            );
+        }
+        let m = cfg.a_neurons_per_core;
+        let n = cfg.virtual_per_a_neuron;
+        let syns = (0..m)
+            .map(|j| {
+                let mut fork = rng.fork((index * 1024 + j) as u64);
+                ASyn::new(cfg.weight_bits, analog, Some(&mut fork))
+            })
+            .collect();
+        let state = image
+            .rounds
+            .iter()
+            .map(|_| RoundState {
+                mem: vec![lif.v_reset; m * n],
+                acc: vec![0i32; m * n],
+                err: vec![0.0f64; m * n],
+            })
+            .collect();
+        let residents_flat = image
+            .rounds
+            .iter()
+            .map(|r| r.residents.iter().map(|(&s, &d)| (s, d)).collect())
+            .collect();
+        let mut rows_index = Vec::with_capacity(image.rounds.len());
+        let mut row_entries = Vec::with_capacity(image.rounds.len());
+        for round in &image.rounds {
+            let mut idx = Vec::with_capacity(round.sn_rows.len() + 1);
+            let mut entries = Vec::new();
+            idx.push(0u32);
+            for row in &round.sn_rows {
+                for (j, e) in row.per_engine.iter().enumerate() {
+                    if let Some(e) = e {
+                        entries.push((j as u8, e.virt, image.weight_mem[e.weight_addr as usize]));
+                    }
+                }
+                idx.push(entries.len() as u32);
+            }
+            rows_index.push(idx);
+            row_entries.push(entries);
+        }
+        Ok(Self {
+            index,
+            image: Arc::new(image),
+            residents_flat,
+            rows_index,
+            row_entries,
+            lif,
+            analog: analog.clone(),
+            syns,
+            state,
+            event_queue: Vec::new(),
+            event_mem_depth: cfg.event_mem_depth,
+            caps_per_engine: n,
+            stats: CoreStats::default(),
+            sweep_count: vec![0u64; m],
+            mac_count: vec![0u64; m],
+        })
+    }
+
+    /// Number of mapping rounds.
+    pub fn rounds(&self) -> usize {
+        self.image.rounds.len()
+    }
+
+    /// Output (destination-layer) dimensionality.
+    pub fn out_dim(&self) -> usize {
+        self.image.out_dim
+    }
+
+    /// Input (source-layer) dimensionality.
+    pub fn in_dim(&self) -> usize {
+        self.image.in_dim
+    }
+
+    /// Whether the analog model is exactly ideal.
+    fn is_ideal(&self) -> bool {
+        self.analog.c2c_mismatch_sigma == 0.0
+            && self.analog.switch_injection == 0.0
+            && self.analog.hold_leak == 0.0
+            && !self.analog.v_sat.is_finite()
+    }
+
+    /// Latch incoming events (source-neuron indices) into MEM_E. Returns
+    /// the number of dropped events if the memory overflows.
+    pub fn push_events(&mut self, events: &[u32]) -> usize {
+        let space = self.event_mem_depth.saturating_sub(self.event_queue.len());
+        let take = events.len().min(space);
+        self.event_queue.extend_from_slice(&events[..take]);
+        let dropped = events.len() - take;
+        self.stats.dropped_events += dropped as u64;
+        self.stats.peak_event_queue =
+            self.stats.peak_event_queue.max(self.event_queue.len());
+        dropped
+    }
+
+    /// Execute one global time step: dispatch all latched events through
+    /// every round, sweep fire/leak, return the emitted spikes (destination
+    /// layer neuron ids, sorted ascending).
+    pub fn step(&mut self) -> Vec<u32> {
+        let m = self.image.num_engines;
+        let n = self.caps_per_engine;
+        let scale = self.image.scale;
+        let ideal = self.is_ideal();
+        let mut out: Vec<u32> = Vec::new();
+        let mut cycles_this_step = 0u64;
+        let mut rows_this_step = 0u64;
+
+        let num_rounds = self.image.rounds.len();
+        for round_idx in 0..num_rounds {
+            let round = &self.image.rounds[round_idx];
+            let st = &mut self.state[round_idx];
+            // Capacitor reassignment cost: reloading parked state for
+            // non-resident rounds takes occupied/m cycles of charge
+            // transfer.
+            if num_rounds > 1 {
+                cycles_this_step +=
+                    (round.residents.len() as u64).div_ceil(m as u64);
+            }
+
+            // Dispatch every latched event through this round's image.
+            for &src in &self.event_queue {
+                let s = src as usize;
+                self.stats.events_dispatched += 1;
+                cycles_this_step += 1; // MEM_E pop + MEM_E2A read
+                if s >= round.e2a.len() {
+                    continue;
+                }
+                let e2a = round.e2a[s];
+                if e2a.count == 0 {
+                    continue;
+                }
+                cycles_this_step += e2a.count as u64; // one MEM_S&N row/cycle
+                rows_this_step += e2a.count as u64;
+                self.stats.sn_rows_read += e2a.count as u64;
+                let ridx = &self.rows_index[round_idx];
+                let lo = ridx[e2a.start as usize] as usize;
+                let hi = ridx[(e2a.start + e2a.count) as usize] as usize;
+                let entries = &self.row_entries[round_idx][lo..hi];
+                self.stats.macs += entries.len() as u64;
+                self.stats.integrations += entries.len() as u64;
+                if ideal {
+                    // Ideal C2C deposit: exactly w (integer charge). The
+                    // bookkeeping (per-engine MAC energy) is batched into
+                    // `mac_count` and flushed once per step.
+                    for &(j, virt, w) in entries {
+                        st.acc[j as usize * n + virt as usize] += w as i32;
+                        self.mac_count[j as usize] += 1;
+                    }
+                } else {
+                    // Analog sidecar: deviation of the real C2C packet
+                    // from ideal, plus switch injection per deposit.
+                    for &(j, virt, w) in entries {
+                        let j = j as usize;
+                        let slot = j * n + virt as usize;
+                        st.acc[slot] += w as i32;
+                        self.mac_count[j] += 1;
+                        let real = self.syns[j]
+                            .ladder
+                            .convert_signed(w, self.analog.v_ref)
+                            * 256.0
+                            * scale as f64
+                            / self.analog.v_ref;
+                        let deviation = real - w as f64 * scale as f64;
+                        st.err[slot] +=
+                            deviation + self.analog.switch_injection * 0.01;
+                    }
+                }
+            }
+
+            // End-of-step sweep for this round: leak + integrate + compare.
+            // Engines sweep their occupied capacitors in parallel; cycles =
+            // max per-engine occupancy.
+            self.sweep_count.fill(0);
+            for &((j, k), dst) in &self.residents_flat[round_idx] {
+                let (j, k) = (j as usize, k as usize);
+                let slot = j * n + k;
+                self.sweep_count[j] += 1;
+                self.stats.fire_ops += 1;
+                // Reference-exact arithmetic (see module docs).
+                let mut v =
+                    self.lif.beta * st.mem[slot] + st.acc[slot] as f32 * scale;
+                if !ideal {
+                    // Apply accumulated analog error and hold droop.
+                    v += st.err[slot] as f32;
+                    v -= (st.mem[slot] * self.analog.hold_leak as f32).abs();
+                    if self.analog.v_sat.is_finite() {
+                        v = v.clamp(-self.analog.v_sat as f32, self.analog.v_sat as f32);
+                    }
+                }
+                st.acc[slot] = 0;
+                st.err[slot] = 0.0;
+                if v >= self.lif.v_threshold {
+                    out.push(dst);
+                    st.mem[slot] = self.lif.v_reset;
+                    self.stats.spikes_out += 1;
+                } else {
+                    st.mem[slot] = v;
+                }
+            }
+            cycles_this_step += self.sweep_count.iter().copied().max().unwrap_or(0);
+        }
+
+        // Flush the batched per-engine MAC accounting.
+        for (j, &cnt) in self.mac_count.iter().enumerate() {
+            if cnt > 0 {
+                self.syns[j].macs += cnt;
+                self.syns[j].energy += cnt as f64 * self.syns[j].energy_per_mac;
+            }
+        }
+        self.mac_count.fill(0);
+
+        self.event_queue.clear();
+        self.stats.cycles += cycles_this_step;
+        self.stats.cycles_per_step.push(cycles_this_step);
+        self.stats.sn_rows_touched_per_step.push(rows_this_step);
+        out.sort_unstable();
+        out
+    }
+
+    /// Reset membrane state (between inputs) without clearing statistics.
+    pub fn reset_membranes(&mut self) {
+        for st in self.state.iter_mut() {
+            st.mem.fill(self.lif.v_reset);
+            st.acc.fill(0);
+            st.err.fill(0.0);
+        }
+        self.event_queue.clear();
+    }
+
+    /// Total analog energy consumed so far (J): A-SYN MACs plus A-NEURON
+    /// integrate and sweep operations at the paper's per-op energy.
+    pub fn analog_energy(&self) -> f64 {
+        let mac_energy: f64 = self.syns.iter().map(|s| s.energy).sum();
+        let neuron_ops = self.stats.integrations + self.stats.fire_ops;
+        mac_energy + neuron_ops as f64 * self.analog.neuron_energy_per_op
+    }
+
+    /// MEM_S&N rows present in the image, across rounds.
+    pub fn image_sn_rows(&self) -> usize {
+        self.image.rounds.iter().map(|r| r.sn_rows.len()).sum()
+    }
+
+    /// Weight SRAM bytes used.
+    pub fn weight_bytes(&self) -> usize {
+        self.image.weight_mem.len()
+    }
+
+    /// A-SYN MAC energy constant (J) — exposed for the energy model.
+    pub fn mac_energy(&self) -> f64 {
+        self.syns[0].energy_per_mac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::mapping::{distill, map_layer, Strategy};
+    use crate::snn::{reference_forward, LifParams, QuantLayer, QuantNetwork, SpikeTrain};
+    use crate::util::rng::Rng;
+
+    fn small_cfg(m: usize, n: usize) -> AcceleratorConfig {
+        let mut c = AcceleratorConfig::accel1();
+        c.a_neurons_per_core = m;
+        c.a_syns_per_core = m;
+        c.virtual_per_a_neuron = n;
+        c
+    }
+
+    fn build_core(layer: &QuantLayer, cfg: &AcceleratorConfig, ideal: bool) -> NeuraCore {
+        let mp = map_layer(layer, cfg, Strategy::IlpFlow).unwrap();
+        mp.validate(layer, cfg).unwrap();
+        let img = distill(layer, &mp, cfg).unwrap();
+        let analog = if ideal { AnalogParams::ideal() } else { AnalogParams::paper() };
+        let mut rng = Rng::new(99);
+        NeuraCore::new(0, img, layer.lif, &analog, cfg, &mut rng).unwrap()
+    }
+
+    fn run_core(core: &mut NeuraCore, input: &SpikeTrain) -> SpikeTrain {
+        let mut out = SpikeTrain::new(core.out_dim(), input.timesteps());
+        for t in 0..input.timesteps() {
+            core.push_events(&input.spikes[t]);
+            out.spikes[t] = core.step();
+        }
+        out
+    }
+
+    fn random_layer(in_dim: usize, out_dim: usize, sparsity: f64, seed: u64) -> QuantLayer {
+        let mut rng = Rng::new(seed);
+        let mut w = vec![0i8; in_dim * out_dim];
+        for x in w.iter_mut() {
+            if !rng.bernoulli(sparsity) {
+                *x = rng.range_inclusive(-127, 127) as i8;
+            }
+        }
+        QuantLayer::new(
+            in_dim,
+            out_dim,
+            w,
+            0.02,
+            LifParams { beta: 0.9, v_threshold: 1.0, v_reset: 0.0 },
+        )
+        .unwrap()
+    }
+
+    fn random_input(dim: usize, t: usize, rate: f64, seed: u64) -> SpikeTrain {
+        let mut rng = Rng::new(seed);
+        let mut st = SpikeTrain::new(dim, t);
+        for step in st.spikes.iter_mut() {
+            for i in 0..dim {
+                if rng.bernoulli(rate) {
+                    step.push(i as u32);
+                }
+            }
+        }
+        st
+    }
+
+    /// The core in ideal-analog mode must match the reference bit-exactly.
+    #[test]
+    fn core_matches_reference_single_round() {
+        let layer = random_layer(30, 12, 0.4, 1);
+        let cfg = small_cfg(4, 4); // capacity 16 ≥ 12: single round
+        let net = QuantNetwork { name: "t".into(), layers: vec![layer.clone()], timesteps: 12 };
+        let input = random_input(30, 12, 0.15, 2);
+        let golden = reference_forward(&net, &input).unwrap();
+        let mut core = build_core(&layer, &cfg, true);
+        let out = run_core(&mut core, &input);
+        assert_eq!(out.spikes, golden.output().spikes, "ideal core ≠ reference");
+        assert!(core.stats.macs > 0);
+        assert!(core.stats.cycles > 0);
+    }
+
+    /// Multi-round mapping (more neurons than capacitors) must also match.
+    #[test]
+    fn core_matches_reference_multi_round() {
+        let layer = random_layer(20, 30, 0.5, 3);
+        let cfg = small_cfg(3, 4); // capacity 12 < 30: ≥3 rounds
+        let net = QuantNetwork { name: "t".into(), layers: vec![layer.clone()], timesteps: 10 };
+        let input = random_input(20, 10, 0.2, 4);
+        let golden = reference_forward(&net, &input).unwrap();
+        let mut core = build_core(&layer, &cfg, true);
+        assert!(core.rounds() >= 3);
+        let out = run_core(&mut core, &input);
+        assert_eq!(out.spikes, golden.output().spikes, "multi-round ≠ reference");
+    }
+
+    /// Property: ideal equivalence holds across many random instances.
+    #[test]
+    fn prop_ideal_equivalence() {
+        crate::util::prop::check_n("core-ref-equivalence", 20, |rng| {
+            let in_dim = 5 + rng.below(30);
+            let out_dim = 3 + rng.below(25);
+            let m = 2 + rng.below(4);
+            let n = 1 + rng.below(5);
+            let layer = random_layer(in_dim, out_dim, 0.3 + rng.f64() * 0.5, rng.next_u64());
+            let cfg = small_cfg(m, n);
+            let t = 4 + rng.below(8);
+            let input = random_input(in_dim, t, 0.1 + rng.f64() * 0.3, rng.next_u64());
+            let net = QuantNetwork { name: "p".into(), layers: vec![layer.clone()], timesteps: t };
+            let golden = reference_forward(&net, &input).map_err(|e| e.to_string())?;
+            let mut core = build_core(&layer, &cfg, true);
+            let out = run_core(&mut core, &input);
+            if out.spikes != golden.output().spikes {
+                return Err(format!(
+                    "divergence: m={m} n={n} in={in_dim} out={out_dim} t={t}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mismatch_only_mode_close_to_reference() {
+        // C2C mismatch alone (no rail clamp, no injection, no droop) must
+        // perturb spike counts by only a few percent.
+        let layer = random_layer(40, 16, 0.4, 5);
+        let cfg = small_cfg(4, 4);
+        let net = QuantNetwork { name: "t".into(), layers: vec![layer.clone()], timesteps: 20 };
+        let input = random_input(40, 20, 0.15, 6);
+        let golden = reference_forward(&net, &input).unwrap();
+        let mut analog = AnalogParams::ideal();
+        analog.c2c_mismatch_sigma = 0.002;
+        let mp = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
+        let img = distill(&layer, &mp, &cfg).unwrap();
+        let mut rng = Rng::new(99);
+        let mut core = NeuraCore::new(0, img, layer.lif, &analog, &cfg, &mut rng).unwrap();
+        let out = run_core(&mut core, &input);
+        let g = golden.output().total_spikes() as f64;
+        let o = out.total_spikes() as f64;
+        assert!(
+            (o - g).abs() <= (0.10 * g).max(2.0),
+            "mismatch-only spikes {o} too far from golden {g}"
+        );
+    }
+
+    #[test]
+    fn paper_analog_mode_same_order_as_reference() {
+        // Full non-ideal mode adds the supply-rail clamp, which the
+        // rail-less reference cannot reproduce: membranes that would drift
+        // deeply negative recover sooner, so the count shifts — but must
+        // stay within the same order (factor ~2) and the core must still
+        // be live.
+        let layer = random_layer(40, 16, 0.4, 5);
+        let cfg = small_cfg(4, 4);
+        let net = QuantNetwork { name: "t".into(), layers: vec![layer.clone()], timesteps: 20 };
+        let input = random_input(40, 20, 0.15, 6);
+        let golden = reference_forward(&net, &input).unwrap();
+        let mut core = build_core(&layer, &cfg, false);
+        let out = run_core(&mut core, &input);
+        let g = golden.output().total_spikes() as f64;
+        let o = out.total_spikes() as f64;
+        assert!(o > 0.0);
+        assert!(o <= 2.5 * g && o >= g / 2.5, "non-ideal spikes {o} vs golden {g}");
+    }
+
+    #[test]
+    fn cycles_scale_with_activity() {
+        let layer = random_layer(30, 10, 0.3, 7);
+        let cfg = small_cfg(5, 2);
+        let quiet = random_input(30, 10, 0.02, 8);
+        let busy = random_input(30, 10, 0.5, 9);
+        let mut c1 = build_core(&layer, &cfg, true);
+        run_core(&mut c1, &quiet);
+        let mut c2 = build_core(&layer, &cfg, true);
+        run_core(&mut c2, &busy);
+        assert!(
+            c2.stats.cycles > c1.stats.cycles,
+            "busy {} ≤ quiet {}",
+            c2.stats.cycles,
+            c1.stats.cycles
+        );
+        assert!(c2.stats.sn_rows_read > c1.stats.sn_rows_read);
+    }
+
+    #[test]
+    fn event_memory_overflow_drops() {
+        let layer = random_layer(100, 4, 0.5, 10);
+        let mut cfg = small_cfg(2, 2);
+        cfg.event_mem_depth = 8;
+        let mut core = build_core(&layer, &cfg, true);
+        let events: Vec<u32> = (0..20).collect();
+        let dropped = core.push_events(&events);
+        assert_eq!(dropped, 12);
+        assert_eq!(core.stats.dropped_events, 12);
+        assert_eq!(core.stats.peak_event_queue, 8);
+    }
+
+    #[test]
+    fn reset_membranes_clears_state_keeps_stats() {
+        let layer = random_layer(20, 8, 0.3, 11);
+        let cfg = small_cfg(2, 4);
+        let mut core = build_core(&layer, &cfg, true);
+        let input = random_input(20, 6, 0.3, 12);
+        run_core(&mut core, &input);
+        let cycles = core.stats.cycles;
+        assert!(cycles > 0);
+        core.reset_membranes();
+        assert_eq!(core.stats.cycles, cycles, "stats must survive reset");
+        // State is cleared: a silent step emits nothing.
+        let out = core.step();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn per_step_series_lengths_match() {
+        let layer = random_layer(20, 8, 0.3, 13);
+        let cfg = small_cfg(2, 4);
+        let mut core = build_core(&layer, &cfg, true);
+        let input = random_input(20, 7, 0.2, 14);
+        run_core(&mut core, &input);
+        // 7 event steps + 1 silent step from reset test? No: exactly 7.
+        assert_eq!(core.stats.cycles_per_step.len(), 7);
+        assert_eq!(core.stats.sn_rows_touched_per_step.len(), 7);
+        assert_eq!(
+            core.stats.cycles_per_step.iter().sum::<u64>(),
+            core.stats.cycles
+        );
+    }
+
+    #[test]
+    fn analog_energy_accumulates() {
+        let layer = random_layer(20, 8, 0.3, 15);
+        let cfg = small_cfg(2, 4);
+        let mut core = build_core(&layer, &cfg, false);
+        assert_eq!(core.analog_energy(), 0.0);
+        let input = random_input(20, 5, 0.3, 16);
+        run_core(&mut core, &input);
+        assert!(core.analog_energy() > 0.0);
+        let expected = (core.stats.integrations + core.stats.fire_ops) as f64
+            * AnalogParams::paper().neuron_energy_per_op
+            + core.stats.macs as f64 * core.mac_energy();
+        assert!((core.analog_energy() - expected).abs() / expected < 1e-9);
+    }
+
+    #[test]
+    fn engine_count_mismatch_rejected() {
+        let layer = random_layer(10, 4, 0.3, 17);
+        let cfg4 = small_cfg(4, 2);
+        let mp = map_layer(&layer, &cfg4, Strategy::Greedy).unwrap();
+        let img = distill(&layer, &mp, &cfg4).unwrap();
+        let cfg2 = small_cfg(2, 2);
+        let mut rng = Rng::new(1);
+        assert!(NeuraCore::new(
+            0,
+            img,
+            layer.lif,
+            &AnalogParams::ideal(),
+            &cfg2,
+            &mut rng
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! PJRT runtime: load and execute the JAX-lowered golden model from rust.
+//!
+//! The python compile path (`python/compile/aot.py`) lowers the quantized,
+//! Pallas-fused inference function to HLO **text** (the interchange format
+//! xla_extension 0.5.1 accepts — see /opt/xla-example/README.md); this
+//! module wraps the `xla` crate to compile that text on the PJRT CPU
+//! client and execute it from the request path: feed an event raster,
+//! get class spike counts back.
+//!
+//! The coordinator uses it as the *golden model* against which the
+//! cycle-accurate simulator is cross-checked, exactly as the paper checks
+//! its RTL against the SNNTorch model (Algorithm 1, step 4: "mimic the
+//! Python-level spiking neural network behaviour").
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::snn::SpikeTrain;
+
+/// A compiled golden model ready to execute.
+pub struct GoldenModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Event raster shape the executable expects: (timesteps, input_dim).
+    pub timesteps: usize,
+    pub input_dim: usize,
+    /// Output classes.
+    pub num_classes: usize,
+}
+
+impl GoldenModel {
+    /// Load `<name>.hlo.txt`, compile on the PJRT CPU client.
+    ///
+    /// `timesteps`/`input_dim` must match the shape the model was lowered
+    /// with (read them from `artifacts/manifest.json` or the weights file).
+    pub fn load(
+        client: &xla::PjRtClient,
+        hlo_path: impl AsRef<Path>,
+        timesteps: usize,
+        input_dim: usize,
+        num_classes: usize,
+    ) -> Result<Self> {
+        let path = hlo_path.as_ref();
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Self { exe, timesteps, input_dim, num_classes })
+    }
+
+    /// Execute on a dense f32 event raster `[timesteps * input_dim]`
+    /// (row-major). Returns the per-class spike counts.
+    pub fn run_raster(&self, raster: &[f32]) -> Result<Vec<f32>> {
+        if raster.len() != self.timesteps * self.input_dim {
+            bail!(
+                "raster has {} entries, expected {}×{}",
+                raster.len(),
+                self.timesteps,
+                self.input_dim
+            );
+        }
+        let input = xla::Literal::vec1(raster)
+            .reshape(&[self.timesteps as i64, self.input_dim as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (counts, out_spikes).
+        let elems = result.to_tuple()?;
+        if elems.is_empty() {
+            bail!("executable returned empty tuple");
+        }
+        let counts = elems[0].to_vec::<f32>()?;
+        if counts.len() != self.num_classes {
+            bail!("expected {} classes, got {}", self.num_classes, counts.len());
+        }
+        Ok(counts)
+    }
+
+    /// Execute on a [`SpikeTrain`], densifying it first.
+    pub fn run(&self, input: &SpikeTrain) -> Result<Vec<f32>> {
+        if input.num_neurons != self.input_dim || input.timesteps() != self.timesteps {
+            bail!(
+                "spike train is {}×{}, model expects {}×{}",
+                input.timesteps(),
+                input.num_neurons,
+                self.timesteps,
+                self.input_dim
+            );
+        }
+        let mut raster = vec![0.0f32; self.timesteps * self.input_dim];
+        for (t, step) in input.spikes.iter().enumerate() {
+            for &n in step {
+                raster[t * self.input_dim + n as usize] = 1.0;
+            }
+        }
+        self.run_raster(&raster)
+    }
+
+    /// Predicted class = argmax of counts (ties toward lower index,
+    /// matching [`SpikeTrain::argmax_class`]).
+    pub fn predict(&self, input: &SpikeTrain) -> Result<usize> {
+        let counts = self.run(input)?;
+        let mut best = 0usize;
+        for (i, &v) in counts.iter().enumerate() {
+            if v > counts[best] {
+                best = i;
+            }
+        }
+        Ok(best)
+    }
+}
+
+/// Create the PJRT CPU client (one per process).
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().context("creating PJRT CPU client")
+}
+
+/// Locate the artifacts directory: `$MENAGE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("MENAGE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full PJRT integration tests live in rust/tests/e2e_golden.rs (they
+    // need `make artifacts`). Here: pure-rust helpers only.
+
+    #[test]
+    fn artifacts_dir_default() {
+        if std::env::var("MENAGE_ARTIFACTS").is_err() {
+            assert_eq!(artifacts_dir(), std::path::PathBuf::from("artifacts"));
+        }
+    }
+}

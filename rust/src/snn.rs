@@ -1,0 +1,718 @@
+//! Quantized spiking-network containers and the bit-exact reference model.
+//!
+//! This module owns the data the mapper and the cycle-accurate simulator
+//! share: 8-bit quantized, (optionally) pruned synaptic layers stored both
+//! densely and in CSR-by-source form (the natural layout for event-driven
+//! dispatch — an incoming spike from source neuron `s` walks `row(s)`).
+//!
+//! It also provides [`reference_forward`], the "Python-level spiking neural
+//! network behaviour" that Algorithm 1 (step 4) says the hardware must
+//! mimic: a discrete-time LIF network evaluated with the same quantized
+//! weights. The accelerator simulator in ideal-analog mode must reproduce
+//! it spike-for-spike; equivalence tests in `accel` enforce that.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::rng::Rng;
+use crate::util::tensorfile::TensorFile;
+
+/// LIF neuron parameters shared by a layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LifParams {
+    /// Discrete-time leak factor β: `v ← β·v + i`.
+    pub beta: f32,
+    /// Firing threshold.
+    pub v_threshold: f32,
+    /// Reset value applied after a spike (reset-to-value, as in the paper's
+    /// "membrane potential is reset to V_reset").
+    pub v_reset: f32,
+}
+
+impl Default for LifParams {
+    fn default() -> Self {
+        Self { beta: 0.9, v_threshold: 1.0, v_reset: 0.0 }
+    }
+}
+
+/// One quantized synaptic layer: `out_dim × in_dim` 8-bit weights plus a
+/// scale, so the effective weight is `w_q · scale`.
+#[derive(Debug, Clone)]
+pub struct QuantLayer {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Dense row-major `[out_dim][in_dim]` quantized weights. Pruned
+    /// connections are exactly zero.
+    pub weights: Vec<i8>,
+    /// Dequantization scale.
+    pub scale: f32,
+    /// LIF parameters of the destination neurons.
+    pub lif: LifParams,
+    /// CSR by *source*: `csr_index[s] .. csr_index[s+1]` indexes
+    /// `csr_targets` with `(dst, w_q)` pairs — the event-driven layout.
+    csr_index: Vec<u32>,
+    csr_targets: Vec<(u32, i8)>,
+}
+
+impl QuantLayer {
+    /// Build from dense weights, deriving the CSR-by-source structure.
+    pub fn new(
+        in_dim: usize,
+        out_dim: usize,
+        weights: Vec<i8>,
+        scale: f32,
+        lif: LifParams,
+    ) -> Result<Self> {
+        if weights.len() != in_dim * out_dim {
+            bail!(
+                "weight buffer has {} entries, expected {}×{}",
+                weights.len(),
+                out_dim,
+                in_dim
+            );
+        }
+        if !(scale > 0.0) {
+            bail!("scale must be positive, got {scale}");
+        }
+        let mut layer = Self {
+            in_dim,
+            out_dim,
+            weights,
+            scale,
+            lif,
+            csr_index: vec![],
+            csr_targets: vec![],
+        };
+        layer.rebuild_csr();
+        Ok(layer)
+    }
+
+    /// Dense weight at `(dst, src)`.
+    #[inline]
+    pub fn weight(&self, dst: usize, src: usize) -> i8 {
+        self.weights[dst * self.in_dim + src]
+    }
+
+    /// Non-zero `(dst, w_q)` pairs for a source neuron — the connection rows
+    /// a MEM_S&N lookup returns for one incoming event.
+    #[inline]
+    pub fn targets_of(&self, src: usize) -> &[(u32, i8)] {
+        let lo = self.csr_index[src] as usize;
+        let hi = self.csr_index[src + 1] as usize;
+        &self.csr_targets[lo..hi]
+    }
+
+    /// Number of non-zero synapses.
+    pub fn nnz(&self) -> usize {
+        self.csr_targets.len()
+    }
+
+    /// Fraction of pruned (zero) weights.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.in_dim * self.out_dim) as f64
+    }
+
+    /// Fan-out (non-zero out-degree) of a source neuron.
+    pub fn fanout(&self, src: usize) -> usize {
+        self.targets_of(src).len()
+    }
+
+    /// Recompute the CSR mirror after mutating `weights` (e.g. pruning).
+    pub fn rebuild_csr(&mut self) {
+        let mut index = Vec::with_capacity(self.in_dim + 1);
+        let mut targets = Vec::new();
+        index.push(0u32);
+        for s in 0..self.in_dim {
+            for d in 0..self.out_dim {
+                let w = self.weights[d * self.in_dim + s];
+                if w != 0 {
+                    targets.push((d as u32, w));
+                }
+            }
+            index.push(targets.len() as u32);
+        }
+        self.csr_index = index;
+        self.csr_targets = targets;
+    }
+
+    /// Prune the smallest-magnitude weights until `frac` of all weights are
+    /// zero (global L1 unstructured pruning within the layer).
+    pub fn prune_l1(&mut self, frac: f64) {
+        assert!((0.0..=1.0).contains(&frac));
+        let mut mags: Vec<(u8, usize)> = self
+            .weights
+            .iter()
+            .enumerate()
+            .filter(|(_, &w)| w != 0)
+            .map(|(i, &w)| (w.unsigned_abs(), i))
+            .collect();
+        let target_zero = ((self.weights.len() as f64) * frac).round() as usize;
+        let already_zero = self.weights.len() - mags.len();
+        if target_zero <= already_zero {
+            return;
+        }
+        let to_zero = target_zero - already_zero;
+        mags.sort_unstable();
+        for &(_, i) in mags.iter().take(to_zero) {
+            self.weights[i] = 0;
+        }
+        self.rebuild_csr();
+    }
+}
+
+/// A fully quantized, mapped-ready network.
+#[derive(Debug, Clone)]
+pub struct QuantNetwork {
+    pub name: String,
+    pub layers: Vec<QuantLayer>,
+    /// Time steps the model is evaluated for.
+    pub timesteps: usize,
+}
+
+impl QuantNetwork {
+    /// Layer widths including input: `[in, h1, ..., out]`.
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        let mut v = vec![self.layers[0].in_dim];
+        v.extend(self.layers.iter().map(|l| l.out_dim));
+        v
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+
+    /// Total non-zero synapses.
+    pub fn nnz(&self) -> usize {
+        self.layers.iter().map(|l| l.nnz()).sum()
+    }
+
+    /// Total dense parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.in_dim * l.out_dim).sum()
+    }
+
+    /// Overall sparsity.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.num_params() as f64
+    }
+
+    /// Check layer dimensions chain correctly.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            bail!("{}: no layers", self.name);
+        }
+        for (i, w) in self.layers.windows(2).enumerate() {
+            if w[0].out_dim != w[1].in_dim {
+                bail!(
+                    "{}: layer {} out_dim {} != layer {} in_dim {}",
+                    self.name,
+                    i,
+                    w[0].out_dim,
+                    i + 1,
+                    w[1].in_dim
+                );
+            }
+        }
+        if self.timesteps == 0 {
+            bail!("{}: zero timesteps", self.name);
+        }
+        Ok(())
+    }
+
+    /// Generate a random quantized network for tests/benches: weights are
+    /// zero with probability `sparsity`, otherwise uniform in ±[1, 127].
+    /// The scale is chosen so a neuron receiving a typical number of spikes
+    /// crosses threshold within a few steps (keeps activity alive).
+    pub fn random(cfg: &ModelConfig, sparsity: f64, rng: &mut Rng) -> Self {
+        let lif = LifParams {
+            beta: cfg.beta as f32,
+            v_threshold: cfg.v_threshold as f32,
+            v_reset: cfg.v_reset as f32,
+        };
+        let layers = cfg
+            .layer_sizes
+            .windows(2)
+            .map(|w| {
+                let (in_dim, out_dim) = (w[0], w[1]);
+                let mut weights = vec![0i8; in_dim * out_dim];
+                for wq in weights.iter_mut() {
+                    if !rng.bernoulli(sparsity) {
+                        let mag = rng.range_inclusive(1, 127) as i8;
+                        *wq = if rng.bernoulli(0.5) { mag } else { -mag };
+                    }
+                }
+                // Heuristic scale: E[|w|]≈64; expect ~2% of inputs active;
+                // aim for sum ≈ threshold so spiking is neither dead nor
+                // saturated.
+                let expected_active = (in_dim as f32 * 0.02).max(1.0);
+                let scale = lif.v_threshold / (64.0 * expected_active);
+                QuantLayer::new(in_dim, out_dim, weights, scale, lif).unwrap()
+            })
+            .collect();
+        let net = Self { name: cfg.name.clone(), layers, timesteps: cfg.timesteps };
+        net.validate().unwrap();
+        net
+    }
+
+    /// Load a network exported by `python/compile/aot.py` from a `.mtz`
+    /// tensor file. Expects tensors `w{i}` (i8 `[out,in]`), `scale{i}` (f32
+    /// `[1]`) per layer plus `meta_lif` (f32 `[3]` = beta, v_th, v_reset)
+    /// and `meta_timesteps` (i32 `[1]`).
+    pub fn from_tensorfile(name: &str, tf: &TensorFile) -> Result<Self> {
+        let lif_t = tf.get("meta_lif")?.as_f32()?;
+        if lif_t.len() != 3 {
+            bail!("meta_lif must have 3 entries");
+        }
+        let lif = LifParams { beta: lif_t[0], v_threshold: lif_t[1], v_reset: lif_t[2] };
+        let timesteps = tf.get("meta_timesteps")?.as_i32()?[0] as usize;
+        let mut layers = Vec::new();
+        for i in 0.. {
+            let wname = format!("w{i}");
+            if tf.tensors.get(&wname).is_none() {
+                break;
+            }
+            let wt = tf.get(&wname)?;
+            let dims = wt.dims().to_vec();
+            if dims.len() != 2 {
+                bail!("{wname} must be 2-D, got {dims:?}");
+            }
+            let scale = tf
+                .get(&format!("scale{i}"))
+                .with_context(|| format!("scale for layer {i}"))?
+                .as_f32()?[0];
+            layers.push(QuantLayer::new(
+                dims[1],
+                dims[0],
+                wt.as_i8()?.to_vec(),
+                scale,
+                lif,
+            )?);
+        }
+        if layers.is_empty() {
+            bail!("tensor file contains no layers (no w0)");
+        }
+        let net = Self { name: name.to_string(), layers, timesteps };
+        net.validate()?;
+        Ok(net)
+    }
+
+    /// Export to a `.mtz` tensor file (inverse of [`Self::from_tensorfile`]).
+    pub fn to_tensorfile(&self) -> TensorFile {
+        use crate::util::tensorfile::Tensor;
+        let mut tf = TensorFile::new();
+        let lif = self.layers[0].lif;
+        tf.insert(
+            "meta_lif",
+            Tensor::F32 { dims: vec![3], data: vec![lif.beta, lif.v_threshold, lif.v_reset] },
+        );
+        tf.insert(
+            "meta_timesteps",
+            Tensor::I32 { dims: vec![1], data: vec![self.timesteps as i32] },
+        );
+        for (i, l) in self.layers.iter().enumerate() {
+            tf.insert(
+                format!("w{i}"),
+                Tensor::I8 { dims: vec![l.out_dim, l.in_dim], data: l.weights.clone() },
+            );
+            tf.insert(
+                format!("scale{i}"),
+                Tensor::F32 { dims: vec![1], data: vec![l.scale] },
+            );
+        }
+        tf
+    }
+}
+
+/// Spike activity of one layer over time: `spikes[t]` is the sorted list of
+/// neuron indices that fired at step `t`. Index lists (not bitmaps) because
+/// event-based activity is sparse — this mirrors what travels between
+/// MX-NEURACOREs.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SpikeTrain {
+    pub num_neurons: usize,
+    pub spikes: Vec<Vec<u32>>,
+}
+
+impl SpikeTrain {
+    pub fn new(num_neurons: usize, timesteps: usize) -> Self {
+        Self { num_neurons, spikes: vec![Vec::new(); timesteps] }
+    }
+
+    pub fn timesteps(&self) -> usize {
+        self.spikes.len()
+    }
+
+    /// Total number of spikes.
+    pub fn total_spikes(&self) -> usize {
+        self.spikes.iter().map(|s| s.len()).sum()
+    }
+
+    /// Mean firing rate (spikes per neuron per step).
+    pub fn rate(&self) -> f64 {
+        if self.num_neurons == 0 || self.spikes.is_empty() {
+            return 0.0;
+        }
+        self.total_spikes() as f64 / (self.num_neurons * self.spikes.len()) as f64
+    }
+
+    /// Per-neuron spike counts.
+    pub fn counts(&self) -> Vec<u32> {
+        let mut c = vec![0u32; self.num_neurons];
+        for step in &self.spikes {
+            for &n in step {
+                c[n as usize] += 1;
+            }
+        }
+        c
+    }
+
+    /// The class decision: neuron with the highest spike count (rate code),
+    /// ties broken toward the lower index (deterministic).
+    pub fn argmax_class(&self) -> usize {
+        let c = self.counts();
+        let mut best = 0usize;
+        for (i, &v) in c.iter().enumerate() {
+            if v > c[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Validate indices are in range, sorted, and unique per step.
+    pub fn validate(&self) -> Result<()> {
+        for (t, step) in self.spikes.iter().enumerate() {
+            for w in step.windows(2) {
+                if w[0] >= w[1] {
+                    bail!("step {t}: spike indices not strictly sorted");
+                }
+            }
+            if let Some(&last) = step.last() {
+                if last as usize >= self.num_neurons {
+                    bail!("step {t}: index {last} out of range {}", self.num_neurons);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Result of the reference forward pass: the output-layer spike train plus
+/// every hidden layer's train (used for per-layer golden checks and for the
+/// memory-utilization figures).
+#[derive(Debug, Clone)]
+pub struct ReferenceOutput {
+    /// `trains[l]` is the spike train of layer `l`'s *output* (so
+    /// `trains.last()` is the classifier output).
+    pub trains: Vec<SpikeTrain>,
+}
+
+impl ReferenceOutput {
+    pub fn output(&self) -> &SpikeTrain {
+        self.trains.last().unwrap()
+    }
+
+    pub fn predicted_class(&self) -> usize {
+        self.output().argmax_class()
+    }
+}
+
+/// Bit-exact discrete-time LIF forward pass over quantized weights — the
+/// golden model the accelerator must match (Algorithm 1 step 4: "mimic the
+/// Python-level spiking neural network behaviour").
+///
+/// Numerics: membrane update is `v ← β·v + scale·Σ w_q` with f32 arithmetic
+/// accumulated in i32 (exact — |Σ w_q| < 2³¹), then one f32 multiply. This
+/// is exactly the quantity the C2C ladder + integrator computes in the
+/// ideal-analog limit, so simulator equivalence is meaningful.
+pub fn reference_forward(net: &QuantNetwork, input: &SpikeTrain) -> Result<ReferenceOutput> {
+    if input.num_neurons != net.input_dim() {
+        bail!(
+            "input has {} neurons, network expects {}",
+            input.num_neurons,
+            net.input_dim()
+        );
+    }
+    input.validate()?;
+    let t_steps = input.timesteps();
+
+    let mut trains: Vec<SpikeTrain> =
+        net.layers.iter().map(|l| SpikeTrain::new(l.out_dim, t_steps)).collect();
+    // Integer accumulators (per layer, per neuron) and f32 membranes.
+    let mut acc: Vec<Vec<i32>> = net.layers.iter().map(|l| vec![0i32; l.out_dim]).collect();
+    let mut mem: Vec<Vec<f32>> = net
+        .layers
+        .iter()
+        .map(|l| vec![l.lif.v_reset; l.out_dim])
+        .collect();
+
+    for t in 0..t_steps {
+        for (li, layer) in net.layers.iter().enumerate() {
+            // Gather this step's input spikes for the layer.
+            let in_spikes: &[u32] = if li == 0 {
+                &input.spikes[t]
+            } else {
+                // Previous layer's output at the same step: the paper's
+                // chained MX-NEURACOREs pass pulses forward within the
+                // global time step.
+                &trains[li - 1].spikes[t]
+            };
+            let a = &mut acc[li];
+            for &s in in_spikes {
+                for &(d, w) in layer.targets_of(s as usize) {
+                    a[d as usize] += w as i32;
+                }
+            }
+            // Membrane update + fire + leak for every neuron.
+            let lif = layer.lif;
+            let out = &mut trains[li].spikes[t];
+            for (n, m) in mem[li].iter_mut().enumerate() {
+                let input_current = a[n] as f32 * layer.scale;
+                let v = lif.beta * *m + input_current;
+                if v >= lif.v_threshold {
+                    out.push(n as u32);
+                    *m = lif.v_reset;
+                } else {
+                    *m = v;
+                }
+                a[n] = 0;
+            }
+        }
+    }
+    Ok(ReferenceOutput { trains })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_layer() -> QuantLayer {
+        // 3 inputs, 2 outputs.
+        // w = [[10, 0, -5], [0, 20, 0]]
+        QuantLayer::new(
+            3,
+            2,
+            vec![10, 0, -5, 0, 20, 0],
+            0.1,
+            LifParams::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn csr_matches_dense() {
+        let l = tiny_layer();
+        assert_eq!(l.targets_of(0), &[(0u32, 10i8)]);
+        assert_eq!(l.targets_of(1), &[(1u32, 20i8)]);
+        assert_eq!(l.targets_of(2), &[(0u32, -5i8)]);
+        assert_eq!(l.nnz(), 3);
+        assert!((l.sparsity() - 0.5).abs() < 1e-12);
+        assert_eq!(l.fanout(0), 1);
+        assert_eq!(l.weight(0, 2), -5);
+    }
+
+    #[test]
+    fn layer_rejects_bad_dims() {
+        assert!(QuantLayer::new(3, 2, vec![0; 5], 0.1, LifParams::default()).is_err());
+        assert!(QuantLayer::new(3, 2, vec![0; 6], -1.0, LifParams::default()).is_err());
+    }
+
+    #[test]
+    fn prune_l1_removes_smallest() {
+        let mut l = QuantLayer::new(
+            2,
+            2,
+            vec![1, -2, 3, -4],
+            0.1,
+            LifParams::default(),
+        )
+        .unwrap();
+        l.prune_l1(0.5);
+        assert_eq!(l.weights, vec![0, 0, 3, -4]);
+        assert_eq!(l.nnz(), 2);
+        // Idempotent at same fraction.
+        l.prune_l1(0.5);
+        assert_eq!(l.nnz(), 2);
+        // Full prune.
+        l.prune_l1(1.0);
+        assert_eq!(l.nnz(), 0);
+    }
+
+    #[test]
+    fn spike_train_stats() {
+        let mut st = SpikeTrain::new(4, 3);
+        st.spikes[0] = vec![0, 2];
+        st.spikes[1] = vec![2];
+        st.spikes[2] = vec![1, 2, 3];
+        st.validate().unwrap();
+        assert_eq!(st.total_spikes(), 6);
+        assert_eq!(st.rate(), 0.5);
+        assert_eq!(st.counts(), vec![1, 1, 3, 1]);
+        assert_eq!(st.argmax_class(), 2);
+    }
+
+    #[test]
+    fn spike_train_validation() {
+        let mut st = SpikeTrain::new(3, 1);
+        st.spikes[0] = vec![2, 1];
+        assert!(st.validate().is_err()); // unsorted
+        st.spikes[0] = vec![1, 1];
+        assert!(st.validate().is_err()); // duplicate
+        st.spikes[0] = vec![3];
+        assert!(st.validate().is_err()); // out of range
+        st.spikes[0] = vec![0, 2];
+        assert!(st.validate().is_ok());
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low() {
+        let mut st = SpikeTrain::new(3, 2);
+        st.spikes[0] = vec![1, 2];
+        st.spikes[1] = vec![1, 2];
+        assert_eq!(st.argmax_class(), 1);
+    }
+
+    fn single_neuron_net(beta: f32, th: f32, w: i8, scale: f32, t: usize) -> QuantNetwork {
+        QuantNetwork {
+            name: "single".into(),
+            layers: vec![QuantLayer::new(
+                1,
+                1,
+                vec![w],
+                scale,
+                LifParams { beta, v_threshold: th, v_reset: 0.0 },
+            )
+            .unwrap()],
+            timesteps: t,
+        }
+    }
+
+    #[test]
+    fn reference_integrates_and_fires() {
+        // w·scale = 0.4 per spike, β = 1 (no leak), threshold 1.0:
+        // continuous input spikes → fires on step 2 (0.4, 0.8, 1.2→fire) etc.
+        let net = single_neuron_net(1.0, 1.0, 40, 0.01, 6);
+        let mut input = SpikeTrain::new(1, 6);
+        for t in 0..6 {
+            input.spikes[t] = vec![0];
+        }
+        let out = reference_forward(&net, &input).unwrap();
+        let fired: Vec<usize> = out.output()
+            .spikes
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.is_empty())
+            .map(|(t, _)| t)
+            .collect();
+        assert_eq!(fired, vec![2, 5], "v accumulates 0.4/step, fires at 1.2 then resets");
+    }
+
+    #[test]
+    fn reference_leak_prevents_firing() {
+        // With strong leak the neuron never reaches threshold.
+        let net = single_neuron_net(0.1, 1.0, 40, 0.01, 20);
+        let mut input = SpikeTrain::new(1, 20);
+        for t in 0..20 {
+            input.spikes[t] = vec![0];
+        }
+        let out = reference_forward(&net, &input).unwrap();
+        assert_eq!(out.output().total_spikes(), 0);
+        // v converges to 0.4/(1-0.1) ≈ 0.444 < 1.
+    }
+
+    #[test]
+    fn inhibitory_weights_suppress() {
+        // Two inputs: +0.6 and -0.6 per step cancel.
+        let net = QuantNetwork {
+            name: "inhib".into(),
+            layers: vec![QuantLayer::new(
+                2,
+                1,
+                vec![60, -60],
+                0.01,
+                LifParams { beta: 1.0, v_threshold: 1.0, v_reset: 0.0 },
+            )
+            .unwrap()],
+            timesteps: 10,
+        };
+        let mut input = SpikeTrain::new(2, 10);
+        for t in 0..10 {
+            input.spikes[t] = vec![0, 1];
+        }
+        let out = reference_forward(&net, &input).unwrap();
+        assert_eq!(out.output().total_spikes(), 0);
+    }
+
+    #[test]
+    fn multilayer_propagation() {
+        // Layer 1 fires every 2nd step; layer 2 sees those spikes.
+        let l1 = QuantLayer::new(
+            1,
+            1,
+            vec![50],
+            0.01,
+            LifParams { beta: 1.0, v_threshold: 1.0, v_reset: 0.0 },
+        )
+        .unwrap();
+        let l2 = QuantLayer::new(
+            1,
+            1,
+            vec![127],
+            0.01,
+            LifParams { beta: 1.0, v_threshold: 1.0, v_reset: 0.0 },
+        )
+        .unwrap();
+        let net = QuantNetwork { name: "two".into(), layers: vec![l1, l2], timesteps: 8 };
+        net.validate().unwrap();
+        let mut input = SpikeTrain::new(1, 8);
+        for t in 0..8 {
+            input.spikes[t] = vec![0];
+        }
+        let out = reference_forward(&net, &input).unwrap();
+        // l1 fires when 0.5k >= 1 -> steps 1,3,5,7 (k=2,4,..).
+        assert_eq!(out.trains[0].total_spikes(), 4);
+        // l2 receives 1.27 at those steps -> fires same step.
+        assert_eq!(out.trains[1].total_spikes(), 4);
+    }
+
+    #[test]
+    fn reference_rejects_dim_mismatch() {
+        let net = single_neuron_net(0.9, 1.0, 1, 0.1, 2);
+        let input = SpikeTrain::new(3, 2);
+        assert!(reference_forward(&net, &input).is_err());
+    }
+
+    #[test]
+    fn random_network_is_valid_and_tensorfile_roundtrips() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            layer_sizes: vec![50, 20, 10],
+            timesteps: 5,
+            beta: 0.9,
+            v_threshold: 1.0,
+            v_reset: 0.0,
+        };
+        let mut rng = Rng::new(1);
+        let net = QuantNetwork::random(&cfg, 0.5, &mut rng);
+        assert_eq!(net.num_params(), 50 * 20 + 20 * 10);
+        assert!(net.sparsity() > 0.4 && net.sparsity() < 0.6, "{}", net.sparsity());
+        let tf = net.to_tensorfile();
+        let back = QuantNetwork::from_tensorfile("t", &tf).unwrap();
+        assert_eq!(back.layers.len(), net.layers.len());
+        assert_eq!(back.timesteps, net.timesteps);
+        for (a, b) in back.layers.iter().zip(&net.layers) {
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.scale, b.scale);
+        }
+    }
+
+    #[test]
+    fn from_tensorfile_error_paths() {
+        let tf = TensorFile::new();
+        assert!(QuantNetwork::from_tensorfile("x", &tf).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Memory-utilization and event traces (paper Figures 6–7).
+//!
+//! Figures 6 and 7 plot the *average MEM_S&N memory usage* per time step
+//! while one input streams through Accel₁ (N-MNIST) / Accel₂
+//! (CIFAR10-DVS), per layer. In our simulator the equivalent quantity is
+//! the number of MEM_S&N rows the controller touches in each step,
+//! converted to kilobytes with the row width of the configured core
+//! (per-engine column: NI bit + virtual index + weight address).
+
+use crate::accel::Menage;
+use crate::config::AcceleratorConfig;
+use crate::util::json::Json;
+
+/// MEM_S&N row width in bytes for a given accelerator config: per engine
+/// column — NI flag (1 bit), virtual-neuron index (⌈log₂N⌉ bits), weight
+/// address (⌈log₂ weight-capacity⌉ bits) — times M columns.
+pub fn sn_row_bytes(cfg: &AcceleratorConfig) -> f64 {
+    let virt_bits = (cfg.virtual_per_a_neuron.max(2) as f64).log2().ceil();
+    let addr_bits = (cfg.weight_capacity().max(2) as f64).log2().ceil();
+    let col_bits = 1.0 + virt_bits + addr_bits;
+    col_bits * cfg.a_neurons_per_core as f64 / 8.0
+}
+
+/// Utilization series of one core: KB of MEM_S&N touched per time step.
+#[derive(Debug, Clone)]
+pub struct CoreTrace {
+    pub core: usize,
+    /// KB touched per time step (averaged across inputs when aggregated).
+    pub kb_per_step: Vec<f64>,
+}
+
+/// The full Figures 6–7 artifact: one series per MX-NEURACORE.
+#[derive(Debug, Clone)]
+pub struct MemoryTrace {
+    pub accel_name: String,
+    pub dataset: String,
+    pub cores: Vec<CoreTrace>,
+    /// Number of inputs averaged over.
+    pub samples: usize,
+}
+
+impl MemoryTrace {
+    /// Extract the per-step series from a chip's accumulated statistics,
+    /// averaging over `samples` inputs of `timesteps` steps each.
+    ///
+    /// The chip's `sn_rows_touched_per_step` is a flat history across all
+    /// inputs; it is folded modulo `timesteps`.
+    pub fn from_chip(
+        chip: &Menage,
+        dataset: &str,
+        timesteps: usize,
+        samples: usize,
+    ) -> Self {
+        let row_kb = sn_row_bytes(&chip.config) / 1024.0;
+        let cores = chip
+            .cores
+            .iter()
+            .map(|core| {
+                let mut acc = vec![0.0f64; timesteps];
+                let mut cnt = vec![0u32; timesteps];
+                for (i, &rows) in core.stats.sn_rows_touched_per_step.iter().enumerate() {
+                    let t = i % timesteps;
+                    acc[t] += rows as f64 * row_kb;
+                    cnt[t] += 1;
+                }
+                for (a, &c) in acc.iter_mut().zip(&cnt) {
+                    if c > 0 {
+                        *a /= c as f64;
+                    }
+                }
+                CoreTrace { core: core.index, kb_per_step: acc }
+            })
+            .collect();
+        Self {
+            accel_name: chip.config.name.clone(),
+            dataset: dataset.to_string(),
+            cores,
+            samples,
+        }
+    }
+
+    /// Mean utilization across steps and cores (headline summary).
+    pub fn mean_kb(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for c in &self.cores {
+            for &v in &c.kb_per_step {
+                sum += v;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Peak utilization across steps and cores.
+    pub fn peak_kb(&self) -> f64 {
+        self.cores
+            .iter()
+            .flat_map(|c| c.kb_per_step.iter().copied())
+            .fold(0.0, f64::max)
+    }
+
+    /// Export as JSON (one object per core with x = step, y = KB).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accel", self.accel_name.as_str().into()),
+            ("dataset", self.dataset.as_str().into()),
+            ("samples", self.samples.into()),
+            (
+                "cores",
+                Json::Arr(
+                    self.cores
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("core", c.core.into()),
+                                ("kb_per_step", Json::arr_f64(&c.kb_per_step)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::AnalogParams;
+    use crate::config::ModelConfig;
+    use crate::mapping::Strategy;
+    use crate::snn::{QuantNetwork, SpikeTrain};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn row_bytes_reflects_config() {
+        let a1 = AcceleratorConfig::accel1();
+        let a2 = AcceleratorConfig::accel2();
+        let b1 = sn_row_bytes(&a1);
+        let b2 = sn_row_bytes(&a2);
+        // Accel2 has twice the columns and wider fields — rows are bigger.
+        assert!(b2 > b1, "{b2} ≤ {b1}");
+        // Accel1: 10 cols × (1 + 4 + ~19 bits) / 8 ≈ 30 B.
+        assert!(b1 > 10.0 && b1 < 100.0, "{b1}");
+    }
+
+    fn chip_with_history(samples: usize, timesteps: usize) -> Menage {
+        let mcfg = ModelConfig {
+            name: "t".into(),
+            layer_sizes: vec![30, 12, 6],
+            timesteps,
+            beta: 0.9,
+            v_threshold: 1.0,
+            v_reset: 0.0,
+        };
+        let mut cfg = AcceleratorConfig::accel1();
+        cfg.num_cores = 2;
+        cfg.a_neurons_per_core = 3;
+        cfg.a_syns_per_core = 3;
+        cfg.virtual_per_a_neuron = 4;
+        let mut rng = Rng::new(4);
+        let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+        let mut chip =
+            Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 1).unwrap();
+        for s in 0..samples {
+            let mut input = SpikeTrain::new(30, timesteps);
+            let mut r = Rng::new(100 + s as u64);
+            for step in input.spikes.iter_mut() {
+                for i in 0..30 {
+                    if r.bernoulli(0.25) {
+                        step.push(i as u32);
+                    }
+                }
+            }
+            chip.run(&input).unwrap();
+        }
+        chip
+    }
+
+    #[test]
+    fn trace_shapes_and_averaging() {
+        let chip = chip_with_history(3, 6);
+        let tr = MemoryTrace::from_chip(&chip, "syn", 6, 3);
+        assert_eq!(tr.cores.len(), 2);
+        for c in &tr.cores {
+            assert_eq!(c.kb_per_step.len(), 6);
+        }
+        assert!(tr.mean_kb() > 0.0);
+        assert!(tr.peak_kb() >= tr.mean_kb());
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let chip = chip_with_history(2, 5);
+        let tr = MemoryTrace::from_chip(&chip, "syn", 5, 2);
+        let j = tr.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("accel").unwrap().as_str().unwrap(), "accel1");
+        assert_eq!(parsed.get("cores").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn empty_chip_trace_is_zero() {
+        let chip = {
+            let mcfg = ModelConfig {
+                name: "z".into(),
+                layer_sizes: vec![10, 4],
+                timesteps: 3,
+                beta: 0.9,
+                v_threshold: 1.0,
+                v_reset: 0.0,
+            };
+            let mut cfg = AcceleratorConfig::accel1();
+            cfg.num_cores = 1;
+            cfg.a_neurons_per_core = 2;
+            cfg.a_syns_per_core = 2;
+            cfg.virtual_per_a_neuron = 2;
+            let mut rng = Rng::new(1);
+            let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+            Menage::build(&net, &cfg, Strategy::Greedy, &AnalogParams::ideal(), 1).unwrap()
+        };
+        let tr = MemoryTrace::from_chip(&chip, "none", 3, 0);
+        assert_eq!(tr.mean_kb(), 0.0);
+        assert_eq!(tr.peak_kb(), 0.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Dependency-free utility substrate.
+//!
+//! The build environment vendors only the `xla` crate's dependency tree, so
+//! everything a "normal" project would pull from crates.io lives here:
+//!
+//! * [`rng`] — deterministic PRNG (SplitMix64 / xoshiro256**) with the
+//!   distributions the dataset generators and noise models need.
+//! * [`json`] — minimal JSON reader/writer used for config echo, trace
+//!   export, and small metadata files.
+//! * [`tensorfile`] — the binary tensor container (`.mtz`) that carries
+//!   quantized weights and recorded spike tensors from the python compile
+//!   path into the rust runtime.
+//! * [`prop`] — a tiny seeded property-testing driver (stand-in for
+//!   proptest): N random cases per property, failing seed reported.
+//! * [`stats`] — streaming summary statistics used by benches and the
+//!   energy model.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tensorfile;

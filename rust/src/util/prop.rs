@@ -1,0 +1,119 @@
+//! Tiny seeded property-testing driver (offline stand-in for proptest).
+//!
+//! A property is a closure over a [`Rng`](super::rng::Rng); the driver runs
+//! it across `cases` independent deterministic seeds and panics with the
+//! failing seed on the first violation, so failures reproduce with
+//! `check_seed(name, SEED, prop)`.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: u64 = 128;
+
+/// Run `prop` across `cases` seeds derived from the property name.
+///
+/// Panics (test failure) with the offending seed when `prop` panics or
+/// returns an `Err`-like `Result<(), String>`.
+pub fn check_n<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = name_hash(name);
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0xA24B_AED4_963E_E407));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with util::prop::check_seed({name:?}, {seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Run `prop` with [`DEFAULT_CASES`] cases.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_n(name, DEFAULT_CASES, prop);
+}
+
+/// Re-run a single failing seed (debugging helper).
+pub fn check_seed<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property {name:?} failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// FNV-1a over the property name — stable across runs and platforms.
+fn name_hash(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_n("always-true", 17, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-false\" failed")]
+    fn failing_property_panics_with_seed() {
+        check_n("always-false", 4, |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut first: Vec<u64> = vec![];
+        check_n("det", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = vec![];
+        check_n("det", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+        assert_eq!(first.len(), 5);
+        // Different cases see different streams.
+        assert!(first.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        check_n("macro", 8, |rng| {
+            let v = rng.below(10);
+            prop_assert!(v < 10, "v={v} out of range");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,346 @@
+//! `.mtz` — the MENAGE tensor container.
+//!
+//! A trivially parseable binary format used to move quantized weights,
+//! scales and recorded spike tensors from the python compile path
+//! (`python/compile/aot.py` writes it with plain `struct.pack`) into rust.
+//! Little-endian throughout.
+//!
+//! ```text
+//! magic   b"MTZ1"
+//! u32     tensor count
+//! per tensor:
+//!   u32         name length, then name bytes (utf-8)
+//!   u8          dtype  (0 = f32, 1 = i8, 2 = i32, 3 = u8)
+//!   u8          ndim
+//!   u64 × ndim  dims
+//!   bytes       data (row-major, dtype-sized elements)
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"MTZ1";
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I8 = 1,
+    I32 = 2,
+    U8 = 3,
+}
+
+impl DType {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::I32,
+            3 => DType::U8,
+            _ => bail!("unknown dtype tag {v}"),
+        })
+    }
+
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+}
+
+/// A dense row-major tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I8 { dims: Vec<usize>, data: Vec<i8> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    U8 { dims: Vec<usize>, data: Vec<u8> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. }
+            | Tensor::I8 { dims, .. }
+            | Tensor::I32 { dims, .. }
+            | Tensor::U8 { dims, .. } => dims,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I8 { .. } => DType::I8,
+            Tensor::I32 { .. } => DType::I32,
+            Tensor::U8 { .. } => DType::U8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is {:?}, expected f32", self.dtype())),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            Tensor::I8 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is {:?}, expected i8", self.dtype())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is {:?}, expected i32", self.dtype())),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            Tensor::U8 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is {:?}, expected u8", self.dtype())),
+        }
+    }
+}
+
+/// A named collection of tensors (the file's content).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor {name:?} not in file (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(t.dtype() as u8);
+            out.push(t.dims().len() as u8);
+            for &d in t.dims() {
+                out.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for v in data {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Tensor::I8 { data, .. } => {
+                    out.extend(data.iter().map(|&v| v as u8));
+                }
+                Tensor::I32 { data, .. } => {
+                    for v in data {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Tensor::U8 { data, .. } => out.extend_from_slice(data),
+            }
+        }
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        let mut r = Reader { b, i: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            bail!("bad magic {magic:?}");
+        }
+        let count = r.u32()? as usize;
+        let mut tf = TensorFile::new();
+        for _ in 0..count {
+            let name_len = r.u32()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)?.to_string();
+            let dtype = DType::from_u8(r.u8()?)?;
+            let ndim = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u64()? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let raw = r.take(n * dtype.size())?;
+            let t = match dtype {
+                DType::F32 => Tensor::F32 {
+                    dims,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                },
+                DType::I32 => Tensor::I32 {
+                    dims,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                },
+                DType::I8 => Tensor::I8 { dims, data: raw.iter().map(|&v| v as i8).collect() },
+                DType::U8 => Tensor::U8 { dims, data: raw.to_vec() },
+            };
+            tf.insert(name, t);
+        }
+        if r.i != b.len() {
+            bail!("trailing bytes after tensor data");
+        }
+        Ok(tf)
+    }
+
+    /// Write to a file path.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Read from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut b = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut b)?;
+        Self::from_bytes(&b).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated file: wanted {n} bytes at offset {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TensorFile {
+        let mut tf = TensorFile::new();
+        tf.insert(
+            "w0",
+            Tensor::I8 { dims: vec![2, 3], data: vec![1, -2, 3, -4, 5, -128] },
+        );
+        tf.insert("scale", Tensor::F32 { dims: vec![1], data: vec![0.03125] });
+        tf.insert("counts", Tensor::I32 { dims: vec![4], data: vec![0, -1, i32::MAX, 7] });
+        tf.insert("mask", Tensor::U8 { dims: vec![2, 2], data: vec![0, 1, 1, 0] });
+        tf
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let tf = sample();
+        let b = tf.to_bytes();
+        let back = TensorFile::from_bytes(&b).unwrap();
+        assert_eq!(back, tf);
+    }
+
+    #[test]
+    fn roundtrip_disk() {
+        let tf = sample();
+        let dir = std::env::temp_dir().join(format!("mtz_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.mtz");
+        tf.save(&p).unwrap();
+        let back = TensorFile::load(&p).unwrap();
+        assert_eq!(back, tf);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_error_lists_names() {
+        let tf = sample();
+        let e = tf.get("nope").unwrap_err().to_string();
+        assert!(e.contains("nope") && e.contains("w0"), "{e}");
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let tf = sample();
+        let mut b = tf.to_bytes();
+        b[0] = b'X'; // magic
+        assert!(TensorFile::from_bytes(&b).is_err());
+        let b = tf.to_bytes();
+        assert!(TensorFile::from_bytes(&b[..b.len() - 1]).is_err()); // truncated
+        let mut b2 = tf.to_bytes();
+        b2.push(0); // trailing
+        assert!(TensorFile::from_bytes(&b2).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let tf = sample();
+        assert!(tf.get("w0").unwrap().as_f32().is_err());
+        assert!(tf.get("w0").unwrap().as_i8().is_ok());
+        assert!(tf.get("scale").unwrap().as_f32().is_ok());
+        assert!(tf.get("counts").unwrap().as_i32().is_ok());
+        assert!(tf.get("mask").unwrap().as_u8().is_ok());
+    }
+
+    #[test]
+    fn empty_and_zero_dim_tensors() {
+        let mut tf = TensorFile::new();
+        tf.insert("e", Tensor::F32 { dims: vec![0, 5], data: vec![] });
+        let back = TensorFile::from_bytes(&tf.to_bytes()).unwrap();
+        assert_eq!(back.get("e").unwrap().len(), 0);
+        assert!(back.get("e").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,153 @@
+//! PJRT golden-model integration tests — require `make artifacts`.
+//!
+//! Skipped (with a message) when artifacts are absent so `cargo test`
+//! works on a fresh checkout; the Makefile's `test` target builds
+//! artifacts first, making these the real cross-language check:
+//! rust cycle-accurate simulator ≡ recorded python goldens ≡ live
+//! PJRT-executed JAX/Pallas model.
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::config::AcceleratorConfig;
+use menage::mapping::Strategy;
+use menage::runtime::{artifacts_dir, cpu_client, GoldenModel};
+use menage::snn::{reference_forward, QuantNetwork, SpikeTrain};
+use menage::util::tensorfile::TensorFile;
+
+struct Eval {
+    net: QuantNetwork,
+    inputs: Vec<SpikeTrain>,
+    labels: Vec<usize>,
+    golden_counts: Vec<Vec<f32>>,
+}
+
+fn load(base: &str, limit: usize) -> Option<Eval> {
+    let dir = artifacts_dir();
+    let tf = TensorFile::load(dir.join(format!("{base}.weights.mtz"))).ok()?;
+    let net = QuantNetwork::from_tensorfile(base, &tf).ok()?;
+    let etf = TensorFile::load(dir.join(format!("{base}.eval.mtz"))).ok()?;
+    let ev = etf.get("events").ok()?;
+    let dims = ev.dims().to_vec();
+    let raw = ev.as_u8().ok()?;
+    let labels = etf.get("labels").ok()?.as_i32().ok()?;
+    let gc = etf.get("golden_counts").ok()?.as_f32().ok()?;
+    let (n, t, d) = (dims[0].min(limit), dims[1], dims[2]);
+    let classes = gc.len() / dims[0];
+    let mut inputs = Vec::new();
+    let mut golden_counts = Vec::new();
+    for i in 0..n {
+        let mut st = SpikeTrain::new(d, t);
+        for (ti, step) in st.spikes.iter_mut().enumerate() {
+            for j in 0..d {
+                if raw[i * t * d + ti * d + j] != 0 {
+                    step.push(j as u32);
+                }
+            }
+        }
+        inputs.push(st);
+        golden_counts.push(gc[i * classes..(i + 1) * classes].to_vec());
+    }
+    Some(Eval {
+        net,
+        inputs,
+        labels: labels[..n].iter().map(|&l| l as usize).collect(),
+        golden_counts,
+    })
+}
+
+macro_rules! require_artifacts {
+    ($base:expr, $limit:expr) => {
+        match load($base, $limit) {
+            Some(e) => e,
+            None => {
+                eprintln!("skipping: artifacts for {} missing (run `make artifacts`)", $base);
+                return;
+            }
+        }
+    };
+}
+
+/// The rust reference model must reproduce python's recorded golden counts
+/// exactly (same f32 arithmetic on both sides).
+#[test]
+fn reference_matches_recorded_python_goldens() {
+    let e = require_artifacts!("nmnist", 12);
+    for ((st, gc), i) in e.inputs.iter().zip(&e.golden_counts).zip(0..) {
+        let out = reference_forward(&e.net, st).unwrap();
+        let counts = out.output().counts();
+        for (c, (&r, &g)) in counts.iter().zip(gc).enumerate() {
+            assert_eq!(
+                *&(r as f32),
+                g,
+                "sample {i} class {c}: rust {r} vs python {g}"
+            );
+        }
+    }
+}
+
+/// The cycle-accurate simulator must agree with the recorded goldens.
+#[test]
+fn simulator_matches_recorded_goldens() {
+    let e = require_artifacts!("nmnist", 12);
+    let cfg = AcceleratorConfig::accel1();
+    let mut chip =
+        Menage::build(&e.net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    for ((st, gc), i) in e.inputs.iter().zip(&e.golden_counts).zip(0..) {
+        let out = chip.run(st).unwrap();
+        let counts = out.output().counts();
+        for (c, (&r, &g)) in counts.iter().zip(gc).enumerate() {
+            assert_eq!(r as f32, g, "sample {i} class {c}");
+        }
+    }
+}
+
+/// Live PJRT execution of the lowered HLO must agree with the simulator.
+#[test]
+fn pjrt_golden_agrees_with_simulator() {
+    let e = require_artifacts!("nmnist", 8);
+    let client = cpu_client().unwrap();
+    let gm = GoldenModel::load(
+        &client,
+        artifacts_dir().join("nmnist.hlo.txt"),
+        e.net.timesteps,
+        e.net.input_dim(),
+        e.net.output_dim(),
+    )
+    .unwrap();
+    let cfg = AcceleratorConfig::accel1();
+    let mut chip =
+        Menage::build(&e.net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    for st in &e.inputs {
+        let sim = chip.run(st).unwrap();
+        let pjrt_counts = gm.run(st).unwrap();
+        let sim_counts: Vec<f32> =
+            sim.output().counts().iter().map(|&c| c as f32).collect();
+        assert_eq!(sim_counts, pjrt_counts, "simulator vs PJRT divergence");
+    }
+}
+
+/// cifar_small artifacts run on the Accel₂ design point.
+#[test]
+fn cifar_small_on_accel2() {
+    let e = require_artifacts!("cifar_small", 6);
+    let cfg = AcceleratorConfig::accel2();
+    let mut chip =
+        Menage::build(&e.net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    assert!(chip.cores[0].rounds() >= 2, "1000-neuron layer needs rounds");
+    let mut agree = 0;
+    for (st, gc) in e.inputs.iter().zip(&e.golden_counts) {
+        let out = chip.run(st).unwrap();
+        let pred = out.predicted_class();
+        let py_pred = gc
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .unwrap()
+            .0;
+        if pred == py_pred {
+            agree += 1;
+        }
+    }
+    assert_eq!(agree, e.inputs.len(), "simulator vs python goldens");
+    let _ = e.labels;
+}

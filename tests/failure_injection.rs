@@ -1,0 +1,172 @@
+//! Failure-injection tests: corrupted artifacts, undersized hardware,
+//! hostile inputs — the system must fail *loudly and precisely*, never
+//! silently compute garbage.
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::mapping::{distill, map_layer, map_network, Strategy};
+use menage::snn::{LifParams, QuantLayer, QuantNetwork, SpikeTrain};
+use menage::util::rng::Rng;
+use menage::util::tensorfile::{Tensor, TensorFile};
+
+fn net(sizes: &[usize]) -> QuantNetwork {
+    let cfg = ModelConfig {
+        name: "fi".into(),
+        layer_sizes: sizes.to_vec(),
+        timesteps: 4,
+        beta: 0.9,
+        v_threshold: 1.0,
+        v_reset: 0.0,
+    };
+    let mut rng = Rng::new(5);
+    QuantNetwork::random(&cfg, 0.5, &mut rng)
+}
+
+#[test]
+fn truncated_weight_file_rejected() {
+    let tf = net(&[20, 10, 4]).to_tensorfile();
+    let bytes = tf.to_bytes();
+    for cut in [1usize, 8, 40, bytes.len() / 2, bytes.len() - 1] {
+        let res = TensorFile::from_bytes(&bytes[..cut]);
+        assert!(res.is_err(), "truncation at {cut} accepted");
+    }
+}
+
+#[test]
+fn weight_file_with_missing_tensors_rejected() {
+    // Drop scale0: loading must fail with a message naming the layer.
+    let mut tf = net(&[20, 10]).to_tensorfile();
+    tf.tensors.remove("scale0");
+    let err = QuantNetwork::from_tensorfile("x", &tf).unwrap_err().to_string();
+    assert!(err.contains("scale") || err.contains("layer 0"), "{err}");
+}
+
+#[test]
+fn weight_file_with_wrong_lif_arity_rejected() {
+    let mut tf = net(&[20, 10]).to_tensorfile();
+    tf.insert("meta_lif", Tensor::F32 { dims: vec![2], data: vec![0.9, 1.0] });
+    assert!(QuantNetwork::from_tensorfile("x", &tf).is_err());
+}
+
+#[test]
+fn mismatched_layer_dims_rejected() {
+    // Hand-build a network whose dims don't chain.
+    let l0 = QuantLayer::new(8, 4, vec![1; 32], 0.1, LifParams::default()).unwrap();
+    let l1 = QuantLayer::new(5, 2, vec![1; 10], 0.1, LifParams::default()).unwrap();
+    let bad = QuantNetwork { name: "bad".into(), layers: vec![l0, l1], timesteps: 3 };
+    assert!(bad.validate().is_err());
+    // And the chip builder surfaces it.
+    let cfg = AcceleratorConfig::accel1();
+    assert!(Menage::build(&bad, &cfg, Strategy::Greedy, &AnalogParams::ideal(), 1).is_err());
+}
+
+#[test]
+fn undersized_weight_sram_rejected_at_distill() {
+    let n = net(&[64, 48]);
+    let mut cfg = AcceleratorConfig::accel1();
+    cfg.num_cores = 1;
+    cfg.weight_mem_bytes = 16; // absurd
+    let mp = map_layer(&n.layers[0], &cfg, Strategy::Greedy).unwrap();
+    let err = distill(&n.layers[0], &mp, &cfg).unwrap_err().to_string();
+    assert!(err.contains("weight"), "{err}");
+}
+
+#[test]
+fn too_few_cores_rejected_at_map() {
+    let n = net(&[16, 12, 8, 4, 2, 2]); // 5 layers
+    let mut cfg = AcceleratorConfig::accel1(); // 4 cores
+    cfg.a_neurons_per_core = 4;
+    cfg.virtual_per_a_neuron = 4;
+    let err = map_network(&n, &cfg, Strategy::Greedy).unwrap_err().to_string();
+    assert!(err.contains("MX-NEURACORE"), "{err}");
+}
+
+#[test]
+fn wrong_input_dims_rejected_at_run() {
+    let n = net(&[20, 10]);
+    let mut cfg = AcceleratorConfig::accel1();
+    cfg.num_cores = 1;
+    cfg.a_neurons_per_core = 4;
+    cfg.virtual_per_a_neuron = 4;
+    let mut chip =
+        Menage::build(&n, &cfg, Strategy::Greedy, &AnalogParams::ideal(), 1).unwrap();
+    assert!(chip.run(&SpikeTrain::new(21, 4)).is_err()); // wrong width
+    // Wrong timestep count is fine (the chip follows the input), but
+    // out-of-range spike indices inside a malformed train must not panic
+    // the dispatch (they address no MEM_E2A entry).
+    let mut st = SpikeTrain::new(20, 4);
+    st.spikes[0] = vec![19]; // valid edge
+    chip.run(&st).unwrap();
+}
+
+#[test]
+fn event_storm_saturates_gracefully() {
+    // Every input neuron firing every step with a tiny MEM_E: events are
+    // dropped and counted; the run still completes and stays deterministic.
+    let n = net(&[100, 10]);
+    let mut cfg = AcceleratorConfig::accel1();
+    cfg.num_cores = 1;
+    cfg.a_neurons_per_core = 2;
+    cfg.virtual_per_a_neuron = 8;
+    cfg.event_mem_depth = 16;
+    let mut chip =
+        Menage::build(&n, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 1).unwrap();
+    let mut st = SpikeTrain::new(100, 4);
+    for step in st.spikes.iter_mut() {
+        step.extend(0..100u32);
+    }
+    let a = chip.run(&st).unwrap();
+    let drops: u64 = chip.cores.iter().map(|c| c.stats.dropped_events).sum();
+    assert_eq!(drops, 4 * (100 - 16));
+    let b = chip.run(&st).unwrap();
+    assert_eq!(a.output().spikes, b.output().spikes, "drops must be deterministic");
+}
+
+#[test]
+fn zero_fanout_limit_reports_unassigned() {
+    let layer = QuantLayer::new(2, 4, vec![1; 8], 0.1, LifParams::default()).unwrap();
+    let mut cfg = AcceleratorConfig::accel1();
+    cfg.fanout_limit = 0;
+    let mp = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
+    assert_eq!(mp.assigned_count(), 0);
+    assert_eq!(mp.unassigned.len(), 4, "all active neurons must be reported");
+}
+
+#[test]
+fn corrupt_toml_config_rejected_with_line_info() {
+    let err = AcceleratorConfig::from_toml("[accelerator]\nnum_cores = banana")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("line 2") || err.contains("num_cores"), "{err}");
+    // Semantic garbage (valid syntax) also rejected.
+    assert!(AcceleratorConfig::from_toml("[accelerator]\nnum_cores = 0").is_err());
+    assert!(AcceleratorConfig::from_toml("[accelerator]\nweight_bits = 99").is_err());
+}
+
+#[test]
+fn nonideal_analog_never_panics_on_extremes() {
+    // Saturating packets, negative storms, denormal scales: the non-ideal
+    // path must clamp, not explode.
+    let l = QuantLayer::new(
+        4,
+        4,
+        vec![127, -128, 127, -128, 127, -128, 127, -128, 1, -1, 1, -1, 0, 0, 0, 1],
+        1e-30, // pathological scale
+        LifParams { beta: 1.0, v_threshold: 1.0, v_reset: 0.0 },
+    )
+    .unwrap();
+    let netw = QuantNetwork { name: "ex".into(), layers: vec![l], timesteps: 6 };
+    let mut cfg = AcceleratorConfig::accel1();
+    cfg.num_cores = 1;
+    cfg.a_neurons_per_core = 2;
+    cfg.virtual_per_a_neuron = 2;
+    let mut chip =
+        Menage::build(&netw, &cfg, Strategy::Greedy, &AnalogParams::paper(), 3).unwrap();
+    let mut st = SpikeTrain::new(4, 6);
+    for step in st.spikes.iter_mut() {
+        step.extend(0..4u32);
+    }
+    let out = chip.run(&st).unwrap();
+    assert!(out.output().total_spikes() <= 4 * 6);
+}
