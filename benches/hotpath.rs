@@ -1,17 +1,38 @@
 //! Hot-path microbenchmarks (§Perf): simulator event-dispatch throughput,
-//! reference-model throughput, end-to-end sample latency, and coordinator
-//! scaling — the numbers the performance pass optimizes and EXPERIMENTS.md
-//! §Perf records.
+//! reference-model throughput, end-to-end sample latency at default and
+//! low spike activity, and coordinator scaling — the numbers the
+//! performance pass optimizes.
+//!
+//! Besides the human-readable `BENCH` lines, the run emits a
+//! machine-readable `BENCH_hotpath.json` (into `MENAGE_BENCH_DIR` or the
+//! working directory) so the perf trajectory is tracked across PRs:
+//! regenerate with `cargo bench --bench hotpath` and commit the file.
 
-use menage::accel::Menage;
+use menage::accel::{Menage, RunOutput};
 use menage::analog::AnalogParams;
-use menage::bench::Bencher;
+use menage::bench::{emit_json_file, Bencher};
 use menage::config::{AcceleratorConfig, ModelConfig};
 use menage::coordinator::Coordinator;
 use menage::datasets::{Dataset, DatasetKind};
 use menage::mapping::Strategy;
 use menage::snn::{reference_forward, QuantNetwork, SpikeTrain};
+use menage::util::json::Json;
 use menage::util::rng::Rng;
+
+/// Synthetic spike train at a controlled rate (the low-activity sweep the
+/// sparsity-aware engine is optimized for).
+fn rate_input(dim: usize, timesteps: usize, rate: f64, seed: u64) -> SpikeTrain {
+    let mut rng = Rng::new(seed);
+    let mut st = SpikeTrain::new(dim, timesteps);
+    for step in st.spikes.iter_mut() {
+        for i in 0..dim {
+            if rng.bernoulli(rate) {
+                step.push(i as u32);
+            }
+        }
+    }
+    st
+}
 
 fn main() {
     let mut mcfg = ModelConfig::nmnist_mlp();
@@ -22,51 +43,102 @@ fn main() {
     let ds = Dataset::new(DatasetKind::NMnist, 5, mcfg.timesteps);
     let samples: Vec<SpikeTrain> =
         ds.balanced_split(8, 0).into_iter().map(|s| s.events).collect();
+    let in_dim = net.input_dim();
 
     let b = Bencher::default();
 
     // Reference model (the digital golden): samples/s and synaptic events/s.
-    let r = b.run("reference_forward", || {
+    let r_ref = b.run("reference_forward", || {
         reference_forward(&net, &samples[0]).unwrap()
     });
-    println!("  reference: {:.1} samples/s", r.throughput(1.0));
+    let reference_sps = r_ref.throughput(1.0);
+    println!("  reference: {reference_sps:.1} samples/s");
 
-    // Cycle-accurate chip: per-sample latency and synaptic-event rate.
+    // Cycle-accurate chip at the dataset's default activity: per-sample
+    // latency and synaptic-event rate, on the allocation-free run path.
     let mut chip =
         Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let mut out = RunOutput::default();
     let mut i = 0usize;
-    let r = b.run("chip_run_sample", || {
+    let r_chip = b.run("chip_run_sample", || {
         i = (i + 1) % samples.len();
-        chip.run(&samples[i]).unwrap()
+        chip.run_into(&samples[i], &mut out).unwrap();
+        out.cycles
     });
+    let chip_sps = r_chip.throughput(1.0);
     let macs_per_run = chip.total_macs() as f64 / chip.inputs_processed as f64;
+    let events_per_s = r_chip.throughput(macs_per_run);
     println!(
-        "  simulator: {:.1} samples/s, {:.1} M synaptic events/s (sim speed)",
-        r.throughput(1.0),
-        r.throughput(macs_per_run) / 1e6
+        "  simulator: {chip_sps:.1} samples/s, {:.1} M synaptic events/s (sim speed)",
+        events_per_s / 1e6
     );
+
+    // Low-activity regime (spike rate 0.03 ≤ 0.05): with the
+    // activity-tracked sweep, cost must follow spikes, not model capacity.
+    let low_rate = 0.03;
+    let quiet: Vec<SpikeTrain> =
+        (0..8).map(|s| rate_input(in_dim, mcfg.timesteps, low_rate, 100 + s)).collect();
+    let mut chip_low =
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let mut j = 0usize;
+    let r_low = b.run("chip_run_sample_low_activity", || {
+        j = (j + 1) % quiet.len();
+        chip_low.run_into(&quiet[j], &mut out).unwrap();
+        out.cycles
+    });
+    let chip_low_sps = r_low.throughput(1.0);
+    println!("  simulator @rate={low_rate}: {chip_low_sps:.1} samples/s");
 
     // Mapping (build-time path).
     b.run("menage_build_full", || {
         Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap()
     });
 
-    // Coordinator scaling: 1 vs 4 workers on a 256-sample batch.
+    // Coordinator scaling on the work-stealing queue: 1 vs 4 workers over a
+    // 256-sample batch. Coordinator::new (thread spawn + W chip clones) is
+    // setup, NOT workload — it stays outside the timed region.
+    let mut coord_sps = Vec::new();
     for workers in [1usize, 4] {
         let chip =
             Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
         let batch: Vec<(SpikeTrain, Option<usize>)> = (0..256)
             .map(|k| (samples[k % samples.len()].clone(), Some(0)))
             .collect();
-        let t0 = std::time::Instant::now();
         let mut coord = Coordinator::new(&chip, workers);
+        let t0 = std::time::Instant::now();
         let res = coord.run_batch(batch).unwrap();
         let dt = t0.elapsed();
         coord.shutdown();
+        let sps = res.len() as f64 / dt.as_secs_f64();
+        coord_sps.push(sps);
         println!(
-            "  coordinator x{workers}: {} samples in {dt:?} → {:.1} samples/s",
+            "  coordinator x{workers}: {} samples in {dt:?} → {sps:.1} samples/s",
             res.len(),
-            res.len() as f64 / dt.as_secs_f64()
         );
     }
+    let scaling = coord_sps[1] / coord_sps[0];
+    println!("  coordinator scaling 4w/1w: {scaling:.2}×");
+
+    emit_json_file(
+        "BENCH_hotpath.json",
+        &Json::obj(vec![
+            ("bench", "hotpath".into()),
+            ("model", net.name.as_str().into()),
+            ("timesteps", mcfg.timesteps.into()),
+            ("reference_samples_per_s", reference_sps.into()),
+            ("chip_samples_per_s", chip_sps.into()),
+            ("chip_synaptic_events_per_s", events_per_s.into()),
+            ("low_activity_rate", low_rate.into()),
+            ("chip_low_activity_samples_per_s", chip_low_sps.into()),
+            (
+                "coordinator",
+                Json::obj(vec![
+                    ("batch", 256usize.into()),
+                    ("workers_1_samples_per_s", coord_sps[0].into()),
+                    ("workers_4_samples_per_s", coord_sps[1].into()),
+                    ("scaling_4w_over_1w", scaling.into()),
+                ]),
+            ),
+        ]),
+    );
 }

@@ -174,6 +174,20 @@ impl Table {
     }
 }
 
+/// Persist a machine-readable bench artifact: writes `filename` into
+/// `MENAGE_BENCH_DIR` (if set) or the current directory. Used for the
+/// cross-PR perf trajectory (`BENCH_hotpath.json`). Errors are printed,
+/// not fatal — benches must not die on a read-only checkout.
+pub fn emit_json_file(filename: &str, j: &Json) {
+    let dir = std::env::var("MENAGE_BENCH_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&dir).join(filename);
+    let _ = std::fs::create_dir_all(&dir);
+    match std::fs::write(&path, j.to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+}
+
 /// Print (and optionally persist) a figure series.
 pub fn emit_series(name: &str, x: &[f64], y: &[f64]) {
     assert_eq!(x.len(), y.len());

@@ -4,24 +4,35 @@
 //! is deliberately thin (per the architecture brief): process lifecycle, a
 //! multi-worker request loop with batching, metrics, and the golden-model
 //! cross-check. tokio is not available in the offline vendor set, so the
-//! runtime is std::thread workers + mpsc channels — an arrangement that is
+//! runtime is std::thread workers + a shared queue — an arrangement that is
 //! arguably better suited to a CPU-bound simulator anyway (no async I/O on
 //! the hot path).
+//!
+//! Scheduling: requests go into one shared work-stealing queue
+//! (`Mutex<VecDeque>` + condvar — no extra deps) from which every idle
+//! worker pulls. Unlike the previous round-robin assignment, one slow
+//! sample can no longer idle the other W−1 workers while their private
+//! queues sit empty: whoever finishes first steals the next request.
 //!
 //! Topology:
 //!
 //! ```text
-//!            requests                 results
-//!   client ───────────► [dispatcher] ────────► client
-//!                         │  round-robin
-//!              ┌──────────┼──────────┐
+//!            requests                       results
+//!   client ───────────► [shared deque] ──────────► client
+//!                        ▲ steal  ▲ steal
+//!              ┌─────────┼────────┼───────┐
 //!          [worker 0] [worker 1] … [worker W-1]
 //!           Menage      Menage       Menage      (one chip clone each)
 //! ```
+//!
+//! Consumption: [`Coordinator::drain`] blocks for everything in flight and
+//! returns submission order; [`Coordinator::run_batch_streaming`] yields
+//! responses in *completion* order as they arrive.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -77,114 +88,158 @@ impl Metrics {
     }
 }
 
-enum WorkerMsg {
-    Work(Request),
-    Shutdown,
+/// The shared work-stealing queue: pending requests plus the shutdown
+/// latch, guarded by one mutex; the condvar wakes idle workers.
+struct SharedQueue {
+    state: Mutex<QueueState>,
+    available: Condvar,
 }
 
-/// Multi-worker inference service over cloned [`Menage`] chips.
+struct QueueState {
+    jobs: VecDeque<Request>,
+    /// When set, workers exit once the queue is empty (pending jobs are
+    /// still drained first).
+    shutdown: bool,
+}
+
+impl SharedQueue {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Block until a job is available (returns `None` on shutdown with an
+    /// empty queue).
+    fn steal(&self) -> Option<Request> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(req) = s.jobs.pop_front() {
+                return Some(req);
+            }
+            if s.shutdown {
+                return None;
+            }
+            s = self.available.wait(s).unwrap();
+        }
+    }
+
+    fn push(&self, req: Request) {
+        self.state.lock().unwrap().jobs.push_back(req);
+        self.available.notify_one();
+    }
+
+    fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.available.notify_all();
+    }
+}
+
+/// Multi-worker inference service over cloned [`Menage`] chips with a
+/// shared work-stealing request queue (module docs).
 pub struct Coordinator {
     workers: Vec<JoinHandle<Menage>>,
-    senders: Vec<Sender<WorkerMsg>>,
+    queue: Arc<SharedQueue>,
     results_rx: Receiver<Result<Response>>,
     pub metrics: Arc<Metrics>,
     next_id: u64,
-    next_worker: usize,
     in_flight: usize,
     started: Instant,
 }
 
 impl Coordinator {
-    /// Spawn `num_workers` workers, each owning a clone of `chip`.
+    /// Spawn `num_workers` workers, each owning a clone of `chip`, all
+    /// pulling from one shared queue.
     pub fn new(chip: &Menage, num_workers: usize) -> Self {
         assert!(num_workers > 0);
         let metrics = Arc::new(Metrics::default());
+        let queue = Arc::new(SharedQueue::new());
         let (results_tx, results_rx) = mpsc::channel::<Result<Response>>();
         let mut workers = Vec::with_capacity(num_workers);
-        let mut senders = Vec::with_capacity(num_workers);
         for _ in 0..num_workers {
-            let (tx, rx) = mpsc::channel::<WorkerMsg>();
             let results_tx = results_tx.clone();
             let metrics = Arc::clone(&metrics);
+            let queue = Arc::clone(&queue);
             let mut chip = chip.clone();
             workers.push(std::thread::spawn(move || {
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        WorkerMsg::Shutdown => break,
-                        WorkerMsg::Work(req) => {
-                            let t0 = Instant::now();
-                            let res = chip.run(&req.input).map(|out| {
-                                let predicted = out.predicted_class();
-                                let sim_latency = t0.elapsed();
-                                metrics.completed.fetch_add(1, Ordering::Relaxed);
-                                metrics
-                                    .total_cycles
-                                    .fetch_add(out.cycles, Ordering::Relaxed);
-                                if let Some(label) = req.label {
-                                    metrics.labelled.fetch_add(1, Ordering::Relaxed);
-                                    if label == predicted {
-                                        metrics.correct.fetch_add(1, Ordering::Relaxed);
-                                    }
-                                }
-                                metrics
-                                    .latency
-                                    .lock()
-                                    .unwrap()
-                                    .add(sim_latency.as_secs_f64());
-                                Response {
-                                    id: req.id,
-                                    predicted,
-                                    cycles: out.cycles,
-                                    sim_latency,
-                                    label: req.label,
-                                }
-                            });
-                            if results_tx.send(res).is_err() {
-                                break; // coordinator dropped
+                let mut out = crate::accel::RunOutput::default();
+                while let Some(req) = queue.steal() {
+                    let t0 = Instant::now();
+                    let res = chip.run_into(&req.input, &mut out).map(|()| {
+                        let predicted = out.predicted_class();
+                        let sim_latency = t0.elapsed();
+                        metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        metrics
+                            .total_cycles
+                            .fetch_add(out.cycles, Ordering::Relaxed);
+                        if let Some(label) = req.label {
+                            metrics.labelled.fetch_add(1, Ordering::Relaxed);
+                            if label == predicted {
+                                metrics.correct.fetch_add(1, Ordering::Relaxed);
                             }
                         }
+                        metrics
+                            .latency
+                            .lock()
+                            .unwrap()
+                            .add(sim_latency.as_secs_f64());
+                        Response {
+                            id: req.id,
+                            predicted,
+                            cycles: out.cycles,
+                            sim_latency,
+                            label: req.label,
+                        }
+                    });
+                    if results_tx.send(res).is_err() {
+                        break; // coordinator dropped
                     }
                 }
                 chip
             }));
-            senders.push(tx);
         }
         Self {
             workers,
-            senders,
+            queue,
             results_rx,
             metrics,
             next_id: 0,
-            next_worker: 0,
             in_flight: 0,
             started: Instant::now(),
         }
     }
 
-    /// Submit a request (round-robin across workers). Returns its id.
+    /// Submit a request to the shared queue (any idle worker will pick it
+    /// up). Returns its id.
     pub fn submit(&mut self, input: SpikeTrain, label: Option<usize>) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        let w = self.next_worker;
-        self.next_worker = (self.next_worker + 1) % self.senders.len();
-        self.senders[w]
-            .send(WorkerMsg::Work(Request { id, input, label }))
-            .expect("worker channel closed");
+        self.queue.push(Request { id, input, label });
         self.in_flight += 1;
         id
     }
 
-    /// Block until one result is available.
+    /// Number of submitted requests whose responses have not been received.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Block until one result is available. A received `Err` still counts
+    /// as a consumed in-flight request (so a failed sample cannot make
+    /// [`Self::drain`] wait forever).
     pub fn recv(&mut self) -> Result<Response> {
         let res = self
             .results_rx
             .recv()
-            .map_err(|_| anyhow!("all workers terminated"))??;
+            .map_err(|_| anyhow!("all workers terminated"))?;
+        // Decrement before propagating a worker error: the request is done
+        // either way.
         self.in_flight -= 1;
-        Ok(res)
+        res
     }
 
-    /// Drain all in-flight requests.
+    /// Drain all in-flight requests, returning them in submission order.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::with_capacity(self.in_flight);
         while self.in_flight > 0 {
@@ -194,7 +249,8 @@ impl Coordinator {
         Ok(out)
     }
 
-    /// Submit a whole labelled batch and wait for every result.
+    /// Submit a whole labelled batch and wait for every result (submission
+    /// order).
     pub fn run_batch(
         &mut self,
         inputs: Vec<(SpikeTrain, Option<usize>)>,
@@ -205,21 +261,62 @@ impl Coordinator {
         self.drain()
     }
 
+    /// Submit a whole labelled batch and return an iterator that yields
+    /// each response **as it completes** (completion order, not submission
+    /// order) — lets the caller stream results while slow samples are
+    /// still in flight. Dropping the iterator leaves the remaining
+    /// responses in flight; [`Self::drain`] collects them.
+    pub fn run_batch_streaming(
+        &mut self,
+        inputs: Vec<(SpikeTrain, Option<usize>)>,
+    ) -> StreamingResults<'_> {
+        for (input, label) in inputs {
+            self.submit(input, label);
+        }
+        StreamingResults { coordinator: self }
+    }
+
     /// Requests/sec since construction.
     pub fn throughput(&self) -> f64 {
         self.metrics.throughput(self.started.elapsed())
     }
 
-    /// Shut down workers and return their chips (with accumulated stats);
-    /// the first chip's statistics cover ~1/W of the traffic each.
-    pub fn shutdown(self) -> Vec<Menage> {
-        for tx in &self.senders {
-            let _ = tx.send(WorkerMsg::Shutdown);
-        }
-        self.workers
+    /// Shut down workers (pending requests are still processed) and return
+    /// their chips (with accumulated stats).
+    pub fn shutdown(mut self) -> Vec<Menage> {
+        self.queue.shutdown();
+        std::mem::take(&mut self.workers)
             .into_iter()
             .map(|h| h.join().expect("worker panicked"))
             .collect()
+    }
+}
+
+impl Drop for Coordinator {
+    /// A coordinator dropped without [`Coordinator::shutdown`] must not
+    /// leave workers parked on the condvar forever: raise the shutdown
+    /// latch so they drain the queue and exit on their own (they are not
+    /// joined here).
+    fn drop(&mut self) {
+        self.queue.shutdown();
+    }
+}
+
+/// Completion-order response stream over everything currently in flight
+/// (see [`Coordinator::run_batch_streaming`]).
+pub struct StreamingResults<'a> {
+    coordinator: &'a mut Coordinator,
+}
+
+impl Iterator for StreamingResults<'_> {
+    type Item = Result<Response>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.coordinator.in_flight == 0 {
+            None
+        } else {
+            Some(self.coordinator.recv())
+        }
     }
 }
 
@@ -322,6 +419,98 @@ mod tests {
         assert_eq!(coord.metrics.labelled.load(Ordering::Relaxed), 10);
         let lat = coord.metrics.latency.lock().unwrap().clone();
         assert_eq!(lat.count(), 10);
+        coord.shutdown();
+    }
+
+    /// Build one very heavy input (many busy timesteps) and `n` light ones.
+    fn skewed_inputs(n: usize) -> Vec<(SpikeTrain, Option<usize>)> {
+        // The heavy sample must dominate even a single-vCPU scheduler's
+        // timeslice (~1500 busy steps vs 2 per light sample), so the other
+        // worker always drains a light request before it finishes.
+        let heavy = {
+            let mut rng = Rng::new(77);
+            let mut st = SpikeTrain::new(30, 1500);
+            for step in st.spikes.iter_mut() {
+                for i in 0..30 {
+                    if rng.bernoulli(0.5) {
+                        step.push(i as u32);
+                    }
+                }
+            }
+            (st, Some(0))
+        };
+        let mut v = vec![heavy];
+        for s in 0..n {
+            let mut rng = Rng::new(2000 + s as u64);
+            let mut st = SpikeTrain::new(30, 2);
+            for step in st.spikes.iter_mut() {
+                for i in 0..30 {
+                    if rng.bernoulli(0.1) {
+                        step.push(i as u32);
+                    }
+                }
+            }
+            v.push((st, Some(0)));
+        }
+        v
+    }
+
+    /// With heterogeneous per-sample latencies and >1 worker, streaming
+    /// yields light samples while the heavy one (submitted first) is still
+    /// running — completion order ≠ submission order — while a subsequent
+    /// drain()-based batch still returns submission order.
+    #[test]
+    fn streaming_yields_completion_order_drain_yields_submission_order() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::new(&chip, 2);
+
+        let completion: Vec<u64> = coord
+            .run_batch_streaming(skewed_inputs(8))
+            .map(|r| r.unwrap().id)
+            .collect();
+        assert_eq!(completion.len(), 9);
+        let mut sorted = completion.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..9).collect::<Vec<u64>>(), "all ids accounted for");
+        // The heavy request has id 0 and was submitted first; a second
+        // worker finishes (several) light samples long before it.
+        assert_ne!(
+            completion[0], 0,
+            "heavy sample finished first — streaming produced submission order"
+        );
+        assert_eq!(coord.in_flight(), 0);
+
+        // Same skewed workload through the blocking API: submission order.
+        let res = coord.run_batch(skewed_inputs(8)).unwrap();
+        let ids: Vec<u64> = res.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (9..18).collect::<Vec<u64>>(), "drain must sort by id");
+        coord.shutdown();
+    }
+
+    /// A worker error (wrong input width) must still decrement the
+    /// in-flight count, so drain() terminates and the coordinator stays
+    /// usable afterwards.
+    #[test]
+    fn worker_error_does_not_leak_in_flight() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::new(&chip, 2);
+        coord.submit(SpikeTrain::new(99, 6), None); // wrong width → Err
+        assert_eq!(coord.in_flight(), 1);
+        assert!(coord.recv().is_err());
+        assert_eq!(coord.in_flight(), 0, "recv leaked in_flight on Err");
+        // drain() over an empty in-flight set returns immediately.
+        assert!(coord.drain().unwrap().is_empty());
+        // And the service still works.
+        let res = coord.run_batch(inputs(4)).unwrap();
+        assert_eq!(res.len(), 4);
+        // Mixed batch: drain propagates the error but does not over-wait.
+        coord.submit(SpikeTrain::new(99, 6), None);
+        for (st, l) in inputs(3) {
+            coord.submit(st, l);
+        }
+        assert!(coord.drain().is_err());
+        let leftover = coord.drain().unwrap().len();
+        assert!(leftover <= 3, "over-waited: {leftover}");
         coord.shutdown();
     }
 

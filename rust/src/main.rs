@@ -31,7 +31,7 @@ use menage::coordinator::Coordinator;
 use menage::datasets::{Dataset, DatasetKind};
 use menage::energy::{report, EnergyModel};
 use menage::mapping::{map_network, Strategy};
-use menage::runtime::{artifacts_dir, cpu_client, GoldenModel};
+use menage::runtime::{artifacts_dir, cpu_client, pjrt_available, GoldenModel};
 use menage::snn::{QuantNetwork, SpikeTrain};
 use menage::trace::MemoryTrace;
 use menage::util::json::Json;
@@ -260,9 +260,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let responses = coord.run_batch(batch)?;
     let wall = t0.elapsed();
 
-    // Optional golden cross-check through PJRT.
+    // Optional golden cross-check through PJRT (skipped, not fatal, on a
+    // build without the `pjrt` feature).
     let mut golden_agree = None;
-    if args.has("golden") {
+    if args.has("golden") && !pjrt_available() {
+        eprintln!("--golden skipped: built without the `pjrt` cargo feature");
+    } else if args.has("golden") {
         let client = cpu_client()?;
         let hlo = artifacts_dir().join(format!("{base}.hlo.txt"));
         let gm = GoldenModel::load(

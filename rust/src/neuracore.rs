@@ -29,6 +29,35 @@
 //! M·N capacitors), the controller replays the step's events once per
 //! round with the round's MEM image — the paper's capacitor reassignment.
 //! Cycle and energy accounting include the replay cost.
+//!
+//! # Perf pass: activity-tracked sweep and event coalescing
+//!
+//! The simulator's wall-clock cost tracks *activity* (spikes), not
+//! *capacity* (residents). Two invariant-preserving shortcuts:
+//!
+//! * **Activity-tracked sweep.** Each round keeps a per-slot dirty flag:
+//!   a slot is dirty when its state differs from the quiescent fixed point
+//!   (`mem == v_reset`, `acc == 0`, `err == 0`). The end-of-step sweep
+//!   *skips the arithmetic* for clean slots — valid only when the leak is
+//!   provably a no-op at the fixed point (`β·v_reset == v_reset` bit-exact
+//!   in f32, below threshold, zero hold droop), which `sweep_skip` checks
+//!   once at construction; otherwise every slot stays permanently dirty
+//!   and the sweep is dense, bit-identical to the naive loop. **What must
+//!   still be counted:** the hardware sweeps every occupied capacitor
+//!   regardless of charge, so `fire_ops` charges one op per resident per
+//!   step and the sweep's cycle cost stays the per-round max engine
+//!   occupancy (precomputed — occupancy is static). Only simulator-side
+//!   arithmetic is elided; no [`CoreStats`] counter changes.
+//! * **Event coalescing.** In ideal-analog mode duplicate MEM_E entries
+//!   for the same source are dispatched as (event, multiplicity): the
+//!   CSR row slice is streamed once and deposits `w·mult` (exact in i32).
+//!   **What must still be counted:** the controller pops each event
+//!   individually, so `events_dispatched`, `cycles`, `sn_rows_read`,
+//!   `macs` and `integrations` are all charged ×multiplicity. Non-ideal
+//!   mode dispatches per event (the error sidecar is per-deposit).
+//!
+//! Residents are iterated in destination-id order, so each round emits its
+//! spikes pre-sorted and the common single-round case needs no output sort.
 
 use std::sync::Arc;
 
@@ -79,6 +108,33 @@ struct RoundState {
     acc: Vec<i32>,
     /// Accumulated analog deviation per slot (0 in ideal mode).
     err: Vec<f64>,
+    /// Activity tracking (perf §module docs): `true` when the slot's state
+    /// differs from the quiescent fixed point and the sweep must do full
+    /// arithmetic. All-`true` forever when `sweep_skip` is disabled.
+    dirty: Vec<bool>,
+}
+
+/// Whether `v_reset` is a quiescent fixed point of the sweep: a slot with
+/// `mem == v_reset`, `acc == 0`, `err == 0` must come out of the full
+/// leak/integrate/compare arithmetic bit-identical and below threshold.
+/// When this holds the sweep may skip clean slots (module docs); when it
+/// does not (e.g. `β·v_reset != v_reset`), skipping is disabled and every
+/// slot stays dirty forever.
+fn quiescent_fixed_point(lif: &LifParams, analog: &AnalogParams) -> bool {
+    let ideal = analog.c2c_mismatch_sigma == 0.0
+        && analog.switch_injection == 0.0
+        && analog.hold_leak == 0.0
+        && !analog.v_sat.is_finite();
+    let q = lif.v_reset;
+    // Mirror the sweep arithmetic exactly, with acc == 0 and err == 0.
+    let mut v = lif.beta * q;
+    if !ideal {
+        v -= (q * analog.hold_leak as f32).abs();
+        if analog.v_sat.is_finite() {
+            v = v.clamp(-analog.v_sat as f32, analog.v_sat as f32);
+        }
+    }
+    v == q && v < lif.v_threshold
 }
 
 /// One MX-NEURACORE instance with loaded control memories.
@@ -90,9 +146,16 @@ pub struct NeuraCore {
     /// and large (MEM_S&N rows + weight SRAM), so coordinator workers share
     /// one copy — chip cloning is O(state), not O(model).
     image: Arc<CoreImage>,
-    /// Flattened `(slot, dst)` residents per round — the end-of-step sweep
-    /// iterates this instead of the BTreeMap (perf pass §Perf item 5).
-    residents_flat: Vec<Vec<((u16, u16), u32)>>,
+    /// Flattened `(slot = j·N+k, dst)` residents per round, **sorted by
+    /// destination id** so the sweep emits spikes pre-sorted (see module
+    /// docs) — iterated instead of the BTreeMap.
+    residents_sorted: Vec<Vec<(u32, u32)>>,
+    /// Per-round sweep cycle cost (max per-engine occupancy) — static,
+    /// precomputed.
+    sweep_cost: Vec<u64>,
+    /// Whether the quiescent fixed point allows skipping clean slots in the
+    /// sweep (see module docs).
+    sweep_skip: bool,
     /// Compact CSR mirror of each round's MEM_S&N: row `r` covers
     /// `row_entries[round][rows_index[round][r] .. rows_index[round][r+1]]`
     /// as `(engine, virt, weight)` — the dispatch loop skips empty engine
@@ -113,12 +176,17 @@ pub struct NeuraCore {
     /// Capacitors per A-NEURON (N).
     caps_per_engine: usize,
     pub stats: CoreStats,
-    /// Scratch per-engine occupancy counter (hot-path reuse).
-    sweep_count: Vec<u64>,
     /// Scratch per-engine MAC counter, flushed to the A-SYN energy
     /// accounts once per step (perf: keeps the dispatch inner loop free of
     /// bookkeeping float adds).
     mac_count: Vec<u64>,
+    /// Test/debug knob: do full sweep arithmetic for every resident slot,
+    /// ignoring the dirty flags (the pre-perf-pass behaviour). Used by the
+    /// differential regression tests; keep `false` in production.
+    pub force_dense_sweep: bool,
+    /// Test/debug knob: dispatch each MEM_E entry individually instead of
+    /// coalescing duplicates. Used by the differential regression tests.
+    pub force_per_event_dispatch: bool,
 }
 
 impl NeuraCore {
@@ -148,6 +216,7 @@ impl NeuraCore {
                 ASyn::new(cfg.weight_bits, analog, Some(&mut fork))
             })
             .collect();
+        let sweep_skip = quiescent_fixed_point(&lif, analog);
         let state = image
             .rounds
             .iter()
@@ -155,12 +224,32 @@ impl NeuraCore {
                 mem: vec![lif.v_reset; m * n],
                 acc: vec![0i32; m * n],
                 err: vec![0.0f64; m * n],
+                dirty: vec![!sweep_skip; m * n],
             })
             .collect();
-        let residents_flat = image
+        let residents_sorted: Vec<Vec<(u32, u32)>> = image
             .rounds
             .iter()
-            .map(|r| r.residents.iter().map(|(&s, &d)| (s, d)).collect())
+            .map(|r| {
+                let mut v: Vec<(u32, u32)> = r
+                    .residents
+                    .iter()
+                    .map(|(&(j, k), &d)| ((j as usize * n + k as usize) as u32, d))
+                    .collect();
+                v.sort_unstable_by_key(|&(_, d)| d);
+                v
+            })
+            .collect();
+        let sweep_cost: Vec<u64> = image
+            .rounds
+            .iter()
+            .map(|r| {
+                let mut per_engine = vec![0u64; m];
+                for (&(j, _), _) in r.residents.iter() {
+                    per_engine[j as usize] += 1;
+                }
+                per_engine.into_iter().max().unwrap_or(0)
+            })
             .collect();
         let mut rows_index = Vec::with_capacity(image.rounds.len());
         let mut row_entries = Vec::with_capacity(image.rounds.len());
@@ -182,7 +271,9 @@ impl NeuraCore {
         Ok(Self {
             index,
             image: Arc::new(image),
-            residents_flat,
+            residents_sorted,
+            sweep_cost,
+            sweep_skip,
             rows_index,
             row_entries,
             lif,
@@ -193,8 +284,9 @@ impl NeuraCore {
             event_mem_depth: cfg.event_mem_depth,
             caps_per_engine: n,
             stats: CoreStats::default(),
-            sweep_count: vec![0u64; m],
             mac_count: vec![0u64; m],
+            force_dense_sweep: false,
+            force_per_event_dispatch: false,
         })
     }
 
@@ -237,32 +329,69 @@ impl NeuraCore {
     /// Execute one global time step: dispatch all latched events through
     /// every round, sweep fire/leak, return the emitted spikes (destination
     /// layer neuron ids, sorted ascending).
+    ///
+    /// Allocates a fresh output vector; the hot path ([`crate::accel`])
+    /// uses [`Self::step_into`] with a reused buffer instead.
     pub fn step(&mut self) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.step_into(&mut out);
+        out
+    }
+
+    /// [`Self::step`] writing the emitted spikes into a caller-owned buffer
+    /// (cleared first) — allocation-free on the steady state.
+    pub fn step_into(&mut self, out: &mut Vec<u32>) {
+        out.clear();
         let m = self.image.num_engines;
         let n = self.caps_per_engine;
         let scale = self.image.scale;
         let ideal = self.is_ideal();
-        let mut out: Vec<u32> = Vec::new();
+        // Duplicate-event coalescing is exact only for the integer charge
+        // path; the analog sidecar models per-deposit effects (module docs).
+        let coalesce = ideal && !self.force_per_event_dispatch;
         let mut cycles_this_step = 0u64;
         let mut rows_this_step = 0u64;
+
+        let mut queue = std::mem::take(&mut self.event_queue);
+        if coalesce && queue.len() > 1 && !queue.windows(2).all(|w| w[0] <= w[1]) {
+            queue.sort_unstable();
+        }
 
         let num_rounds = self.image.rounds.len();
         for round_idx in 0..num_rounds {
             let round = &self.image.rounds[round_idx];
             let st = &mut self.state[round_idx];
+            let residents = &self.residents_sorted[round_idx];
             // Capacitor reassignment cost: reloading parked state for
             // non-resident rounds takes occupied/m cycles of charge
             // transfer.
             if num_rounds > 1 {
-                cycles_this_step +=
-                    (round.residents.len() as u64).div_ceil(m as u64);
+                cycles_this_step += (residents.len() as u64).div_ceil(m as u64);
             }
 
-            // Dispatch every latched event through this round's image.
-            for &src in &self.event_queue {
+            // Dispatch every latched event through this round's image,
+            // duplicates as (event, multiplicity) runs when coalescing.
+            let ridx = &self.rows_index[round_idx];
+            let ents = &self.row_entries[round_idx];
+            let mut i = 0usize;
+            while i < queue.len() {
+                let src = queue[i];
+                let mult = if coalesce {
+                    let mut c = 1usize;
+                    while i + c < queue.len() && queue[i + c] == src {
+                        c += 1;
+                    }
+                    c
+                } else {
+                    1
+                };
+                i += mult;
+                let mult_u = mult as u64;
                 let s = src as usize;
-                self.stats.events_dispatched += 1;
-                cycles_this_step += 1; // MEM_E pop + MEM_E2A read
+                // The controller pops each event individually: all costs
+                // are charged per dispatched event (×mult).
+                self.stats.events_dispatched += mult_u;
+                cycles_this_step += mult_u; // MEM_E pop + MEM_E2A read
                 if s >= round.e2a.len() {
                     continue;
                 }
@@ -270,30 +399,33 @@ impl NeuraCore {
                 if e2a.count == 0 {
                     continue;
                 }
-                cycles_this_step += e2a.count as u64; // one MEM_S&N row/cycle
-                rows_this_step += e2a.count as u64;
-                self.stats.sn_rows_read += e2a.count as u64;
-                let ridx = &self.rows_index[round_idx];
+                cycles_this_step += mult_u * e2a.count as u64; // one MEM_S&N row/cycle
+                rows_this_step += mult_u * e2a.count as u64;
+                self.stats.sn_rows_read += mult_u * e2a.count as u64;
                 let lo = ridx[e2a.start as usize] as usize;
                 let hi = ridx[(e2a.start + e2a.count) as usize] as usize;
-                let entries = &self.row_entries[round_idx][lo..hi];
-                self.stats.macs += entries.len() as u64;
-                self.stats.integrations += entries.len() as u64;
+                let entries = &ents[lo..hi];
+                self.stats.macs += mult_u * entries.len() as u64;
+                self.stats.integrations += mult_u * entries.len() as u64;
                 if ideal {
-                    // Ideal C2C deposit: exactly w (integer charge). The
-                    // bookkeeping (per-engine MAC energy) is batched into
-                    // `mac_count` and flushed once per step.
+                    // Ideal C2C deposit: exactly w·mult (integer charge,
+                    // exact). The bookkeeping (per-engine MAC energy) is
+                    // batched into `mac_count` and flushed once per step.
                     for &(j, virt, w) in entries {
-                        st.acc[j as usize * n + virt as usize] += w as i32;
-                        self.mac_count[j as usize] += 1;
+                        let slot = j as usize * n + virt as usize;
+                        st.acc[slot] += w as i32 * mult as i32;
+                        st.dirty[slot] = true;
+                        self.mac_count[j as usize] += mult_u;
                     }
                 } else {
                     // Analog sidecar: deviation of the real C2C packet
-                    // from ideal, plus switch injection per deposit.
+                    // from ideal, plus switch injection per deposit
+                    // (mult == 1 on this path).
                     for &(j, virt, w) in entries {
                         let j = j as usize;
                         let slot = j * n + virt as usize;
                         st.acc[slot] += w as i32;
+                        st.dirty[slot] = true;
                         self.mac_count[j] += 1;
                         let real = self.syns[j]
                             .ladder
@@ -309,14 +441,18 @@ impl NeuraCore {
             }
 
             // End-of-step sweep for this round: leak + integrate + compare.
-            // Engines sweep their occupied capacitors in parallel; cycles =
-            // max per-engine occupancy.
-            self.sweep_count.fill(0);
-            for &((j, k), dst) in &self.residents_flat[round_idx] {
-                let (j, k) = (j as usize, k as usize);
-                let slot = j * n + k;
-                self.sweep_count[j] += 1;
-                self.stats.fire_ops += 1;
+            // The hardware sweeps every occupied capacitor — `fire_ops` and
+            // the cycle cost (max per-engine occupancy, static) charge all
+            // residents — but the simulator only does the arithmetic for
+            // dirty slots (module docs: activity-tracked sweep).
+            self.stats.fire_ops += residents.len() as u64;
+            let skip = self.sweep_skip;
+            let q = self.lif.v_reset;
+            for &(slot, dst) in residents {
+                let slot = slot as usize;
+                if !self.force_dense_sweep && !st.dirty[slot] {
+                    continue; // provably a no-op (quiescent fixed point)
+                }
                 // Reference-exact arithmetic (see module docs).
                 let mut v =
                     self.lif.beta * st.mem[slot] + st.acc[slot] as f32 * scale;
@@ -332,13 +468,17 @@ impl NeuraCore {
                 st.err[slot] = 0.0;
                 if v >= self.lif.v_threshold {
                     out.push(dst);
-                    st.mem[slot] = self.lif.v_reset;
+                    st.mem[slot] = q;
                     self.stats.spikes_out += 1;
+                    // Post-fire state is (v_reset, 0, 0): clean iff that is
+                    // the quiescent fixed point.
+                    st.dirty[slot] = !skip;
                 } else {
                     st.mem[slot] = v;
+                    st.dirty[slot] = !(skip && v == q);
                 }
             }
-            cycles_this_step += self.sweep_count.iter().copied().max().unwrap_or(0);
+            cycles_this_step += self.sweep_cost[round_idx];
         }
 
         // Flush the batched per-engine MAC accounting.
@@ -350,12 +490,17 @@ impl NeuraCore {
         }
         self.mac_count.fill(0);
 
-        self.event_queue.clear();
+        queue.clear();
+        self.event_queue = queue; // hand the (empty) buffer back for reuse
         self.stats.cycles += cycles_this_step;
         self.stats.cycles_per_step.push(cycles_this_step);
         self.stats.sn_rows_touched_per_step.push(rows_this_step);
-        out.sort_unstable();
-        out
+        // Each round emits in ascending dst order; with one round the
+        // output is already sorted. Multi-round interleavings are rare —
+        // sort only when actually violated.
+        if num_rounds > 1 && !out.windows(2).all(|w| w[0] <= w[1]) {
+            out.sort_unstable();
+        }
     }
 
     /// Reset membrane state (between inputs) without clearing statistics.
@@ -364,6 +509,7 @@ impl NeuraCore {
             st.mem.fill(self.lif.v_reset);
             st.acc.fill(0);
             st.err.fill(0.0);
+            st.dirty.fill(!self.sweep_skip);
         }
         self.event_queue.clear();
     }
@@ -632,6 +778,129 @@ mod tests {
             * AnalogParams::paper().neuron_energy_per_op
             + core.stats.macs as f64 * core.mac_energy();
         assert!((core.analog_energy() - expected).abs() / expected < 1e-9);
+    }
+
+    /// Differential regression: the activity-tracked sweep and event
+    /// coalescing must leave every [`CoreStats`] counter AND the output
+    /// spikes bit-identical to the dense/per-event execution path
+    /// (`force_dense_sweep` / `force_per_event_dispatch` replicate the
+    /// pre-perf-pass behaviour).
+    #[test]
+    fn sparse_execution_stats_match_dense_execution() {
+        for (seed, m, n) in [(21u64, 4usize, 4usize), (22, 3, 5), (23, 5, 2)] {
+            let layer = random_layer(40, 24, 0.4, seed);
+            let cfg = small_cfg(m, n);
+            let input = random_input(40, 15, 0.12, seed + 100);
+
+            let mut fast = build_core(&layer, &cfg, true);
+            let out_fast = run_core(&mut fast, &input);
+
+            let mut dense = build_core(&layer, &cfg, true);
+            dense.force_dense_sweep = true;
+            dense.force_per_event_dispatch = true;
+            let out_dense = run_core(&mut dense, &input);
+
+            assert_eq!(out_fast.spikes, out_dense.spikes, "seed {seed}: outputs diverge");
+            let (f, d) = (&fast.stats, &dense.stats);
+            assert_eq!(f.cycles, d.cycles, "seed {seed}: cycles");
+            assert_eq!(f.fire_ops, d.fire_ops, "seed {seed}: fire_ops");
+            assert_eq!(f.macs, d.macs, "seed {seed}: macs");
+            assert_eq!(f.sn_rows_read, d.sn_rows_read, "seed {seed}: sn_rows_read");
+            assert_eq!(f.events_dispatched, d.events_dispatched, "seed {seed}");
+            assert_eq!(f.integrations, d.integrations, "seed {seed}");
+            assert_eq!(f.spikes_out, d.spikes_out, "seed {seed}");
+            assert_eq!(f.cycles_per_step, d.cycles_per_step, "seed {seed}");
+            assert_eq!(
+                f.sn_rows_touched_per_step, d.sn_rows_touched_per_step,
+                "seed {seed}"
+            );
+            assert!(
+                (fast.analog_energy() - dense.analog_energy()).abs() <= f64::EPSILON,
+                "seed {seed}: energy accounting diverges"
+            );
+        }
+    }
+
+    /// Duplicate MEM_E entries (same source spiking "twice" in a step, as a
+    /// caller may inject) must behave identically coalesced or not —
+    /// including the ×multiplicity cycle/row/MAC accounting.
+    #[test]
+    fn coalesced_duplicates_match_per_event_dispatch() {
+        let layer = random_layer(20, 12, 0.3, 31);
+        let cfg = small_cfg(4, 3);
+        // Deliberately unsorted with duplicates: exercises the sort +
+        // run-length path.
+        let events: Vec<u32> = vec![5, 1, 5, 5, 2, 1, 9, 9];
+
+        let mut fast = build_core(&layer, &cfg, true);
+        let mut dense = build_core(&layer, &cfg, true);
+        dense.force_per_event_dispatch = true;
+
+        for _ in 0..4 {
+            fast.push_events(&events);
+            dense.push_events(&events);
+            assert_eq!(fast.step(), dense.step(), "outputs diverge");
+        }
+        assert_eq!(fast.stats.cycles, dense.stats.cycles);
+        assert_eq!(fast.stats.events_dispatched, dense.stats.events_dispatched);
+        assert_eq!(fast.stats.sn_rows_read, dense.stats.sn_rows_read);
+        assert_eq!(fast.stats.macs, dense.stats.macs);
+        assert_eq!(fast.stats.integrations, dense.stats.integrations);
+        assert_eq!(fast.stats.events_dispatched as usize, 8 * 4 * fast.rounds());
+    }
+
+    /// A non-zero `v_reset` whose leak is not a fixed point must disable
+    /// sweep skipping (every slot permanently dirty) and still match the
+    /// reference bit-exactly.
+    #[test]
+    fn nonzero_v_reset_disables_skip_and_matches_reference() {
+        let lif = LifParams { beta: 0.9, v_threshold: 1.0, v_reset: 0.25 };
+        assert!(!quiescent_fixed_point(&lif, &AnalogParams::ideal()));
+        let mut rng = Rng::new(41);
+        let mut w = vec![0i8; 30 * 12];
+        for x in w.iter_mut() {
+            if !rng.bernoulli(0.4) {
+                *x = rng.range_inclusive(-127, 127) as i8;
+            }
+        }
+        let layer = QuantLayer::new(30, 12, w, 0.02, lif).unwrap();
+        let cfg = small_cfg(4, 4);
+        let net =
+            QuantNetwork { name: "vr".into(), layers: vec![layer.clone()], timesteps: 12 };
+        let input = random_input(30, 12, 0.15, 42);
+        let golden = reference_forward(&net, &input).unwrap();
+        let mut core = build_core(&layer, &cfg, true);
+        let out = run_core(&mut core, &input);
+        assert_eq!(out.spikes, golden.output().spikes, "v_reset≠0 core ≠ reference");
+    }
+
+    /// `beta == 1, v_reset == 0` IS a fixed point (no leak decay) — the
+    /// skip stays valid.
+    #[test]
+    fn quiescence_check_accepts_no_leak() {
+        let lif = LifParams { beta: 1.0, v_threshold: 1.0, v_reset: 0.0 };
+        assert!(quiescent_fixed_point(&lif, &AnalogParams::ideal()));
+        // A reset value at/above threshold would fire forever: not quiescent.
+        let hot = LifParams { beta: 1.0, v_threshold: 1.0, v_reset: 1.0 };
+        assert!(!quiescent_fixed_point(&hot, &AnalogParams::ideal()));
+    }
+
+    /// step_into reuses the caller's buffer and matches step().
+    #[test]
+    fn step_into_matches_step() {
+        let layer = random_layer(20, 8, 0.3, 51);
+        let cfg = small_cfg(2, 4);
+        let input = random_input(20, 6, 0.3, 52);
+        let mut a = build_core(&layer, &cfg, true);
+        let mut b = build_core(&layer, &cfg, true);
+        let mut buf = vec![99u32; 7]; // stale contents must be cleared
+        for t in 0..input.timesteps() {
+            a.push_events(&input.spikes[t]);
+            b.push_events(&input.spikes[t]);
+            b.step_into(&mut buf);
+            assert_eq!(a.step(), buf, "step {t}");
+        }
+        assert_eq!(a.stats.cycles, b.stats.cycles);
     }
 
     #[test]

@@ -342,6 +342,20 @@ impl SpikeTrain {
         Self { num_neurons, spikes: vec![Vec::new(); timesteps] }
     }
 
+    /// Reshape in place for buffer reuse (the allocation-free batch path):
+    /// sets the dimensions and empties every step's spike list while
+    /// keeping the per-step `Vec` allocations alive.
+    pub fn reset_to(&mut self, num_neurons: usize, timesteps: usize) {
+        self.num_neurons = num_neurons;
+        self.spikes.truncate(timesteps);
+        for step in self.spikes.iter_mut() {
+            step.clear();
+        }
+        if self.spikes.len() < timesteps {
+            self.spikes.resize_with(timesteps, Vec::new);
+        }
+    }
+
     pub fn timesteps(&self) -> usize {
         self.spikes.len()
     }
@@ -540,6 +554,20 @@ mod tests {
         // Full prune.
         l.prune_l1(1.0);
         assert_eq!(l.nnz(), 0);
+    }
+
+    #[test]
+    fn spike_train_reset_to_reuses_and_clears() {
+        let mut st = SpikeTrain::new(4, 3);
+        st.spikes[0] = vec![0, 2];
+        st.spikes[2] = vec![1];
+        st.reset_to(6, 2);
+        assert_eq!(st.num_neurons, 6);
+        assert_eq!(st.timesteps(), 2);
+        assert_eq!(st.total_spikes(), 0);
+        st.reset_to(6, 5);
+        assert_eq!(st.timesteps(), 5);
+        assert_eq!(st.total_spikes(), 0);
     }
 
     #[test]

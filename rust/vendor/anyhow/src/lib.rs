@@ -1,0 +1,213 @@
+//! Vendored, dependency-free subset of the `anyhow` crate.
+//!
+//! The hermetic build environment has no crates.io access, so this crate
+//! re-implements exactly the surface the workspace uses:
+//!
+//! * [`Error`] — boxed message + source chain, `Send + Sync`
+//! * [`Result<T>`] with the `Error` default type parameter
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — format-string constructors
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both
+//!   `Result<T, E: Into<Error>>` and `Option<T>`
+//! * blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts std errors (io, parse, utf8, …) transparently
+//!
+//! Formatting matches the real crate closely enough for logs and tests:
+//! `{}` prints the outermost message, `{:#}` prints the whole chain joined
+//! by `": "`, and `{:?}` prints the message plus a `Caused by:` list.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that would conflict with the blanket `From`.
+
+use std::fmt;
+
+/// Error type: an outermost message plus the chain of causes beneath it.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recent context) message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by [`Context`]).
+    pub fn wrap_msg(mut self, ctx: String) -> Self {
+        self.chain.insert(0, ctx);
+        self
+    }
+
+    /// The `chain[0]` outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Iterate the message chain, outermost first (mirrors
+    /// `anyhow::Error::chain` loosely — yields strings, not errors).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — full chain, colon-joined (anyhow-compatible).
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                if self.chain.len() > 2 {
+                    write!(f, "\n    {i}: {c}")?;
+                } else {
+                    write!(f, "\n    {c}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` alias with the usual default error parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors, on both `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap_msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap_msg(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(
+                "condition failed: {}",
+                stringify!($cond)
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert_eq!(v.context("absent").unwrap_err().to_string(), "absent");
+        assert_eq!(Some(3u8).with_context(|| "x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(fail: bool) -> Result<u32> {
+            ensure!(!fail, "flag was {fail}");
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(f(true).unwrap_err().to_string(), "flag was true");
+        fn g() -> Result<()> {
+            bail!("code {}", 42);
+        }
+        assert_eq!(g().unwrap_err().to_string(), "code 42");
+        let e = anyhow!("v={}", 1);
+        assert_eq!(e.to_string(), "v=1");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("5").unwrap(), 5);
+        assert!(parse("x").is_err());
+    }
+}

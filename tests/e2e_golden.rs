@@ -1,16 +1,24 @@
-//! PJRT golden-model integration tests — require `make artifacts`.
+//! PJRT golden-model integration tests — require `make artifacts` (and,
+//! for the live-PJRT case, a build with the `pjrt` cargo feature).
 //!
-//! Skipped (with a message) when artifacts are absent so `cargo test`
-//! works on a fresh checkout; the Makefile's `test` target builds
-//! artifacts first, making these the real cross-language check:
-//! rust cycle-accurate simulator ≡ recorded python goldens ≡ live
+//! These are environment-gated so `cargo test -q` reflects *simulator*
+//! health, not missing artifacts or an absent PJRT runtime:
+//!
+//! * artifacts missing (fresh checkout, no `make artifacts`) → each test
+//!   prints a skip message and passes;
+//! * `MENAGE_SKIP_E2E=1` → skipped unconditionally;
+//! * built without the `pjrt` feature → the live-PJRT test skips itself
+//!   (the recorded-golden tests still run when artifacts exist).
+//!
+//! With artifacts and a `pjrt` build these are the real cross-language
+//! check: rust cycle-accurate simulator ≡ recorded python goldens ≡ live
 //! PJRT-executed JAX/Pallas model.
 
 use menage::accel::Menage;
 use menage::analog::AnalogParams;
 use menage::config::AcceleratorConfig;
 use menage::mapping::Strategy;
-use menage::runtime::{artifacts_dir, cpu_client, GoldenModel};
+use menage::runtime::{artifacts_dir, cpu_client, pjrt_available, GoldenModel};
 use menage::snn::{reference_forward, QuantNetwork, SpikeTrain};
 use menage::util::tensorfile::TensorFile;
 
@@ -56,15 +64,24 @@ fn load(base: &str, limit: usize) -> Option<Eval> {
 }
 
 macro_rules! require_artifacts {
-    ($base:expr, $limit:expr) => {
+    ($base:expr, $limit:expr) => {{
+        if std::env::var("MENAGE_SKIP_E2E").map(|v| v == "1").unwrap_or(false) {
+            eprintln!("skipping: MENAGE_SKIP_E2E=1");
+            return;
+        }
         match load($base, $limit) {
             Some(e) => e,
             None => {
-                eprintln!("skipping: artifacts for {} missing (run `make artifacts`)", $base);
+                eprintln!(
+                    "skipping: artifacts for {} missing under {} (run `make artifacts` \
+                     or set MENAGE_ARTIFACTS)",
+                    $base,
+                    artifacts_dir().display()
+                );
                 return;
             }
         }
-    };
+    }};
 }
 
 /// The rust reference model must reproduce python's recorded golden counts
@@ -104,6 +121,12 @@ fn simulator_matches_recorded_goldens() {
 /// Live PJRT execution of the lowered HLO must agree with the simulator.
 #[test]
 fn pjrt_golden_agrees_with_simulator() {
+    if !pjrt_available() {
+        eprintln!(
+            "skipping: built without the `pjrt` cargo feature (simulator-only build)"
+        );
+        return;
+    }
     let e = require_artifacts!("nmnist", 8);
     let client = cpu_client().unwrap();
     let gm = GoldenModel::load(
