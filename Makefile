@@ -1,0 +1,32 @@
+# MENAGE — build/verify/bench entry points.
+#
+# `make verify` is the tier-1 gate plus the lane differential suites; run
+# it before every commit. Bench targets regenerate the machine-readable
+# perf artifacts (BENCH_hotpath.json) tracked across PRs.
+
+CARGO ?= cargo
+
+.PHONY: verify build test test-lanes bench-hotpath bench clean
+
+verify: build test test-lanes
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+## The differential harness pinning lane execution to the sequential
+## engine, plus the dirty-slot invariant properties (also covered by
+## `test`; kept addressable so CI can surface them separately).
+test-lanes:
+	$(CARGO) test -q --test lanes_differential --test dirty_slot_invariant
+
+bench-hotpath:
+	$(CARGO) bench --bench hotpath
+
+bench:
+	$(CARGO) bench
+
+clean:
+	$(CARGO) clean

@@ -23,15 +23,7 @@ use menage::util::rng::Rng;
 /// sparsity-aware engine is optimized for).
 fn rate_input(dim: usize, timesteps: usize, rate: f64, seed: u64) -> SpikeTrain {
     let mut rng = Rng::new(seed);
-    let mut st = SpikeTrain::new(dim, timesteps);
-    for step in st.spikes.iter_mut() {
-        for i in 0..dim {
-            if rng.bernoulli(rate) {
-                step.push(i as u32);
-            }
-        }
-    }
-    st
+    SpikeTrain::bernoulli(dim, timesteps, rate, &mut rng)
 }
 
 fn main() {
@@ -94,6 +86,56 @@ fn main() {
         Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap()
     });
 
+    // Lane execution vs sequential, batch of B. Two regimes:
+    //  * shared-event: every lane carries the same sample — each distinct
+    //    event's CSR walk is fetched once and serves all B lanes, so total
+    //    cost should be sublinear in B;
+    //  * distinct: B different samples — lanes still amortize whatever
+    //    events overlap, the worst case for sharing.
+    let lane_b = 8usize;
+    let shared_batch: Vec<SpikeTrain> = vec![samples[0].clone(); lane_b];
+    let distinct_batch: Vec<SpikeTrain> = (0..lane_b)
+        .map(|k| samples[k % samples.len()].clone())
+        .collect();
+
+    let mut chip_seq =
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let r_seq = b.run("sequential_x8_shared_sample", || {
+        for s in &shared_batch {
+            chip_seq.run_into(s, &mut out).unwrap();
+        }
+    });
+    let seq_sps = r_seq.throughput(lane_b as f64);
+
+    let mut chip_lanes =
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let mut louts: Vec<RunOutput> = Vec::new();
+    let r_lanes_shared = b.run("lanes_x8_shared_sample", || {
+        chip_lanes.run_lanes_into(&shared_batch, &mut louts).unwrap();
+    });
+    let lanes_shared_sps = r_lanes_shared.throughput(lane_b as f64);
+    let shared_speedup = r_lanes_shared.speedup_over(&r_seq);
+
+    let mut chip_seq_d =
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let r_seq_d = b.run("sequential_x8_distinct_samples", || {
+        for s in &distinct_batch {
+            chip_seq_d.run_into(s, &mut out).unwrap();
+        }
+    });
+    let mut chip_lanes_d =
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let r_lanes_distinct = b.run("lanes_x8_distinct_samples", || {
+        chip_lanes_d.run_lanes_into(&distinct_batch, &mut louts).unwrap();
+    });
+    let lanes_distinct_sps = r_lanes_distinct.throughput(lane_b as f64);
+    let distinct_speedup = r_lanes_distinct.speedup_over(&r_seq_d);
+    println!(
+        "  lanes x{lane_b}: shared-sample {shared_speedup:.2}× sequential \
+         ({lanes_shared_sps:.1} samples/s), distinct {distinct_speedup:.2}× \
+         ({lanes_distinct_sps:.1} samples/s)"
+    );
+
     // Coordinator scaling on the work-stealing queue: 1 vs 4 workers over a
     // 256-sample batch. Coordinator::new (thread spawn + W chip clones) is
     // setup, NOT workload — it stays outside the timed region.
@@ -119,6 +161,27 @@ fn main() {
     let scaling = coord_sps[1] / coord_sps[0];
     println!("  coordinator scaling 4w/1w: {scaling:.2}×");
 
+    // Lane-packed coordinator: the same 256-sample batch over a 2×8
+    // (worker, lane) grid — 16 request slots with only 2 model copies.
+    let lane_packed_sps = {
+        let chip =
+            Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+        let batch: Vec<(SpikeTrain, Option<usize>)> = (0..256)
+            .map(|k| (samples[k % samples.len()].clone(), Some(0)))
+            .collect();
+        let mut coord = Coordinator::with_lanes(&chip, 2, 8);
+        let t0 = std::time::Instant::now();
+        let res = coord.run_batch(batch).unwrap();
+        let dt = t0.elapsed();
+        coord.shutdown();
+        let sps = res.len() as f64 / dt.as_secs_f64();
+        println!(
+            "  coordinator 2w×8L lane-packed: {} samples in {dt:?} → {sps:.1} samples/s",
+            res.len(),
+        );
+        sps
+    };
+
     emit_json_file(
         "BENCH_hotpath.json",
         &Json::obj(vec![
@@ -131,12 +194,24 @@ fn main() {
             ("low_activity_rate", low_rate.into()),
             ("chip_low_activity_samples_per_s", chip_low_sps.into()),
             (
+                "lanes",
+                Json::obj(vec![
+                    ("batch", lane_b.into()),
+                    ("sequential_shared_samples_per_s", seq_sps.into()),
+                    ("lanes_shared_samples_per_s", lanes_shared_sps.into()),
+                    ("speedup_shared", shared_speedup.into()),
+                    ("lanes_distinct_samples_per_s", lanes_distinct_sps.into()),
+                    ("speedup_distinct", distinct_speedup.into()),
+                ]),
+            ),
+            (
                 "coordinator",
                 Json::obj(vec![
                     ("batch", 256usize.into()),
                     ("workers_1_samples_per_s", coord_sps[0].into()),
                     ("workers_4_samples_per_s", coord_sps[1].into()),
                     ("scaling_4w_over_1w", scaling.into()),
+                    ("lane_packed_2w_8l_samples_per_s", lane_packed_sps.into()),
                 ]),
             ),
         ]),

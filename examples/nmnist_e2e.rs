@@ -123,7 +123,11 @@ fn main() -> anyhow::Result<()> {
     println!("\n== nmnist end-to-end ==");
     println!("accuracy:             {:.4} ({correct}/{n})", correct as f64 / n as f64);
     println!("vs recorded golden:   {agree_recorded}/{n} agree");
-    println!("vs live PJRT golden:  {agree_live}/{check} agree");
+    if check > 0 {
+        println!("vs live PJRT golden:  {agree_live}/{check} agree");
+    } else {
+        println!("vs live PJRT golden:  skipped (no `pjrt` build/artifacts)");
+    }
     println!(
         "throughput:           {:.1} samples/s (wall {wall:?})",
         n as f64 / wall.as_secs_f64()

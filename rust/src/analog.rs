@@ -93,6 +93,20 @@ impl AnalogParams {
             neuron_delay: 6.72e-9,
         }
     }
+
+    /// Whether every modeled non-ideality the *simulator's membrane path*
+    /// applies is off: no C2C mismatch, no switch injection, no hold
+    /// droop, no supply-rail clamp. This single predicate gates all of the
+    /// simulator's exactness-dependent fast paths (the sweep-skip
+    /// fixed-point check, duplicate-event coalescing, shared lane
+    /// dispatch) — one definition so the gates cannot drift apart when a
+    /// new non-ideality knob is added.
+    pub fn is_ideal(&self) -> bool {
+        self.c2c_mismatch_sigma == 0.0
+            && self.switch_injection == 0.0
+            && self.hold_leak == 0.0
+            && !self.v_sat.is_finite()
+    }
 }
 
 impl Default for AnalogParams {

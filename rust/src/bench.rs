@@ -44,6 +44,13 @@ impl BenchResult {
     pub fn throughput(&self, items: f64) -> f64 {
         items / self.mean.as_secs_f64()
     }
+
+    /// How many times faster this result's mean is than `baseline`'s
+    /// (>1 means `self` is faster). Both must do the same work per
+    /// iteration for the ratio to be meaningful.
+    pub fn speedup_over(&self, baseline: &BenchResult) -> f64 {
+        baseline.mean.as_secs_f64() / self.mean.as_secs_f64().max(1e-12)
+    }
 }
 
 /// Adaptive-iteration bencher: warms up, then runs until `budget` elapses
@@ -250,6 +257,22 @@ mod tests {
         assert!(r.p99 >= r.p50);
         let tp = r.throughput(100.0);
         assert!(tp > 0.0);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mk = |ns: u64| BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean: Duration::from_nanos(ns),
+            p50: Duration::from_nanos(ns),
+            p99: Duration::from_nanos(ns),
+            min: Duration::from_nanos(ns),
+        };
+        let fast = mk(100);
+        let slow = mk(400);
+        assert!((fast.speedup_over(&slow) - 4.0).abs() < 1e-9);
+        assert!((slow.speedup_over(&fast) - 0.25).abs() < 1e-9);
     }
 
     #[test]

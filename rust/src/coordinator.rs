@@ -14,20 +14,37 @@
 //! sample can no longer idle the other W−1 workers while their private
 //! queues sit empty: whoever finishes first steals the next request.
 //!
+//! **Lane packing** ([`Coordinator::with_lanes`]): instead of scaling
+//! concurrency by cloning whole chips (W workers ⇒ W copies of the model
+//! images), each worker steals up to L requests at a time and runs them as
+//! SIMD-style lanes through [`Menage::run_lanes`] — a W×L grid of
+//! (worker, lane) slots over only W model copies, so memory scales as
+//! B×state instead of W×model while each shared CSR walk serves every
+//! lane. Every stolen request receives exactly one response, including
+//! when part of a lane batch fails (per-request `Err`s, never a dropped
+//! response — the mid-batch-error regression tests pin this).
+//!
 //! Topology:
 //!
 //! ```text
 //!            requests                       results
 //!   client ───────────► [shared deque] ──────────► client
-//!                        ▲ steal  ▲ steal
+//!                        ▲ steal ≤L  ▲ steal ≤L
 //!              ┌─────────┼────────┼───────┐
 //!          [worker 0] [worker 1] … [worker W-1]
-//!           Menage      Menage       Menage      (one chip clone each)
+//!           Menage      Menage       Menage      (one chip clone each,
+//!           L lanes     L lanes      L lanes      B = W×L lane slots)
 //! ```
 //!
 //! Consumption: [`Coordinator::drain`] blocks for everything in flight and
 //! returns submission order; [`Coordinator::run_batch_streaming`] yields
-//! responses in *completion* order as they arrive.
+//! responses in *completion* order as they arrive. `drain` consumes *all*
+//! in-flight responses before propagating the first error — otherwise a
+//! mid-batch failure would leave stale responses in the channel to be
+//! misattributed to the next batch's drain (an ordering violation under
+//! lane packing, where one failure arrives alongside many successes). The
+//! successes a failing drain consumed stay retrievable via
+//! [`Coordinator::take_salvaged_responses`].
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -58,7 +75,11 @@ pub struct Response {
     pub predicted: usize,
     /// Modeled on-accelerator cycles.
     pub cycles: u64,
-    /// Wall-clock simulation latency.
+    /// Wall-clock simulation latency. Under lane packing this is the wall
+    /// time of the whole lane batch the request rode in — the latency the
+    /// request actually experienced (lanes complete together), NOT its
+    /// marginal compute cost. Compare per-sample cost across modes with
+    /// `cycles` (bit-identical to sequential), not with this field.
     pub sim_latency: Duration,
     pub label: Option<usize>,
 }
@@ -93,6 +114,9 @@ impl Metrics {
 struct SharedQueue {
     state: Mutex<QueueState>,
     available: Condvar,
+    /// Worker count, used to cap greedy batch steals (see
+    /// [`Self::steal_batch`]).
+    workers: usize,
 }
 
 struct QueueState {
@@ -103,23 +127,41 @@ struct QueueState {
 }
 
 impl SharedQueue {
-    fn new() -> Self {
+    fn new(workers: usize) -> Self {
         Self {
             state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             available: Condvar::new(),
+            workers,
         }
     }
 
-    /// Block until a job is available (returns `None` on shutdown with an
-    /// empty queue).
-    fn steal(&self) -> Option<Request> {
+    /// Block until at least one job is available, then grab up to `max`
+    /// without further waiting (lane packing fills from whatever is
+    /// queued, it never waits for a full batch). Returns `false` on
+    /// shutdown with an empty queue.
+    ///
+    /// The grab is additionally capped at the worker's fair share,
+    /// `ceil(queued / workers)`: otherwise one worker's L-deep steal
+    /// could take a small batch whole while the other W−1 workers sleep
+    /// on an empty queue — re-creating exactly the idling the shared
+    /// queue exists to prevent.
+    fn steal_batch(&self, max: usize, out: &mut Vec<Request>) -> bool {
+        out.clear();
         let mut s = self.state.lock().unwrap();
         loop {
-            if let Some(req) = s.jobs.pop_front() {
-                return Some(req);
+            if !s.jobs.is_empty() {
+                let fair = s.jobs.len().div_ceil(self.workers).max(1);
+                let grab = max.min(fair);
+                while out.len() < grab {
+                    match s.jobs.pop_front() {
+                        Some(req) => out.push(req),
+                        None => break,
+                    }
+                }
+                return true;
             }
             if s.shutdown {
-                return None;
+                return false;
             }
             s = self.available.wait(s).unwrap();
         }
@@ -146,15 +188,34 @@ pub struct Coordinator {
     next_id: u64,
     in_flight: usize,
     started: Instant,
+    /// Successful responses consumed by a failing [`Coordinator::drain`]
+    /// (retrievable via [`Coordinator::take_salvaged_responses`] so a
+    /// single bad request does not cost the whole batch's results).
+    salvaged: Vec<Response>,
 }
 
 impl Coordinator {
     /// Spawn `num_workers` workers, each owning a clone of `chip`, all
-    /// pulling from one shared queue.
+    /// pulling from one shared queue — one request per worker at a time
+    /// (`lanes_per_worker == 1`).
     pub fn new(chip: &Menage, num_workers: usize) -> Self {
+        Self::with_lanes(chip, num_workers, 1)
+    }
+
+    /// Spawn `num_workers` workers each serving up to `lanes_per_worker`
+    /// requests at once as SIMD lanes over its single chip clone (module
+    /// docs §Lane packing). Concurrency is W×L request slots with only W
+    /// copies of the model images; per-request outputs stay bit-identical
+    /// to single-request execution.
+    pub fn with_lanes(
+        chip: &Menage,
+        num_workers: usize,
+        lanes_per_worker: usize,
+    ) -> Self {
         assert!(num_workers > 0);
+        assert!(lanes_per_worker > 0);
         let metrics = Arc::new(Metrics::default());
-        let queue = Arc::new(SharedQueue::new());
+        let queue = Arc::new(SharedQueue::new(num_workers));
         let (results_tx, results_rx) = mpsc::channel::<Result<Response>>();
         let mut workers = Vec::with_capacity(num_workers);
         for _ in 0..num_workers {
@@ -163,39 +224,96 @@ impl Coordinator {
             let queue = Arc::clone(&queue);
             let mut chip = chip.clone();
             workers.push(std::thread::spawn(move || {
+                let record = |out: &crate::accel::RunOutput,
+                              req: &Request,
+                              sim_latency: Duration|
+                 -> Response {
+                    let predicted = out.predicted_class();
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics.total_cycles.fetch_add(out.cycles, Ordering::Relaxed);
+                    if let Some(label) = req.label {
+                        metrics.labelled.fetch_add(1, Ordering::Relaxed);
+                        if label == predicted {
+                            metrics.correct.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    metrics.latency.lock().unwrap().add(sim_latency.as_secs_f64());
+                    Response {
+                        id: req.id,
+                        predicted,
+                        cycles: out.cycles,
+                        sim_latency,
+                        label: req.label,
+                    }
+                };
                 let mut out = crate::accel::RunOutput::default();
-                while let Some(req) = queue.steal() {
+                let mut lane_outs: Vec<crate::accel::RunOutput> = Vec::new();
+                let mut batch: Vec<Request> = Vec::new();
+                let mut lane_reqs: Vec<Request> = Vec::new();
+                let mut inputs: Vec<SpikeTrain> = Vec::new();
+                let mut disconnected = false;
+                while !disconnected && queue.steal_batch(lanes_per_worker, &mut batch) {
+                    if batch.len() == 1 {
+                        // Single request: the sequential engine (identical
+                        // to the pre-lane coordinator).
+                        let req = batch.pop().unwrap();
+                        let t0 = Instant::now();
+                        let res = chip
+                            .run_into(&req.input, &mut out)
+                            .map(|()| record(&out, &req, t0.elapsed()));
+                        disconnected = results_tx.send(res).is_err();
+                        continue;
+                    }
+                    // Lane packing. Width mismatches are answered
+                    // individually up front so one bad request cannot
+                    // poison (or drop responses for) the rest of the
+                    // batch.
+                    let expect = chip.cores[0].in_dim();
                     let t0 = Instant::now();
-                    let res = chip.run_into(&req.input, &mut out).map(|()| {
-                        let predicted = out.predicted_class();
-                        let sim_latency = t0.elapsed();
-                        metrics.completed.fetch_add(1, Ordering::Relaxed);
-                        metrics
-                            .total_cycles
-                            .fetch_add(out.cycles, Ordering::Relaxed);
-                        if let Some(label) = req.label {
-                            metrics.labelled.fetch_add(1, Ordering::Relaxed);
-                            if label == predicted {
-                                metrics.correct.fetch_add(1, Ordering::Relaxed);
+                    lane_reqs.clear();
+                    inputs.clear();
+                    for mut req in batch.drain(..) {
+                        if req.input.num_neurons != expect {
+                            let err = anyhow!(
+                                "request {}: input has {} neurons, first core expects {expect}",
+                                req.id,
+                                req.input.num_neurons
+                            );
+                            disconnected |= results_tx.send(Err(err)).is_err();
+                        } else {
+                            // Move the train into the lane staging buffer
+                            // (no clone); the Request keeps id/label for
+                            // the response.
+                            inputs.push(std::mem::take(&mut req.input));
+                            lane_reqs.push(req);
+                        }
+                    }
+                    if lane_reqs.is_empty() || disconnected {
+                        continue;
+                    }
+                    match chip.run_lanes_into(&inputs, &mut lane_outs) {
+                        Ok(()) => {
+                            let sim_latency = t0.elapsed();
+                            for (req, o) in lane_reqs.iter().zip(lane_outs.iter()) {
+                                let resp = record(o, req, sim_latency);
+                                disconnected |= results_tx.send(Ok(resp)).is_err();
                             }
                         }
-                        metrics
-                            .latency
-                            .lock()
-                            .unwrap()
-                            .add(sim_latency.as_secs_f64());
-                        Response {
-                            id: req.id,
-                            predicted,
-                            cycles: out.cycles,
-                            sim_latency,
-                            label: req.label,
+                        Err(e) => {
+                            // One response per request, even on a whole-
+                            // batch failure: nothing may be lost.
+                            for req in &lane_reqs {
+                                let err =
+                                    anyhow!("request {}: lane batch failed: {e}", req.id);
+                                disconnected |= results_tx.send(Err(err)).is_err();
+                            }
                         }
-                    });
-                    if results_tx.send(res).is_err() {
-                        break; // coordinator dropped
                     }
                 }
+                // Collapse lane-attributed work into the core totals so
+                // the chips handed back by shutdown() report everything
+                // they served (merge_chips/energy/trace read core stats).
+                chip.fold_lane_stats();
                 chip
             }));
         }
@@ -207,6 +325,7 @@ impl Coordinator {
             next_id: 0,
             in_flight: 0,
             started: Instant::now(),
+            salvaged: Vec::new(),
         }
     }
 
@@ -225,28 +344,87 @@ impl Coordinator {
         self.in_flight
     }
 
+    /// One blocking receive. `None` means the results channel is dead (all
+    /// workers terminated) — distinct from a worker-sent `Err`, which does
+    /// consume an in-flight request.
+    fn recv_inner(&mut self) -> Option<Result<Response>> {
+        match self.results_rx.recv() {
+            Ok(res) => {
+                // Decrement before propagating a worker error: the request
+                // is done either way.
+                self.in_flight -= 1;
+                Some(res)
+            }
+            Err(_) => None,
+        }
+    }
+
     /// Block until one result is available. A received `Err` still counts
     /// as a consumed in-flight request (so a failed sample cannot make
-    /// [`Self::drain`] wait forever).
+    /// [`Self::drain`] wait forever). If the results channel is dead (all
+    /// workers terminated), nothing in flight can ever arrive: the
+    /// in-flight count is zeroed so `recv`/`drain`/streaming loops
+    /// terminate instead of yielding the same error forever.
     pub fn recv(&mut self) -> Result<Response> {
-        let res = self
-            .results_rx
-            .recv()
-            .map_err(|_| anyhow!("all workers terminated"))?;
-        // Decrement before propagating a worker error: the request is done
-        // either way.
-        self.in_flight -= 1;
-        res
+        match self.recv_inner() {
+            Some(res) => res,
+            None => {
+                let n = self.in_flight;
+                self.in_flight = 0;
+                Err(anyhow!("all workers terminated with {n} requests in flight"))
+            }
+        }
     }
 
     /// Drain all in-flight requests, returning them in submission order.
+    ///
+    /// Every in-flight response is consumed **before** the first error (if
+    /// any) is propagated: stopping at the first `Err` would leave the
+    /// remaining responses in the channel, where the *next* drain would
+    /// collect and misattribute them — under lane packing a single bad
+    /// request completes alongside a batch of good ones, making that
+    /// ordering violation the common case rather than a corner. On error
+    /// the successfully completed responses are not lost: retrieve them
+    /// with [`Self::take_salvaged_responses`].
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::with_capacity(self.in_flight);
+        let mut first_err = None;
         while self.in_flight > 0 {
-            out.push(self.recv()?);
+            match self.recv_inner() {
+                Some(Ok(r)) => out.push(r),
+                Some(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                None => {
+                    // Channel dead: nothing else will ever arrive.
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!(
+                            "all workers terminated with {} requests in flight",
+                            self.in_flight
+                        ));
+                    }
+                    self.in_flight = 0;
+                    break;
+                }
+            }
         }
         out.sort_by_key(|r| r.id);
+        if let Some(e) = first_err {
+            self.salvaged = out;
+            return Err(e);
+        }
         Ok(out)
+    }
+
+    /// The successful responses a failing [`Self::drain`] consumed
+    /// (submission order). Returns them once, clearing the buffer; a later
+    /// failing drain overwrites any un-taken salvage. Never mixed into a
+    /// subsequent successful drain's results — responses carry their `id`
+    /// for attribution.
+    pub fn take_salvaged_responses(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.salvaged)
     }
 
     /// Submit a whole labelled batch and wait for every result (submission
@@ -427,30 +605,11 @@ mod tests {
         // The heavy sample must dominate even a single-vCPU scheduler's
         // timeslice (~1500 busy steps vs 2 per light sample), so the other
         // worker always drains a light request before it finishes.
-        let heavy = {
-            let mut rng = Rng::new(77);
-            let mut st = SpikeTrain::new(30, 1500);
-            for step in st.spikes.iter_mut() {
-                for i in 0..30 {
-                    if rng.bernoulli(0.5) {
-                        step.push(i as u32);
-                    }
-                }
-            }
-            (st, Some(0))
-        };
-        let mut v = vec![heavy];
+        let mut rng = Rng::new(77);
+        let mut v = vec![(SpikeTrain::bernoulli(30, 1500, 0.5, &mut rng), Some(0))];
         for s in 0..n {
             let mut rng = Rng::new(2000 + s as u64);
-            let mut st = SpikeTrain::new(30, 2);
-            for step in st.spikes.iter_mut() {
-                for i in 0..30 {
-                    if rng.bernoulli(0.1) {
-                        step.push(i as u32);
-                    }
-                }
-            }
-            v.push((st, Some(0)));
+            v.push((SpikeTrain::bernoulli(30, 2, 0.1, &mut rng), Some(0)));
         }
         v
     }
@@ -503,14 +662,135 @@ mod tests {
         // And the service still works.
         let res = coord.run_batch(inputs(4)).unwrap();
         assert_eq!(res.len(), 4);
-        // Mixed batch: drain propagates the error but does not over-wait.
+        // Mixed batch: drain consumes *everything* in flight before
+        // propagating the error, so nothing is left to leak into (and
+        // corrupt the ordering of) the next batch's drain.
         coord.submit(SpikeTrain::new(99, 6), None);
         for (st, l) in inputs(3) {
             coord.submit(st, l);
         }
         assert!(coord.drain().is_err());
-        let leftover = coord.drain().unwrap().len();
-        assert!(leftover <= 3, "over-waited: {leftover}");
+        assert_eq!(coord.in_flight(), 0, "drain must consume all in-flight on error");
+        // The 3 completed responses are salvageable, not lost…
+        let salvaged = coord.take_salvaged_responses();
+        assert_eq!(salvaged.len(), 3, "completed responses must be salvageable");
+        assert!(salvaged.windows(2).all(|w| w[0].id < w[1].id));
+        assert!(coord.take_salvaged_responses().is_empty(), "salvage is take-once");
+        // …and never leak into the next drain.
+        assert!(coord.drain().unwrap().is_empty(), "stale responses leaked");
+        // And the next batch's ids are exactly its own.
+        let res = coord.run_batch(inputs(2)).unwrap();
+        let first_new_id = res[0].id;
+        assert_eq!(
+            res.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![first_new_id, first_new_id + 1]
+        );
+        coord.shutdown();
+    }
+
+    /// Lane packing (W×L grid) must produce reference-exact predictions
+    /// and the same cycles as sequential execution, with drain returning
+    /// submission order.
+    #[test]
+    fn lane_packed_results_match_reference() {
+        let (chip, net) = test_chip();
+        let mut plain = Coordinator::new(&chip, 1);
+        let baseline: Vec<(usize, u64)> = plain
+            .run_batch(inputs(24))
+            .unwrap()
+            .iter()
+            .map(|r| (r.predicted, r.cycles))
+            .collect();
+        plain.shutdown();
+
+        let mut coord = Coordinator::with_lanes(&chip, 2, 4);
+        let ins = inputs(24);
+        let golden: Vec<usize> = ins
+            .iter()
+            .map(|(st, _)| reference_forward(&net, st).unwrap().predicted_class())
+            .collect();
+        let res = coord.run_batch(ins).unwrap();
+        assert_eq!(res.len(), 24);
+        for (i, r) in res.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "drain must return submission order");
+            assert_eq!(r.predicted, golden[i], "request {i}: prediction");
+            // Lanes are bit-identical to the sequential engine: modeled
+            // cycles match the plain coordinator's regardless of how the
+            // requests were packed into (worker, lane) slots.
+            assert_eq!((r.predicted, r.cycles), baseline[i], "request {i}: cycles");
+        }
+        assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), 24);
+        let chips = coord.shutdown();
+        let total: u64 = chips.iter().map(|c| c.inputs_processed).sum();
+        assert_eq!(total, 24);
+        // Lane-served work is folded into core stats at shutdown, so the
+        // energy/trace consumers (which read core totals) see it.
+        let macs: u64 = chips.iter().map(|c| c.total_macs()).sum();
+        assert!(macs > 0, "lane work invisible to core stats after shutdown");
+    }
+
+    /// B > worker count: more in-flight requests than workers must pack
+    /// into lanes and all complete.
+    #[test]
+    fn lane_packing_handles_b_greater_than_workers() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::with_lanes(&chip, 2, 8);
+        let res = coord.run_batch(inputs(40)).unwrap();
+        assert_eq!(res.len(), 40);
+        assert_eq!(coord.in_flight(), 0);
+        coord.shutdown();
+    }
+
+    /// A worker error mid-batch under lane packing must neither deadlock
+    /// nor lose any in-flight response: every request gets exactly one
+    /// response, the batch's good samples still complete, and the next
+    /// batch is unaffected.
+    #[test]
+    fn lane_packed_worker_error_mid_batch() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::with_lanes(&chip, 2, 4);
+        // Interleave bad-width requests among good ones so they land in
+        // the middle of stolen lane batches.
+        let mut expected_good = 0usize;
+        for (k, (st, l)) in inputs(10).into_iter().enumerate() {
+            if k % 3 == 1 {
+                coord.submit(SpikeTrain::new(99, 6), None);
+            } else {
+                coord.submit(st, l);
+                expected_good += 1;
+            }
+        }
+        let submitted = 10;
+        assert_eq!(coord.in_flight(), submitted);
+        // Streaming yields exactly one item per request (Ok or Err) and
+        // terminates — no deadlock, no lost response.
+        let items: Vec<Result<Response>> =
+            coord.run_batch_streaming(Vec::new()).collect();
+        assert_eq!(items.len(), submitted);
+        let ok = items.iter().filter(|r| r.is_ok()).count();
+        assert_eq!(ok, expected_good, "every valid request must complete");
+        assert_eq!(coord.in_flight(), 0);
+        // The service stays healthy for the next (clean) batch.
+        let res = coord.run_batch(inputs(6)).unwrap();
+        assert_eq!(res.len(), 6);
+        coord.shutdown();
+    }
+
+    /// drain() under lane packing: all in-flight consumed before the first
+    /// error propagates; a follow-up drain is empty.
+    #[test]
+    fn lane_packed_drain_consumes_all_before_error() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::with_lanes(&chip, 2, 4);
+        coord.submit(SpikeTrain::new(99, 6), None);
+        for (st, l) in inputs(7) {
+            coord.submit(st, l);
+        }
+        assert!(coord.drain().is_err());
+        assert_eq!(coord.in_flight(), 0);
+        // The 7 good requests' responses survive via salvage.
+        assert_eq!(coord.take_salvaged_responses().len(), 7);
+        assert!(coord.drain().unwrap().is_empty());
         coord.shutdown();
     }
 

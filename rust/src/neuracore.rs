@@ -58,6 +58,41 @@
 //!
 //! Residents are iterated in destination-id order, so each round emits its
 //! spikes pre-sorted and the common single-round case needs no output sort.
+//!
+//! # Lane execution (SIMD-style batching)
+//!
+//! One virtual-neuron engine is time-multiplexed over many model neurons;
+//! the same insight applies one level up: the MEM_E2A lookup and MEM_S&N
+//! rows streamed for an input event are *identical for every sample*, so a
+//! batch of B independent samples can share one CSR walk. A [`CoreLane`]
+//! holds everything that is per-sample — per-round [`RoundState`]
+//! (membranes, charge accumulators, dirty flags; all slot-indexed exactly
+//! like the sequential path), the MEM_E queue, and a private [`CoreStats`]
+//! — while the distilled [`CoreImage`], CSR mirror, resident lists and
+//! sweep costs stay shared and immutable behind the core.
+//!
+//! Invariants the lane path maintains (pinned by
+//! `tests/lanes_differential.rs` against the sequential engine):
+//!
+//! * **Shared image, per-lane state.** [`Self::step_lanes_into`] walks the
+//!   merged, ascending stream of distinct `(src, multiplicity)` runs across
+//!   all active lanes and fetches each event's MEM_E2A entry and MEM_S&N
+//!   row slice **once**, depositing into every lane that carries the event.
+//!   Deposits are exact integer adds, so the traversal order shared across
+//!   lanes cannot change any lane's membrane arithmetic.
+//! * **Per-lane stats attribution.** Every [`CoreStats`] counter — cycles
+//!   (including per-round reassignment and sweep costs), events, rows,
+//!   MACs, integrations, fire ops, spikes, the per-step series — is charged
+//!   to each carrying lane exactly as the sequential dispatch would charge
+//!   it, ×multiplicity. Per-lane stats are **bit-identical** to running the
+//!   lane's input through a fresh sequential core. Only the A-SYN energy
+//!   accounts are core-level (summed across lanes, flushed once per step).
+//! * **Exactness gate.** The shared walk requires the coalescing
+//!   precondition (ideal analog mode): the non-ideal error sidecar is
+//!   per-deposit and order-sensitive in f64, so non-ideal mode (or
+//!   `force_per_event_dispatch`) routes every lane through the *actual
+//!   sequential* `step_into` — the lane's state is swapped into the core,
+//!   stepped, and swapped back — making equivalence structural.
 
 use std::sync::Arc;
 
@@ -69,9 +104,19 @@ use crate::mapping::CoreImage;
 use crate::snn::LifParams;
 use crate::util::rng::Rng;
 
+/// Bound on the per-step statistic series in [`CoreStats`]
+/// (`cycles_per_step`, `sn_rows_touched_per_step`). The series exist for
+/// figure generation over short runs; a long-lived coordinator service
+/// processes an unbounded request stream, and without a cap each lane's
+/// series would grow by `2·T` entries per request forever. Recording
+/// simply stops at the cap (both engines apply it identically, so
+/// lane/sequential bit-identity is unaffected); the scalar totals keep
+/// accumulating.
+pub const STEP_SERIES_CAP: usize = 1 << 20;
+
 /// Per-step and cumulative statistics of one core (feeds the energy model
 /// and Figures 6–7).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CoreStats {
     /// Clock cycles consumed, cumulative.
     pub cycles: u64,
@@ -114,6 +159,43 @@ struct RoundState {
     dirty: Vec<bool>,
 }
 
+impl RoundState {
+    /// Quiescent state for `slots` capacitors (all membranes parked at
+    /// `v_reset`, nothing accumulated, dirty iff skipping is disabled).
+    fn fresh(slots: usize, v_reset: f32, sweep_skip: bool) -> Self {
+        Self {
+            mem: vec![v_reset; slots],
+            acc: vec![0i32; slots],
+            err: vec![0.0f64; slots],
+            dirty: vec![!sweep_skip; slots],
+        }
+    }
+
+    /// Reset to the quiescent state in place (buffers reused).
+    fn reset(&mut self, v_reset: f32, sweep_skip: bool) {
+        self.mem.fill(v_reset);
+        self.acc.fill(0);
+        self.err.fill(0.0);
+        self.dirty.fill(!sweep_skip);
+    }
+}
+
+/// Per-lane execution state: everything one batched sample owns privately
+/// while sharing the core's immutable image (module docs §Lane execution).
+#[derive(Debug, Clone, Default)]
+pub struct CoreLane {
+    /// Per-round membrane state, slot-indexed like the sequential path.
+    state: Vec<RoundState>,
+    /// This lane's MEM_E: pending events for the current step.
+    event_queue: Vec<u32>,
+    /// Scratch: the queue coalesced into ascending `(src, multiplicity)`
+    /// runs, rebuilt each step and replayed per round.
+    runs: Vec<(u32, u32)>,
+    /// Per-lane statistics, attributed exactly as the sequential engine
+    /// would (module docs).
+    pub stats: CoreStats,
+}
+
 /// Whether `v_reset` is a quiescent fixed point of the sweep: a slot with
 /// `mem == v_reset`, `acc == 0`, `err == 0` must come out of the full
 /// leak/integrate/compare arithmetic bit-identical and below threshold.
@@ -121,10 +203,7 @@ struct RoundState {
 /// does not (e.g. `β·v_reset != v_reset`), skipping is disabled and every
 /// slot stays dirty forever.
 fn quiescent_fixed_point(lif: &LifParams, analog: &AnalogParams) -> bool {
-    let ideal = analog.c2c_mismatch_sigma == 0.0
-        && analog.switch_injection == 0.0
-        && analog.hold_leak == 0.0
-        && !analog.v_sat.is_finite();
+    let ideal = analog.is_ideal();
     let q = lif.v_reset;
     // Mirror the sweep arithmetic exactly, with acc == 0 and err == 0.
     let mut v = lif.beta * q;
@@ -135,6 +214,24 @@ fn quiescent_fixed_point(lif: &LifParams, analog: &AnalogParams) -> bool {
         }
     }
     v == q && v < lif.v_threshold
+}
+
+/// The MEM_E latch, shared by the sequential and lane paths so the
+/// overflow policy (append up to the memory depth, drop the rest, count
+/// drops and the occupancy high-water mark) cannot diverge between them.
+fn latch_events(
+    queue: &mut Vec<u32>,
+    stats: &mut CoreStats,
+    depth: usize,
+    events: &[u32],
+) -> usize {
+    let space = depth.saturating_sub(queue.len());
+    let take = events.len().min(space);
+    queue.extend_from_slice(&events[..take]);
+    let dropped = events.len() - take;
+    stats.dropped_events += dropped as u64;
+    stats.peak_event_queue = stats.peak_event_queue.max(queue.len());
+    dropped
 }
 
 /// One MX-NEURACORE instance with loaded control memories.
@@ -168,8 +265,13 @@ pub struct NeuraCore {
     /// A-SYN engines (one per A-NEURON column, paper Figure 1); provide
     /// C2C mismatch modeling and MAC energy accounting.
     syns: Vec<ASyn>,
-    /// Per-round membrane state (the "parked" capacitor charge).
+    /// Per-round membrane state (the "parked" capacitor charge) of the
+    /// sequential path.
     state: Vec<RoundState>,
+    /// Lane-mode state: per-lane membranes/queues/stats behind the shared
+    /// image (module docs §Lane execution). Empty until
+    /// [`Self::ensure_lanes`] configures a batch width.
+    lanes: Vec<CoreLane>,
     /// MEM_E: pending events for the current step.
     event_queue: Vec<u32>,
     event_mem_depth: usize,
@@ -180,6 +282,12 @@ pub struct NeuraCore {
     /// accounts once per step (perf: keeps the dispatch inner loop free of
     /// bookkeeping float adds).
     mac_count: Vec<u64>,
+    /// Lane-step scratch (one slot per *active* lane, reused across steps
+    /// so the lane hot path allocates nothing): per-lane cycle and row
+    /// accumulators plus the merge cursor into each lane's run list.
+    lane_cycles_scratch: Vec<u64>,
+    lane_rows_scratch: Vec<u64>,
+    lane_pos_scratch: Vec<usize>,
     /// Test/debug knob: do full sweep arithmetic for every resident slot,
     /// ignoring the dirty flags (the pre-perf-pass behaviour). Used by the
     /// differential regression tests; keep `false` in production.
@@ -220,12 +328,7 @@ impl NeuraCore {
         let state = image
             .rounds
             .iter()
-            .map(|_| RoundState {
-                mem: vec![lif.v_reset; m * n],
-                acc: vec![0i32; m * n],
-                err: vec![0.0f64; m * n],
-                dirty: vec![!sweep_skip; m * n],
-            })
+            .map(|_| RoundState::fresh(m * n, lif.v_reset, sweep_skip))
             .collect();
         let residents_sorted: Vec<Vec<(u32, u32)>> = image
             .rounds
@@ -280,11 +383,15 @@ impl NeuraCore {
             analog: analog.clone(),
             syns,
             state,
+            lanes: Vec::new(),
             event_queue: Vec::new(),
             event_mem_depth: cfg.event_mem_depth,
             caps_per_engine: n,
             stats: CoreStats::default(),
             mac_count: vec![0u64; m],
+            lane_cycles_scratch: Vec::new(),
+            lane_rows_scratch: Vec::new(),
+            lane_pos_scratch: Vec::new(),
             force_dense_sweep: false,
             force_per_event_dispatch: false,
         })
@@ -305,25 +412,16 @@ impl NeuraCore {
         self.image.in_dim
     }
 
-    /// Whether the analog model is exactly ideal.
+    /// Whether the analog model is exactly ideal (shared predicate:
+    /// [`AnalogParams::is_ideal`]).
     fn is_ideal(&self) -> bool {
-        self.analog.c2c_mismatch_sigma == 0.0
-            && self.analog.switch_injection == 0.0
-            && self.analog.hold_leak == 0.0
-            && !self.analog.v_sat.is_finite()
+        self.analog.is_ideal()
     }
 
     /// Latch incoming events (source-neuron indices) into MEM_E. Returns
     /// the number of dropped events if the memory overflows.
     pub fn push_events(&mut self, events: &[u32]) -> usize {
-        let space = self.event_mem_depth.saturating_sub(self.event_queue.len());
-        let take = events.len().min(space);
-        self.event_queue.extend_from_slice(&events[..take]);
-        let dropped = events.len() - take;
-        self.stats.dropped_events += dropped as u64;
-        self.stats.peak_event_queue =
-            self.stats.peak_event_queue.max(self.event_queue.len());
-        dropped
+        latch_events(&mut self.event_queue, &mut self.stats, self.event_mem_depth, events)
     }
 
     /// Execute one global time step: dispatch all latched events through
@@ -493,8 +591,10 @@ impl NeuraCore {
         queue.clear();
         self.event_queue = queue; // hand the (empty) buffer back for reuse
         self.stats.cycles += cycles_this_step;
-        self.stats.cycles_per_step.push(cycles_this_step);
-        self.stats.sn_rows_touched_per_step.push(rows_this_step);
+        if self.stats.cycles_per_step.len() < STEP_SERIES_CAP {
+            self.stats.cycles_per_step.push(cycles_this_step);
+            self.stats.sn_rows_touched_per_step.push(rows_this_step);
+        }
         // Each round emits in ascending dst order; with one round the
         // output is already sorted. Multi-round interleavings are rare —
         // sort only when actually violated.
@@ -506,19 +606,353 @@ impl NeuraCore {
     /// Reset membrane state (between inputs) without clearing statistics.
     pub fn reset_membranes(&mut self) {
         for st in self.state.iter_mut() {
-            st.mem.fill(self.lif.v_reset);
-            st.acc.fill(0);
-            st.err.fill(0.0);
-            st.dirty.fill(!self.sweep_skip);
+            st.reset(self.lif.v_reset, self.sweep_skip);
         }
         self.event_queue.clear();
     }
 
+    // -----------------------------------------------------------------
+    // Lane execution (module docs §Lane execution)
+    // -----------------------------------------------------------------
+
+    /// Configure the core for at least `b` lanes. Lanes only ever *grow*:
+    /// a smaller batch leaves the extra lanes (and, crucially, their
+    /// accumulated [`CoreStats`] — which feed [`Self::analog_energy`] and
+    /// the coordinator's shutdown accounting) in place; new lanes start
+    /// quiescent. Lane identity is positional: lane `i` of a batch maps to
+    /// `lanes[i]` across repeated runs.
+    pub fn ensure_lanes(&mut self, b: usize) {
+        let slots = self.image.num_engines * self.caps_per_engine;
+        let rounds = self.image.rounds.len();
+        while self.lanes.len() < b {
+            self.lanes.push(CoreLane::default());
+        }
+        for lane in &mut self.lanes {
+            if lane.state.len() != rounds {
+                lane.state = (0..rounds)
+                    .map(|_| RoundState::fresh(slots, self.lif.v_reset, self.sweep_skip))
+                    .collect();
+            }
+        }
+    }
+
+    /// Number of configured lanes.
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Reset every lane's membrane state (between batches) without
+    /// clearing the per-lane statistics — the lane analogue of
+    /// [`Self::reset_membranes`].
+    pub fn reset_lanes(&mut self) {
+        for lane in self.lanes.iter_mut() {
+            for st in lane.state.iter_mut() {
+                st.reset(self.lif.v_reset, self.sweep_skip);
+            }
+            lane.event_queue.clear();
+        }
+    }
+
+    /// Per-lane statistics (bit-identical to a fresh sequential core fed
+    /// the same input — see module docs).
+    pub fn lane_stats(&self, lane: usize) -> &CoreStats {
+        &self.lanes[lane].stats
+    }
+
+    /// Latch incoming events into lane `lane`'s MEM_E — the same latch
+    /// policy as [`Self::push_events`] (one shared helper keeps the
+    /// overflow semantics lockstep), against the lane's private queue and
+    /// stats.
+    pub fn push_events_lane(&mut self, lane: usize, events: &[u32]) -> usize {
+        let depth = self.event_mem_depth;
+        let l = &mut self.lanes[lane];
+        latch_events(&mut l.event_queue, &mut l.stats, depth, events)
+    }
+
+    /// Execute one global time step for the lanes listed in `active`
+    /// (strictly ascending lane indices), writing lane `active[i]`'s
+    /// emitted spikes into `outs[i]` (cleared first).
+    ///
+    /// In ideal-analog mode (unless `force_per_event_dispatch`) all active
+    /// lanes share one CSR walk: the merged ascending stream of distinct
+    /// events is dispatched once per event, depositing into every carrying
+    /// lane — the module-docs invariants keep per-lane outputs and stats
+    /// bit-identical to sequential execution. Otherwise each lane is
+    /// stepped through the sequential engine itself (state swap).
+    pub fn step_lanes_into(&mut self, active: &[usize], outs: &mut [Vec<u32>]) {
+        assert_eq!(active.len(), outs.len(), "one output buffer per active lane");
+        debug_assert!(active.windows(2).all(|w| w[0] < w[1]));
+        let shared = self.is_ideal() && !self.force_per_event_dispatch;
+        if !shared {
+            for (out, &lane) in outs.iter_mut().zip(active) {
+                self.step_lane_sequential(lane, out);
+            }
+            return;
+        }
+
+        let m = self.image.num_engines;
+        let n = self.caps_per_engine;
+        let scale = self.image.scale;
+        let num_rounds = self.image.rounds.len();
+        let skip = self.sweep_skip;
+        let dense = self.force_dense_sweep;
+        let beta = self.lif.beta;
+        let th = self.lif.v_threshold;
+        let q_reset = self.lif.v_reset;
+
+        // Take the lanes out so the image-side fields can be borrowed
+        // immutably while lane state is mutated.
+        let mut lanes = std::mem::take(&mut self.lanes);
+        let image = Arc::clone(&self.image);
+        let rows_index = &self.rows_index;
+        let row_entries = &self.row_entries;
+        let residents_sorted = &self.residents_sorted;
+        let sweep_cost = &self.sweep_cost;
+        let mac_count = &mut self.mac_count;
+
+        // Coalesce every active lane's queue into ascending (src, mult)
+        // runs once; the runs are replayed per round exactly like the
+        // sequential queue.
+        for &li in active {
+            let lane = &mut lanes[li];
+            let q = &mut lane.event_queue;
+            if q.len() > 1 && !q.windows(2).all(|w| w[0] <= w[1]) {
+                q.sort_unstable();
+            }
+            lane.runs.clear();
+            let mut i = 0usize;
+            while i < q.len() {
+                let src = q[i];
+                let mut c = 1usize;
+                while i + c < q.len() && q[i + c] == src {
+                    c += 1;
+                }
+                lane.runs.push((src, c as u32));
+                i += c;
+            }
+        }
+        for out in outs.iter_mut() {
+            out.clear();
+        }
+
+        let nl = active.len();
+        let lane_cycles = &mut self.lane_cycles_scratch;
+        lane_cycles.clear();
+        lane_cycles.resize(nl, 0);
+        let lane_rows = &mut self.lane_rows_scratch;
+        lane_rows.clear();
+        lane_rows.resize(nl, 0);
+        let pos = &mut self.lane_pos_scratch;
+        pos.clear();
+        pos.resize(nl, 0);
+
+        for round_idx in 0..num_rounds {
+            let round = &image.rounds[round_idx];
+            let residents = &residents_sorted[round_idx];
+            let ridx = &rows_index[round_idx];
+            let ents = &row_entries[round_idx];
+            if num_rounds > 1 {
+                // Capacitor reassignment: every lane reloads its own
+                // parked state (charge transfer is per-lane, the image
+                // walk is not).
+                let reload = (residents.len() as u64).div_ceil(m as u64);
+                for c in lane_cycles.iter_mut() {
+                    *c += reload;
+                }
+            }
+
+            // Merged dispatch: ascending distinct sources across lanes,
+            // one MEM_E2A lookup + row-slice fetch per source.
+            pos.fill(0);
+            loop {
+                let mut src = u32::MAX;
+                for (ai, &li) in active.iter().enumerate() {
+                    if let Some(&(s, _)) = lanes[li].runs.get(pos[ai]) {
+                        src = src.min(s);
+                    }
+                }
+                if src == u32::MAX {
+                    break;
+                }
+                let s = src as usize;
+                let (row_count, entries) = if s < round.e2a.len() && round.e2a[s].count > 0
+                {
+                    let e2a = round.e2a[s];
+                    let lo = ridx[e2a.start as usize] as usize;
+                    let hi = ridx[(e2a.start + e2a.count) as usize] as usize;
+                    (e2a.count as u64, &ents[lo..hi])
+                } else {
+                    (0u64, &ents[0..0])
+                };
+                for (ai, &li) in active.iter().enumerate() {
+                    let lane = &mut lanes[li];
+                    let Some(&(ls, mult)) = lane.runs.get(pos[ai]) else {
+                        continue;
+                    };
+                    if ls != src {
+                        continue;
+                    }
+                    pos[ai] += 1;
+                    let mult_u = mult as u64;
+                    // Identical per-event accounting to the sequential
+                    // dispatch: the controller pops each event (×mult).
+                    lane.stats.events_dispatched += mult_u;
+                    lane_cycles[ai] += mult_u;
+                    if row_count == 0 {
+                        continue;
+                    }
+                    lane_cycles[ai] += mult_u * row_count;
+                    lane_rows[ai] += mult_u * row_count;
+                    lane.stats.sn_rows_read += mult_u * row_count;
+                    lane.stats.macs += mult_u * entries.len() as u64;
+                    lane.stats.integrations += mult_u * entries.len() as u64;
+                    let st = &mut lane.state[round_idx];
+                    for &(j, virt, w) in entries {
+                        let slot = j as usize * n + virt as usize;
+                        st.acc[slot] += w as i32 * mult as i32;
+                        st.dirty[slot] = true;
+                        mac_count[j as usize] += mult_u;
+                    }
+                }
+            }
+
+            // End-of-step sweep, per lane. Residents outer so the shared
+            // (slot, dst) list is read once; each lane's spikes come out
+            // in the same dst order as sequentially.
+            for &li in active.iter() {
+                lanes[li].stats.fire_ops += residents.len() as u64;
+            }
+            for &(slot, dst) in residents {
+                let slot = slot as usize;
+                for (ai, &li) in active.iter().enumerate() {
+                    let lane = &mut lanes[li];
+                    let st = &mut lane.state[round_idx];
+                    if !dense && !st.dirty[slot] {
+                        continue; // provably a no-op (quiescent fixed point)
+                    }
+                    let v = beta * st.mem[slot] + st.acc[slot] as f32 * scale;
+                    st.acc[slot] = 0;
+                    st.err[slot] = 0.0;
+                    if v >= th {
+                        outs[ai].push(dst);
+                        st.mem[slot] = q_reset;
+                        lane.stats.spikes_out += 1;
+                        st.dirty[slot] = !skip;
+                    } else {
+                        st.mem[slot] = v;
+                        st.dirty[slot] = !(skip && v == q_reset);
+                    }
+                }
+            }
+            for c in lane_cycles.iter_mut() {
+                *c += sweep_cost[round_idx];
+            }
+        }
+
+        // Flush the batched per-engine MAC accounting (core-level: energy
+        // is attributed to the silicon, not to lanes).
+        for (j, &cnt) in mac_count.iter().enumerate() {
+            if cnt > 0 {
+                self.syns[j].macs += cnt;
+                self.syns[j].energy += cnt as f64 * self.syns[j].energy_per_mac;
+            }
+        }
+        mac_count.fill(0);
+
+        for (ai, &li) in active.iter().enumerate() {
+            let lane = &mut lanes[li];
+            lane.event_queue.clear();
+            lane.stats.cycles += lane_cycles[ai];
+            if lane.stats.cycles_per_step.len() < STEP_SERIES_CAP {
+                lane.stats.cycles_per_step.push(lane_cycles[ai]);
+                lane.stats.sn_rows_touched_per_step.push(lane_rows[ai]);
+            }
+            let out = &mut outs[ai];
+            if num_rounds > 1 && !out.windows(2).all(|w| w[0] <= w[1]) {
+                out.sort_unstable();
+            }
+        }
+        self.lanes = lanes;
+    }
+
+    /// Step one lane through the *sequential* engine by swapping its state
+    /// into the core — the exact `step_into` code path, bit-identical by
+    /// construction. Used for non-ideal analog mode and the
+    /// `force_per_event_dispatch` differential knob.
+    fn step_lane_sequential(&mut self, lane: usize, out: &mut Vec<u32>) {
+        let mut l = std::mem::take(&mut self.lanes[lane]);
+        std::mem::swap(&mut self.state, &mut l.state);
+        std::mem::swap(&mut self.event_queue, &mut l.event_queue);
+        std::mem::swap(&mut self.stats, &mut l.stats);
+        self.step_into(out);
+        std::mem::swap(&mut self.state, &mut l.state);
+        std::mem::swap(&mut self.event_queue, &mut l.event_queue);
+        std::mem::swap(&mut self.stats, &mut l.stats);
+        self.lanes[lane] = l;
+    }
+
+    /// Fold every lane's accumulated *scalar* statistics into the
+    /// core-level [`Self::stats`] and reset the lanes' own counters.
+    /// Downstream consumers — the energy report, the CLI's merged
+    /// shutdown chips — read only `stats`, so without this a lane-served
+    /// workload would be invisible to them. Per-lane attribution is
+    /// collapsed; call it at the end of a chip's service life (the
+    /// coordinator's workers fold before handing their chips back).
+    /// [`Self::analog_energy`] is unchanged by folding (it already sums
+    /// both).
+    ///
+    /// The per-step series (`cycles_per_step`, `sn_rows_touched_per_step`)
+    /// are **dropped**, not concatenated: each lane's series is its own
+    /// timeline, and splicing them onto the core's would fabricate a
+    /// step-by-step history that never happened (and break the figure
+    /// consumers the series exist for). Capture [`Self::lane_stats`]
+    /// before folding if per-lane series are needed.
+    pub fn fold_lane_stats(&mut self) {
+        for lane in self.lanes.iter_mut() {
+            let s = std::mem::take(&mut lane.stats);
+            self.stats.cycles += s.cycles;
+            self.stats.events_dispatched += s.events_dispatched;
+            self.stats.sn_rows_read += s.sn_rows_read;
+            self.stats.macs += s.macs;
+            self.stats.integrations += s.integrations;
+            self.stats.fire_ops += s.fire_ops;
+            self.stats.spikes_out += s.spikes_out;
+            self.stats.peak_event_queue =
+                self.stats.peak_event_queue.max(s.peak_event_queue);
+            self.stats.dropped_events += s.dropped_events;
+        }
+    }
+
+    /// Debug/test introspection: `(mem, acc, dirty)` per slot of one round
+    /// of the *sequential* state (the dirty-slot invariant property tests).
+    pub fn slot_states(&self, round: usize) -> Vec<(f32, i32, bool)> {
+        let st = &self.state[round];
+        (0..st.mem.len()).map(|i| (st.mem[i], st.acc[i], st.dirty[i])).collect()
+    }
+
+    /// Debug/test introspection: `(mem, acc, dirty)` per slot of one round
+    /// of lane `lane`'s state.
+    pub fn lane_slot_states(&self, lane: usize, round: usize) -> Vec<(f32, i32, bool)> {
+        let st = &self.lanes[lane].state[round];
+        (0..st.mem.len()).map(|i| (st.mem[i], st.acc[i], st.dirty[i])).collect()
+    }
+
+    /// Whether the quiescent-fixed-point sweep skip is enabled (module
+    /// docs §activity-tracked sweep).
+    pub fn sweep_skip_enabled(&self) -> bool {
+        self.sweep_skip
+    }
+
     /// Total analog energy consumed so far (J): A-SYN MACs plus A-NEURON
-    /// integrate and sweep operations at the paper's per-op energy.
+    /// integrate and sweep operations at the paper's per-op energy. Lane
+    /// executions contribute through both terms (MAC energy accumulates in
+    /// the shared A-SYN accounts; neuron ops live in the per-lane stats).
     pub fn analog_energy(&self) -> f64 {
         let mac_energy: f64 = self.syns.iter().map(|s| s.energy).sum();
-        let neuron_ops = self.stats.integrations + self.stats.fire_ops;
+        let mut neuron_ops = self.stats.integrations + self.stats.fire_ops;
+        for lane in &self.lanes {
+            neuron_ops += lane.stats.integrations + lane.stats.fire_ops;
+        }
         mac_energy + neuron_ops as f64 * self.analog.neuron_energy_per_op
     }
 
@@ -901,6 +1335,156 @@ mod tests {
             assert_eq!(a.step(), buf, "step {t}");
         }
         assert_eq!(a.stats.cycles, b.stats.cycles);
+    }
+
+    /// Drive a batch through the lane API at core level: one push + step
+    /// per global time step, lanes shorter than the longest input going
+    /// inactive once exhausted.
+    fn run_core_lanes(core: &mut NeuraCore, inputs: &[SpikeTrain]) -> Vec<SpikeTrain> {
+        let b = inputs.len();
+        core.ensure_lanes(b);
+        core.reset_lanes();
+        let t_max = inputs.iter().map(|s| s.timesteps()).max().unwrap_or(0);
+        let mut outs: Vec<SpikeTrain> = inputs
+            .iter()
+            .map(|s| SpikeTrain::new(core.out_dim(), s.timesteps()))
+            .collect();
+        let mut bufs: Vec<Vec<u32>> = Vec::new();
+        for t in 0..t_max {
+            let active: Vec<usize> =
+                (0..b).filter(|&i| t < inputs[i].timesteps()).collect();
+            bufs.resize_with(active.len(), Vec::new);
+            for &i in &active {
+                core.push_events_lane(i, &inputs[i].spikes[t]);
+            }
+            core.step_lanes_into(&active, &mut bufs);
+            for (ai, &i) in active.iter().enumerate() {
+                outs[i].spikes[t] = std::mem::take(&mut bufs[ai]);
+            }
+        }
+        outs
+    }
+
+    /// The shared-CSR lane walk must be bit-identical — outputs AND every
+    /// per-lane CoreStats counter — to fresh sequential cores.
+    #[test]
+    fn lanes_match_sequential_per_core() {
+        let layer = random_layer(30, 18, 0.4, 61);
+        let cfg = small_cfg(3, 4); // capacity 12 < 18: multi-round
+        let inputs: Vec<SpikeTrain> = (0..4)
+            .map(|i| random_input(30, 10, 0.05 + 0.1 * i as f64, 70 + i as u64))
+            .collect();
+
+        let mut laned = build_core(&layer, &cfg, true);
+        let lane_outs = run_core_lanes(&mut laned, &inputs);
+
+        for (i, input) in inputs.iter().enumerate() {
+            let mut seq = build_core(&layer, &cfg, true);
+            let seq_out = run_core(&mut seq, input);
+            assert_eq!(lane_outs[i].spikes, seq_out.spikes, "lane {i}: outputs");
+            assert_eq!(laned.lane_stats(i), &seq.stats, "lane {i}: stats");
+        }
+        // Core-level sequential stats stay untouched by lane execution.
+        assert_eq!(laned.stats, CoreStats::default());
+    }
+
+    /// Duplicate events in a lane's queue take the coalesced path; the
+    /// ×multiplicity accounting must match per-event dispatch.
+    #[test]
+    fn lane_duplicates_match_force_per_event() {
+        let layer = random_layer(20, 12, 0.3, 62);
+        let cfg = small_cfg(4, 3);
+        let events: Vec<u32> = vec![5, 1, 5, 5, 2, 1, 9, 9];
+        let mut input = SpikeTrain::new(20, 4);
+        for t in 0..4 {
+            input.spikes[t] = events.clone();
+        }
+        let inputs = vec![input.clone(), input];
+
+        let mut fast = build_core(&layer, &cfg, true);
+        let fast_outs = run_core_lanes(&mut fast, &inputs);
+        let mut slow = build_core(&layer, &cfg, true);
+        slow.force_per_event_dispatch = true;
+        let slow_outs = run_core_lanes(&mut slow, &inputs);
+
+        for i in 0..2 {
+            assert_eq!(fast_outs[i].spikes, slow_outs[i].spikes, "lane {i}");
+            assert_eq!(fast.lane_stats(i), slow.lane_stats(i), "lane {i}: stats");
+        }
+    }
+
+    /// Non-ideal analog mode routes lanes through the sequential engine —
+    /// still bit-identical to per-lane sequential cores (same mismatch
+    /// seeds).
+    #[test]
+    fn nonideal_lanes_fall_back_to_sequential_path() {
+        let layer = random_layer(25, 10, 0.4, 63);
+        let cfg = small_cfg(5, 2);
+        let inputs: Vec<SpikeTrain> =
+            (0..3).map(|i| random_input(25, 8, 0.2, 80 + i as u64)).collect();
+
+        let mut laned = build_core(&layer, &cfg, false);
+        let lane_outs = run_core_lanes(&mut laned, &inputs);
+        for (i, input) in inputs.iter().enumerate() {
+            let mut seq = build_core(&layer, &cfg, false);
+            let seq_out = run_core(&mut seq, input);
+            assert_eq!(lane_outs[i].spikes, seq_out.spikes, "lane {i}: outputs");
+            assert_eq!(laned.lane_stats(i), &seq.stats, "lane {i}: stats");
+        }
+    }
+
+    /// ensure_lanes keeps existing lane state, reset_lanes clears state but
+    /// keeps stats, and lane overflow accounting is per-lane.
+    #[test]
+    fn lane_lifecycle_and_overflow() {
+        let layer = random_layer(40, 8, 0.4, 64);
+        let mut cfg = small_cfg(2, 4);
+        cfg.event_mem_depth = 8;
+        let mut core = build_core(&layer, &cfg, true);
+        core.ensure_lanes(2);
+        assert_eq!(core.num_lanes(), 2);
+        let events: Vec<u32> = (0..20).collect();
+        let dropped = core.push_events_lane(1, &events);
+        assert_eq!(dropped, 12);
+        assert_eq!(core.lane_stats(1).dropped_events, 12);
+        assert_eq!(core.lane_stats(1).peak_event_queue, 8);
+        assert_eq!(core.lane_stats(0).dropped_events, 0);
+        let cycles_before = {
+            let mut bufs = vec![Vec::new(), Vec::new()];
+            core.step_lanes_into(&[0, 1], &mut bufs);
+            core.lane_stats(1).cycles
+        };
+        assert!(cycles_before > 0);
+        core.reset_lanes();
+        assert_eq!(core.lane_stats(1).cycles, cycles_before, "stats survive reset");
+        // Growing keeps old lanes, adds quiescent ones.
+        core.ensure_lanes(3);
+        assert_eq!(core.num_lanes(), 3);
+        assert_eq!(core.lane_stats(1).cycles, cycles_before);
+        assert_eq!(core.lane_stats(2).cycles, 0);
+    }
+
+    /// fold_lane_stats moves every counter into core stats, zeroes the
+    /// lanes, and leaves the energy total bit-identical.
+    #[test]
+    fn fold_lane_stats_moves_totals_to_core() {
+        let layer = random_layer(30, 12, 0.4, 65);
+        let cfg = small_cfg(4, 3);
+        let inputs: Vec<SpikeTrain> =
+            (0..3).map(|i| random_input(30, 6, 0.2, 90 + i as u64)).collect();
+        let mut core = build_core(&layer, &cfg, true);
+        run_core_lanes(&mut core, &inputs);
+        let energy_before = core.analog_energy();
+        let expected_macs: u64 = (0..3).map(|i| core.lane_stats(i).macs).sum();
+        let expected_cycles: u64 = (0..3).map(|i| core.lane_stats(i).cycles).sum();
+        assert!(expected_macs > 0);
+        core.fold_lane_stats();
+        assert_eq!(core.stats.macs, expected_macs);
+        assert_eq!(core.stats.cycles, expected_cycles);
+        for i in 0..3 {
+            assert_eq!(core.lane_stats(i), &CoreStats::default());
+        }
+        assert_eq!(core.analog_energy(), energy_before, "folding changed energy");
     }
 
     #[test]

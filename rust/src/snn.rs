@@ -342,6 +342,21 @@ impl SpikeTrain {
         Self { num_neurons, spikes: vec![Vec::new(); timesteps] }
     }
 
+    /// Random train: each neuron fires independently with probability
+    /// `rate` per step (sorted, valid). The canonical synthetic workload
+    /// for tests and benches — one definition instead of a copy per file.
+    pub fn bernoulli(num_neurons: usize, timesteps: usize, rate: f64, rng: &mut Rng) -> Self {
+        let mut st = Self::new(num_neurons, timesteps);
+        for step in st.spikes.iter_mut() {
+            for i in 0..num_neurons {
+                if rng.bernoulli(rate) {
+                    step.push(i as u32);
+                }
+            }
+        }
+        st
+    }
+
     /// Reshape in place for buffer reuse (the allocation-free batch path):
     /// sets the dimensions and empties every step's spike list while
     /// keeping the per-step `Vec` allocations alive.
@@ -568,6 +583,16 @@ mod tests {
         st.reset_to(6, 5);
         assert_eq!(st.timesteps(), 5);
         assert_eq!(st.total_spikes(), 0);
+    }
+
+    #[test]
+    fn bernoulli_train_is_valid() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let st = SpikeTrain::bernoulli(20, 10, 0.3, &mut rng);
+        st.validate().unwrap();
+        assert!(st.total_spikes() > 0);
+        assert_eq!(st.timesteps(), 10);
+        assert_eq!(st.num_neurons, 20);
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Property tests for the activity-tracked sweep's dirty-slot invariant
+//! (`neuracore.rs` §activity-tracked sweep), in both sequential and lane
+//! mode.
+//!
+//! Invariant: after any step, every slot whose dirty flag is clear holds
+//! exactly the quiescent fixed point — `mem == v_reset`, `acc == 0` — so
+//! skipping its sweep arithmetic is provably a no-op. The oracle is a twin
+//! core with `force_dense_sweep` (the pre-perf-pass dense sweep): stepping
+//! both in lockstep, the fast core's full slot state must match the
+//! oracle's bit-for-bit, dirty or not.
+
+use menage::analog::AnalogParams;
+use menage::config::AcceleratorConfig;
+use menage::mapping::{distill, map_layer, Strategy};
+use menage::neuracore::NeuraCore;
+use menage::snn::{LifParams, QuantLayer, SpikeTrain};
+use menage::util::prop;
+use menage::util::rng::Rng;
+
+fn accel(m: usize, n: usize) -> AcceleratorConfig {
+    let mut c = AcceleratorConfig::accel1();
+    c.a_neurons_per_core = m;
+    c.a_syns_per_core = m;
+    c.virtual_per_a_neuron = n;
+    c
+}
+
+fn random_layer(in_dim: usize, out_dim: usize, lif: LifParams, rng: &mut Rng) -> QuantLayer {
+    let mut w = vec![0i8; in_dim * out_dim];
+    for x in w.iter_mut() {
+        if !rng.bernoulli(0.5) {
+            *x = rng.range_inclusive(-127, 127) as i8;
+        }
+    }
+    QuantLayer::new(in_dim, out_dim, w, 0.02, lif).unwrap()
+}
+
+fn build_core(layer: &QuantLayer, cfg: &AcceleratorConfig, dense: bool) -> NeuraCore {
+    let mp = map_layer(layer, cfg, Strategy::IlpFlow).unwrap();
+    let img = distill(layer, &mp, cfg).unwrap();
+    let mut rng = Rng::new(99);
+    let mut core =
+        NeuraCore::new(0, img, layer.lif, &AnalogParams::ideal(), cfg, &mut rng).unwrap();
+    core.force_dense_sweep = dense;
+    core
+}
+
+/// Check the invariant for one round's slot dump against the oracle's.
+fn check_round(
+    fast: &[(f32, i32, bool)],
+    oracle: &[(f32, i32, bool)],
+    v_reset: f32,
+    ctx: &str,
+) -> Result<(), String> {
+    if fast.len() != oracle.len() {
+        return Err(format!("{ctx}: slot count mismatch"));
+    }
+    for (slot, (&(mem, acc, dirty), &(omem, oacc, _))) in
+        fast.iter().zip(oracle.iter()).enumerate()
+    {
+        // Oracle agreement for every slot (dense sweep recomputes all).
+        if mem.to_bits() != omem.to_bits() || acc != oacc {
+            return Err(format!(
+                "{ctx}: slot {slot} diverges from dense oracle: \
+                 ({mem}, {acc}) vs ({omem}, {oacc})"
+            ));
+        }
+        // The invariant proper: clean ⇒ quiescent fixed point.
+        if !dirty && (mem.to_bits() != v_reset.to_bits() || acc != 0) {
+            return Err(format!(
+                "{ctx}: slot {slot} is clean but not quiescent (mem={mem}, acc={acc})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Sequential mode: invariant holds after every step of a random run.
+#[test]
+fn prop_sequential_dirty_slot_invariant() {
+    prop::check_n("dirty-slot-sequential", 16, |rng| {
+        let lif = LifParams { beta: 0.9, v_threshold: 1.0, v_reset: 0.0 };
+        let in_dim = 8 + rng.below(25);
+        let out_dim = 4 + rng.below(20);
+        let layer = random_layer(in_dim, out_dim, lif, rng);
+        let cfg = accel(2 + rng.below(3), 1 + rng.below(4));
+        let mut fast = build_core(&layer, &cfg, false);
+        let mut oracle = build_core(&layer, &cfg, true);
+        assert!(fast.sweep_skip_enabled(), "β·0 == 0 must enable the skip");
+        let t = 4 + rng.below(6);
+        let input = SpikeTrain::bernoulli(in_dim, t, 0.05 + rng.f64() * 0.3, rng);
+        for step in 0..t {
+            fast.push_events(&input.spikes[step]);
+            oracle.push_events(&input.spikes[step]);
+            let a = fast.step();
+            let b = oracle.step();
+            if a != b {
+                return Err(format!("step {step}: outputs diverge"));
+            }
+            for round in 0..fast.rounds() {
+                check_round(
+                    &fast.slot_states(round),
+                    &oracle.slot_states(round),
+                    lif.v_reset,
+                    &format!("step {step} round {round}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Lane mode: the invariant holds per lane after every step, against a
+/// dense-sweep lane oracle stepped in lockstep.
+#[test]
+fn prop_lane_dirty_slot_invariant() {
+    prop::check_n("dirty-slot-lanes", 12, |rng| {
+        let lif = LifParams { beta: 0.9, v_threshold: 1.0, v_reset: 0.0 };
+        let in_dim = 8 + rng.below(25);
+        let out_dim = 4 + rng.below(20);
+        let layer = random_layer(in_dim, out_dim, lif, rng);
+        let cfg = accel(2 + rng.below(3), 1 + rng.below(4));
+        let mut fast = build_core(&layer, &cfg, false);
+        let mut oracle = build_core(&layer, &cfg, true);
+        let b = 2 + rng.below(4);
+        fast.ensure_lanes(b);
+        oracle.ensure_lanes(b);
+        let t = 3 + rng.below(5);
+        let inputs: Vec<SpikeTrain> = (0..b)
+            .map(|_| SpikeTrain::bernoulli(in_dim, t, rng.f64() * 0.35, rng))
+            .collect();
+        let active: Vec<usize> = (0..b).collect();
+        let mut bufs_a: Vec<Vec<u32>> = vec![Vec::new(); b];
+        let mut bufs_b: Vec<Vec<u32>> = vec![Vec::new(); b];
+        for step in 0..t {
+            for i in 0..b {
+                fast.push_events_lane(i, &inputs[i].spikes[step]);
+                oracle.push_events_lane(i, &inputs[i].spikes[step]);
+            }
+            fast.step_lanes_into(&active, &mut bufs_a);
+            oracle.step_lanes_into(&active, &mut bufs_b);
+            if bufs_a != bufs_b {
+                return Err(format!("step {step}: lane outputs diverge"));
+            }
+            for lane in 0..b {
+                for round in 0..fast.rounds() {
+                    check_round(
+                        &fast.lane_slot_states(lane, round),
+                        &oracle.lane_slot_states(lane, round),
+                        lif.v_reset,
+                        &format!("step {step} lane {lane} round {round}"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// When `v_reset` is not a fixed point of the leak, skipping must be
+/// disabled (every slot permanently dirty) and the invariant is vacuous —
+/// but the dense oracle must still agree bit-for-bit.
+#[test]
+fn nonzero_v_reset_disables_skip_everywhere() {
+    let lif = LifParams { beta: 0.9, v_threshold: 1.0, v_reset: 0.25 };
+    let mut rng = Rng::new(33);
+    let layer = random_layer(20, 12, lif, &mut rng);
+    let cfg = accel(4, 4);
+    let mut fast = build_core(&layer, &cfg, false);
+    assert!(!fast.sweep_skip_enabled());
+    let mut oracle = build_core(&layer, &cfg, true);
+    let input = SpikeTrain::bernoulli(20, 8, 0.2, &mut rng);
+    for step in 0..8 {
+        fast.push_events(&input.spikes[step]);
+        oracle.push_events(&input.spikes[step]);
+        assert_eq!(fast.step(), oracle.step(), "step {step}");
+        for round in 0..fast.rounds() {
+            let states = fast.slot_states(round);
+            assert!(
+                states.iter().all(|&(_, _, dirty)| dirty),
+                "step {step}: skip disabled ⇒ every slot stays dirty"
+            );
+            for (s, (&(m, a, _), &(om, oa, _))) in states
+                .iter()
+                .zip(oracle.slot_states(round).iter())
+                .enumerate()
+            {
+                assert_eq!(m.to_bits(), om.to_bits(), "step {step} slot {s}");
+                assert_eq!(a, oa, "step {step} slot {s}");
+            }
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! Differential test harness pinning lane execution to the sequential
+//! engine.
+//!
+//! The contract (see `neuracore.rs` §Lane execution): for any batch of
+//! inputs, `Menage::run_lanes(&[s0..sB])` must produce, per lane,
+//! **bit-identical** layer spike trains, modeled cycles, and per-lane
+//! [`CoreStats`] to running that lane's input through `Menage::run` on a
+//! fresh chip. The suite drives randomized models/batches plus the edge
+//! cases (empty train, all-lanes-quiescent, single lane, B greater than
+//! the coordinator's worker count) through that assertion.
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::coordinator::Coordinator;
+use menage::mapping::Strategy;
+use menage::neuracore::CoreStats;
+use menage::snn::{reference_forward, QuantNetwork, SpikeTrain};
+use menage::util::prop;
+use menage::util::rng::Rng;
+
+fn model(sizes: &[usize], t: usize) -> ModelConfig {
+    ModelConfig {
+        name: "lanes".into(),
+        layer_sizes: sizes.to_vec(),
+        timesteps: t,
+        beta: 0.9,
+        v_threshold: 1.0,
+        v_reset: 0.0,
+    }
+}
+
+fn accel(cores: usize, m: usize, n: usize) -> AcceleratorConfig {
+    let mut c = AcceleratorConfig::accel1();
+    c.num_cores = cores;
+    c.a_neurons_per_core = m;
+    c.a_syns_per_core = m;
+    c.virtual_per_a_neuron = n;
+    c
+}
+
+fn build_chip(net: &QuantNetwork, cfg: &AcceleratorConfig) -> Menage {
+    Menage::build(net, cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap()
+}
+
+/// The core assertion: lane `i` of `run_lanes` ≡ `run` on a fresh clone.
+/// Returns an error string (for the property driver) instead of panicking.
+fn assert_lanes_equal_sequential(
+    chip: &Menage,
+    inputs: &[SpikeTrain],
+    tag: &str,
+) -> Result<(), String> {
+    let mut laned = chip.clone();
+    let louts = laned
+        .run_lanes(inputs)
+        .map_err(|e| format!("{tag}: run_lanes failed: {e}"))?;
+    if louts.len() != inputs.len() {
+        return Err(format!("{tag}: {} outputs for {} lanes", louts.len(), inputs.len()));
+    }
+    for (i, input) in inputs.iter().enumerate() {
+        let mut seq = chip.clone();
+        let sout = seq.run(input).map_err(|e| format!("{tag}: run failed: {e}"))?;
+        if louts[i].cycles != sout.cycles {
+            return Err(format!(
+                "{tag}: lane {i} cycles {} != sequential {}",
+                louts[i].cycles, sout.cycles
+            ));
+        }
+        for (l, (a, b)) in louts[i].trains.iter().zip(&sout.trains).enumerate() {
+            if a.spikes != b.spikes {
+                return Err(format!("{tag}: lane {i} layer {l} spike trains diverge"));
+            }
+        }
+        for (l, (lc, sc)) in laned.cores.iter().zip(&seq.cores).enumerate() {
+            if lc.lane_stats(i) != &sc.stats {
+                return Err(format!(
+                    "{tag}: lane {i} core {l} CoreStats diverge:\n lanes: {:?}\n seq:   {:?}",
+                    lc.lane_stats(i),
+                    sc.stats
+                ));
+            }
+        }
+    }
+    // Energy: MAC counts are integers (exact); the joule totals are float
+    // sums taken in a different association order across lanes, so compare
+    // with a tight relative tolerance rather than bits.
+    let le: f64 = laned.analog_energy();
+    let se: f64 = se_total(chip, inputs);
+    if (le - se).abs() > 1e-9 * se.abs().max(1e-30) {
+        return Err(format!("{tag}: lane energy {le} != sequential total {se}"));
+    }
+    Ok(())
+}
+
+/// Total analog energy of running each input on a fresh sequential chip.
+fn se_total(chip: &Menage, inputs: &[SpikeTrain]) -> f64 {
+    inputs
+        .iter()
+        .map(|input| {
+            let mut c = chip.clone();
+            c.run(input).unwrap();
+            c.analog_energy()
+        })
+        .sum()
+}
+
+/// Randomized models × batch widths × activity rates.
+#[test]
+fn prop_lanes_bit_identical_to_sequential() {
+    prop::check_n("lanes-vs-sequential", 12, |rng| {
+        let l0 = 8 + rng.below(24);
+        let l1 = 4 + rng.below(16);
+        let l2 = 2 + rng.below(8);
+        let mcfg = model(&[l0, l1, l2], 4 + rng.below(8));
+        let net = QuantNetwork::random(&mcfg, 0.3 + rng.f64() * 0.5, rng);
+        let m = 2 + rng.below(4);
+        let n = 1 + rng.below(4);
+        let cfg = accel(2, m, n);
+        let chip = Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7)
+            .map_err(|e| e.to_string())?;
+        let b = 1 + rng.below(6);
+        let inputs: Vec<SpikeTrain> = (0..b)
+            .map(|_| {
+                SpikeTrain::bernoulli(l0, mcfg.timesteps, rng.f64() * 0.4, rng)
+            })
+            .collect();
+        assert_lanes_equal_sequential(&chip, &inputs, &format!("b={b} m={m} n={n}"))
+    });
+}
+
+/// Shared-event regime: every lane carries the *same* sample — the case
+/// the one-CSR-walk-per-event optimization targets — must stay exact.
+#[test]
+fn identical_samples_across_lanes() {
+    let mcfg = model(&[30, 16, 8], 8);
+    let mut rng = Rng::new(11);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let chip = build_chip(&net, &accel(2, 4, 4));
+    let sample = SpikeTrain::bernoulli(30, 8, 0.25, &mut rng);
+    let inputs = vec![sample; 6];
+    assert_lanes_equal_sequential(&chip, &inputs, "shared-sample").unwrap();
+}
+
+/// Edge case: the batch contains an empty (zero-timestep) train.
+#[test]
+fn empty_train_lane() {
+    let mcfg = model(&[20, 10, 4], 6);
+    let mut rng = Rng::new(12);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let chip = build_chip(&net, &accel(2, 3, 4));
+    let inputs = vec![
+        SpikeTrain::bernoulli(20, 6, 0.3, &mut rng),
+        SpikeTrain::new(20, 0),
+        SpikeTrain::bernoulli(20, 6, 0.1, &mut rng),
+    ];
+    assert_lanes_equal_sequential(&chip, &inputs, "empty-train").unwrap();
+    // The empty lane really did nothing.
+    let mut laned = chip.clone();
+    let louts = laned.run_lanes(&inputs).unwrap();
+    assert_eq!(louts[1].cycles, 0);
+    assert_eq!(louts[1].trains.last().unwrap().timesteps(), 0);
+    for core in &laned.cores {
+        assert_eq!(core.lane_stats(1), &CoreStats::default());
+    }
+}
+
+/// Edge case: every lane is quiescent (steps run, no events anywhere).
+/// Sweep/reassignment cycle charges must still match sequentially.
+#[test]
+fn all_lanes_quiescent() {
+    let mcfg = model(&[20, 18, 4], 5);
+    let mut rng = Rng::new(13);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    // Capacity 8 < 18 forces multi-round on the middle layer, so the
+    // per-round reassignment cost is exercised with zero activity.
+    let chip = build_chip(&net, &accel(2, 2, 4));
+    let inputs = vec![SpikeTrain::new(20, 5), SpikeTrain::new(20, 5), SpikeTrain::new(20, 5)];
+    assert_lanes_equal_sequential(&chip, &inputs, "quiescent").unwrap();
+    let mut laned = chip.clone();
+    let louts = laned.run_lanes(&inputs).unwrap();
+    for o in &louts {
+        assert!(o.cycles > 0, "sweep/reassignment cycles must accrue");
+        assert_eq!(o.trains.last().unwrap().total_spikes(), 0);
+    }
+}
+
+/// Edge case: a single lane is exactly the sequential engine.
+#[test]
+fn single_lane_equals_sequential() {
+    let mcfg = model(&[25, 12, 6], 7);
+    let mut rng = Rng::new(14);
+    let net = QuantNetwork::random(&mcfg, 0.4, &mut rng);
+    let chip = build_chip(&net, &accel(2, 4, 4));
+    let inputs = vec![SpikeTrain::bernoulli(25, 7, 0.2, &mut rng)];
+    assert_lanes_equal_sequential(&chip, &inputs, "single-lane").unwrap();
+}
+
+/// Duplicate events inside a step (a caller may inject the same source
+/// several times): the coalesced shared walk must match per-event
+/// dispatch in both outputs and ×multiplicity accounting.
+#[test]
+fn duplicate_events_coalesced_vs_forced_per_event() {
+    let mcfg = model(&[20, 10, 4], 5);
+    let mut rng = Rng::new(15);
+    let net = QuantNetwork::random(&mcfg, 0.4, &mut rng);
+    let chip = build_chip(&net, &accel(2, 3, 4));
+    let mut with_dups = SpikeTrain::bernoulli(20, 5, 0.2, &mut rng);
+    for step in with_dups.spikes.iter_mut() {
+        let extra: Vec<u32> = step.iter().copied().collect();
+        step.extend(extra); // every event twice, unsorted tail
+    }
+    let inputs = vec![with_dups.clone(), SpikeTrain::bernoulli(20, 5, 0.3, &mut rng)];
+
+    let mut fast = chip.clone();
+    let fast_outs = fast.run_lanes(&inputs).unwrap();
+    let mut slow = chip.clone();
+    for core in slow.cores.iter_mut() {
+        core.force_per_event_dispatch = true;
+    }
+    let slow_outs = slow.run_lanes(&inputs).unwrap();
+    for i in 0..inputs.len() {
+        assert_eq!(fast_outs[i].cycles, slow_outs[i].cycles, "lane {i}: cycles");
+        for (a, b) in fast_outs[i].trains.iter().zip(&slow_outs[i].trains) {
+            assert_eq!(a.spikes, b.spikes, "lane {i}");
+        }
+        for (lc, sc) in fast.cores.iter().zip(&slow.cores) {
+            assert_eq!(lc.lane_stats(i), sc.lane_stats(i), "lane {i}: stats");
+        }
+    }
+}
+
+/// Lane outputs also agree with the bit-exact reference model (transitive
+/// with the sequential equivalence, but cheap to assert directly).
+#[test]
+fn lanes_match_reference_model() {
+    let mcfg = model(&[24, 14, 6], 8);
+    let mut rng = Rng::new(16);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let chip = build_chip(&net, &accel(2, 4, 4));
+    let inputs: Vec<SpikeTrain> =
+        (0..4).map(|_| SpikeTrain::bernoulli(24, 8, 0.25, &mut rng)).collect();
+    let mut laned = chip.clone();
+    let louts = laned.run_lanes(&inputs).unwrap();
+    for (i, input) in inputs.iter().enumerate() {
+        let golden = reference_forward(&net, input).unwrap();
+        assert!(louts[i].matches_reference(&golden), "lane {i} diverges from reference");
+    }
+}
+
+/// Repeated `run_lanes` calls on one chip are independent (membranes reset
+/// between batches, stats accumulate per lane slot) — mirroring the
+/// sequential `repeated_runs_are_independent` guarantee.
+#[test]
+fn repeated_lane_batches_are_independent() {
+    let mcfg = model(&[20, 10, 4], 6);
+    let mut rng = Rng::new(17);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let mut chip = build_chip(&net, &accel(2, 3, 4));
+    let a_in: Vec<SpikeTrain> =
+        (0..3).map(|_| SpikeTrain::bernoulli(20, 6, 0.3, &mut rng)).collect();
+    let noise: Vec<SpikeTrain> =
+        (0..3).map(|_| SpikeTrain::bernoulli(20, 6, 0.5, &mut rng)).collect();
+    let a = chip.run_lanes(&a_in).unwrap();
+    let _ = chip.run_lanes(&noise).unwrap();
+    let c = chip.run_lanes(&a_in).unwrap();
+    for i in 0..3 {
+        assert_eq!(a[i].cycles, c[i].cycles);
+        assert_eq!(
+            a[i].trains.last().unwrap().spikes,
+            c[i].trains.last().unwrap().spikes
+        );
+    }
+}
+
+/// B greater than the coordinator's worker count: requests pack into the
+/// W×L lane grid, every one completes, and predictions are
+/// reference-exact.
+#[test]
+fn coordinator_b_exceeds_worker_count() {
+    let mcfg = model(&[30, 16, 8], 6);
+    let mut rng = Rng::new(18);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let chip = build_chip(&net, &accel(2, 4, 4));
+    let mut coord = Coordinator::with_lanes(&chip, 2, 6);
+    let ins: Vec<(SpikeTrain, Option<usize>)> = (0..30)
+        .map(|s| {
+            let mut r = Rng::new(900 + s as u64);
+            (SpikeTrain::bernoulli(30, 6, 0.25, &mut r), Some(s % 8))
+        })
+        .collect();
+    let golden: Vec<usize> = ins
+        .iter()
+        .map(|(st, _)| reference_forward(&net, st).unwrap().predicted_class())
+        .collect();
+    let res = coord.run_batch(ins).unwrap();
+    assert_eq!(res.len(), 30);
+    for (i, r) in res.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+        assert_eq!(r.predicted, golden[i], "request {i}");
+    }
+    coord.shutdown();
+}
