@@ -1,12 +1,13 @@
 # MENAGE — build/verify/bench entry points.
 #
 # `make verify` is the tier-1 gate plus the lane differential suites; run
-# it before every commit. Bench targets regenerate the machine-readable
-# perf artifacts (BENCH_hotpath.json) tracked across PRs.
+# it before every commit. `make lint` is the CI style gate (rustfmt +
+# clippy). Bench targets regenerate the machine-readable perf artifacts
+# (BENCH_hotpath.json) tracked across PRs.
 
 CARGO ?= cargo
 
-.PHONY: verify build test test-lanes bench-hotpath bench clean
+.PHONY: verify build test test-lanes lint fmt clippy bench-hotpath bench clean
 
 verify: build test test-lanes
 
@@ -16,15 +17,28 @@ build:
 test:
 	$(CARGO) test -q
 
-## The differential harness pinning lane execution to the sequential
-## engine, plus the dirty-slot invariant properties (also covered by
-## `test`; kept addressable so CI can surface them separately).
+## The differential harness pinning every execution path to the unified
+## SoA engine (lane vs sequential, ideal and non-ideal, plus the
+## dirty-slot invariant properties — also covered by `test`; kept
+## addressable so CI can surface them separately).
 test-lanes:
 	$(CARGO) test -q --test lanes_differential --test dirty_slot_invariant
 
+## CI style gate: formatting and clippy with warnings denied.
+lint: fmt clippy
+
+fmt:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy -- -D warnings
+
+## Regenerates BENCH_hotpath.json (SoA lane-major engine rows, including
+## the non-ideal lane batching rows) — commit the refreshed file.
 bench-hotpath:
 	$(CARGO) bench --bench hotpath
 
+## All benches; includes bench-hotpath's BENCH_hotpath.json regeneration.
 bench:
 	$(CARGO) bench
 

@@ -136,6 +136,31 @@ fn main() {
          ({lanes_distinct_sps:.1} samples/s)"
     );
 
+    // Non-ideal analog lane batching — only possible since the unified
+    // SoA engine made the error sidecar order-robust (previously every
+    // non-ideal lane fell back to a serialized state-swap through the
+    // sequential core). Mismatch studies now amortize the CSR walk too.
+    let analog_paper = AnalogParams::paper();
+    let mut chip_seq_ni =
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &analog_paper, 7).unwrap();
+    let r_seq_ni = b.run("nonideal_sequential_x8_distinct_samples", || {
+        for s in &distinct_batch {
+            chip_seq_ni.run_into(s, &mut out).unwrap();
+        }
+    });
+    let mut chip_lanes_ni =
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &analog_paper, 7).unwrap();
+    let r_lanes_ni = b.run("nonideal_lanes_x8_distinct_samples", || {
+        chip_lanes_ni.run_lanes_into(&distinct_batch, &mut louts).unwrap();
+    });
+    let nonideal_seq_sps = r_seq_ni.throughput(lane_b as f64);
+    let nonideal_lanes_sps = r_lanes_ni.throughput(lane_b as f64);
+    let nonideal_speedup = r_lanes_ni.speedup_over(&r_seq_ni);
+    println!(
+        "  non-ideal lanes x{lane_b}: {nonideal_speedup:.2}× sequential \
+         ({nonideal_lanes_sps:.1} samples/s)"
+    );
+
     // Coordinator scaling on the work-stealing queue: 1 vs 4 workers over a
     // 256-sample batch. Coordinator::new (thread spawn + W chip clones) is
     // setup, NOT workload — it stays outside the timed region.
@@ -196,12 +221,16 @@ fn main() {
             (
                 "lanes",
                 Json::obj(vec![
+                    ("engine", "soa-lane-major".into()),
                     ("batch", lane_b.into()),
                     ("sequential_shared_samples_per_s", seq_sps.into()),
                     ("lanes_shared_samples_per_s", lanes_shared_sps.into()),
                     ("speedup_shared", shared_speedup.into()),
                     ("lanes_distinct_samples_per_s", lanes_distinct_sps.into()),
                     ("speedup_distinct", distinct_speedup.into()),
+                    ("nonideal_sequential_samples_per_s", nonideal_seq_sps.into()),
+                    ("nonideal_lanes_samples_per_s", nonideal_lanes_sps.into()),
+                    ("speedup_nonideal", nonideal_speedup.into()),
                 ]),
             ),
             (

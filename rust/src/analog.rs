@@ -26,6 +26,26 @@
 
 use crate::util::rng::Rng;
 
+/// Neumaier (Kahan–Babuška) compensated addition: adds `x` into the
+/// running pair `(sum, comp)` whose value is `sum + comp`. The
+/// compensation term captures the low-order bits lost by each add, so the
+/// accumulated total is accurate to ~1 ulp of the exact sum *independent
+/// of accumulation order* — which is what lets the simulator's non-ideal
+/// error sidecar be shared across execution paths that visit deposits in
+/// different groupings (see `engine::dispatch`). Unlike classic Kahan,
+/// the Neumaier variant also survives the `|x| > |sum|` case, which the
+/// sidecar hits on the first deposit after every sweep reset.
+#[inline]
+pub fn kahan_add(sum: &mut f64, comp: &mut f64, x: f64) {
+    let t = *sum + x;
+    if sum.abs() >= x.abs() {
+        *comp += (*sum - t) + x;
+    } else {
+        *comp += (x - t) + *sum;
+    }
+    *sum = t;
+}
+
 /// Non-ideality and operating-point parameters for the analog blocks.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AnalogParams {
@@ -482,6 +502,37 @@ impl ASyn {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kahan_add_recovers_order_lost_bits() {
+        // 1.0 followed by 1e-16 four times: plain f64 addition loses the
+        // small terms entirely; the compensated pair keeps them.
+        let (mut s, mut c) = (0.0f64, 0.0f64);
+        let mut plain = 0.0f64;
+        for x in [1.0, 1e-16, 1e-16, 1e-16, 1e-16] {
+            kahan_add(&mut s, &mut c, x);
+            plain += x;
+        }
+        assert_eq!(plain, 1.0, "plain addition must actually lose the bits");
+        assert!((s + c - (1.0 + 4e-16)).abs() < 1e-18, "compensated sum {}", s + c);
+    }
+
+    #[test]
+    fn kahan_add_is_order_insensitive() {
+        // The same multiset summed in opposite orders lands on the same
+        // compensated value to within 1 ulp (here: exactly).
+        let xs = [1e9, 1.0, -1e9, 1e-9, 3.5, -7.25, 1e-9];
+        let sum_in = |iter: &mut dyn Iterator<Item = f64>| {
+            let (mut s, mut c) = (0.0, 0.0);
+            for x in iter {
+                kahan_add(&mut s, &mut c, x);
+            }
+            s + c
+        };
+        let fwd = sum_in(&mut xs.iter().copied());
+        let rev = sum_in(&mut xs.iter().rev().copied());
+        assert!((fwd - rev).abs() <= f64::EPSILON * fwd.abs().max(1.0), "{fwd} vs {rev}");
+    }
 
     #[test]
     fn c2c_matches_equation2() {

@@ -23,6 +23,10 @@
 //! lane. Every stolen request receives exactly one response, including
 //! when part of a lane batch fails (per-request `Err`s, never a dropped
 //! response — the mid-batch-error regression tests pin this).
+//! [`Coordinator::with_lanes_wait`] adds **adaptive packing**: a bounded
+//! `fill_wait` (condvar timeout) during which a worker that drained a
+//! shallow queue keeps collecting late arrivals before dispatching, so
+//! lane batches stay full under trickle traffic.
 //!
 //! Topology:
 //!
@@ -117,6 +121,12 @@ struct SharedQueue {
     /// Worker count, used to cap greedy batch steals (see
     /// [`Self::steal_batch`]).
     workers: usize,
+    /// Adaptive lane packing: after a steal drains the queue below a full
+    /// lane batch, keep the worker parked on the condvar up to this long
+    /// collecting late arrivals, so a shallow queue still packs lanes
+    /// instead of dispatching singleton batches. Zero = dispatch whatever
+    /// was grabbed immediately (the pre-adaptive behaviour).
+    fill_wait: Duration,
 }
 
 struct QueueState {
@@ -127,24 +137,31 @@ struct QueueState {
 }
 
 impl SharedQueue {
-    fn new(workers: usize) -> Self {
+    fn new(workers: usize, fill_wait: Duration) -> Self {
         Self {
             state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             available: Condvar::new(),
             workers,
+            fill_wait,
         }
     }
 
-    /// Block until at least one job is available, then grab up to `max`
-    /// without further waiting (lane packing fills from whatever is
-    /// queued, it never waits for a full batch). Returns `false` on
-    /// shutdown with an empty queue.
+    /// Block until at least one job is available, then grab up to `max`.
+    /// Returns `false` on shutdown with an empty queue.
     ///
-    /// The grab is additionally capped at the worker's fair share,
+    /// The grab is capped at the worker's fair share,
     /// `ceil(queued / workers)`: otherwise one worker's L-deep steal
     /// could take a small batch whole while the other W−1 workers sleep
     /// on an empty queue — re-creating exactly the idling the shared
     /// queue exists to prevent.
+    ///
+    /// **Adaptive packing:** when the initial grab *drained* the queue
+    /// without filling the batch (the shallow-queue case — fairness took
+    /// nothing from anyone), the worker keeps waiting up to `fill_wait`
+    /// for late arrivals, stealing its fair share of each, and dispatches
+    /// as soon as the batch is full, the timeout lapses, or shutdown is
+    /// raised. Jobs left in the queue by the fair-share cap are *not*
+    /// waited on — they belong to the other workers.
     fn steal_batch(&self, max: usize, out: &mut Vec<Request>) -> bool {
         out.clear();
         let mut s = self.state.lock().unwrap();
@@ -158,13 +175,40 @@ impl SharedQueue {
                         None => break,
                     }
                 }
-                return true;
+                break;
             }
             if s.shutdown {
                 return false;
             }
             s = self.available.wait(s).unwrap();
         }
+        if out.len() >= max || self.fill_wait.is_zero() || !s.jobs.is_empty() {
+            return true;
+        }
+        // Shallow queue: collect late arrivals for up to fill_wait.
+        let deadline = Instant::now() + self.fill_wait;
+        while out.len() < max && !s.shutdown {
+            let now = Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+            else {
+                break;
+            };
+            let (guard, timeout) = self.available.wait_timeout(s, left).unwrap();
+            s = guard;
+            // Fair share of whatever arrived while parked.
+            let fair = s.jobs.len().div_ceil(self.workers).max(1);
+            let grab = (max - out.len()).min(fair);
+            for _ in 0..grab {
+                match s.jobs.pop_front() {
+                    Some(req) => out.push(req),
+                    None => break,
+                }
+            }
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        true
     }
 
     fn push(&self, req: Request) {
@@ -207,15 +251,36 @@ impl Coordinator {
     /// docs §Lane packing). Concurrency is W×L request slots with only W
     /// copies of the model images; per-request outputs stay bit-identical
     /// to single-request execution.
+    ///
+    /// Workers dispatch whatever is queued immediately (`fill_wait` of
+    /// zero); use [`Self::with_lanes_wait`] to let a shallow queue pack
+    /// fuller lane batches.
     pub fn with_lanes(
         chip: &Menage,
         num_workers: usize,
         lanes_per_worker: usize,
     ) -> Self {
+        Self::with_lanes_wait(chip, num_workers, lanes_per_worker, Duration::ZERO)
+    }
+
+    /// [`Self::with_lanes`] with **adaptive lane packing**: a worker whose
+    /// steal drained the queue below a full lane batch keeps collecting
+    /// late arrivals for up to `fill_wait` before dispatching, so a
+    /// shallow request stream still amortizes the shared CSR walk across
+    /// lanes instead of degenerating into singleton batches. Bounded:
+    /// the batch goes out as soon as it is full, the wait lapses, or
+    /// shutdown is raised — `fill_wait` is the worst-case added latency
+    /// for a lone request, never a liveness hazard.
+    pub fn with_lanes_wait(
+        chip: &Menage,
+        num_workers: usize,
+        lanes_per_worker: usize,
+        fill_wait: Duration,
+    ) -> Self {
         assert!(num_workers > 0);
         assert!(lanes_per_worker > 0);
         let metrics = Arc::new(Metrics::default());
-        let queue = Arc::new(SharedQueue::new(num_workers));
+        let queue = Arc::new(SharedQueue::new(num_workers, fill_wait));
         let (results_tx, results_rx) = mpsc::channel::<Result<Response>>();
         let mut workers = Vec::with_capacity(num_workers);
         for _ in 0..num_workers {
@@ -415,14 +480,20 @@ impl Coordinator {
             self.salvaged = out;
             return Err(e);
         }
+        // A successful drain invalidates any stale, un-taken salvage from
+        // an earlier failure: after this point `take_salvaged_responses`
+        // is empty, so old responses can never be misattributed to the
+        // batch that just drained cleanly.
+        self.salvaged.clear();
         Ok(out)
     }
 
     /// The successful responses a failing [`Self::drain`] consumed
     /// (submission order). Returns them once, clearing the buffer; a later
-    /// failing drain overwrites any un-taken salvage. Never mixed into a
-    /// subsequent successful drain's results — responses carry their `id`
-    /// for attribution.
+    /// failing drain overwrites any un-taken salvage and a *successful*
+    /// drain discards it (so this is always empty after a clean drain).
+    /// Never mixed into a drain's own results — responses carry their
+    /// `id` for attribution.
     pub fn take_salvaged_responses(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.salvaged)
     }
@@ -727,6 +798,55 @@ mod tests {
         // energy/trace consumers (which read core totals) see it.
         let macs: u64 = chips.iter().map(|c| c.total_macs()).sum();
         assert!(macs > 0, "lane work invisible to core stats after shutdown");
+    }
+
+    /// Adaptive lane packing: with a bounded fill_wait, a trickle of
+    /// requests into a shallow queue still packs into a multi-lane batch
+    /// instead of dispatching singletons. Observable via the worker
+    /// chip's lane count: a singleton steal takes the worker's
+    /// `batch.len() == 1` `run_into` path, which never configures lanes,
+    /// so `num_lanes() >= 2` proves a multi-request batch was packed
+    /// (lanes never shrink).
+    #[test]
+    fn fill_wait_packs_shallow_queue_into_lanes() {
+        let (chip, _) = test_chip();
+        let mut coord =
+            Coordinator::with_lanes_wait(&chip, 1, 4, Duration::from_secs(5));
+        for (st, l) in inputs(4) {
+            coord.submit(st, l);
+            // Trickle: the worker steals the first request, drains the
+            // queue, and fill-waits while the rest arrive.
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let res = coord.drain().unwrap();
+        assert_eq!(res.len(), 4);
+        let chips = coord.shutdown();
+        assert!(
+            chips[0].cores[0].num_lanes() >= 2,
+            "shallow queue dispatched singleton batches despite fill_wait"
+        );
+    }
+
+    /// fill_wait is a latency bound, not a liveness hazard: shutdown
+    /// releases a fill-waiting worker immediately, and the partial batch
+    /// it was holding is still processed, not dropped.
+    #[test]
+    fn fill_wait_releases_on_shutdown() {
+        let (chip, _) = test_chip();
+        let mut coord =
+            Coordinator::with_lanes_wait(&chip, 1, 4, Duration::from_secs(30));
+        let (st, l) = inputs(1).pop().unwrap();
+        coord.submit(st, l);
+        // Give the worker time to steal the request and park in its
+        // fill_wait window.
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = Instant::now();
+        let chips = coord.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "shutdown blocked on fill_wait"
+        );
+        assert_eq!(chips[0].inputs_processed, 1, "parked request was dropped");
     }
 
     /// B > worker count: more in-flight requests than workers must pack

@@ -1,0 +1,331 @@
+//! The unified event-dispatch loop: one definition of the MX-NEURACORE
+//! step semantics for every execution path.
+//!
+//! [`step`] executes one global time step for an arbitrary set of active
+//! lanes over a lane-major [`SoaState`]. The sequential engine calls it
+//! with a stride-1 state and `active == [0]` (the literal L=1
+//! instantiation); the lane engine calls it with a stride-B state and the
+//! batch's active lane set. There are no other step implementations.
+//!
+//! # Canonical event order
+//!
+//! Every lane's MEM_E queue is sorted and folded into ascending
+//! `(src, multiplicity)` runs before dispatch — in *every* mode, ideal and
+//! non-ideal. This canonical order is what makes lane sharing exact: a
+//! lane's deposit sequence is identical whether it runs alone (L=1) or
+//! shares the walk with B−1 other lanes, because per-lane state is
+//! private and each lane always sees its own events in ascending source
+//! order. Ideal-mode deposits are exact integer adds (order-free anyway);
+//! the non-ideal error sidecar is made order-robust on top by Neumaier
+//! compensation ([`crate::analog::kahan_add`]) and is applied per slot at
+//! sweep time. Consequently lane-shared non-ideal runs are **bit-identical**
+//! to sequential non-ideal runs — the documented tolerance
+//! ([`crate::engine::NONIDEAL_ORACLE_TOLERANCE`]) is only needed against
+//! the *fixed-order per-event oracle* (the pre-refactor arithmetic; see
+//! [`CoreView::legacy_error_oracle`]).
+//!
+//! # Merged walk (k-way merge)
+//!
+//! The dispatcher advances one cursor per active lane through its run
+//! list via a min-heap keyed on source id: each distinct source is popped
+//! once, its MEM_E2A entry and MEM_S&N row slice are fetched **once**, and
+//! the deposit loop writes the contiguous lane block of every carrying
+//! lane. Exhausted lanes simply leave the heap — unlike the previous
+//! O(L) min-scan per distinct source, cost is O(Σ runs · log L) and lanes
+//! that ran out of events are never rescanned.
+//!
+//! # Accounting
+//!
+//! Every [`CoreStats`] counter is charged to each carrying lane exactly
+//! as a lone sequential dispatch would charge it, ×multiplicity (the
+//! controller pops each event individually). Only the A-SYN MAC energy is
+//! core-level: the engine fills `mac_count` and the core flushes it to the
+//! shared A-SYN accounts once per step.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::analog::{kahan_add, ASyn, AnalogParams};
+use crate::engine::state::{LaneCtl, RoundSoa, SoaState};
+use crate::engine::sweep::sweep_round;
+use crate::mapping::CoreImage;
+use crate::neuracore::{CoreStats, STEP_SERIES_CAP};
+use crate::snn::LifParams;
+
+/// Borrowed view of everything immutable the engine needs from a core:
+/// the distilled image, its CSR mirror and precomputed sweep data, the
+/// numeric parameters, and the test/debug knobs. Built fresh per step from
+/// `NeuraCore` fields (field-level borrows keep it disjoint from the
+/// mutable state).
+pub struct CoreView<'a> {
+    /// Distilled control memories (MEM_E2A per round, dims, scale).
+    pub image: &'a CoreImage,
+    /// CSR row index per round: row `r` of round `k` covers
+    /// `row_entries[k][rows_index[k][r] .. rows_index[k][r+1]]`.
+    pub rows_index: &'a [Vec<u32>],
+    /// CSR entries per round as `(engine, virt, weight)`.
+    pub row_entries: &'a [Vec<(u8, u16, i8)>],
+    /// Flattened `(slot, dst)` residents per round, sorted by destination.
+    pub residents_sorted: &'a [Vec<(u32, u32)>],
+    /// Per-round sweep cycle cost (max per-engine occupancy).
+    pub sweep_cost: &'a [u64],
+    /// Whether clean slots may skip the sweep arithmetic
+    /// ([`crate::engine::sweep::quiescent_fixed_point`]).
+    pub sweep_skip: bool,
+    /// LIF parameters of the mapped layer.
+    pub lif: LifParams,
+    /// Analog operating point (selects ideal vs non-ideal dispatch).
+    pub analog: &'a AnalogParams,
+    /// A-SYN engines — read-only here (C2C ladder deviation); their energy
+    /// accounts are updated by the core from `mac_count` after the step.
+    pub syns: &'a [ASyn],
+    /// Capacitors per A-NEURON (N).
+    pub caps_per_engine: usize,
+    /// Test/debug knob: full sweep arithmetic for every resident slot.
+    pub force_dense_sweep: bool,
+    /// Test/debug knob: dispatch each MEM_E entry individually (runs of
+    /// multiplicity 1) instead of coalescing duplicates.
+    pub force_per_event_dispatch: bool,
+    /// Test/debug knob: the **fixed-order oracle** — per-event dispatch
+    /// with *uncompensated* error accumulation, i.e. the pre-refactor
+    /// sequential engine's exact non-ideal arithmetic for inputs that
+    /// arrive sorted and duplicate-free. The non-ideal differential tests
+    /// pin the default (coalesced, Kahan) engine to this oracle within
+    /// [`crate::engine::NONIDEAL_ORACLE_TOLERANCE`].
+    pub legacy_error_oracle: bool,
+}
+
+/// Reusable per-step scratch (no allocation on the steady state): per
+/// active lane cycle/row accumulators and run cursors, the merge heap, and
+/// the per-source carrier list.
+#[derive(Debug, Clone, Default)]
+pub struct StepScratch {
+    lane_cycles: Vec<u64>,
+    lane_rows: Vec<u64>,
+    /// Cursor into each active lane's run list (indexed by active position).
+    pos: Vec<usize>,
+    /// Min-heap of `(next source, active position)` lane cursors.
+    heap: BinaryHeap<Reverse<(u32, u32)>>,
+    /// Lanes carrying the current source: `(lane id, active pos, mult)`.
+    carriers: Vec<(u32, u32, u32)>,
+}
+
+/// Execute one global time step for the lanes listed in `active`
+/// (strictly ascending lane indices within `state`'s stride), writing lane
+/// `active[i]`'s emitted spikes into `outs[i]` (cleared first).
+///
+/// `ctl` and `stats` are indexed by *lane id*; `outs` by active position.
+/// The sequential engine passes one-element slices built from the core's
+/// own queue and `stats` field — sequential execution *is* this function
+/// at stride 1.
+#[allow(clippy::too_many_arguments)]
+pub fn step(
+    view: &CoreView<'_>,
+    state: &mut SoaState,
+    ctl: &mut [LaneCtl],
+    stats: &mut [CoreStats],
+    active: &[usize],
+    outs: &mut [Vec<u32>],
+    mac_count: &mut [u64],
+    scratch: &mut StepScratch,
+) {
+    assert_eq!(active.len(), outs.len(), "one output buffer per active lane");
+    debug_assert!(active.windows(2).all(|w| w[0] < w[1]));
+    let stride = state.lanes();
+    let n = view.caps_per_engine;
+    let m = view.image.num_engines;
+    let ideal = view.analog.is_ideal();
+    let per_event = view.force_per_event_dispatch || view.legacy_error_oracle;
+    let num_rounds = view.image.rounds.len();
+
+    // Canonical order: sort each lane's MEM_E and fold it into ascending
+    // (src, multiplicity) runs — per-event runs under the oracle knobs,
+    // so duplicate deposits replay individually in the same fixed order.
+    for &li in active {
+        let c = &mut ctl[li];
+        let q = &mut c.queue;
+        if q.len() > 1 && !q.windows(2).all(|w| w[0] <= w[1]) {
+            q.sort_unstable();
+        }
+        c.runs.clear();
+        if per_event {
+            c.runs.extend(q.iter().map(|&s| (s, 1u32)));
+        } else {
+            let mut i = 0usize;
+            while i < q.len() {
+                let src = q[i];
+                let mut cnt = 1usize;
+                while i + cnt < q.len() && q[i + cnt] == src {
+                    cnt += 1;
+                }
+                c.runs.push((src, cnt as u32));
+                i += cnt;
+            }
+        }
+    }
+    for out in outs.iter_mut() {
+        out.clear();
+    }
+
+    let nl = active.len();
+    scratch.lane_cycles.clear();
+    scratch.lane_cycles.resize(nl, 0);
+    scratch.lane_rows.clear();
+    scratch.lane_rows.resize(nl, 0);
+
+    for round_idx in 0..num_rounds {
+        let round = &view.image.rounds[round_idx];
+        let residents = &view.residents_sorted[round_idx];
+        let ridx = &view.rows_index[round_idx];
+        let ents = &view.row_entries[round_idx];
+        if num_rounds > 1 {
+            // Capacitor reassignment: every lane reloads its own parked
+            // state (charge transfer is per-lane, the image walk is not).
+            let reload = (residents.len() as u64).div_ceil(m as u64);
+            for c in scratch.lane_cycles.iter_mut() {
+                *c += reload;
+            }
+        }
+
+        // Merged dispatch: k-way merge of the lanes' run cursors,
+        // ascending distinct sources, one MEM_E2A lookup + row-slice
+        // fetch per source. Exhausted lanes fall out of the heap.
+        scratch.pos.clear();
+        scratch.pos.resize(nl, 0);
+        scratch.heap.clear();
+        for (ai, &li) in active.iter().enumerate() {
+            if let Some(&(s, _)) = ctl[li].runs.first() {
+                scratch.heap.push(Reverse((s, ai as u32)));
+            }
+        }
+        let st = &mut state.rounds[round_idx];
+        while let Some(&Reverse((src, _))) = scratch.heap.peek() {
+            // Gather every lane cursor parked at `src` (a lane can appear
+            // more than once under per-event runs — each duplicate event
+            // is its own run and dispatches individually).
+            scratch.carriers.clear();
+            while let Some(&Reverse((s, ai))) = scratch.heap.peek() {
+                if s != src {
+                    break;
+                }
+                scratch.heap.pop();
+                let a = ai as usize;
+                let li = active[a];
+                let (_, mult) = ctl[li].runs[scratch.pos[a]];
+                scratch.pos[a] += 1;
+                scratch.carriers.push((li as u32, ai, mult));
+                if let Some(&(next, _)) = ctl[li].runs.get(scratch.pos[a]) {
+                    scratch.heap.push(Reverse((next, ai)));
+                }
+            }
+
+            // Image fetch, once per distinct source.
+            let s = src as usize;
+            let (row_count, entries) = if s < round.e2a.len() && round.e2a[s].count > 0 {
+                let e2a = round.e2a[s];
+                let lo = ridx[e2a.start as usize] as usize;
+                let hi = ridx[(e2a.start + e2a.count) as usize] as usize;
+                (e2a.count as u64, &ents[lo..hi])
+            } else {
+                (0u64, &ents[0..0])
+            };
+
+            // Per-lane accounting, identical to a lone sequential
+            // dispatch: the controller pops each event individually, so
+            // every cost is charged ×multiplicity.
+            for &(li, ai, mult) in scratch.carriers.iter() {
+                let (li, ai, mult_u) = (li as usize, ai as usize, mult as u64);
+                stats[li].events_dispatched += mult_u;
+                scratch.lane_cycles[ai] += mult_u; // MEM_E pop + MEM_E2A read
+                if row_count == 0 {
+                    continue;
+                }
+                scratch.lane_cycles[ai] += mult_u * row_count; // one row/cycle
+                scratch.lane_rows[ai] += mult_u * row_count;
+                stats[li].sn_rows_read += mult_u * row_count;
+                stats[li].macs += mult_u * entries.len() as u64;
+                stats[li].integrations += mult_u * entries.len() as u64;
+            }
+            if !entries.is_empty() {
+                deposit(view, st, stride, &scratch.carriers, entries, n, ideal, mac_count);
+            }
+        }
+
+        sweep_round(view, st, stride, active, stats, outs, residents);
+        for c in scratch.lane_cycles.iter_mut() {
+            *c += view.sweep_cost[round_idx];
+        }
+    }
+
+    // Finalize per lane: MEM_E consumed, cycle totals and the capped
+    // per-step series recorded, multi-round outputs re-sorted if the
+    // round interleaving actually violated ascending order.
+    for (ai, &li) in active.iter().enumerate() {
+        ctl[li].queue.clear();
+        let s = &mut stats[li];
+        s.cycles += scratch.lane_cycles[ai];
+        if s.cycles_per_step.len() < STEP_SERIES_CAP {
+            s.cycles_per_step.push(scratch.lane_cycles[ai]);
+            s.sn_rows_touched_per_step.push(scratch.lane_rows[ai]);
+        }
+        let out = &mut outs[ai];
+        if num_rounds > 1 && !out.windows(2).all(|w| w[0] <= w[1]) {
+            out.sort_unstable();
+        }
+    }
+}
+
+/// Deposit one source's row slice into every carrying lane. Per entry the
+/// inner loop writes the slot's contiguous lane block (`slot·stride + lane`)
+/// — the SoA layout's B-wide update.
+#[allow(clippy::too_many_arguments)]
+fn deposit(
+    view: &CoreView<'_>,
+    st: &mut RoundSoa,
+    stride: usize,
+    carriers: &[(u32, u32, u32)],
+    entries: &[(u8, u16, i8)],
+    n: usize,
+    ideal: bool,
+    mac_count: &mut [u64],
+) {
+    let scale = view.image.scale;
+    let legacy = view.legacy_error_oracle;
+    for &(j, virt, w) in entries {
+        let j = j as usize;
+        let base = (j * n + virt as usize) * stride;
+        // Analog sidecar term: deviation of the real C2C packet from the
+        // ideal deposit, plus switch injection — identical for every lane
+        // carrying the event, so it is computed once per entry.
+        let err_term = if ideal {
+            0.0
+        } else {
+            let real = view.syns[j].ladder.convert_signed(w, view.analog.v_ref)
+                * 256.0
+                * scale as f64
+                / view.analog.v_ref;
+            real - w as f64 * scale as f64 + view.analog.switch_injection * 0.01
+        };
+        let mut group_mult = 0u64;
+        for &(li, _, mult) in carriers {
+            let idx = base + li as usize;
+            // Ideal C2C charge: exactly w·mult (integer, exact).
+            st.acc[idx] += w as i32 * mult as i32;
+            st.dirty[idx] = true;
+            group_mult += mult as u64;
+            if !ideal {
+                if legacy {
+                    // Pre-refactor arithmetic: plain per-deposit add
+                    // (mult == 1 on this path — the oracle forces
+                    // per-event runs).
+                    st.err[idx] += err_term;
+                } else {
+                    kahan_add(&mut st.err[idx], &mut st.err_c[idx], err_term * mult as f64);
+                }
+            }
+        }
+        // Batched per-engine MAC energy bookkeeping, flushed by the core
+        // once per step (keeps the inner loop free of float adds).
+        mac_count[j] += group_mult;
+    }
+}

@@ -1,0 +1,65 @@
+//! # The unified lane-major execution engine
+//!
+//! Every execution path of the MX-NEURACORE simulator — sequential
+//! single-sample runs, SIMD-style lane batches, ideal and non-ideal
+//! analog mode, and all the differential-test oracle knobs — funnels into
+//! **one** step implementation: [`dispatch::step`] over the lane-major
+//! SoA state of [`state::SoaState`]. This module replaces the three
+//! divergent copies of the step semantics the simulator used to carry
+//! (`step_into`, `step_lanes_into`, and the non-ideal state-swap
+//! fallback).
+//!
+//! ## Lane-major SoA layout
+//!
+//! Per mapping round, the membrane state of all B lanes lives in four
+//! flat arrays indexed `slot · B + lane` ([`state::RoundSoa`]): all lanes
+//! of one capacitor slot are contiguous. One synapse entry's deposit and
+//! one resident's sweep therefore run contiguous B-wide inner loops —
+//! stride-1 accesses amenable to autovectorization — instead of chasing
+//! per-lane `Vec` allocations.
+//!
+//! ## Sequential execution is the L=1 instantiation
+//!
+//! [`crate::neuracore::NeuraCore::step_into`] calls [`dispatch::step`]
+//! with a stride-1 [`state::SoaState`], `active == [0]`, and the core's
+//! own `stats` field as lane 0's statistics. There is no separate
+//! sequential step body, so "lane results are bit-identical to sequential
+//! results" is structural: both are the same machine code over the same
+//! state layout, differing only in stride.
+//!
+//! ## Non-ideal tolerance contract
+//!
+//! The non-ideal error sidecar (C2C mismatch deviation + switch
+//! injection) is accumulated per `(slot, lane)` with Neumaier-compensated
+//! addition ([`crate::analog::kahan_add`]) and applied to the membrane
+//! once per slot at sweep time. Because every mode dispatches events in
+//! the same canonical ascending order (see [`dispatch`]), lane-shared
+//! non-ideal runs are **bit-identical** to sequential (L=1) non-ideal
+//! runs — mismatch studies batch exactly like ideal-mode inference.
+//!
+//! Against the **pre-refactor** arithmetic (per-event, uncompensated
+//! accumulation — reproducible via the fixed-order oracle knob
+//! [`dispatch::CoreView::legacy_error_oracle`] on sorted duplicate-free
+//! inputs) results are value-equal within [`NONIDEAL_ORACLE_TOLERANCE`]
+//! per membrane per step: coalescing folds a duplicate event's deposits
+//! into one `err · mult` term and Neumaier compensation re-associates the
+//! sum, each a ≤1-ulp-per-add perturbation of a sidecar that is itself
+//! orders of magnitude below the threshold scale.
+
+pub mod dispatch;
+pub mod state;
+pub mod sweep;
+
+pub use dispatch::{step, CoreView, StepScratch};
+pub use state::{latch_events, LaneCtl, RoundSoa, SoaState};
+pub use sweep::quiescent_fixed_point;
+
+/// Documented bound on the absolute per-slot membrane divergence (f32,
+/// per step) between the default engine (coalesced dispatch, Kahan
+/// error sidecar) and the fixed-order per-event oracle
+/// ([`dispatch::CoreView::legacy_error_oracle`]) in non-ideal analog
+/// mode. The true divergence is at the f64 rounding level (≈1e-16
+/// relative) before the f32 membrane cast; 1e-4 in membrane volts leaves
+/// five orders of magnitude of headroom while still catching any real
+/// semantic drift.
+pub const NONIDEAL_ORACLE_TOLERANCE: f32 = 1e-4;

@@ -1,0 +1,226 @@
+//! Lane-major SoA execution state.
+//!
+//! One [`RoundSoa`] holds the membrane state of every lane for one mapping
+//! round as four flat arrays indexed `slot * lanes + lane`. The layout is
+//! **lane-major per slot**: all B lanes of a slot are contiguous, so
+//!
+//! * one synapse entry's deposit (`acc[slot]` across every carrying lane)
+//!   touches one contiguous B-wide block, and
+//! * one resident's sweep (`mem`/`acc`/`err` of a slot across lanes) walks
+//!   three contiguous B-wide blocks
+//!
+//! — the inner loops the dispatcher and sweeper run are stride-1 and
+//! autovectorization-friendly, instead of hopping between per-lane
+//! AoS allocations (the pre-refactor `Vec<RoundState>`-per-lane layout).
+//!
+//! The sequential engine is the `lanes == 1` instantiation of the same
+//! structures: a stride-1 `SoaState` *is* the old per-slot layout, so there
+//! is exactly one definition of the step semantics (see
+//! [`crate::engine::dispatch`]).
+
+use crate::neuracore::CoreStats;
+
+/// State of one mapping round for all lanes, lane-major
+/// (`index = slot * lanes + lane`).
+#[derive(Debug, Clone, Default)]
+pub struct RoundSoa {
+    /// f32 membrane per (slot, lane), reference-exact arithmetic.
+    pub mem: Vec<f32>,
+    /// Integer charge accumulated this step (Σ quantized weights · mult).
+    pub acc: Vec<i32>,
+    /// Analog error sidecar per (slot, lane): Kahan–Babuška (Neumaier)
+    /// running sum. Exactly zero in ideal mode.
+    pub err: Vec<f64>,
+    /// Neumaier compensation term of `err`; the sidecar's value is
+    /// `err + err_c`, applied per slot at sweep time
+    /// (see [`crate::analog::kahan_add`]).
+    pub err_c: Vec<f64>,
+    /// Activity tracking: `true` when the (slot, lane) state differs from
+    /// the quiescent fixed point and the sweep must do full arithmetic.
+    pub dirty: Vec<bool>,
+}
+
+impl RoundSoa {
+    /// Quiescent state for `cells = slots · lanes` entries.
+    fn fresh(cells: usize, v_reset: f32, sweep_skip: bool) -> Self {
+        Self {
+            mem: vec![v_reset; cells],
+            acc: vec![0i32; cells],
+            err: vec![0.0f64; cells],
+            err_c: vec![0.0f64; cells],
+            dirty: vec![!sweep_skip; cells],
+        }
+    }
+
+    /// Reset to the quiescent state in place (buffers reused).
+    fn reset(&mut self, v_reset: f32, sweep_skip: bool) {
+        self.mem.fill(v_reset);
+        self.acc.fill(0);
+        self.err.fill(0.0);
+        self.err_c.fill(0.0);
+        self.dirty.fill(!sweep_skip);
+    }
+
+    /// Re-stride from `old` to `new` lanes (`new > old`): existing lanes
+    /// keep their state at the same (slot, lane) coordinates, new lanes
+    /// start quiescent.
+    fn restride(&mut self, slots: usize, old: usize, new: usize, v_reset: f32, sweep_skip: bool) {
+        let mut next = Self::fresh(slots * new, v_reset, sweep_skip);
+        for slot in 0..slots {
+            for lane in 0..old {
+                let s = slot * old + lane;
+                let d = slot * new + lane;
+                next.mem[d] = self.mem[s];
+                next.acc[d] = self.acc[s];
+                next.err[d] = self.err[s];
+                next.err_c[d] = self.err_c[s];
+                next.dirty[d] = self.dirty[s];
+            }
+        }
+        *self = next;
+    }
+}
+
+/// Per-round lane-major state of one core: the only mutable numeric state
+/// the unified engine operates on. The sequential path owns a stride-1
+/// instance; the lane path owns a stride-B instance.
+#[derive(Debug, Clone, Default)]
+pub struct SoaState {
+    lanes: usize,
+    slots: usize,
+    pub rounds: Vec<RoundSoa>,
+}
+
+impl SoaState {
+    /// Quiescent state for `rounds` mapping rounds of `slots` capacitors
+    /// and `lanes` lanes.
+    pub fn new(rounds: usize, slots: usize, lanes: usize, v_reset: f32, sweep_skip: bool) -> Self {
+        Self {
+            lanes,
+            slots,
+            rounds: (0..rounds)
+                .map(|_| RoundSoa::fresh(slots * lanes, v_reset, sweep_skip))
+                .collect(),
+        }
+    }
+
+    /// Configured lane count (the stride of every round array).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Capacitor slots per round.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Reset every round of every lane to the quiescent state in place.
+    pub fn reset(&mut self, v_reset: f32, sweep_skip: bool) {
+        for r in self.rounds.iter_mut() {
+            r.reset(v_reset, sweep_skip);
+        }
+    }
+
+    /// Grow to at least `lanes` lanes, re-striding the arrays so existing
+    /// lanes keep their state and new lanes start quiescent. Lanes never
+    /// shrink (lane identity is positional across batches).
+    pub fn grow_lanes(&mut self, lanes: usize, v_reset: f32, sweep_skip: bool) {
+        if lanes <= self.lanes {
+            return;
+        }
+        let (slots, old) = (self.slots, self.lanes);
+        for r in self.rounds.iter_mut() {
+            r.restride(slots, old, lanes, v_reset, sweep_skip);
+        }
+        self.lanes = lanes;
+    }
+
+    /// Debug/test introspection: `(mem, acc, dirty)` per slot of one
+    /// round of one lane.
+    pub fn slot_states(&self, round: usize, lane: usize) -> Vec<(f32, i32, bool)> {
+        let r = &self.rounds[round];
+        (0..self.slots)
+            .map(|s| {
+                let i = s * self.lanes + lane;
+                (r.mem[i], r.acc[i], r.dirty[i])
+            })
+            .collect()
+    }
+}
+
+/// Per-lane controller state: the MEM_E queue and its coalesced
+/// `(src, multiplicity)` run list, rebuilt each step. Everything numeric
+/// lives in [`SoaState`]; everything statistical in the caller's
+/// [`CoreStats`] slice — this split is what lets the sequential engine
+/// borrow the core's own `stats` field as lane 0's statistics.
+#[derive(Debug, Clone, Default)]
+pub struct LaneCtl {
+    /// MEM_E: pending events for the current step.
+    pub queue: Vec<u32>,
+    /// Scratch: the queue folded into ascending `(src, multiplicity)`
+    /// runs (per-event runs of mult 1 under the oracle knobs).
+    pub runs: Vec<(u32, u32)>,
+}
+
+/// The MEM_E latch, shared by the sequential and lane paths so the
+/// overflow policy (append up to the memory depth, drop the rest, count
+/// drops and the occupancy high-water mark) cannot diverge between them.
+pub fn latch_events(
+    queue: &mut Vec<u32>,
+    stats: &mut CoreStats,
+    depth: usize,
+    events: &[u32],
+) -> usize {
+    let space = depth.saturating_sub(queue.len());
+    let take = events.len().min(space);
+    queue.extend_from_slice(&events[..take]);
+    let dropped = events.len() - take;
+    stats.dropped_events += dropped as u64;
+    stats.peak_event_queue = stats.peak_event_queue.max(queue.len());
+    dropped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_preserves_state_and_adds_quiescent_lanes() {
+        let mut st = SoaState::new(2, 3, 2, 0.5, true);
+        st.rounds[1].mem[2 * 2 + 1] = 9.0; // slot 2, lane 1
+        st.rounds[1].acc[0] = 7; // slot 0, lane 0
+        st.rounds[1].dirty[0] = true;
+        st.grow_lanes(4, 0.5, true);
+        assert_eq!(st.lanes(), 4);
+        assert_eq!(st.rounds[1].mem[2 * 4 + 1], 9.0);
+        assert_eq!(st.rounds[1].acc[0], 7);
+        assert!(st.rounds[1].dirty[0]);
+        // New lanes are quiescent.
+        assert_eq!(st.rounds[1].mem[2 * 4 + 3], 0.5);
+        assert_eq!(st.rounds[1].acc[2 * 4 + 3], 0);
+        assert!(!st.rounds[1].dirty[2 * 4 + 3]);
+        // Growing to fewer/equal lanes is a no-op.
+        st.grow_lanes(3, 0.5, true);
+        assert_eq!(st.lanes(), 4);
+    }
+
+    #[test]
+    fn slot_states_reads_strided() {
+        let mut st = SoaState::new(1, 2, 3, 0.0, false);
+        st.rounds[0].mem[3 + 2] = 4.0; // slot 1, lane 2
+        st.rounds[0].acc[2] = -3; // slot 0, lane 2
+        let dump = st.slot_states(0, 2);
+        assert_eq!(dump, vec![(0.0, -3, true), (4.0, 0, true)]);
+    }
+
+    #[test]
+    fn latch_respects_depth_and_counts() {
+        let mut q = vec![1u32, 2];
+        let mut stats = CoreStats::default();
+        let dropped = latch_events(&mut q, &mut stats, 4, &[7, 8, 9]);
+        assert_eq!(dropped, 1);
+        assert_eq!(q, vec![1, 2, 7, 8]);
+        assert_eq!(stats.dropped_events, 1);
+        assert_eq!(stats.peak_event_queue, 4);
+    }
+}

@@ -1,0 +1,102 @@
+//! The unified end-of-step sweep: leak + integrate + compare-to-threshold
+//! for every resident virtual neuron, over the lane-major SoA state.
+//!
+//! Residents are iterated in destination order (outer loop) with the
+//! active lanes inner, so
+//!
+//! * each lane's spikes come out pre-sorted per round exactly as the
+//!   sequential engine emits them, and
+//! * the inner loop reads one slot's contiguous lane block
+//!   (`slot·stride + lane`) — the SoA layout's B-wide sweep.
+//!
+//! The activity-tracked skip (clean slots bypass the arithmetic) is valid
+//! only when [`quiescent_fixed_point`] holds; the non-ideal branch applies
+//! the Kahan error sidecar per slot here — *at sweep time* — plus hold
+//! droop and the supply-rail clamp, bit-identical to the pre-refactor
+//! sequential sweep (the compensation term is zero under the legacy
+//! oracle).
+
+use crate::analog::AnalogParams;
+use crate::engine::dispatch::CoreView;
+use crate::engine::state::RoundSoa;
+use crate::neuracore::CoreStats;
+use crate::snn::LifParams;
+
+/// Whether `v_reset` is a quiescent fixed point of the sweep: a slot with
+/// `mem == v_reset`, `acc == 0`, `err == 0` must come out of the full
+/// leak/integrate/compare arithmetic bit-identical and below threshold.
+/// When this holds the sweep may skip clean slots; when it does not
+/// (e.g. `β·v_reset != v_reset`), skipping is disabled and every slot
+/// stays permanently dirty.
+pub fn quiescent_fixed_point(lif: &LifParams, analog: &AnalogParams) -> bool {
+    let ideal = analog.is_ideal();
+    let q = lif.v_reset;
+    // Mirror the sweep arithmetic exactly, with acc == 0 and err == 0.
+    let mut v = lif.beta * q;
+    if !ideal {
+        v -= (q * analog.hold_leak as f32).abs();
+        if analog.v_sat.is_finite() {
+            v = v.clamp(-analog.v_sat as f32, analog.v_sat as f32);
+        }
+    }
+    v == q && v < lif.v_threshold
+}
+
+/// Sweep one round's residents for every active lane: full arithmetic for
+/// dirty slots, provable no-op skip for clean ones. Spikes are pushed to
+/// `outs[active position]`; `fire_ops`/`spikes_out` are charged per lane
+/// (the hardware sweeps every occupied capacitor regardless of charge).
+pub(crate) fn sweep_round(
+    view: &CoreView<'_>,
+    st: &mut RoundSoa,
+    stride: usize,
+    active: &[usize],
+    stats: &mut [CoreStats],
+    outs: &mut [Vec<u32>],
+    residents: &[(u32, u32)],
+) {
+    let ideal = view.analog.is_ideal();
+    let beta = view.lif.beta;
+    let th = view.lif.v_threshold;
+    let q = view.lif.v_reset;
+    let scale = view.image.scale;
+    let skip = view.sweep_skip;
+    let dense = view.force_dense_sweep;
+    for &li in active {
+        stats[li].fire_ops += residents.len() as u64;
+    }
+    for &(slot, dst) in residents {
+        let base = slot as usize * stride;
+        for (ai, &li) in active.iter().enumerate() {
+            let idx = base + li;
+            if !dense && !st.dirty[idx] {
+                continue; // provably a no-op (quiescent fixed point)
+            }
+            // Reference-exact arithmetic (see neuracore module docs).
+            let mut v = beta * st.mem[idx] + st.acc[idx] as f32 * scale;
+            if !ideal {
+                // Apply the accumulated analog error (Neumaier value =
+                // sum + compensation) and hold droop, then the rail clamp.
+                v += (st.err[idx] + st.err_c[idx]) as f32;
+                v -= (st.mem[idx] * view.analog.hold_leak as f32).abs();
+                if view.analog.v_sat.is_finite() {
+                    v = v.clamp(-(view.analog.v_sat as f32), view.analog.v_sat as f32);
+                }
+            }
+            st.acc[idx] = 0;
+            st.err[idx] = 0.0;
+            st.err_c[idx] = 0.0;
+            if v >= th {
+                outs[ai].push(dst);
+                st.mem[idx] = q;
+                stats[li].spikes_out += 1;
+                // Post-fire state is (v_reset, 0, 0): clean iff that is
+                // the quiescent fixed point.
+                st.dirty[idx] = !skip;
+            } else {
+                st.mem[idx] = v;
+                st.dirty[idx] = !(skip && v == q);
+            }
+        }
+    }
+}

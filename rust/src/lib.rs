@@ -19,6 +19,9 @@
 //! * [`mapping`] — the paper's ILP formulation (eqs. 3–7), heuristic
 //!   baselines, and the *distiller* that turns a mapping solution into the
 //!   controller memory images (MEM_E2A / MEM_S&N).
+//! * [`engine`] — the unified lane-major SoA execution engine: one
+//!   definition of the step semantics shared by sequential (L=1) and
+//!   lane-batched execution, ideal and non-ideal analog mode.
 //! * [`neuracore`] — cycle-accurate MX-NEURACORE simulator: event memory,
 //!   polling controller FSM, A-SYN bank, A-NEURON bank with virtual neurons.
 //! * [`accel`] — the full chip: a chain of MX-NEURACOREs with inter-core
@@ -43,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod datasets;
 pub mod energy;
+pub mod engine;
 pub mod ilp;
 pub mod mapping;
 pub mod neuracore;

@@ -357,6 +357,18 @@ impl SpikeTrain {
         st
     }
 
+    /// Append a duplicate of every step's events (each source "fires
+    /// twice" in the step, with the copies forming an unsorted tail) —
+    /// the canonical duplicate-event workload for the coalescing and
+    /// ×multiplicity-accounting differential tests, one definition
+    /// instead of an inline copy per suite.
+    pub fn duplicate_events(&mut self) {
+        for step in self.spikes.iter_mut() {
+            let extra: Vec<u32> = step.clone();
+            step.extend(extra);
+        }
+    }
+
     /// Reshape in place for buffer reuse (the allocation-free batch path):
     /// sets the dimensions and empties every step's spike list while
     /// keeping the per-step `Vec` allocations alive.

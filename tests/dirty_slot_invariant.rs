@@ -35,14 +35,22 @@ fn random_layer(in_dim: usize, out_dim: usize, lif: LifParams, rng: &mut Rng) ->
     QuantLayer::new(in_dim, out_dim, w, 0.02, lif).unwrap()
 }
 
-fn build_core(layer: &QuantLayer, cfg: &AcceleratorConfig, dense: bool) -> NeuraCore {
+fn build_core_with(
+    layer: &QuantLayer,
+    cfg: &AcceleratorConfig,
+    dense: bool,
+    analog: &AnalogParams,
+) -> NeuraCore {
     let mp = map_layer(layer, cfg, Strategy::IlpFlow).unwrap();
     let img = distill(layer, &mp, cfg).unwrap();
     let mut rng = Rng::new(99);
-    let mut core =
-        NeuraCore::new(0, img, layer.lif, &AnalogParams::ideal(), cfg, &mut rng).unwrap();
+    let mut core = NeuraCore::new(0, img, layer.lif, analog, cfg, &mut rng).unwrap();
     core.force_dense_sweep = dense;
     core
+}
+
+fn build_core(layer: &QuantLayer, cfg: &AcceleratorConfig, dense: bool) -> NeuraCore {
+    build_core_with(layer, cfg, dense, &AnalogParams::ideal())
 }
 
 /// Check the invariant for one round's slot dump against the oracle's.
@@ -128,6 +136,62 @@ fn prop_lane_dirty_slot_invariant() {
         let t = 3 + rng.below(5);
         let inputs: Vec<SpikeTrain> = (0..b)
             .map(|_| SpikeTrain::bernoulli(in_dim, t, rng.f64() * 0.35, rng))
+            .collect();
+        let active: Vec<usize> = (0..b).collect();
+        let mut bufs_a: Vec<Vec<u32>> = vec![Vec::new(); b];
+        let mut bufs_b: Vec<Vec<u32>> = vec![Vec::new(); b];
+        for step in 0..t {
+            for i in 0..b {
+                fast.push_events_lane(i, &inputs[i].spikes[step]);
+                oracle.push_events_lane(i, &inputs[i].spikes[step]);
+            }
+            fast.step_lanes_into(&active, &mut bufs_a);
+            oracle.step_lanes_into(&active, &mut bufs_b);
+            if bufs_a != bufs_b {
+                return Err(format!("step {step}: lane outputs diverge"));
+            }
+            for lane in 0..b {
+                for round in 0..fast.rounds() {
+                    check_round(
+                        &fast.lane_slot_states(lane, round),
+                        &oracle.lane_slot_states(lane, round),
+                        lif.v_reset,
+                        &format!("step {step} lane {lane} round {round}"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Non-ideal analog mode: the unified sweep applies the Kahan error
+/// sidecar, hold droop, and the rail clamp for dirty slots, and
+/// `v_reset == 0` is still a quiescent fixed point under the paper's
+/// parameters — the skip stays enabled and the invariant must hold in
+/// lane mode against a dense-sweep oracle stepped in lockstep (both run
+/// the same unified engine, so agreement is bit-for-bit).
+#[test]
+fn prop_nonideal_lane_dirty_slot_invariant() {
+    prop::check_n("dirty-slot-lanes-nonideal", 8, |rng| {
+        let lif = LifParams { beta: 0.9, v_threshold: 1.0, v_reset: 0.0 };
+        let in_dim = 8 + rng.below(20);
+        let out_dim = 4 + rng.below(16);
+        let layer = random_layer(in_dim, out_dim, lif, rng);
+        let cfg = accel(2 + rng.below(3), 1 + rng.below(4));
+        let paper = AnalogParams::paper();
+        let mut fast = build_core_with(&layer, &cfg, false, &paper);
+        let mut oracle = build_core_with(&layer, &cfg, true, &paper);
+        assert!(
+            fast.sweep_skip_enabled(),
+            "v_reset == 0 must stay a fixed point under paper non-idealities"
+        );
+        let b = 2 + rng.below(3);
+        fast.ensure_lanes(b);
+        oracle.ensure_lanes(b);
+        let t = 3 + rng.below(5);
+        let inputs: Vec<SpikeTrain> = (0..b)
+            .map(|_| SpikeTrain::bernoulli(in_dim, t, rng.f64() * 0.3, rng))
             .collect();
         let active: Vec<usize> = (0..b).collect();
         let mut bufs_a: Vec<Vec<u32>> = vec![Vec::new(); b];

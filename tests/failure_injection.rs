@@ -5,6 +5,7 @@
 use menage::accel::Menage;
 use menage::analog::AnalogParams;
 use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::coordinator::Coordinator;
 use menage::mapping::{distill, map_layer, map_network, Strategy};
 use menage::snn::{LifParams, QuantLayer, QuantNetwork, SpikeTrain};
 use menage::util::rng::Rng;
@@ -131,6 +132,104 @@ fn zero_fanout_limit_reports_unassigned() {
     let mp = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
     assert_eq!(mp.assigned_count(), 0);
     assert_eq!(mp.unassigned.len(), 4, "all active neurons must be reported");
+}
+
+/// Build a small coordinator service plus a generator of valid requests
+/// for the salvage-lifecycle tests below.
+fn salvage_service() -> (Coordinator, impl Fn(u64) -> SpikeTrain) {
+    let n = net(&[20, 10]);
+    let mut cfg = AcceleratorConfig::accel1();
+    cfg.num_cores = 1;
+    cfg.a_neurons_per_core = 4;
+    cfg.virtual_per_a_neuron = 4;
+    let chip = Menage::build(&n, &cfg, Strategy::Greedy, &AnalogParams::ideal(), 1).unwrap();
+    let coord = Coordinator::with_lanes(&chip, 2, 3);
+    let make = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        SpikeTrain::bernoulli(20, 4, 0.3, &mut rng)
+    };
+    (coord, make)
+}
+
+/// Salvage lifecycle, part 1: after a *successful* drain the salvage
+/// buffer is empty — successes travel through the drain's return value,
+/// never through the side channel.
+#[test]
+fn salvage_empty_after_successful_drain() {
+    let (mut coord, make) = salvage_service();
+    for s in 0..5 {
+        coord.submit(make(s), None);
+    }
+    let res = coord.drain().unwrap();
+    assert_eq!(res.len(), 5);
+    assert!(
+        coord.take_salvaged_responses().is_empty(),
+        "successful drain must not populate salvage"
+    );
+    coord.shutdown();
+}
+
+/// Salvage lifecycle, part 2: an induced worker failure (malformed
+/// request mid-batch) makes drain fail, and every completed response of
+/// that batch is recoverable — exactly once — via salvage.
+#[test]
+fn salvage_populated_after_induced_worker_failure() {
+    let (mut coord, make) = salvage_service();
+    for s in 0..3 {
+        coord.submit(make(s), None);
+    }
+    coord.submit(SpikeTrain::new(99, 4), None); // wrong width → worker Err
+    for s in 3..6 {
+        coord.submit(make(s), None);
+    }
+    assert!(coord.drain().is_err(), "malformed request must fail the drain");
+    let salvaged = coord.take_salvaged_responses();
+    assert_eq!(salvaged.len(), 6, "all completed responses must be salvageable");
+    assert!(
+        salvaged.windows(2).all(|w| w[0].id < w[1].id),
+        "salvage must preserve submission order"
+    );
+    assert!(
+        coord.take_salvaged_responses().is_empty(),
+        "salvage is take-once, not a cache"
+    );
+    coord.shutdown();
+}
+
+/// Salvage lifecycle, part 3: responses never leak across batches — a
+/// failing batch's salvage does not contaminate the next batch's drain,
+/// and an un-taken salvage is overwritten (not appended to) by the next
+/// failure.
+#[test]
+fn salvage_never_leaks_across_batches() {
+    let (mut coord, make) = salvage_service();
+    // Batch 1 fails with 2 successes salvageable — deliberately NOT taken.
+    coord.submit(SpikeTrain::new(99, 4), None);
+    coord.submit(make(0), None);
+    coord.submit(make(1), None);
+    assert!(coord.drain().is_err());
+    // Batch 2 is clean: its drain returns exactly its own 3 responses,
+    // with none of batch 1's salvage mixed in — and the clean drain
+    // discards the stale un-taken salvage entirely.
+    let first_clean_id = 3;
+    for s in 0..3 {
+        coord.submit(make(10 + s), None);
+    }
+    let res = coord.drain().unwrap();
+    assert_eq!(res.len(), 3, "stale salvage leaked into a clean drain");
+    assert!(res.iter().all(|r| r.id >= first_clean_id), "batch-1 response resurfaced");
+    assert!(
+        coord.take_salvaged_responses().is_empty(),
+        "stale salvage must not survive a successful drain"
+    );
+    // Batch 3 fails again: fresh salvage, holding only its own batch.
+    coord.submit(SpikeTrain::new(99, 4), None);
+    coord.submit(make(20), None);
+    assert!(coord.drain().is_err());
+    let salvaged = coord.take_salvaged_responses();
+    assert_eq!(salvaged.len(), 1, "salvage must hold only the latest failing batch");
+    assert!(salvaged[0].id > first_clean_id);
+    coord.shutdown();
 }
 
 #[test]

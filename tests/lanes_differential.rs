@@ -1,13 +1,17 @@
 //! Differential test harness pinning lane execution to the sequential
 //! engine.
 //!
-//! The contract (see `neuracore.rs` §Lane execution): for any batch of
-//! inputs, `Menage::run_lanes(&[s0..sB])` must produce, per lane,
-//! **bit-identical** layer spike trains, modeled cycles, and per-lane
-//! [`CoreStats`] to running that lane's input through `Menage::run` on a
-//! fresh chip. The suite drives randomized models/batches plus the edge
-//! cases (empty train, all-lanes-quiescent, single lane, B greater than
-//! the coordinator's worker count) through that assertion.
+//! The contract (see the `engine` module docs): for any batch of inputs,
+//! `Menage::run_lanes(&[s0..sB])` must produce, per lane, **bit-identical**
+//! layer spike trains, modeled cycles, and per-lane [`CoreStats`] to
+//! running that lane's input through `Menage::run` on a fresh chip — in
+//! ideal *and* non-ideal analog mode, since both paths are the same
+//! unified engine at different strides. The suite drives randomized
+//! models/batches plus the edge cases (empty train, all-lanes-quiescent,
+//! single lane, B greater than the coordinator's worker count) through
+//! that assertion, and pins the non-ideal Kahan sidecar to the
+//! fixed-order per-event oracle (`force_legacy_error_oracle`, the
+//! pre-refactor arithmetic) within the documented tolerance.
 
 use menage::accel::Menage;
 use menage::analog::AnalogParams;
@@ -41,6 +45,10 @@ fn accel(cores: usize, m: usize, n: usize) -> AcceleratorConfig {
 
 fn build_chip(net: &QuantNetwork, cfg: &AcceleratorConfig) -> Menage {
     Menage::build(net, cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap()
+}
+
+fn build_chip_nonideal(net: &QuantNetwork, cfg: &AcceleratorConfig) -> Menage {
+    Menage::build(net, cfg, Strategy::IlpFlow, &AnalogParams::paper(), 7).unwrap()
 }
 
 /// The core assertion: lane `i` of `run_lanes` ≡ `run` on a fresh clone.
@@ -205,10 +213,7 @@ fn duplicate_events_coalesced_vs_forced_per_event() {
     let net = QuantNetwork::random(&mcfg, 0.4, &mut rng);
     let chip = build_chip(&net, &accel(2, 3, 4));
     let mut with_dups = SpikeTrain::bernoulli(20, 5, 0.2, &mut rng);
-    for step in with_dups.spikes.iter_mut() {
-        let extra: Vec<u32> = step.iter().copied().collect();
-        step.extend(extra); // every event twice, unsorted tail
-    }
+    with_dups.duplicate_events(); // every event twice, unsorted tail
     let inputs = vec![with_dups.clone(), SpikeTrain::bernoulli(20, 5, 0.3, &mut rng)];
 
     let mut fast = chip.clone();
@@ -269,6 +274,68 @@ fn repeated_lane_batches_are_independent() {
             a[i].trains.last().unwrap().spikes,
             c[i].trains.last().unwrap().spikes
         );
+    }
+}
+
+/// Non-ideal analog mode batches through the same shared walk: per-lane
+/// outputs, cycles, and CoreStats are bit-identical to fresh sequential
+/// chips (same mismatch seeds), because the sequential engine is the
+/// unified engine's L=1 instantiation — there is no swap fallback left
+/// to diverge.
+#[test]
+fn prop_nonideal_lanes_bit_identical_to_sequential() {
+    prop::check_n("nonideal-lanes-vs-sequential", 8, |rng| {
+        let l0 = 8 + rng.below(20);
+        let l1 = 4 + rng.below(12);
+        let l2 = 2 + rng.below(6);
+        let mcfg = model(&[l0, l1, l2], 4 + rng.below(6));
+        let net = QuantNetwork::random(&mcfg, 0.3 + rng.f64() * 0.5, rng);
+        let cfg = accel(2, 2 + rng.below(3), 1 + rng.below(4));
+        let chip = Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::paper(), 7)
+            .map_err(|e| e.to_string())?;
+        let b = 1 + rng.below(5);
+        let inputs: Vec<SpikeTrain> = (0..b)
+            .map(|_| SpikeTrain::bernoulli(l0, mcfg.timesteps, rng.f64() * 0.35, rng))
+            .collect();
+        assert_lanes_equal_sequential(&chip, &inputs, &format!("nonideal b={b}"))
+    });
+}
+
+/// Non-ideal + duplicate events: the ×multiplicity Kahan error fold must
+/// stay bit-identical between lane-shared and sequential execution (both
+/// coalesce identically), and within the documented tolerance of the
+/// fixed-order per-event oracle.
+#[test]
+fn nonideal_duplicates_shared_vs_sequential_and_oracle() {
+    let mcfg = model(&[24, 12, 6], 6);
+    let mut rng = Rng::new(19);
+    let net = QuantNetwork::random(&mcfg, 0.4, &mut rng);
+    let chip = build_chip_nonideal(&net, &accel(2, 3, 4));
+    let mut a = SpikeTrain::bernoulli(24, 6, 0.25, &mut rng);
+    a.duplicate_events();
+    let inputs = vec![a, SpikeTrain::bernoulli(24, 6, 0.2, &mut rng)];
+    assert_lanes_equal_sequential(&chip, &inputs, "nonideal-dups").unwrap();
+
+    // Fixed-order oracle: per-event dispatch with the pre-refactor
+    // uncompensated error arithmetic. For these fixed seeds the spike
+    // trains agree exactly; the membrane-level tolerance statement lives
+    // in `neuracore`'s oracle test (engine::NONIDEAL_ORACLE_TOLERANCE).
+    let mut fast = chip.clone();
+    let fast_outs = fast.run_lanes(&inputs).unwrap();
+    let mut oracle = chip.clone();
+    for core in oracle.cores.iter_mut() {
+        core.force_legacy_error_oracle = true;
+    }
+    let oracle_outs = oracle.run_lanes(&inputs).unwrap();
+    for i in 0..inputs.len() {
+        assert_eq!(
+            fast_outs[i].cycles, oracle_outs[i].cycles,
+            "lane {i}: accounting must not depend on the error representation"
+        );
+        for (l, (x, y)) in fast_outs[i].trains.iter().zip(&oracle_outs[i].trains).enumerate()
+        {
+            assert_eq!(x.spikes, y.spikes, "lane {i} layer {l}: beyond oracle tolerance");
+        }
     }
 }
 
