@@ -6,8 +6,10 @@
 # (BENCH_hotpath.json) tracked across PRs.
 
 CARGO ?= cargo
+## Loopback port for the serve smoke test (override on collision).
+SMOKE_PORT ?= 7471
 
-.PHONY: verify build test test-lanes lint fmt clippy bench-hotpath bench clean
+.PHONY: verify build test test-lanes test-serve smoke-serve lint fmt clippy bench-hotpath bench clean
 
 verify: build test test-lanes
 
@@ -23,6 +25,29 @@ test:
 ## addressable so CI can surface them separately).
 test-lanes:
 	$(CARGO) test -q --test lanes_differential --test dirty_slot_invariant
+
+## The serving-layer loopback integration suite (also covered by `test`;
+## kept addressable so CI can surface it separately).
+test-serve:
+	$(CARGO) test -q --test serve_roundtrip
+
+## End-to-end serving smoke over loopback, bounded runtime: start
+## `menage serve` on a synthetic model, drive it with `menage loadgen`
+## (256 requests / 8 connections — the acceptance-criteria shape), which
+## writes BENCH_serve.json and then gracefully shuts the server down via
+## the SHUTDOWN frame. Fails if any response is dropped or mismatched.
+smoke-serve: build
+	./target/release/menage serve --synthetic --model nmnist \
+		--addr 127.0.0.1:$(SMOKE_PORT) --workers 2 --lanes 4 \
+		--duration-secs 120 --allow-remote-shutdown & \
+	SERVER_PID=$$!; \
+	sleep 1; \
+	if ./target/release/menage loadgen --addr 127.0.0.1:$(SMOKE_PORT) \
+		--requests 256 --connections 8 --pipeline 4 --shutdown-server; then \
+		wait $$SERVER_PID; \
+	else \
+		kill $$SERVER_PID 2>/dev/null; wait $$SERVER_PID 2>/dev/null; exit 1; \
+	fi
 
 ## CI style gate: formatting and clippy with warnings denied.
 lint: fmt clippy

@@ -1,0 +1,90 @@
+//! Serving-path microbenchmarks: wire codec throughput (the per-request
+//! encode/decode cost the host-side event-delivery path pays) and a
+//! loopback end-to-end round trip.
+//!
+//! The machine-readable serving artifact (`BENCH_serve.json`) is emitted
+//! by `menage loadgen` (see `make smoke-serve`), which measures a real
+//! multi-connection run; this bench prints `BENCH` lines for the codec
+//! and single-connection layers underneath it.
+
+use std::time::Duration;
+
+use menage::bench::Bencher;
+use menage::config::ModelConfig;
+use menage::serve::protocol::{
+    encode_frame, Frame, FrameKind, FrameReader, InferRequest, DEFAULT_MAX_FRAME_LEN,
+};
+use menage::serve::{Client, ServeConfig, Server};
+use menage::snn::{QuantNetwork, SpikeTrain};
+use menage::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(17);
+
+    // Codec: a realistic request train (NMNIST-sized, 10 steps, 10% rate).
+    let train = SpikeTrain::bernoulli(2312, 10, 0.1, &mut rng);
+    let spikes = train.total_spikes() as f64;
+    let r_enc = b.run("wire_encode_train", || {
+        let mut out = Vec::with_capacity(train.wire_len());
+        train.write_wire(&mut out);
+        out
+    });
+    println!(
+        "  encode: {:.1} M spikes/s",
+        r_enc.throughput(spikes) / 1e6
+    );
+    let mut wire = Vec::new();
+    train.write_wire(&mut wire);
+    let r_dec = b.run("wire_decode_train", || SpikeTrain::read_wire(&wire).unwrap());
+    println!(
+        "  decode(+validate): {:.1} M spikes/s",
+        r_dec.throughput(spikes) / 1e6
+    );
+
+    // Frame layer: request encode → frame → reassembly → decode.
+    let req = InferRequest { id: 1, deadline_ms: 0, label: None, train: train.clone() };
+    let framed = encode_frame(FrameKind::InferRequest, &req.encode());
+    let r_frame = b.run("frame_roundtrip", || {
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_LEN);
+        let Frame { payload, .. } =
+            fr.read_frame(&mut std::io::Cursor::new(&framed)).unwrap().unwrap();
+        InferRequest::decode(&payload).unwrap()
+    });
+    println!("  frame roundtrip: {:.1}k frames/s", r_frame.throughput(1.0) / 1e3);
+
+    // Loopback end-to-end: one synchronous client against a small chip.
+    let mut mcfg = ModelConfig::nmnist_mlp();
+    mcfg.timesteps = 10;
+    let mut rng = Rng::new(3);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let chip = menage::accel::Menage::build(
+        &net,
+        &menage::config::AcceleratorConfig::accel1(),
+        menage::mapping::Strategy::IlpFlow,
+        &menage::analog::AnalogParams::ideal(),
+        7,
+    )
+    .unwrap();
+    let server = Server::start(
+        &chip,
+        "127.0.0.1:0",
+        ServeConfig {
+            workers: 2,
+            lanes_per_worker: 4,
+            fill_wait: Duration::from_micros(200),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let input = SpikeTrain::bernoulli(net.input_dim(), 10, 0.1, &mut rng);
+    let r_rt = b.run("loopback_sync_infer", || client.infer(&input).unwrap());
+    println!(
+        "  loopback sync: {:.1} req/s (1 connection, unpipelined)",
+        r_rt.throughput(1.0)
+    );
+    drop(client);
+    server.shutdown();
+    println!("(run `make smoke-serve` for the multi-connection BENCH_serve.json numbers)");
+}

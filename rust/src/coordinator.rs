@@ -51,8 +51,8 @@
 //! [`Coordinator::take_salvaged_responses`].
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -86,6 +86,11 @@ pub struct Response {
     /// `cycles` (bit-identical to sequential), not with this field.
     pub sim_latency: Duration,
     pub label: Option<usize>,
+    /// The classifier (last-layer) output spike train — what a remote
+    /// caller needs to verify bit-identical execution against an
+    /// in-process [`Menage::run`] (the serving layer ships it over the
+    /// wire). Small: `classes × timesteps` sparse indices.
+    pub output: SpikeTrain,
 }
 
 /// Aggregated service metrics.
@@ -216,6 +221,12 @@ impl SharedQueue {
         self.available.notify_one();
     }
 
+    /// Requests queued but not yet stolen by a worker — the backpressure
+    /// signal the serving layer's admission control and STATS report read.
+    fn depth(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
     fn shutdown(&self) {
         self.state.lock().unwrap().shutdown = true;
         self.available.notify_all();
@@ -229,8 +240,12 @@ pub struct Coordinator {
     queue: Arc<SharedQueue>,
     results_rx: Receiver<Result<Response>>,
     pub metrics: Arc<Metrics>,
-    next_id: u64,
-    in_flight: usize,
+    /// Shared with every [`SubmitHandle`] so concurrent submitters (e.g.
+    /// the TCP server's per-connection readers) allocate disjoint ids.
+    next_id: Arc<AtomicU64>,
+    /// Shared with [`SubmitHandle`]s: incremented at submission (from any
+    /// thread), decremented by whoever consumes the results channel.
+    in_flight: Arc<AtomicUsize>,
     started: Instant,
     /// Successful responses consumed by a failing [`Coordinator::drain`]
     /// (retrievable via [`Coordinator::take_salvaged_responses`] so a
@@ -309,6 +324,7 @@ impl Coordinator {
                         cycles: out.cycles,
                         sim_latency,
                         label: req.label,
+                        output: out.output().clone(),
                     }
                 };
                 let mut out = crate::accel::RunOutput::default();
@@ -325,7 +341,11 @@ impl Coordinator {
                         let t0 = Instant::now();
                         let res = chip
                             .run_into(&req.input, &mut out)
-                            .map(|()| record(&out, &req, t0.elapsed()));
+                            .map(|()| record(&out, &req, t0.elapsed()))
+                            // Every worker error carries the `request {id}:`
+                            // prefix (see [`request_id_of_error`]) so a
+                            // response router can attribute it.
+                            .map_err(|e| anyhow!("request {}: {e:#}", req.id));
                         disconnected = results_tx.send(res).is_err();
                         continue;
                     }
@@ -387,8 +407,8 @@ impl Coordinator {
             queue,
             results_rx,
             metrics,
-            next_id: 0,
-            in_flight: 0,
+            next_id: Arc::new(AtomicU64::new(0)),
+            in_flight: Arc::new(AtomicUsize::new(0)),
             started: Instant::now(),
             salvaged: Vec::new(),
         }
@@ -397,16 +417,39 @@ impl Coordinator {
     /// Submit a request to the shared queue (any idle worker will pick it
     /// up). Returns its id.
     pub fn submit(&mut self, input: SpikeTrain, label: Option<usize>) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
         self.queue.push(Request { id, input, label });
-        self.in_flight += 1;
         id
+    }
+
+    /// A cloneable handle that submits requests into this coordinator's
+    /// shared queue from any thread — the ingress hook the TCP serving
+    /// layer's per-connection readers use, so requests from many sockets
+    /// land in one queue and get micro-batched into lane-packed dispatches
+    /// by [`Self::with_lanes_wait`]'s fill-wait workers.
+    ///
+    /// The handle shares the coordinator's id allocator and in-flight
+    /// counter; responses still arrive on the coordinator's results
+    /// channel (consume them with [`Self::recv`] / [`Self::recv_timeout`]
+    /// / [`Self::drain`], typically from a dedicated router thread).
+    pub fn handle(&self) -> SubmitHandle {
+        SubmitHandle {
+            queue: Arc::clone(&self.queue),
+            next_id: Arc::clone(&self.next_id),
+            in_flight: Arc::clone(&self.in_flight),
+        }
+    }
+
+    /// Requests queued but not yet stolen by a worker (the backpressure
+    /// introspection hook; see also [`SubmitHandle::queue_depth`]).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
     }
 
     /// Number of submitted requests whose responses have not been received.
     pub fn in_flight(&self) -> usize {
-        self.in_flight
+        self.in_flight.load(Ordering::Relaxed)
     }
 
     /// One blocking receive. `None` means the results channel is dead (all
@@ -417,10 +460,32 @@ impl Coordinator {
             Ok(res) => {
                 // Decrement before propagating a worker error: the request
                 // is done either way.
-                self.in_flight -= 1;
+                self.in_flight.fetch_sub(1, Ordering::Relaxed);
                 Some(res)
             }
             Err(_) => None,
+        }
+    }
+
+    /// Bounded [`Self::recv`]: block up to `timeout` for one result.
+    /// `None` means the timeout lapsed with nothing in the channel (not an
+    /// error — retry, or check a stop flag, as the serving layer's router
+    /// thread does). A dead results channel yields the same terminal error
+    /// as [`Self::recv`], with the in-flight count zeroed so caller loops
+    /// terminate.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Option<Result<Response>> {
+        match self.results_rx.recv_timeout(timeout) {
+            Ok(res) => {
+                self.in_flight.fetch_sub(1, Ordering::Relaxed);
+                Some(res)
+            }
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                let n = self.in_flight.swap(0, Ordering::Relaxed);
+                Some(Err(anyhow!(
+                    "all workers terminated with {n} requests in flight"
+                )))
+            }
         }
     }
 
@@ -434,8 +499,7 @@ impl Coordinator {
         match self.recv_inner() {
             Some(res) => res,
             None => {
-                let n = self.in_flight;
-                self.in_flight = 0;
+                let n = self.in_flight.swap(0, Ordering::Relaxed);
                 Err(anyhow!("all workers terminated with {n} requests in flight"))
             }
         }
@@ -452,9 +516,9 @@ impl Coordinator {
     /// the successfully completed responses are not lost: retrieve them
     /// with [`Self::take_salvaged_responses`].
     pub fn drain(&mut self) -> Result<Vec<Response>> {
-        let mut out = Vec::with_capacity(self.in_flight);
+        let mut out = Vec::with_capacity(self.in_flight());
         let mut first_err = None;
-        while self.in_flight > 0 {
+        while self.in_flight() > 0 {
             match self.recv_inner() {
                 Some(Ok(r)) => out.push(r),
                 Some(Err(e)) => {
@@ -467,10 +531,10 @@ impl Coordinator {
                     if first_err.is_none() {
                         first_err = Some(anyhow!(
                             "all workers terminated with {} requests in flight",
-                            self.in_flight
+                            self.in_flight()
                         ));
                     }
-                    self.in_flight = 0;
+                    self.in_flight.store(0, Ordering::Relaxed);
                     break;
                 }
             }
@@ -551,6 +615,66 @@ impl Drop for Coordinator {
     }
 }
 
+/// Cloneable, thread-safe submission handle into a [`Coordinator`]'s
+/// shared queue (see [`Coordinator::handle`]). Lets many producers (e.g.
+/// per-connection socket readers) feed one coordinator concurrently while
+/// a single router thread consumes the results channel.
+///
+/// When a producer must publish bookkeeping *before* the request becomes
+/// runnable (the serving layer registers a pending-response entry first,
+/// so the router can never see a response for an unregistered id), use
+/// [`Self::reserve_id`] + [`Self::submit_reserved`]; otherwise
+/// [`Self::submit`] does both.
+#[derive(Clone)]
+pub struct SubmitHandle {
+    queue: Arc<SharedQueue>,
+    next_id: Arc<AtomicU64>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl SubmitHandle {
+    /// Allocate the next request id without enqueueing anything.
+    pub fn reserve_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Enqueue a request under an id from [`Self::reserve_id`].
+    pub fn submit_reserved(&self, id: u64, input: SpikeTrain, label: Option<usize>) {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        self.queue.push(Request { id, input, label });
+    }
+
+    /// [`Self::reserve_id`] + [`Self::submit_reserved`].
+    pub fn submit(&self, input: SpikeTrain, label: Option<usize>) -> u64 {
+        let id = self.reserve_id();
+        self.submit_reserved(id, input, label);
+        id
+    }
+
+    /// Requests queued but not yet stolen by a worker (backpressure).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Submitted requests whose responses have not been consumed yet.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+}
+
+/// Recover the request id from a worker-sent error. Every error a worker
+/// puts on the results channel is prefixed `request <id>: ` (both the
+/// single-request and the lane-packed path), which is what lets an
+/// id-keyed response router — the TCP serving layer — attribute a failure
+/// to the connection that submitted it. Returns `None` for errors that do
+/// not originate from a worker (e.g. the all-workers-terminated error).
+pub fn request_id_of_error(e: &anyhow::Error) -> Option<u64> {
+    let msg = e.root_message();
+    let rest = msg.strip_prefix("request ")?;
+    let digits: &str = &rest[..rest.find(':')?];
+    digits.parse().ok()
+}
+
 /// Completion-order response stream over everything currently in flight
 /// (see [`Coordinator::run_batch_streaming`]).
 pub struct StreamingResults<'a> {
@@ -561,7 +685,7 @@ impl Iterator for StreamingResults<'_> {
     type Item = Result<Response>;
 
     fn next(&mut self) -> Option<Self::Item> {
-        if self.coordinator.in_flight == 0 {
+        if self.coordinator.in_flight() == 0 {
             None
         } else {
             Some(self.coordinator.recv())
@@ -912,6 +1036,122 @@ mod tests {
         assert_eq!(coord.take_salvaged_responses().len(), 7);
         assert!(coord.drain().unwrap().is_empty());
         coord.shutdown();
+    }
+
+    /// Concurrent producers through cloned SubmitHandles: every request
+    /// gets exactly one response with a unique id, and the router-side
+    /// consumer (recv_timeout) sees them all. This is the serving layer's
+    /// ingress pattern — many socket readers, one results consumer.
+    #[test]
+    fn submit_handles_feed_from_many_threads() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::with_lanes(&chip, 2, 4);
+        let handle = coord.handle();
+        let producers: Vec<_> = (0..4)
+            .map(|_p| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let mut ids = Vec::new();
+                    for (st, l) in inputs(6) {
+                        let id = h.reserve_id();
+                        h.submit_reserved(id, st, l);
+                        ids.push(id);
+                    }
+                    ids
+                })
+            })
+            .collect();
+        let mut all_ids: Vec<u64> = producers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all_ids.sort_unstable();
+        assert_eq!(all_ids, (0..24).collect::<Vec<u64>>(), "ids must be disjoint");
+        let mut seen = Vec::new();
+        while seen.len() < 24 {
+            match coord.recv_timeout(Duration::from_secs(10)) {
+                Some(Ok(r)) => seen.push(r.id),
+                Some(Err(e)) => panic!("worker error: {e}"),
+                None => panic!("timed out with {} responses", seen.len()),
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, all_ids);
+        assert_eq!(coord.in_flight(), 0);
+        assert_eq!(handle.in_flight(), 0);
+        assert_eq!(coord.queue_depth(), 0);
+        coord.shutdown();
+    }
+
+    /// recv_timeout: times out (None) on an idle service without consuming
+    /// anything, then yields the response once work completes.
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::new(&chip, 1);
+        assert!(coord.recv_timeout(Duration::from_millis(10)).is_none());
+        let (st, l) = inputs(1).pop().unwrap();
+        coord.submit(st, l);
+        let r = coord
+            .recv_timeout(Duration::from_secs(10))
+            .expect("response within timeout")
+            .unwrap();
+        assert_eq!(r.id, 0);
+        assert_eq!(coord.in_flight(), 0);
+        coord.shutdown();
+    }
+
+    /// Responses carry the classifier output train, bit-identical to the
+    /// reference — the payload the wire protocol ships back to clients.
+    #[test]
+    fn response_output_train_matches_reference() {
+        let (chip, net) = test_chip();
+        let mut coord = Coordinator::with_lanes(&chip, 2, 3);
+        let ins = inputs(9);
+        let golden: Vec<SpikeTrain> = ins
+            .iter()
+            .map(|(st, _)| reference_forward(&net, st).unwrap().output().clone())
+            .collect();
+        let res = coord.run_batch(ins).unwrap();
+        for (r, g) in res.iter().zip(&golden) {
+            assert_eq!(&r.output, g, "request {}: output train", r.id);
+        }
+        coord.shutdown();
+    }
+
+    /// Worker errors are attributable: both the single-request and the
+    /// lane-packed path prefix `request <id>:` and the helper parses it.
+    #[test]
+    fn worker_errors_carry_request_id() {
+        let (chip, _) = test_chip();
+        // Single-request path (1 lane).
+        let mut coord = Coordinator::new(&chip, 1);
+        let id = coord.submit(SpikeTrain::new(99, 6), None);
+        let e = coord.recv().unwrap_err();
+        assert_eq!(request_id_of_error(&e), Some(id), "single path: {e}");
+        coord.shutdown();
+        // Lane-packed path.
+        let mut coord = Coordinator::with_lanes(&chip, 1, 4);
+        let mut bad_ids = Vec::new();
+        for (k, (st, l)) in inputs(6).into_iter().enumerate() {
+            if k % 2 == 0 {
+                bad_ids.push(coord.submit(SpikeTrain::new(99, 6), None));
+            } else {
+                coord.submit(st, l);
+            }
+        }
+        let mut seen_bad = Vec::new();
+        for item in coord.run_batch_streaming(Vec::new()) {
+            if let Err(e) = item {
+                seen_bad.push(request_id_of_error(&e).expect("id-prefixed error"));
+            }
+        }
+        seen_bad.sort_unstable();
+        assert_eq!(seen_bad, bad_ids);
+        coord.shutdown();
+        // Non-worker errors parse to None.
+        assert_eq!(request_id_of_error(&anyhow!("all workers terminated")), None);
+        assert_eq!(request_id_of_error(&anyhow!("request x: nope")), None);
     }
 
     #[test]

@@ -33,6 +33,10 @@
 //!   (`artifacts/*.hlo.txt`) and executes it from rust.
 //! * [`coordinator`] — the thin L3 driver: async inference request loop,
 //!   batching across simulator workers, metrics.
+//! * [`serve`] — the network layer: a std-only TCP inference server whose
+//!   per-connection readers feed the coordinator's shared queue (micro-
+//!   batching across sockets), with admission control, per-request
+//!   deadlines, a wire-protocol client library, and a metrics registry.
 //! * [`config`] — TOML-backed accelerator / model / run configuration with
 //!   the paper's Accel₁ and Accel₂ presets.
 //!
@@ -51,6 +55,7 @@ pub mod ilp;
 pub mod mapping;
 pub mod neuracore;
 pub mod runtime;
+pub mod serve;
 pub mod snn;
 pub mod trace;
 pub mod util;

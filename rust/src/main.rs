@@ -20,22 +20,26 @@
 //! and cross-checks predictions.
 
 use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use menage::accel::Menage;
 use menage::analog::AnalogParams;
-use menage::bench::Table;
+use menage::bench::{emit_json_file, Table};
 use menage::config::{AcceleratorConfig, ModelConfig};
 use menage::coordinator::Coordinator;
 use menage::datasets::{Dataset, DatasetKind};
 use menage::energy::{report, EnergyModel};
 use menage::mapping::{map_network, Strategy};
 use menage::runtime::{artifacts_dir, cpu_client, pjrt_available, GoldenModel};
+use menage::serve::protocol::NO_ID;
+use menage::serve::{Client, ErrorCode, Reply, ServeConfig, Server};
 use menage::snn::{QuantNetwork, SpikeTrain};
 use menage::trace::MemoryTrace;
 use menage::util::json::Json;
 use menage::util::rng::Rng;
+use menage::util::stats::Quantiles;
 use menage::util::tensorfile::TensorFile;
 
 /// Minimal `--key value` / `--flag` argument parser.
@@ -47,7 +51,11 @@ struct Args {
 
 impl Args {
     fn parse() -> Result<Self> {
-        let mut it = std::env::args().skip(1);
+        Self::parse_from(std::env::args().skip(1).collect())
+    }
+
+    fn parse_from(argv: Vec<String>) -> Result<Self> {
+        let mut it = argv.into_iter();
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
         let mut kv = BTreeMap::new();
         let mut flags = Vec::new();
@@ -69,6 +77,39 @@ impl Args {
         Ok(Self { cmd, kv, flags })
     }
 
+    /// Validate against the subcommand's full option vocabulary: any
+    /// parsed option or flag outside it is an error, so a typo'd flag
+    /// fails loudly instead of silently falling back to a default.
+    fn expect_known(&self, keys: &[&str], flags: &[&str]) -> Result<()> {
+        for k in self.kv.keys() {
+            if !keys.contains(&k.as_str()) {
+                bail!(
+                    "unknown option --{k} for `{}` (valid options: {}; valid flags: {})",
+                    self.cmd,
+                    fmt_vocab(keys),
+                    fmt_vocab(flags)
+                );
+            }
+        }
+        for f in &self.flags {
+            if !flags.contains(&f.as_str()) {
+                // A value-less occurrence of a valid *option* (e.g. a
+                // trailing `--samples`) is also a usage error, with a more
+                // specific message.
+                if keys.contains(&f.as_str()) {
+                    bail!("option --{f} requires a value");
+                }
+                bail!(
+                    "unknown flag --{f} for `{}` (valid options: {}; valid flags: {})",
+                    self.cmd,
+                    fmt_vocab(keys),
+                    fmt_vocab(flags)
+                );
+            }
+        }
+        Ok(())
+    }
+
     fn get(&self, key: &str) -> Option<&str> {
         self.kv.get(key).map(|s| s.as_str())
     }
@@ -86,6 +127,18 @@ impl Args {
 
     fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
+    }
+}
+
+fn fmt_vocab(words: &[&str]) -> String {
+    if words.is_empty() {
+        "(none)".to_string()
+    } else {
+        words
+            .iter()
+            .map(|w| format!("--{w}"))
+            .collect::<Vec<_>>()
+            .join(", ")
     }
 }
 
@@ -111,6 +164,14 @@ fn resolve_accel(name: &str) -> Result<AcceleratorConfig> {
         "accel2" => AcceleratorConfig::accel2(),
         path => AcceleratorConfig::from_file(path)
             .with_context(|| format!("--accel {path:?} is neither a preset nor a config file"))?,
+    })
+}
+
+fn resolve_analog(args: &Args) -> Result<AnalogParams> {
+    Ok(match args.get_or("analog", "ideal").as_str() {
+        "ideal" => AnalogParams::ideal(),
+        "paper" => AnalogParams::paper(),
+        other => bail!("--analog must be ideal|paper, got {other:?}"),
     })
 }
 
@@ -165,6 +226,7 @@ fn load_eval(base: &str, limit: usize) -> Result<Vec<(SpikeTrain, usize, Vec<f32
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    args.expect_known(&["model"], &[])?;
     let (mcfg, kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
     println!("model: {}", mcfg.name);
     println!("  layers:     {:?}", mcfg.layer_sizes);
@@ -180,6 +242,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_map(args: &Args) -> Result<()> {
+    args.expect_known(&["model", "accel", "strategy"], &["synthetic"])?;
     let (mcfg, _, base) = resolve_model(&args.get_or("model", "nmnist"))?;
     let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
     let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
@@ -208,14 +271,14 @@ fn cmd_map(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    args.expect_known(
+        &["model", "accel", "strategy", "analog", "workers", "samples", "out"],
+        &["golden", "synthetic"],
+    )?;
     let (mcfg, kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
     let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
     let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
-    let analog = match args.get_or("analog", "ideal").as_str() {
-        "ideal" => AnalogParams::ideal(),
-        "paper" => AnalogParams::paper(),
-        other => bail!("--analog must be ideal|paper, got {other:?}"),
-    };
+    let analog = resolve_analog(args)?;
     let workers = args.get_usize("workers", 4)?;
     let samples = args.get_usize("samples", 40)?;
     let synthetic = args.has("synthetic");
@@ -355,6 +418,7 @@ fn merge_chips(mut chips: Vec<Menage>) -> Menage {
 }
 
 fn cmd_waveform(args: &Args) -> Result<()> {
+    args.expect_known(&["out"], &[])?;
     use menage::analog::ANeuron;
     let mut an = ANeuron::new(1, AnalogParams::paper());
     an.enable_capture();
@@ -386,6 +450,322 @@ fn cmd_waveform(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `menage serve` — stand up the TCP inference server (see
+/// `menage::serve` module docs for the wire protocol and threading model).
+/// Runs until `--duration-secs` elapses or, with
+/// `--allow-remote-shutdown`, a client sends a SHUTDOWN frame (the
+/// `make smoke-serve` flow); otherwise until killed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(
+        &[
+            "model",
+            "accel",
+            "strategy",
+            "analog",
+            "addr",
+            "workers",
+            "lanes",
+            "fill-wait-us",
+            "max-in-flight",
+            "duration-secs",
+        ],
+        &["synthetic", "allow-remote-shutdown"],
+    )?;
+    let (mcfg, _kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
+    let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
+    let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
+    let analog = resolve_analog(args)?;
+    let net = load_network(base, &mcfg, args.has("synthetic"))?;
+    let chip = Menage::build(&net, &cfg, strategy, &analog, 7)?;
+
+    let serve_cfg = ServeConfig {
+        workers: args.get_usize("workers", 4)?.max(1),
+        lanes_per_worker: args.get_usize("lanes", 4)?.max(1),
+        fill_wait: Duration::from_micros(args.get_usize("fill-wait-us", 500)? as u64),
+        max_in_flight: args.get_usize("max-in-flight", 256)?.max(1),
+        allow_remote_shutdown: args.has("allow-remote-shutdown"),
+        ..ServeConfig::default()
+    };
+    let duration = args.get_usize("duration-secs", 0)?;
+    let workers = serve_cfg.workers;
+    let lanes = serve_cfg.lanes_per_worker;
+    let cap = serve_cfg.max_in_flight;
+    let server = Server::start(&chip, args.get_or("addr", "127.0.0.1:7471").as_str(), serve_cfg)?;
+    println!(
+        "serving {} on {} — {workers} workers × {lanes} lanes, in-flight cap {cap}{}",
+        net.name,
+        server.local_addr(),
+        if duration > 0 { format!(", for {duration}s") } else { String::new() }
+    );
+
+    let metrics = server.metrics();
+    let started = Instant::now();
+    let mut last_report = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        if server.remote_shutdown_requested() {
+            println!("shutdown requested by client; draining…");
+            break;
+        }
+        if server.quiesced() {
+            eprintln!("server lost its workers; shutting down");
+            break;
+        }
+        if duration > 0 && started.elapsed() >= Duration::from_secs(duration as u64) {
+            println!("duration reached; draining…");
+            break;
+        }
+        if last_report.elapsed() >= Duration::from_secs(10) {
+            last_report = Instant::now();
+            println!("stats: {}", server.stats_json());
+        }
+    }
+    let chips = server.shutdown();
+    let merged = merge_chips(chips);
+    println!("final stats: {}", metrics.to_json(started, 0, 0));
+    println!(
+        "served {} inputs, {} synaptic events dispatched",
+        merged.inputs_processed,
+        merged.total_events()
+    );
+    Ok(())
+}
+
+/// Per-connection load-generator tallies, merged for the final report.
+#[derive(Default)]
+struct LoadStats {
+    lat_us: Vec<f64>,
+    ok: usize,
+    overload: usize,
+    deadline: usize,
+    errors: usize,
+    mismatched: usize,
+    unanswered: usize,
+    events_sent: u64,
+}
+
+/// What one load-generator connection is asked to do.
+struct LoadPlan {
+    addr: String,
+    conn_idx: usize,
+    requests: usize,
+    pipeline: usize,
+    input_dim: usize,
+    timesteps: usize,
+    classes: usize,
+    rate: f64,
+    deadline_ms: u32,
+    seed: u64,
+}
+
+/// One load-generator connection: keep up to `pipeline` requests
+/// outstanding until `requests` are answered, with heterogeneous train
+/// lengths (cycling 1..=timesteps) at the given spike rate.
+fn loadgen_connection(plan: &LoadPlan) -> Result<LoadStats> {
+    let mut client = Client::connect_retry(plan.addr.as_str(), 40, Duration::from_millis(250))?;
+    let mut rng = Rng::new(plan.seed.wrapping_mul(10_007).wrapping_add(plan.conn_idx as u64));
+    let mut stats = LoadStats::default();
+    let mut outstanding: BTreeMap<u64, Instant> = BTreeMap::new();
+    let (mut sent, mut done) = (0usize, 0usize);
+    while done < plan.requests {
+        while sent < plan.requests && outstanding.len() < plan.pipeline {
+            let t = 1 + (sent * 7 + plan.conn_idx) % plan.timesteps.max(1);
+            let train = SpikeTrain::bernoulli(plan.input_dim, t, plan.rate, &mut rng);
+            stats.events_sent += train.total_spikes() as u64;
+            let id = client.send_infer(&train, plan.deadline_ms, None)?;
+            outstanding.insert(id, Instant::now());
+            sent += 1;
+        }
+        match client.recv_reply()? {
+            Reply::Infer(r) => {
+                done += 1;
+                match outstanding.remove(&r.id) {
+                    Some(t_sent) => {
+                        stats.lat_us.push(t_sent.elapsed().as_secs_f64() * 1e6);
+                        // Sanity only; bit-exactness is pinned by
+                        // tests/serve_roundtrip.rs.
+                        if (r.predicted as usize) < plan.classes
+                            && r.output.num_neurons == plan.classes
+                        {
+                            stats.ok += 1;
+                        } else {
+                            stats.mismatched += 1;
+                        }
+                    }
+                    None => stats.mismatched += 1,
+                }
+            }
+            Reply::Error(e) => {
+                if e.id != NO_ID && outstanding.remove(&e.id).is_some() {
+                    done += 1;
+                    match e.code {
+                        ErrorCode::Overload => stats.overload += 1,
+                        ErrorCode::DeadlineExceeded => stats.deadline += 1,
+                        _ => stats.errors += 1,
+                    }
+                } else {
+                    bail!("connection-level server error: [{}] {}", e.code.name(), e.message);
+                }
+            }
+            _ => {}
+        }
+    }
+    stats.unanswered = outstanding.len();
+    Ok(stats)
+}
+
+/// `menage loadgen` — drive a running `menage serve` over N concurrent
+/// connections and report throughput + latency percentiles, emitting the
+/// machine-readable `BENCH_serve.json` for the cross-PR perf trajectory.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    args.expect_known(
+        &["addr", "connections", "requests", "pipeline", "rate", "deadline-ms", "seed", "out"],
+        &["shutdown-server"],
+    )?;
+    let addr = args.get_or("addr", "127.0.0.1:7471");
+    let connections = args.get_usize("connections", 8)?.max(1);
+    let total: usize = args.get_usize("requests", 256)?;
+    let pipeline = args.get_usize("pipeline", 4)?.max(1);
+    let rate: f64 = match args.get("rate") {
+        None => 0.1,
+        Some(v) => v.parse().with_context(|| format!("--rate {v:?}"))?,
+    };
+    let deadline_ms = args.get_usize("deadline-ms", 0)? as u32;
+    let seed = args.get_usize("seed", 1)? as u64;
+    let out = args.get_or("out", "BENCH_serve.json");
+
+    // Probe: wait for the server and learn the model's dimensions.
+    let mut probe = Client::connect_retry(addr.as_str(), 40, Duration::from_millis(250))?;
+    let pre = probe.stats()?;
+    let model = pre.get("model")?;
+    let input_dim = model.get("input_dim")?.as_usize()?;
+    let timesteps = model.get("timesteps")?.as_usize()?;
+    let classes = model.get("classes")?.as_usize()?;
+    println!(
+        "loadgen → {addr}: {connections} connections × pipeline {pipeline}, {total} requests \
+         (input_dim {input_dim}, T≤{timesteps}, rate {rate})"
+    );
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..connections)
+        .map(|c| {
+            let plan = LoadPlan {
+                addr: addr.clone(),
+                conn_idx: c,
+                requests: total / connections + usize::from(c < total % connections),
+                pipeline,
+                input_dim,
+                timesteps,
+                classes,
+                rate,
+                deadline_ms,
+                seed,
+            };
+            std::thread::spawn(move || loadgen_connection(&plan))
+        })
+        .collect();
+    let mut agg = LoadStats::default();
+    for h in handles {
+        let s = h.join().expect("loadgen connection thread panicked")?;
+        agg.lat_us.extend(&s.lat_us);
+        agg.ok += s.ok;
+        agg.overload += s.overload;
+        agg.deadline += s.deadline;
+        agg.errors += s.errors;
+        agg.mismatched += s.mismatched;
+        agg.unanswered += s.unanswered;
+        agg.events_sent += s.events_sent;
+    }
+    let wall = t0.elapsed();
+
+    let mut q = Quantiles::new();
+    for &l in &agg.lat_us {
+        q.add(l);
+    }
+    let answered = agg.ok + agg.overload + agg.deadline + agg.errors + agg.mismatched;
+    let rps = answered as f64 / wall.as_secs_f64().max(1e-9);
+    let eps = agg.events_sent as f64 / wall.as_secs_f64().max(1e-9);
+    let mean_us = if agg.lat_us.is_empty() {
+        f64::NAN
+    } else {
+        agg.lat_us.iter().sum::<f64>() / agg.lat_us.len() as f64
+    };
+
+    let mut table = Table::new(
+        format!("loadgen: {total} requests over {connections} connections"),
+        &["metric", "value"],
+    );
+    let mut row = |k: &str, v: String| table.row(&[k.to_string(), v]);
+    row("answered", format!("{answered} / {total}"));
+    row("ok", agg.ok.to_string());
+    row("overload-rejected", agg.overload.to_string());
+    row("deadline-expired", agg.deadline.to_string());
+    row("other errors", agg.errors.to_string());
+    row("mismatched", agg.mismatched.to_string());
+    row("unanswered", agg.unanswered.to_string());
+    row("wall time", format!("{:.3}s", wall.as_secs_f64()));
+    row("throughput", format!("{rps:.1} req/s"));
+    row("event throughput", format!("{:.2} M events/s", eps / 1e6));
+    row("latency mean", format!("{mean_us:.0} µs"));
+    row("latency p50", format!("{:.0} µs", q.quantile(0.50)));
+    row("latency p90", format!("{:.0} µs", q.quantile(0.90)));
+    row("latency p99", format!("{:.0} µs", q.quantile(0.99)));
+    row("latency max", format!("{:.0} µs", q.quantile(1.0)));
+    table.print();
+
+    // Server-side view after the run (queue depths, micro-batch effects).
+    let post = probe.stats()?;
+    let j = Json::obj(vec![
+        ("bench", "serve".into()),
+        ("addr", addr.as_str().into()),
+        ("connections", connections.into()),
+        ("requests", total.into()),
+        ("pipeline", pipeline.into()),
+        ("rate", rate.into()),
+        ("deadline_ms", (deadline_ms as usize).into()),
+        ("ok", agg.ok.into()),
+        ("overload_rejected", agg.overload.into()),
+        ("deadline_expired", agg.deadline.into()),
+        ("errors", agg.errors.into()),
+        ("mismatched", agg.mismatched.into()),
+        ("unanswered", agg.unanswered.into()),
+        ("wall_s", wall.as_secs_f64().into()),
+        ("requests_per_s", rps.into()),
+        ("events_per_s", eps.into()),
+        (
+            "latency_us",
+            // NaN (empty sample set) must not leak into the JSON output.
+            Json::obj(
+                [
+                    ("mean", mean_us),
+                    ("p50", q.quantile(0.50)),
+                    ("p90", q.quantile(0.90)),
+                    ("p99", q.quantile(0.99)),
+                    ("max", q.quantile(1.0)),
+                ]
+                .into_iter()
+                .map(|(k, v)| (k, if v.is_nan() { Json::Null } else { Json::Num(v) }))
+                .collect(),
+            ),
+        ),
+        ("server", post),
+    ]);
+    emit_json_file(out.as_str(), &j);
+
+    if args.has("shutdown-server") {
+        probe.request_shutdown()?;
+        println!("server shutdown requested");
+    }
+    if agg.mismatched > 0 || agg.unanswered > 0 {
+        bail!(
+            "loadgen integrity failure: {} mismatched, {} unanswered",
+            agg.mismatched,
+            agg.unanswered
+        );
+    }
+    Ok(())
+}
+
 fn help() {
     println!(
         "menage — MENAGE mixed-signal neuromorphic accelerator reproduction
@@ -397,8 +777,20 @@ USAGE:
                    [--strategy ilp_flow|ilp_exact|greedy|first_fit|round_robin]
                    [--analog ideal|paper] [--golden] [--synthetic] [--out FILE]
   menage waveform  [--out FILE]
+  menage serve     --model M --accel A [--synthetic] [--addr HOST:PORT]
+                   [--workers W] [--lanes L] [--fill-wait-us U]
+                   [--max-in-flight N] [--duration-secs S]
+                   [--allow-remote-shutdown] [--strategy S] [--analog A]
+  menage loadgen   [--addr HOST:PORT] [--connections C] [--requests N]
+                   [--pipeline P] [--rate R] [--deadline-ms D] [--seed S]
+                   [--out BENCH_serve.json] [--shutdown-server]
 
-Run `make artifacts` first to produce trained weights + HLO under artifacts/."
+serve/loadgen speak the length-prefixed binary protocol documented in
+menage::serve::protocol (and README.md); loadgen prints a latency/
+throughput table and writes BENCH_serve.json.
+
+Run `make artifacts` first to produce trained weights + HLO under artifacts/,
+or pass --synthetic to run on a generated network."
     );
 }
 
@@ -415,6 +807,8 @@ fn main() {
         "map" => cmd_map(&args),
         "simulate" => cmd_simulate(&args),
         "waveform" => cmd_waveform(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "help" | "--help" | "-h" => {
             help();
             Ok(())
@@ -428,5 +822,77 @@ fn main() {
     if let Err(e) = r {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_kv_and_flags() {
+        let a = Args::parse_from(argv(&[
+            "simulate", "--model", "nmnist", "--samples", "12", "--synthetic",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "simulate");
+        assert_eq!(a.get("model"), Some("nmnist"));
+        assert_eq!(a.get_usize("samples", 0).unwrap(), 12);
+        assert!(a.has("synthetic"));
+        assert_eq!(a.get_or("accel", "accel1"), "accel1");
+    }
+
+    #[test]
+    fn parse_rejects_non_dashed() {
+        assert!(Args::parse_from(argv(&["map", "nmnist"])).is_err());
+    }
+
+    /// The regression this guards: a typo'd flag used to be silently
+    /// ignored, so the run proceeded with defaults instead of erroring.
+    #[test]
+    fn unknown_options_and_flags_are_errors() {
+        let vocab_keys = ["model", "samples"];
+        let vocab_flags = ["synthetic"];
+        // Typo'd option (`--sample` for `--samples`).
+        let a = Args::parse_from(argv(&["simulate", "--sample", "12"])).unwrap();
+        let e = a.expect_known(&vocab_keys, &vocab_flags).unwrap_err();
+        assert!(e.to_string().contains("--sample"), "{e}");
+        // Typo'd flag.
+        let a = Args::parse_from(argv(&["simulate", "--synthettic"])).unwrap();
+        assert!(a.expect_known(&vocab_keys, &vocab_flags).is_err());
+        // Valid vocabulary passes.
+        let a = Args::parse_from(argv(&["simulate", "--samples", "4", "--synthetic"])).unwrap();
+        a.expect_known(&vocab_keys, &vocab_flags).unwrap();
+        // An option given without a value reads as a flag → specific error.
+        let a = Args::parse_from(argv(&["simulate", "--samples"])).unwrap();
+        let e = a.expect_known(&vocab_keys, &vocab_flags).unwrap_err();
+        assert!(e.to_string().contains("requires a value"), "{e}");
+    }
+
+    /// Every real subcommand's vocabulary check must reject a stray flag
+    /// (the handlers call expect_known before doing any work).
+    #[test]
+    fn subcommand_handlers_reject_unknown_flags() {
+        for cmd in ["info", "map", "simulate", "waveform", "serve", "loadgen"] {
+            let a = Args::parse_from(argv(&[cmd, "--definitely-not-a-flag"])).unwrap();
+            let r = match cmd {
+                "info" => cmd_info(&a),
+                "map" => cmd_map(&a),
+                "simulate" => cmd_simulate(&a),
+                "waveform" => cmd_waveform(&a),
+                "serve" => cmd_serve(&a),
+                "loadgen" => cmd_loadgen(&a),
+                _ => unreachable!(),
+            };
+            let e = r.unwrap_err();
+            assert!(
+                e.to_string().contains("definitely-not-a-flag"),
+                "{cmd}: wrong error: {e}"
+            );
+        }
     }
 }

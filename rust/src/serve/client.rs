@@ -1,0 +1,155 @@
+//! Blocking client library for the wire protocol.
+//!
+//! One [`Client`] wraps one TCP connection. Two usage shapes:
+//!
+//! * **Synchronous** — [`Client::infer`] sends a request and blocks until
+//!   its reply arrives. Simplest; one request in flight per connection.
+//! * **Pipelined** — [`Client::send_infer`] / [`Client::recv_reply`] let a
+//!   caller keep several requests outstanding on one socket (replies may
+//!   arrive in any order; correlate by id). The load generator uses this
+//!   to keep the server's admission window full.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::snn::SpikeTrain;
+use crate::util::json::Json;
+
+use super::protocol::{
+    decode_stats_reply, write_frame, ErrorCode, ErrorFrame, Frame, FrameKind, FrameReader,
+    InferRequest, InferResponse, DEFAULT_MAX_FRAME_LEN,
+};
+
+/// A successfully decoded INFER_RESPONSE (see [`InferResponse`]).
+pub type InferReply = InferResponse;
+
+/// Everything a server can send back.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    Infer(InferReply),
+    Error(ErrorFrame),
+    Pong,
+    Stats(Json),
+}
+
+/// Blocking connection to a `menage serve` instance.
+pub struct Client {
+    stream: TcpStream,
+    reader: FrameReader,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting to inference server")?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream, reader: FrameReader::new(DEFAULT_MAX_FRAME_LEN), next_id: 0 })
+    }
+
+    /// [`Self::connect`] with retries — for racing a server that is still
+    /// binding (the loadgen-vs-serve startup in `make smoke-serve`).
+    pub fn connect_retry(addr: impl ToSocketAddrs + Copy, attempts: usize, delay: Duration) -> Result<Self> {
+        let mut last = None;
+        for _ in 0..attempts.max(1) {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+            std::thread::sleep(delay);
+        }
+        Err(last.unwrap())
+    }
+
+    /// Send one inference request without waiting for the reply; returns
+    /// the correlation id. `deadline_ms` of 0 means no deadline.
+    pub fn send_infer(
+        &mut self,
+        train: &SpikeTrain,
+        deadline_ms: u32,
+        label: Option<u32>,
+    ) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = InferRequest { id, deadline_ms, label, train: train.clone() };
+        write_frame(&mut self.stream, FrameKind::InferRequest, &req.encode())
+            .context("sending INFER_REQUEST")?;
+        Ok(id)
+    }
+
+    /// Block until the next server frame and decode it.
+    pub fn recv_reply(&mut self) -> Result<Reply> {
+        let Frame { kind, payload } = match self.reader.read_frame(&mut self.stream) {
+            Ok(Some(f)) => f,
+            Ok(None) => bail!("server closed the connection"),
+            Err(e) => return Err(e).context("reading server frame"),
+        };
+        Ok(match FrameKind::from_u8(kind) {
+            Some(FrameKind::InferResponse) => Reply::Infer(InferResponse::decode(&payload)?),
+            Some(FrameKind::Error) => Reply::Error(ErrorFrame::decode(&payload)?),
+            Some(FrameKind::Pong) => Reply::Pong,
+            Some(FrameKind::StatsReply) => Reply::Stats(decode_stats_reply(&payload)?),
+            other => bail!("unexpected frame from server: {other:?} (kind byte {kind})"),
+        })
+    }
+
+    /// Synchronous inference: send, then block for this request's reply.
+    /// A server-sent ERROR for this id becomes an `Err` naming the code.
+    pub fn infer(&mut self, train: &SpikeTrain) -> Result<InferReply> {
+        self.infer_with_deadline(train, 0)
+    }
+
+    /// [`Self::infer`] with a relative deadline in milliseconds.
+    pub fn infer_with_deadline(&mut self, train: &SpikeTrain, deadline_ms: u32) -> Result<InferReply> {
+        let id = self.send_infer(train, deadline_ms, None)?;
+        loop {
+            match self.recv_reply()? {
+                Reply::Infer(r) if r.id == id => return Ok(r),
+                Reply::Error(e) if e.id == id => {
+                    bail!("server rejected request {id}: [{}] {}", e.code.name(), e.message)
+                }
+                Reply::Error(e) if e.code == ErrorCode::Malformed => {
+                    // Connection-level fault: the server is closing us.
+                    bail!("connection error from server: {}", e.message)
+                }
+                // A stale reply (e.g. from an abandoned pipelined request)
+                // or an unsolicited Pong: skip and keep waiting.
+                _ => continue,
+            }
+        }
+    }
+
+    /// Query the server's metrics snapshot (includes the `model` block a
+    /// load generator needs to synthesize inputs). Call only with no
+    /// inference replies outstanding on this connection.
+    pub fn stats(&mut self) -> Result<Json> {
+        write_frame(&mut self.stream, FrameKind::Stats, &[]).context("sending STATS")?;
+        match self.recv_reply()? {
+            Reply::Stats(j) => Ok(j),
+            Reply::Error(e) => bail!("STATS failed: [{}] {}", e.code.name(), e.message),
+            other => bail!("expected STATS_REPLY, got {other:?}"),
+        }
+    }
+
+    /// Liveness round-trip.
+    pub fn ping(&mut self) -> Result<()> {
+        write_frame(&mut self.stream, FrameKind::Ping, &[]).context("sending PING")?;
+        match self.recv_reply()? {
+            Reply::Pong => Ok(()),
+            Reply::Error(e) => bail!("PING failed: [{}] {}", e.code.name(), e.message),
+            other => bail!("expected PONG, got {other:?}"),
+        }
+    }
+
+    /// Ask the server to begin a graceful shutdown (requires the server's
+    /// `allow_remote_shutdown`; acked with PONG).
+    pub fn request_shutdown(&mut self) -> Result<()> {
+        write_frame(&mut self.stream, FrameKind::Shutdown, &[]).context("sending SHUTDOWN")?;
+        match self.recv_reply()? {
+            Reply::Pong => Ok(()),
+            Reply::Error(e) => bail!("SHUTDOWN refused: [{}] {}", e.code.name(), e.message),
+            other => bail!("expected shutdown ack, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Little-endian byte (de)serialization primitives for the wire protocol.
+//!
+//! [`super::protocol`] composes these into frames. Writers append to a
+//! `Vec<u8>`; reading goes through [`Cursor`], which is bounds-checked
+//! everywhere (a malformed payload yields an error, never a panic or an
+//! out-of-bounds read) and tracks its position so fixed fields and
+//! variable-length tails (spike trains, strings) can be mixed freely.
+
+use anyhow::{bail, Result};
+
+use crate::snn::SpikeTrain;
+
+/// Append a `u8`.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+/// Append a little-endian `u32`.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian `u64`.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u32` length prefix followed by the raw bytes.
+pub fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+/// Append a `u32`-length-prefixed UTF-8 string.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_bytes(out, s.as_bytes());
+}
+
+/// Bounds-checked reader over a received payload.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let Some(bytes) = self.buf.get(self.pos..self.pos + n) else {
+            bail!(
+                "payload truncated reading {what}: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            );
+        };
+        self.pos += n;
+        Ok(bytes)
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// A `u32`-length-prefixed byte run.
+    pub fn bytes(&mut self, what: &str) -> Result<&'a [u8]> {
+        let n = self.u32(what)? as usize;
+        self.take(n, what)
+    }
+
+    /// A `u32`-length-prefixed UTF-8 string.
+    pub fn str(&mut self, what: &str) -> Result<&'a str> {
+        let b = self.bytes(what)?;
+        std::str::from_utf8(b).map_err(|e| anyhow::anyhow!("{what}: invalid UTF-8: {e}"))
+    }
+
+    /// A [`SpikeTrain`] in its wire encoding (fully validated — see
+    /// [`SpikeTrain::read_wire`]).
+    pub fn train(&mut self, what: &str) -> Result<SpikeTrain> {
+        let (st, consumed) = SpikeTrain::read_wire(&self.buf[self.pos..])
+            .map_err(|e| anyhow::anyhow!("{what}: {e:#}"))?;
+        self.pos += consumed;
+        Ok(st)
+    }
+
+    /// Assert the whole payload was consumed — trailing garbage in a
+    /// fixed-layout frame means a framing bug or a corrupt sender.
+    pub fn finish(&self, what: &str) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "{what}: {} trailing bytes after payload (frame length lies)",
+                self.remaining()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut b = Vec::new();
+        put_u8(&mut b, 7);
+        put_u32(&mut b, 0xDEAD_BEEF);
+        put_u64(&mut b, u64::MAX - 1);
+        put_str(&mut b, "héllo");
+        put_bytes(&mut b, &[1, 2, 3]);
+        let mut c = Cursor::new(&b);
+        assert_eq!(c.u8("a").unwrap(), 7);
+        assert_eq!(c.u32("b").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(c.u64("c").unwrap(), u64::MAX - 1);
+        assert_eq!(c.str("d").unwrap(), "héllo");
+        assert_eq!(c.bytes("e").unwrap(), &[1, 2, 3]);
+        c.finish("frame").unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error() {
+        let mut b = Vec::new();
+        put_u64(&mut b, 42);
+        let mut c = Cursor::new(&b[..5]);
+        assert!(c.u64("x").is_err());
+        // Length prefix promising more than the buffer holds.
+        let mut b = Vec::new();
+        put_u32(&mut b, 100);
+        b.extend_from_slice(&[0; 10]);
+        let mut c = Cursor::new(&b);
+        assert!(c.bytes("blob").is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut b = Vec::new();
+        put_u32(&mut b, 1);
+        put_u32(&mut b, 2);
+        let mut c = Cursor::new(&b);
+        c.u32("only").unwrap();
+        assert!(c.finish("frame").is_err());
+    }
+
+    #[test]
+    fn train_embeds_between_fields() {
+        let mut rng = Rng::new(3);
+        let st = SpikeTrain::bernoulli(25, 5, 0.3, &mut rng);
+        let mut b = Vec::new();
+        put_u64(&mut b, 9);
+        st.write_wire(&mut b);
+        put_u32(&mut b, 77);
+        let mut c = Cursor::new(&b);
+        assert_eq!(c.u64("id").unwrap(), 9);
+        assert_eq!(c.train("train").unwrap(), st);
+        assert_eq!(c.u32("tail").unwrap(), 77);
+        c.finish("frame").unwrap();
+    }
+
+    #[test]
+    fn invalid_utf8_rejected() {
+        let mut b = Vec::new();
+        put_bytes(&mut b, &[0xFF, 0xFE]);
+        let mut c = Cursor::new(&b);
+        assert!(c.str("s").is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! Per-request serving metrics: counters, latency distribution, and the
+//! JSON snapshot the STATS frame returns.
+//!
+//! Everything is lock-free (atomics) so the hot ingress/egress paths never
+//! contend: latency goes into a fixed-size log₂-bucketed histogram
+//! (bounded memory no matter how long the server lives — unlike a
+//! retained-sample quantile sketch, which would grow without bound under
+//! production traffic), and the percentiles reported over STATS are
+//! bucket-resolution estimates, which is plenty for an ops dashboard. The
+//! load generator computes *exact* client-side percentiles from its own
+//! samples; `BENCH_serve.json` carries those.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Number of log₂ microsecond buckets: bucket `i` counts latencies in
+/// `[2^i, 2^(i+1))` µs (bucket 0 is `[0, 2)`), so the top bucket starts at
+/// 2³⁹ µs ≈ 6.4 days — effectively unbounded.
+const BUCKETS: usize = 40;
+
+/// Fixed-size, lock-free latency histogram (microseconds).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+    max_micros: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+            max_micros: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket_of(micros: u64) -> usize {
+        // 0 and 1 µs land in bucket 0; otherwise floor(log2(v)).
+        (63 - micros.max(1).leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    pub fn record_micros(&self, micros: u64) {
+        self.buckets[Self::bucket_of(micros)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+        self.max_micros.fetch_max(micros, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_micros(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum_micros.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn max_micros(&self) -> u64 {
+        self.max_micros.load(Ordering::Relaxed)
+    }
+
+    /// Bucket-resolution quantile estimate in microseconds (the geometric
+    /// midpoint of the bucket holding the rank-`q` sample), clamped to the
+    /// observed maximum. `NaN` when empty.
+    pub fn quantile_micros(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u64 << (i + 1)) as f64;
+                let est = (lo.max(1.0) * hi).sqrt();
+                return est.min(self.max_micros() as f64);
+            }
+        }
+        self.max_micros() as f64
+    }
+}
+
+/// The serving-layer metrics registry. One instance per [`super::Server`],
+/// shared by every connection reader, the response router, and the STATS
+/// snapshot.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Connections ever accepted.
+    pub connections_opened: AtomicU64,
+    /// Connections currently open.
+    pub connections_active: AtomicU64,
+    /// Requests admitted into the coordinator queue.
+    pub accepted: AtomicU64,
+    /// Responses routed back to a client (includes deadline-expired ones).
+    pub completed: AtomicU64,
+    /// Requests refused because the in-flight cap was reached.
+    pub rejected_overload: AtomicU64,
+    /// Requests refused before submission (wrong width, bad payload).
+    pub rejected_bad_request: AtomicU64,
+    /// Responses that completed after their request's deadline (the client
+    /// got `ERROR DeadlineExceeded` instead of the result).
+    pub deadline_expired: AtomicU64,
+    /// Frame-layer violations (bad magic, truncation, oversized frames).
+    pub protocol_errors: AtomicU64,
+    /// Errors the simulator workers reported for admitted requests.
+    pub worker_errors: AtomicU64,
+    /// Responses dropped because their connection had gone away.
+    pub dropped_responses: AtomicU64,
+    /// Input spikes (events) across admitted requests — the event-delivery
+    /// throughput the host-side path is sized by.
+    pub events_in: AtomicU64,
+    /// Modeled accelerator cycles across completed requests.
+    pub total_cycles: AtomicU64,
+    /// Accept→route latency distribution.
+    pub latency: LatencyHistogram,
+}
+
+impl ServeMetrics {
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot as JSON — the STATS_REPLY payload. `queue_depth` and
+    /// `in_flight` are gauges sampled by the caller (they live on the
+    /// coordinator handle and the server's admission counter).
+    pub fn to_json(&self, started: Instant, queue_depth: usize, in_flight: usize) -> Json {
+        let uptime = started.elapsed().as_secs_f64().max(1e-9);
+        let completed = Self::get(&self.completed);
+        let events = Self::get(&self.events_in);
+        let lat = &self.latency;
+        let q = |p: f64| -> Json {
+            let v = lat.quantile_micros(p);
+            if v.is_nan() {
+                Json::Null
+            } else {
+                Json::Num(v)
+            }
+        };
+        Json::obj(vec![
+            ("uptime_s", uptime.into()),
+            ("queue_depth", queue_depth.into()),
+            ("in_flight", in_flight.into()),
+            (
+                "counters",
+                Json::obj(vec![
+                    ("connections_opened", (Self::get(&self.connections_opened) as usize).into()),
+                    ("connections_active", (Self::get(&self.connections_active) as usize).into()),
+                    ("accepted", (Self::get(&self.accepted) as usize).into()),
+                    ("completed", (completed as usize).into()),
+                    ("rejected_overload", (Self::get(&self.rejected_overload) as usize).into()),
+                    (
+                        "rejected_bad_request",
+                        (Self::get(&self.rejected_bad_request) as usize).into(),
+                    ),
+                    ("deadline_expired", (Self::get(&self.deadline_expired) as usize).into()),
+                    ("protocol_errors", (Self::get(&self.protocol_errors) as usize).into()),
+                    ("worker_errors", (Self::get(&self.worker_errors) as usize).into()),
+                    ("dropped_responses", (Self::get(&self.dropped_responses) as usize).into()),
+                    ("events_in", (events as usize).into()),
+                    ("total_cycles", (Self::get(&self.total_cycles) as usize).into()),
+                ]),
+            ),
+            (
+                "throughput",
+                Json::obj(vec![
+                    ("requests_per_s", (completed as f64 / uptime).into()),
+                    ("events_per_s", (events as f64 / uptime).into()),
+                ]),
+            ),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    (
+                        "mean",
+                        if lat.count() == 0 { Json::Null } else { Json::Num(lat.mean_micros()) },
+                    ),
+                    ("p50", q(0.50)),
+                    ("p90", q(0.90)),
+                    ("p99", q(0.99)),
+                    ("max", (lat.max_micros() as usize).into()),
+                    ("count", (lat.count() as usize).into()),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::default();
+        assert!(h.quantile_micros(0.5).is_nan());
+        assert!(h.mean_micros().is_nan());
+        // 90 fast (≈100 µs) + 10 slow (≈100 ms) samples.
+        for _ in 0..90 {
+            h.record_micros(100);
+        }
+        for _ in 0..10 {
+            h.record_micros(100_000);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max_micros(), 100_000);
+        let p50 = h.quantile_micros(0.50);
+        assert!((64.0..256.0).contains(&p50), "p50 estimate {p50} off-bucket");
+        let p99 = h.quantile_micros(0.99);
+        assert!((65_536.0..=100_000.0).contains(&p99), "p99 estimate {p99} off-bucket");
+        let mean = h.mean_micros();
+        assert!((mean - (90.0 * 100.0 + 10.0 * 100_000.0) / 100.0).abs() < 1e-9);
+        // Quantiles never exceed the observed max.
+        assert!(h.quantile_micros(1.0) <= 100_000.0);
+    }
+
+    #[test]
+    fn histogram_edge_values() {
+        let h = LatencyHistogram::default();
+        h.record_micros(0);
+        h.record_micros(1);
+        h.record_micros(u64::MAX);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max_micros(), u64::MAX);
+        assert!(h.quantile_micros(0.0) >= 0.0);
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let m = ServeMetrics::default();
+        ServeMetrics::bump(&m.completed);
+        ServeMetrics::bump(&m.accepted);
+        m.events_in.fetch_add(500, Ordering::Relaxed);
+        m.latency.record_micros(250);
+        let j = m.to_json(Instant::now(), 3, 2);
+        assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("in_flight").unwrap().as_usize().unwrap(), 2);
+        let counters = j.get("counters").unwrap();
+        assert_eq!(counters.get("completed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(counters.get("events_in").unwrap().as_usize().unwrap(), 500);
+        assert!(j.get("throughput").unwrap().get("events_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("latency_us").unwrap().get("p50").unwrap().as_f64().unwrap() > 0.0);
+        // Round-trips through the JSON writer/parser (what STATS does).
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+}

@@ -1,0 +1,39 @@
+//! Network serving subsystem: a dependency-free TCP inference service.
+//!
+//! The paper positions MENAGE as a general-purpose edge inference
+//! platform, and host-side event *delivery* — not core compute — is the
+//! usual end-to-end bottleneck for neuromorphic accelerators. This module
+//! is that missing layer: it turns the in-process library
+//! ([`crate::accel::Menage`] behind [`crate::coordinator::Coordinator`])
+//! into a network service, std-only (the container vendors only the
+//! `anyhow` shim; no tokio, no serde).
+//!
+//! * [`protocol`] — the length-prefixed binary wire protocol (frame
+//!   layout, typed messages, incremental [`protocol::FrameReader`]).
+//! * [`codec`] — bounds-checked little-endian (de)serialization
+//!   primitives, including the [`crate::snn::SpikeTrain`] wire form.
+//! * [`server`] — the multi-threaded server: per-connection readers feed
+//!   the coordinator's shared queue, so `with_lanes_wait` micro-batches
+//!   requests **across sockets** into lane-packed dispatches; admission
+//!   control (bounded in-flight + explicit overload reject), per-request
+//!   deadlines, graceful drain on shutdown.
+//! * [`client`] — blocking client library (sync and pipelined).
+//! * [`metrics`] — the lock-free per-request metrics registry served over
+//!   the STATS frame.
+//!
+//! CLI entry points: `menage serve` (stand up a server) and
+//! `menage loadgen` (drive it over loopback and emit
+//! `BENCH_serve.json`). End-to-end behaviour — including bit-identical
+//! outputs vs in-process execution — is pinned by
+//! `tests/serve_roundtrip.rs`.
+
+pub mod client;
+pub mod codec;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use client::{Client, InferReply, Reply};
+pub use metrics::ServeMetrics;
+pub use protocol::{ErrorCode, FrameKind};
+pub use server::{ModelInfo, ServeConfig, Server};

@@ -1,0 +1,543 @@
+//! The length-prefixed binary wire protocol.
+//!
+//! Every frame is an 8-byte header followed by a payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic   0x454D (bytes "ME" on the wire; little-endian u16)
+//! 2       1     version 0x01
+//! 3       1     kind    (FrameKind)
+//! 4       4     len     payload byte count, little-endian u32
+//! 8       len   payload
+//! ```
+//!
+//! Frame kinds and payloads (all integers little-endian; spike trains use
+//! [`SpikeTrain::write_wire`]'s encoding):
+//!
+//! | kind | name           | dir  | payload |
+//! |------|----------------|------|---------|
+//! | 1    | INFER_REQUEST  | c→s  | `u64 id, u32 deadline_ms (0 = none), u32 label (u32::MAX = none), train` |
+//! | 2    | INFER_RESPONSE | s→c  | `u64 id, u32 predicted, u64 cycles, u64 server_micros, output train` |
+//! | 3    | ERROR          | s→c  | `u64 id (u64::MAX = none), u8 code, str message` |
+//! | 4    | PING           | c→s  | empty |
+//! | 5    | PONG           | s→c  | empty |
+//! | 6    | STATS          | c→s  | empty |
+//! | 7    | STATS_REPLY    | s→c  | `str json` (the metrics registry snapshot) |
+//! | 8    | SHUTDOWN       | c→s  | empty (honored only with `allow_remote_shutdown`; acked with PONG) |
+//!
+//! Framing errors (bad magic/version, oversized length, truncated stream)
+//! are protocol-fatal for the connection: the server answers with an
+//! `ERROR Malformed` frame where possible and closes that socket — the
+//! byte stream can no longer be trusted to be frame-aligned. Errors
+//! *inside* a well-delimited payload (bad train, unknown kind) are
+//! per-request: the server answers with an ERROR frame and keeps the
+//! connection alive. `tests/serve_roundtrip.rs` pins both behaviours.
+
+use std::io::{self, Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::snn::SpikeTrain;
+use crate::util::json::Json;
+
+use super::codec::{put_str, put_u32, put_u64, put_u8, Cursor};
+
+/// `"ME"` as a little-endian u16.
+pub const MAGIC: u16 = 0x454D;
+/// Wire protocol version; bumped on incompatible layout changes.
+pub const VERSION: u8 = 1;
+/// Header bytes before the payload.
+pub const HEADER_LEN: usize = 8;
+/// Default cap on a single frame's payload (guards allocations; a server
+/// can lower it via `ServeConfig::max_frame_len`).
+pub const DEFAULT_MAX_FRAME_LEN: u32 = 16 << 20;
+/// "No id" sentinel in ERROR frames (connection-level failures).
+pub const NO_ID: u64 = u64::MAX;
+/// "No label" sentinel in INFER_REQUEST frames.
+pub const NO_LABEL: u32 = u32::MAX;
+
+/// Frame discriminator (header byte 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    InferRequest = 1,
+    InferResponse = 2,
+    Error = 3,
+    Ping = 4,
+    Pong = 5,
+    Stats = 6,
+    StatsReply = 7,
+    Shutdown = 8,
+}
+
+impl FrameKind {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => Self::InferRequest,
+            2 => Self::InferResponse,
+            3 => Self::Error,
+            4 => Self::Ping,
+            5 => Self::Pong,
+            6 => Self::Stats,
+            7 => Self::StatsReply,
+            8 => Self::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+/// Error codes carried by ERROR frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Frame-layer violation; the server closes the connection after this.
+    Malformed = 1,
+    /// Well-framed but unknown/unexpected frame kind.
+    Unsupported = 2,
+    /// Request decoded but is invalid for this model (e.g. wrong width).
+    BadRequest = 3,
+    /// Admission control: the in-flight cap is reached; retry later.
+    Overload = 4,
+    /// The request completed after its deadline; the result was discarded.
+    DeadlineExceeded = 5,
+    /// Simulator-side failure.
+    Internal = 6,
+    /// The server is draining and no longer accepts work.
+    ShuttingDown = 7,
+}
+
+impl ErrorCode {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => Self::Malformed,
+            2 => Self::Unsupported,
+            3 => Self::BadRequest,
+            4 => Self::Overload,
+            5 => Self::DeadlineExceeded,
+            6 => Self::Internal,
+            7 => Self::ShuttingDown,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Malformed => "malformed",
+            Self::Unsupported => "unsupported",
+            Self::BadRequest => "bad_request",
+            Self::Overload => "overload",
+            Self::DeadlineExceeded => "deadline_exceeded",
+            Self::Internal => "internal",
+            Self::ShuttingDown => "shutting_down",
+        }
+    }
+}
+
+/// A received frame: raw kind byte (so unknown kinds survive to the
+/// handler, which answers `ERROR Unsupported`) plus the payload.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub kind: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Serialize one frame to `w` (header + payload, then flush).
+pub fn write_frame(w: &mut impl Write, kind: FrameKind, payload: &[u8]) -> io::Result<()> {
+    let mut header = [0u8; HEADER_LEN];
+    header[0..2].copy_from_slice(&MAGIC.to_le_bytes());
+    header[2] = VERSION;
+    header[3] = kind as u8;
+    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Encode a frame into a byte vector (what the server's per-connection
+/// writer channel carries).
+pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    let _ = write_frame(&mut out, kind, payload);
+    out
+}
+
+/// Incremental frame parser over a byte stream.
+///
+/// Robust to read timeouts: a socket with `set_read_timeout` can return
+/// `WouldBlock`/`TimedOut` *between* `read` calls at any point; the
+/// partial bytes already buffered are kept, and the next
+/// [`Self::read_frame`] call resumes exactly where it left off (a naive
+/// `read_exact` would lose frame alignment on timeout). This is what lets
+/// server readers poll a stop flag while blocked mid-frame.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    max_frame_len: u32,
+}
+
+impl FrameReader {
+    pub fn new(max_frame_len: u32) -> Self {
+        Self { buf: Vec::new(), max_frame_len }
+    }
+
+    /// Read until one full frame is buffered and return it.
+    ///
+    /// * `Ok(Some(frame))` — a frame (possibly of unknown kind).
+    /// * `Ok(None)` — clean EOF at a frame boundary (peer closed).
+    /// * `Err(WouldBlock | TimedOut)` — read timeout; buffered partial
+    ///   data is preserved, call again.
+    /// * `Err(InvalidData)` — framing violation (bad magic/version,
+    ///   oversized payload) or EOF mid-frame; the stream is unsyncable.
+    pub fn read_frame(&mut self, r: &mut impl Read) -> io::Result<Option<Frame>> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if self.buf.len() >= HEADER_LEN {
+                let magic = u16::from_le_bytes([self.buf[0], self.buf[1]]);
+                if magic != MAGIC {
+                    return Err(invalid(format!("bad frame magic {magic:#06x}")));
+                }
+                if self.buf[2] != VERSION {
+                    return Err(invalid(format!("unsupported protocol version {}", self.buf[2])));
+                }
+                let len = u32::from_le_bytes(self.buf[4..8].try_into().unwrap());
+                if len > self.max_frame_len {
+                    return Err(invalid(format!(
+                        "frame payload of {len} bytes exceeds cap {}",
+                        self.max_frame_len
+                    )));
+                }
+                let total = HEADER_LEN + len as usize;
+                if self.buf.len() >= total {
+                    let kind = self.buf[3];
+                    let payload = self.buf[HEADER_LEN..total].to_vec();
+                    self.buf.drain(..total);
+                    return Ok(Some(Frame { kind, payload }));
+                }
+            }
+            match r.read(&mut chunk) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Ok(None)
+                    } else {
+                        Err(invalid(format!(
+                            "connection closed mid-frame ({} bytes buffered)",
+                            self.buf.len()
+                        )))
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+// ---------------------------------------------------------------------------
+// Typed messages.
+
+/// INFER_REQUEST payload.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// Client-chosen correlation id, echoed in the response.
+    pub id: u64,
+    /// Relative deadline in milliseconds from server receipt; 0 = none. A
+    /// result completing after its deadline is replaced by an
+    /// `ERROR DeadlineExceeded` frame.
+    pub deadline_ms: u32,
+    /// Optional ground-truth label for server-side accuracy accounting.
+    pub label: Option<u32>,
+    pub train: SpikeTrain,
+}
+
+impl InferRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.train.wire_len());
+        put_u64(&mut out, self.id);
+        put_u32(&mut out, self.deadline_ms);
+        put_u32(&mut out, self.label.unwrap_or(NO_LABEL));
+        self.train.write_wire(&mut out);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let id = c.u64("id")?;
+        let deadline_ms = c.u32("deadline_ms")?;
+        let label = match c.u32("label")? {
+            NO_LABEL => None,
+            l => Some(l),
+        };
+        let train = c.train("train")?;
+        c.finish("INFER_REQUEST")?;
+        Ok(Self { id, deadline_ms, label, train })
+    }
+}
+
+/// INFER_RESPONSE payload.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    /// Echo of the request's correlation id.
+    pub id: u64,
+    pub predicted: u32,
+    /// Modeled on-accelerator cycles (bit-identical to in-process runs).
+    pub cycles: u64,
+    /// Server-observed latency (accept → response routed), microseconds.
+    pub server_micros: u64,
+    /// The classifier output spike train — lets the client verify
+    /// bit-identical execution, not just the argmax.
+    pub output: SpikeTrain,
+}
+
+impl InferResponse {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(28 + self.output.wire_len());
+        put_u64(&mut out, self.id);
+        put_u32(&mut out, self.predicted);
+        put_u64(&mut out, self.cycles);
+        put_u64(&mut out, self.server_micros);
+        self.output.write_wire(&mut out);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let id = c.u64("id")?;
+        let predicted = c.u32("predicted")?;
+        let cycles = c.u64("cycles")?;
+        let server_micros = c.u64("server_micros")?;
+        let output = c.train("output")?;
+        c.finish("INFER_RESPONSE")?;
+        Ok(Self { id, predicted, cycles, server_micros, output })
+    }
+}
+
+/// ERROR payload.
+#[derive(Debug, Clone)]
+pub struct ErrorFrame {
+    /// Request id the error refers to, or [`NO_ID`] for connection-level
+    /// failures.
+    pub id: u64,
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ErrorFrame {
+    pub fn new(id: u64, code: ErrorCode, message: impl Into<String>) -> Self {
+        Self { id, code, message: message.into() }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(13 + self.message.len());
+        put_u64(&mut out, self.id);
+        put_u8(&mut out, self.code as u8);
+        put_str(&mut out, &self.message);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let id = c.u64("id")?;
+        let code_raw = c.u8("code")?;
+        let Some(code) = ErrorCode::from_u8(code_raw) else {
+            bail!("unknown error code {code_raw}");
+        };
+        let message = c.str("message")?.to_string();
+        c.finish("ERROR")?;
+        Ok(Self { id, code, message })
+    }
+}
+
+/// Encode a STATS_REPLY payload from the metrics snapshot.
+pub fn encode_stats_reply(stats: &Json) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_str(&mut out, &stats.to_string());
+    out
+}
+
+/// Decode a STATS_REPLY payload back into JSON.
+pub fn decode_stats_reply(payload: &[u8]) -> Result<Json> {
+    let mut c = Cursor::new(payload);
+    let s = c.str("stats json")?;
+    let j = Json::parse(s)?;
+    c.finish("STATS_REPLY")?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn train() -> SpikeTrain {
+        let mut rng = Rng::new(21);
+        SpikeTrain::bernoulli(30, 6, 0.3, &mut rng)
+    }
+
+    #[test]
+    fn frame_roundtrip_through_reader() {
+        let req = InferRequest { id: 5, deadline_ms: 250, label: Some(3), train: train() };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::InferRequest, &req.encode()).unwrap();
+        write_frame(&mut wire, FrameKind::Ping, &[]).unwrap();
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_LEN);
+        let mut r = io::Cursor::new(wire);
+        let f1 = fr.read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(FrameKind::from_u8(f1.kind), Some(FrameKind::InferRequest));
+        let back = InferRequest::decode(&f1.payload).unwrap();
+        assert_eq!(back.id, 5);
+        assert_eq!(back.deadline_ms, 250);
+        assert_eq!(back.label, Some(3));
+        assert_eq!(back.train, req.train);
+        let f2 = fr.read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(FrameKind::from_u8(f2.kind), Some(FrameKind::Ping));
+        assert!(f2.payload.is_empty());
+        assert!(fr.read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    /// One byte at a time: the reader must reassemble frames across
+    /// arbitrarily fragmented reads (TCP gives no message boundaries).
+    #[test]
+    fn reader_handles_fragmentation() {
+        struct OneByte<'a>(&'a [u8], usize);
+        impl Read for OneByte<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                if self.1 >= self.0.len() {
+                    return Ok(0);
+                }
+                buf[0] = self.0[self.1];
+                self.1 += 1;
+                Ok(1)
+            }
+        }
+        let resp = InferResponse {
+            id: 9,
+            predicted: 2,
+            cycles: 12345,
+            server_micros: 999,
+            output: train(),
+        };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::InferResponse, &resp.encode()).unwrap();
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_LEN);
+        let mut r = OneByte(&wire, 0);
+        let f = fr.read_frame(&mut r).unwrap().unwrap();
+        let back = InferResponse::decode(&f.payload).unwrap();
+        assert_eq!(back.cycles, 12345);
+        assert_eq!(back.output, resp.output);
+    }
+
+    /// Timeouts mid-frame preserve buffered bytes; the next call resumes.
+    #[test]
+    fn reader_survives_interleaved_timeouts() {
+        struct Flaky<'a> {
+            data: &'a [u8],
+            pos: usize,
+            hiccup: bool,
+        }
+        impl Read for Flaky<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                self.hiccup = !self.hiccup;
+                if self.hiccup {
+                    return Err(io::Error::new(io::ErrorKind::WouldBlock, "timeout"));
+                }
+                if self.pos >= self.data.len() {
+                    return Ok(0);
+                }
+                let n = buf.len().min(3).min(self.data.len() - self.pos);
+                buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+                self.pos += n;
+                Ok(n)
+            }
+        }
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Stats, &[]).unwrap();
+        write_frame(&mut wire, FrameKind::Pong, &[]).unwrap();
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_LEN);
+        let mut r = Flaky { data: &wire, pos: 0, hiccup: false };
+        let mut kinds = Vec::new();
+        loop {
+            match fr.read_frame(&mut r) {
+                Ok(Some(f)) => kinds.push(f.kind),
+                Ok(None) => break,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => continue,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert_eq!(kinds, vec![FrameKind::Stats as u8, FrameKind::Pong as u8]);
+    }
+
+    #[test]
+    fn reader_rejects_framing_violations() {
+        // Bad magic.
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_LEN);
+        let garbage = [0u8; 16];
+        let e = fr.read_frame(&mut io::Cursor::new(&garbage[..])).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+        // Bad version.
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Ping, &[]).unwrap();
+        wire[2] = 99;
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_LEN);
+        assert!(fr.read_frame(&mut io::Cursor::new(&wire[..])).is_err());
+        // Oversized payload claim.
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Ping, &[]).unwrap();
+        wire[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut fr = FrameReader::new(1024);
+        assert!(fr.read_frame(&mut io::Cursor::new(&wire[..])).is_err());
+        // EOF mid-frame (truncated).
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Error, &[0; 32]).unwrap();
+        wire.truncate(20);
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_LEN);
+        let e = fr.read_frame(&mut io::Cursor::new(&wire[..])).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn error_frame_roundtrip() {
+        let ef = ErrorFrame::new(NO_ID, ErrorCode::Overload, "429 busy");
+        let back = ErrorFrame::decode(&ef.encode()).unwrap();
+        assert_eq!(back.id, NO_ID);
+        assert_eq!(back.code, ErrorCode::Overload);
+        assert_eq!(back.message, "429 busy");
+        assert!(ErrorFrame::decode(&ef.encode()[..5]).is_err());
+        // Unknown code byte.
+        let mut p = ef.encode();
+        p[8] = 200;
+        assert!(ErrorFrame::decode(&p).is_err());
+    }
+
+    #[test]
+    fn stats_reply_roundtrip() {
+        let j = Json::obj(vec![("completed", 12usize.into()), ("p50_us", 340.5.into())]);
+        let back = decode_stats_reply(&encode_stats_reply(&j)).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn request_decode_rejects_trailing_garbage() {
+        let req = InferRequest { id: 1, deadline_ms: 0, label: None, train: train() };
+        let mut p = req.encode();
+        p.push(0);
+        assert!(InferRequest::decode(&p).is_err());
+    }
+
+    #[test]
+    fn kind_and_code_tables_roundtrip() {
+        for k in 1u8..=8 {
+            assert_eq!(FrameKind::from_u8(k).unwrap() as u8, k);
+        }
+        assert!(FrameKind::from_u8(0).is_none());
+        assert!(FrameKind::from_u8(9).is_none());
+        for c in 1u8..=7 {
+            let code = ErrorCode::from_u8(c).unwrap();
+            assert_eq!(code as u8, c);
+            assert!(!code.name().is_empty());
+        }
+        assert!(ErrorCode::from_u8(0).is_none());
+    }
+}

@@ -1,0 +1,670 @@
+//! The TCP inference server.
+//!
+//! Thread topology (std-only; no async runtime in the vendor set — and the
+//! backend is a CPU-bound simulator, so blocking threads around one shared
+//! queue is the right shape anyway):
+//!
+//! ```text
+//!                    ┌────────────┐   accept    ┌─────────────────────┐
+//!  clients ─────────►│ accept loop│────────────►│ per-conn reader ×N  │
+//!                    └────────────┘             │  decode → admit →   │
+//!                                               │  SubmitHandle.submit│
+//!                                               └──────────┬──────────┘
+//!                                                          ▼
+//!                                        [coordinator shared queue]
+//!                                         W workers × L lanes, fill-wait
+//!                                         micro-batching ACROSS sockets
+//!                                                          │
+//!                    ┌────────────┐   results channel      ▼
+//!  clients ◄─────────│ writer ×N  │◄──────────── [router thread owns the
+//!                    └────────────┘   id-keyed     Coordinator, recv_timeout
+//!                                     pending map  loop, drain on shutdown]
+//! ```
+//!
+//! Because every connection's reader submits into the *same* coordinator
+//! queue, [`Coordinator::with_lanes_wait`]'s fill-wait workers micro-batch
+//! requests from many sockets into one lane-packed dispatch — the
+//! host-side event-delivery path scales with connections without cloning
+//! model images.
+//!
+//! **Admission control:** a server-wide in-flight cap; a request over the
+//! cap is answered immediately with `ERROR Overload` (explicit reject, not
+//! silent queueing — the client decides whether to retry). Per-request
+//! deadlines: a result that completes after its deadline is replaced by
+//! `ERROR DeadlineExceeded`.
+//!
+//! **Graceful shutdown** ([`Server::shutdown`]): stop accepting, join the
+//! readers (no new submissions), then the router drains everything still
+//! in flight through [`Coordinator::drain`] — recovering completed
+//! responses via the salvage path if a request in the final batch failed —
+//! routes them to their connections, and only then joins the workers.
+
+use std::collections::HashMap;
+use std::io::{BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::accel::Menage;
+use crate::coordinator::{request_id_of_error, Coordinator, Response};
+use crate::util::json::Json;
+
+use super::metrics::ServeMetrics;
+use super::protocol::{
+    encode_frame, encode_stats_reply, ErrorCode, ErrorFrame, FrameKind, FrameReader,
+    InferRequest, InferResponse, DEFAULT_MAX_FRAME_LEN, NO_ID,
+};
+
+/// Serving knobs. `Default` is sized for tests and small deployments;
+/// `menage serve` exposes each as a flag.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Coordinator workers (chip clones).
+    pub workers: usize,
+    /// Lanes per worker — the micro-batch width per dispatch.
+    pub lanes_per_worker: usize,
+    /// How long a worker that drained a shallow queue keeps collecting
+    /// late arrivals before dispatching (adaptive lane packing). This is
+    /// the knob that lets requests from *different* sockets share a lane
+    /// batch under trickle traffic.
+    pub fill_wait: Duration,
+    /// Admission cap: requests admitted but not yet answered. Beyond it,
+    /// `ERROR Overload`.
+    pub max_in_flight: usize,
+    /// Frame payload cap (protects allocations from hostile frames).
+    pub max_frame_len: u32,
+    /// Read-timeout/stop-flag poll granularity for reader and router
+    /// threads; bounds shutdown latency, not throughput.
+    pub poll_interval: Duration,
+    /// Socket write timeout. A client that stops reading (full TCP
+    /// window) stalls its writer thread at most this long per frame
+    /// before the connection is dropped — so a dead-reader client can
+    /// never hang [`Server::shutdown`]'s writer join.
+    pub write_timeout: Duration,
+    /// Honor the SHUTDOWN frame (used by `loadgen --shutdown-server` and
+    /// the `make smoke-serve` flow; off unless explicitly enabled).
+    pub allow_remote_shutdown: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            lanes_per_worker: 4,
+            fill_wait: Duration::from_micros(500),
+            max_in_flight: 256,
+            max_frame_len: DEFAULT_MAX_FRAME_LEN,
+            poll_interval: Duration::from_millis(25),
+            write_timeout: Duration::from_secs(10),
+            allow_remote_shutdown: false,
+        }
+    }
+}
+
+/// Cap on encoded frames queued per connection awaiting the socket write.
+/// Bounds server memory against a client that pipelines requests but
+/// never reads responses: once full, further frames for that connection
+/// are dropped (counted in `dropped_responses`) rather than buffered
+/// without limit — the client wasn't reading them anyway.
+const WRITER_QUEUE_CAP: usize = 256;
+
+/// What the server tells clients about the loaded model (STATS `model`
+/// block) — enough for a load generator to synthesize valid inputs.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelInfo {
+    pub input_dim: usize,
+    pub timesteps: usize,
+    pub classes: usize,
+}
+
+impl ModelInfo {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("input_dim", self.input_dim.into()),
+            ("timesteps", self.timesteps.into()),
+            ("classes", self.classes.into()),
+        ])
+    }
+}
+
+/// Book-keeping for an admitted request awaiting its response.
+struct Pending {
+    /// The owning connection's (bounded) writer channel.
+    tx: SyncSender<Vec<u8>>,
+    /// The client's correlation id (coordinator ids are server-internal).
+    client_id: u64,
+    deadline: Option<Instant>,
+    deadline_ms: u32,
+    accepted: Instant,
+}
+
+/// State shared by the accept loop, connection readers, and the router.
+struct Shared {
+    cfg: ServeConfig,
+    metrics: Arc<ServeMetrics>,
+    handle: crate::coordinator::SubmitHandle,
+    /// Coordinator id → response destination.
+    pending: Mutex<HashMap<u64, Pending>>,
+    /// Admitted-but-unanswered request count (the admission gauge; distinct
+    /// from the coordinator's in-flight, which drops as soon as the router
+    /// consumes a result).
+    net_in_flight: AtomicUsize,
+    stop_accept: AtomicBool,
+    stop_readers: AtomicBool,
+    router_stop: AtomicBool,
+    remote_shutdown: AtomicBool,
+    /// Set when the router detects all workers died (see
+    /// [`quiesce_after_worker_death`]): the server no longer serves and
+    /// the embedding loop should shut it down.
+    quiesced: AtomicBool,
+    model: ModelInfo,
+    started: Instant,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+    writers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Shared {
+    fn stats_json(&self) -> Json {
+        let mut j = self.metrics.to_json(
+            self.started,
+            self.handle.queue_depth(),
+            self.net_in_flight.load(Ordering::Relaxed),
+        );
+        if let Json::Obj(map) = &mut j {
+            map.insert("model".to_string(), self.model.to_json());
+        }
+        j
+    }
+}
+
+/// A running TCP inference server (see module docs). Bind with
+/// [`Server::start`], stop with [`Server::shutdown`].
+pub struct Server {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    router: Option<JoinHandle<Vec<Menage>>>,
+}
+
+impl Server {
+    /// Bind `addr` (port 0 picks an ephemeral port — read it back via
+    /// [`Self::local_addr`]) and start serving `chip` with `cfg`.
+    pub fn start(chip: &Menage, addr: impl ToSocketAddrs, cfg: ServeConfig) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("binding server socket")?;
+        let local_addr = listener.local_addr()?;
+        // Non-blocking accept so the loop can poll the stop flag.
+        listener.set_nonblocking(true)?;
+
+        let coord =
+            Coordinator::with_lanes_wait(chip, cfg.workers, cfg.lanes_per_worker, cfg.fill_wait);
+        let model = ModelInfo {
+            input_dim: chip.cores[0].in_dim(),
+            timesteps: chip.timesteps,
+            classes: chip.cores.last().expect("chip has cores").out_dim(),
+        };
+        let shared = Arc::new(Shared {
+            handle: coord.handle(),
+            cfg,
+            metrics: Arc::new(ServeMetrics::default()),
+            pending: Mutex::new(HashMap::new()),
+            net_in_flight: AtomicUsize::new(0),
+            stop_accept: AtomicBool::new(false),
+            stop_readers: AtomicBool::new(false),
+            router_stop: AtomicBool::new(false),
+            remote_shutdown: AtomicBool::new(false),
+            quiesced: AtomicBool::new(false),
+            model,
+            started: Instant::now(),
+            readers: Mutex::new(Vec::new()),
+            writers: Mutex::new(Vec::new()),
+        });
+
+        let router = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || router_loop(coord, &shared))
+        };
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(listener, &shared))
+        };
+        Ok(Self { local_addr, shared, accept: Some(accept), router: Some(router) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.shared.metrics)
+    }
+
+    /// Current metrics snapshot (same JSON a STATS frame returns).
+    pub fn stats_json(&self) -> Json {
+        self.shared.stats_json()
+    }
+
+    /// Requests admitted but not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.shared.net_in_flight.load(Ordering::Relaxed)
+    }
+
+    /// True once a client sent SHUTDOWN (only with
+    /// [`ServeConfig::allow_remote_shutdown`]); the embedding loop — e.g.
+    /// `menage serve` — polls this and calls [`Self::shutdown`].
+    pub fn remote_shutdown_requested(&self) -> bool {
+        self.shared.remote_shutdown.load(Ordering::Relaxed)
+    }
+
+    /// True if the server stopped serving because all simulator workers
+    /// died (see [`quiesce_after_worker_death`]). The embedding loop
+    /// should call [`Self::shutdown`] — which will propagate the worker
+    /// panic loudly rather than keep a dead service up.
+    pub fn quiesced(&self) -> bool {
+        self.shared.quiesced.load(Ordering::Relaxed)
+    }
+
+    /// Graceful shutdown: stop accepting, stop readers (joined — no new
+    /// submissions can race the drain), drain every admitted request
+    /// through the coordinator and route the responses, then join workers
+    /// and writers. Returns the worker chips with their accumulated stats
+    /// (lane-served work folded in), as [`Coordinator::shutdown`] does.
+    pub fn shutdown(mut self) -> Vec<Menage> {
+        self.shutdown_inner().expect("server threads panicked")
+    }
+
+    fn shutdown_inner(&mut self) -> Option<Vec<Menage>> {
+        self.shared.stop_accept.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            h.join().ok()?;
+        }
+        self.shared.stop_readers.store(true, Ordering::Relaxed);
+        for h in std::mem::take(&mut *self.shared.readers.lock().unwrap()) {
+            h.join().ok()?;
+        }
+        // Readers are gone: the router can drain without racing ingress.
+        self.shared.router_stop.store(true, Ordering::Relaxed);
+        let chips = self.router.take()?.join().ok()?;
+        // The router cleared the pending map, so every writer's channel is
+        // closed and each writer exits after flushing.
+        for h in std::mem::take(&mut *self.shared.writers.lock().unwrap()) {
+            h.join().ok()?;
+        }
+        Some(chips)
+    }
+}
+
+impl Drop for Server {
+    /// Best-effort: a dropped (not shut-down) server must not leave
+    /// threads spinning. Flags are raised but threads are detached; prefer
+    /// [`Self::shutdown`].
+    fn drop(&mut self) {
+        self.shared.stop_accept.store(true, Ordering::Relaxed);
+        self.shared.stop_readers.store(true, Ordering::Relaxed);
+        self.shared.router_stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    while !shared.stop_accept.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if let Err(e) = spawn_connection(shared, stream) {
+                    eprintln!("serve: failed to set up connection: {e:#}");
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                eprintln!("serve: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn spawn_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(shared.cfg.poll_interval))?;
+    let write_half = stream.try_clone().context("cloning stream for writer")?;
+    // Bounded (WRITER_QUEUE_CAP) so a non-reading client can't buffer
+    // unlimited frames; the write timeout bounds how long the writer can
+    // stall on the socket itself.
+    write_half.set_write_timeout(Some(shared.cfg.write_timeout))?;
+    let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(WRITER_QUEUE_CAP);
+
+    ServeMetrics::bump(&shared.metrics.connections_opened);
+    ServeMetrics::bump(&shared.metrics.connections_active);
+
+    let writer = std::thread::spawn(move || {
+        let mut w = BufWriter::new(write_half);
+        while let Ok(frame) = rx.recv() {
+            // Any write failure — including a write timeout on a stalled
+            // client — abandons the connection: after a partial frame the
+            // stream can't be resynchronized anyway. Later sends into the
+            // channel are counted as dropped_responses by the senders.
+            if w.write_all(&frame).and_then(|()| w.flush()).is_err() {
+                break;
+            }
+        }
+        if let Ok(s) = w.into_inner() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    });
+
+    let reader = {
+        let shared = Arc::clone(shared);
+        std::thread::spawn(move || {
+            reader_loop(&shared, stream, &tx);
+            let m = &shared.metrics;
+            m.connections_active.fetch_sub(1, Ordering::Relaxed);
+        })
+    };
+
+    // Reap handles of connections that already finished while storing the
+    // new ones, so a long-lived server's bookkeeping stays proportional to
+    // *live* connections, not to every connection ever accepted. (Dropping
+    // a finished handle is a no-op join-wise; unfinished ones are kept for
+    // the shutdown joins.)
+    let mut readers = shared.readers.lock().unwrap();
+    readers.retain(|h| !h.is_finished());
+    readers.push(reader);
+    drop(readers);
+    let mut writers = shared.writers.lock().unwrap();
+    writers.retain(|h| !h.is_finished());
+    writers.push(writer);
+    Ok(())
+}
+
+/// Queue a frame on a connection's bounded writer channel. Non-blocking:
+/// if the client's queue is full (it isn't reading) or its writer is gone,
+/// the frame is dropped and counted — the router must never block on one
+/// connection's egress.
+fn queue_frame(m: &ServeMetrics, tx: &SyncSender<Vec<u8>>, frame: Vec<u8>) {
+    match tx.try_send(frame) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+            ServeMetrics::bump(&m.dropped_responses);
+        }
+    }
+}
+
+/// Send an ERROR frame (best-effort — the writer may already be gone).
+fn send_error(
+    m: &ServeMetrics,
+    tx: &SyncSender<Vec<u8>>,
+    id: u64,
+    code: ErrorCode,
+    msg: impl Into<String>,
+) {
+    let ef = ErrorFrame::new(id, code, msg);
+    queue_frame(m, tx, encode_frame(FrameKind::Error, &ef.encode()));
+}
+
+fn reader_loop(shared: &Arc<Shared>, mut stream: TcpStream, tx: &SyncSender<Vec<u8>>) {
+    let m = &shared.metrics;
+    let mut fr = FrameReader::new(shared.cfg.max_frame_len);
+    loop {
+        if shared.stop_readers.load(Ordering::Relaxed) {
+            return;
+        }
+        let frame = match fr.read_frame(&mut stream) {
+            Ok(Some(f)) => f,
+            Ok(None) => return, // client closed cleanly
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => {
+                // Framing violation or truncated stream: the connection can
+                // no longer be trusted to be frame-aligned — answer and
+                // close it. The server itself keeps serving.
+                ServeMetrics::bump(&m.protocol_errors);
+                send_error(m, tx, NO_ID, ErrorCode::Malformed, e.to_string());
+                return;
+            }
+        };
+        match FrameKind::from_u8(frame.kind) {
+            Some(FrameKind::InferRequest) => handle_request(shared, tx, &frame.payload),
+            Some(FrameKind::Ping) => {
+                queue_frame(m, tx, encode_frame(FrameKind::Pong, &[]));
+            }
+            Some(FrameKind::Stats) => {
+                let payload = encode_stats_reply(&shared.stats_json());
+                queue_frame(m, tx, encode_frame(FrameKind::StatsReply, &payload));
+            }
+            Some(FrameKind::Shutdown) => {
+                if shared.cfg.allow_remote_shutdown {
+                    shared.remote_shutdown.store(true, Ordering::Relaxed);
+                    queue_frame(m, tx, encode_frame(FrameKind::Pong, &[]));
+                } else {
+                    send_error(
+                        m,
+                        tx,
+                        NO_ID,
+                        ErrorCode::Unsupported,
+                        "remote shutdown is disabled on this server",
+                    );
+                }
+            }
+            // Well-framed but not something a client may send: answer and
+            // keep the connection (frame alignment is intact).
+            Some(other) => {
+                send_error(
+                    m,
+                    tx,
+                    NO_ID,
+                    ErrorCode::Unsupported,
+                    format!("unexpected frame kind {other:?} from client"),
+                );
+            }
+            None => {
+                send_error(
+                    m,
+                    tx,
+                    NO_ID,
+                    ErrorCode::Unsupported,
+                    format!("unknown frame kind {}", frame.kind),
+                );
+            }
+        }
+    }
+}
+
+fn handle_request(shared: &Arc<Shared>, tx: &SyncSender<Vec<u8>>, payload: &[u8]) {
+    let m = &shared.metrics;
+    let req = match InferRequest::decode(payload) {
+        Ok(r) => r,
+        Err(e) => {
+            // The frame was well-delimited, so the stream stays usable;
+            // only this request is rejected.
+            ServeMetrics::bump(&m.rejected_bad_request);
+            send_error(m, tx, NO_ID, ErrorCode::BadRequest, format!("{e:#}"));
+            return;
+        }
+    };
+    if req.train.num_neurons != shared.model.input_dim {
+        ServeMetrics::bump(&m.rejected_bad_request);
+        send_error(
+            m,
+            tx,
+            req.id,
+            ErrorCode::BadRequest,
+            format!(
+                "input has {} neurons, model expects {}",
+                req.train.num_neurons, shared.model.input_dim
+            ),
+        );
+        return;
+    }
+    // Admission control: bounded in-flight with an explicit reject.
+    let cur = shared.net_in_flight.fetch_add(1, Ordering::Relaxed);
+    if cur >= shared.cfg.max_in_flight {
+        shared.net_in_flight.fetch_sub(1, Ordering::Relaxed);
+        ServeMetrics::bump(&m.rejected_overload);
+        send_error(
+            m,
+            tx,
+            req.id,
+            ErrorCode::Overload,
+            format!("{cur} requests in flight (cap {})", shared.cfg.max_in_flight),
+        );
+        return;
+    }
+    ServeMetrics::bump(&m.accepted);
+    m.events_in.fetch_add(req.train.total_spikes() as u64, Ordering::Relaxed);
+    let now = Instant::now();
+    let deadline = (req.deadline_ms > 0).then(|| now + Duration::from_millis(req.deadline_ms as u64));
+    // Register the pending entry BEFORE the request becomes runnable, so
+    // the router can never receive a response for an unregistered id.
+    let cid = shared.handle.reserve_id();
+    shared.pending.lock().unwrap().insert(
+        cid,
+        Pending {
+            tx: tx.clone(),
+            client_id: req.id,
+            deadline,
+            deadline_ms: req.deadline_ms,
+            accepted: now,
+        },
+    );
+    shared.handle.submit_reserved(cid, req.train, req.label.map(|l| l as usize));
+}
+
+/// The response router: owns the coordinator, consumes its results
+/// channel, and forwards each response to the connection that submitted
+/// the request. On shutdown it drains everything still in flight (salvage
+/// path included) before handing the worker chips back.
+fn router_loop(mut coord: Coordinator, shared: &Arc<Shared>) -> Vec<Menage> {
+    while !shared.router_stop.load(Ordering::Relaxed) {
+        match coord.recv_timeout(shared.cfg.poll_interval) {
+            None => continue,
+            Some(Ok(resp)) => route_response(shared, resp),
+            Some(Err(e)) => {
+                if !route_worker_error(shared, &e) {
+                    // Terminal: the results channel is dead (all workers
+                    // gone), so nothing pending can ever be answered.
+                    // Quiesce loudly instead of wedging: stop ingesting,
+                    // fail every pending request, and fall through to the
+                    // shutdown path.
+                    quiesce_after_worker_death(shared, &e);
+                    break;
+                }
+            }
+        }
+    }
+    // Shutdown drain: readers are already joined, so no submission can
+    // race this. `drain` consumes every in-flight response; if one of the
+    // final batch failed, the completed ones are recovered via the salvage
+    // path rather than lost.
+    match coord.drain() {
+        Ok(responses) => {
+            for r in responses {
+                route_response(shared, r);
+            }
+        }
+        Err(e) => {
+            for r in coord.take_salvaged_responses() {
+                route_response(shared, r);
+            }
+            if !route_worker_error(shared, &e) {
+                quiesce_after_worker_death(shared, &e);
+            }
+        }
+    }
+    // Drop any leftover pending entries (e.g. additional failed requests
+    // whose errors `drain` folded into one): closes their writer channels
+    // so connection writers can exit; those clients see EOF.
+    shared.pending.lock().unwrap().clear();
+    coord.shutdown()
+}
+
+fn route_response(shared: &Arc<Shared>, resp: Response) {
+    let m = &shared.metrics;
+    let Some(p) = shared.pending.lock().unwrap().remove(&resp.id) else {
+        ServeMetrics::bump(&m.dropped_responses);
+        return;
+    };
+    shared.net_in_flight.fetch_sub(1, Ordering::Relaxed);
+    let latency = p.accepted.elapsed();
+    let micros = latency.as_micros() as u64;
+    m.latency.record_micros(micros);
+    ServeMetrics::bump(&m.completed);
+    m.total_cycles.fetch_add(resp.cycles, Ordering::Relaxed);
+
+    let frame = if p.deadline.is_some_and(|d| Instant::now() > d) {
+        ServeMetrics::bump(&m.deadline_expired);
+        let ef = ErrorFrame::new(
+            p.client_id,
+            ErrorCode::DeadlineExceeded,
+            format!(
+                "completed in {:.1}ms, after the {}ms deadline",
+                latency.as_secs_f64() * 1e3,
+                p.deadline_ms
+            ),
+        );
+        encode_frame(FrameKind::Error, &ef.encode())
+    } else {
+        let reply = InferResponse {
+            id: p.client_id,
+            predicted: resp.predicted as u32,
+            cycles: resp.cycles,
+            server_micros: micros,
+            output: resp.output,
+        };
+        encode_frame(FrameKind::InferResponse, &reply.encode())
+    };
+    queue_frame(m, &p.tx, frame);
+}
+
+/// Route one worker error to its connection. Returns `false` for the one
+/// error that cannot be attributed to a request — the terminal
+/// "all workers terminated" — which the router must treat as fatal.
+fn route_worker_error(shared: &Arc<Shared>, e: &anyhow::Error) -> bool {
+    let m = &shared.metrics;
+    ServeMetrics::bump(&m.worker_errors);
+    // Worker errors carry a `request <id>:` prefix; attribute when we can.
+    let Some(cid) = request_id_of_error(e) else {
+        return false;
+    };
+    if let Some(p) = shared.pending.lock().unwrap().remove(&cid) {
+        shared.net_in_flight.fetch_sub(1, Ordering::Relaxed);
+        send_error(m, &p.tx, p.client_id, ErrorCode::Internal, format!("{e:#}"));
+    }
+    true
+}
+
+/// All simulator workers are gone (e.g. a panic in the engine): no pending
+/// request can ever complete. Stop accepting and reading, answer every
+/// pending request with an Internal error, and let the server wind down —
+/// a loud, observable failure instead of a silently wedged service that
+/// keeps admitting work into a queue nobody consumes.
+fn quiesce_after_worker_death(shared: &Arc<Shared>, e: &anyhow::Error) {
+    eprintln!("serve: fatal: {e:#}; quiescing");
+    shared.stop_accept.store(true, Ordering::Relaxed);
+    shared.stop_readers.store(true, Ordering::Relaxed);
+    shared.quiesced.store(true, Ordering::Relaxed);
+    let m = &shared.metrics;
+    let pending: Vec<Pending> =
+        shared.pending.lock().unwrap().drain().map(|(_, p)| p).collect();
+    for p in pending {
+        shared.net_in_flight.fetch_sub(1, Ordering::Relaxed);
+        send_error(
+            m,
+            &p.tx,
+            p.client_id,
+            ErrorCode::Internal,
+            format!("server lost its workers: {e:#}"),
+        );
+    }
+}

@@ -327,6 +327,14 @@ impl QuantNetwork {
     }
 }
 
+/// Wire-decode cap on a train's neuron count — no real model here comes
+/// close, and it stops a hostile/corrupt frame from driving huge
+/// allocations before validation can reject it.
+pub const WIRE_MAX_NEURONS: usize = 1 << 24;
+
+/// Wire-decode cap on a train's timestep count (same rationale).
+pub const WIRE_MAX_TIMESTEPS: usize = 1 << 20;
+
 /// Spike activity of one layer over time: `spikes[t]` is the sorted list of
 /// neuron indices that fired at step `t`. Index lists (not bitmaps) because
 /// event-based activity is sparse — this mirrors what travels between
@@ -422,6 +430,85 @@ impl SpikeTrain {
             }
         }
         best
+    }
+
+    /// Append the wire encoding of this train to `out` (little-endian):
+    ///
+    /// ```text
+    /// u32 num_neurons | u32 timesteps | timesteps × (u32 count, count × u32 index)
+    /// ```
+    ///
+    /// This is the payload format the TCP serving layer's INFER frames
+    /// carry (see `serve::protocol`); [`Self::read_wire`] is the inverse.
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.num_neurons as u32).to_le_bytes());
+        out.extend_from_slice(&(self.spikes.len() as u32).to_le_bytes());
+        for step in &self.spikes {
+            out.extend_from_slice(&(step.len() as u32).to_le_bytes());
+            for &n in step {
+                out.extend_from_slice(&n.to_le_bytes());
+            }
+        }
+    }
+
+    /// Wire-encoded size in bytes (what [`Self::write_wire`] appends).
+    pub fn wire_len(&self) -> usize {
+        8 + self.spikes.iter().map(|s| 4 + 4 * s.len()).sum::<usize>()
+    }
+
+    /// Decode a train from the front of `buf` (inverse of
+    /// [`Self::write_wire`]), returning it plus the bytes consumed.
+    ///
+    /// Fully validating — a decoded train is safe to hand straight to the
+    /// simulator: dimensions are bounded ([`WIRE_MAX_NEURONS`] /
+    /// [`WIRE_MAX_TIMESTEPS`]), every step's count fits the remaining
+    /// buffer, and indices are strictly ascending and in range (the
+    /// [`Self::validate`] invariant, enforced during the single decode
+    /// pass). Truncated or malformed input is an error, never a panic.
+    pub fn read_wire(buf: &[u8]) -> Result<(Self, usize)> {
+        let mut pos = 0usize;
+        let mut take_u32 = |what: &str| -> Result<u32> {
+            let Some(bytes) = buf.get(pos..pos + 4) else {
+                bail!("spike train truncated at {what} (offset {pos})");
+            };
+            pos += 4;
+            Ok(u32::from_le_bytes(bytes.try_into().unwrap()))
+        };
+        let num_neurons = take_u32("num_neurons")? as usize;
+        if num_neurons > WIRE_MAX_NEURONS {
+            bail!("num_neurons {num_neurons} exceeds wire cap {WIRE_MAX_NEURONS}");
+        }
+        let timesteps = take_u32("timesteps")? as usize;
+        if timesteps > WIRE_MAX_TIMESTEPS {
+            bail!("timesteps {timesteps} exceeds wire cap {WIRE_MAX_TIMESTEPS}");
+        }
+        // Each claimed step needs at least its 4-byte count field: reject
+        // an absurd header before allocating `timesteps` step vectors.
+        if buf.len().saturating_sub(8) / 4 < timesteps {
+            bail!("spike train truncated: {timesteps} steps claimed, {} bytes", buf.len());
+        }
+        let mut st = SpikeTrain::new(num_neurons, timesteps);
+        for t in 0..timesteps {
+            let count = take_u32("step count")? as usize;
+            if count > num_neurons {
+                bail!("step {t}: {count} spikes for {num_neurons} neurons");
+            }
+            let step = &mut st.spikes[t];
+            step.reserve_exact(count);
+            let mut prev: Option<u32> = None;
+            for _ in 0..count {
+                let n = take_u32("spike index")?;
+                if n as usize >= num_neurons {
+                    bail!("step {t}: index {n} out of range {num_neurons}");
+                }
+                if prev.is_some_and(|p| p >= n) {
+                    bail!("step {t}: spike indices not strictly sorted");
+                }
+                prev = Some(n);
+                step.push(n);
+            }
+        }
+        Ok((st, pos))
     }
 
     /// Validate indices are in range, sorted, and unique per step.
@@ -631,6 +718,72 @@ mod tests {
         assert!(st.validate().is_err()); // out of range
         st.spikes[0] = vec![0, 2];
         assert!(st.validate().is_ok());
+    }
+
+    #[test]
+    fn wire_roundtrips() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        for (n, t, rate) in [(1usize, 1usize, 1.0), (30, 6, 0.3), (100, 12, 0.0), (7, 0, 0.5)] {
+            let st = SpikeTrain::bernoulli(n, t, rate, &mut rng);
+            let mut buf = vec![0xAAu8; 3]; // nonzero prefix: encoding appends
+            st.write_wire(&mut buf);
+            assert_eq!(buf.len() - 3, st.wire_len());
+            let (back, consumed) = SpikeTrain::read_wire(&buf[3..]).unwrap();
+            assert_eq!(consumed, st.wire_len());
+            assert_eq!(back, st);
+        }
+    }
+
+    #[test]
+    fn wire_decode_consumes_prefix_only() {
+        let mut rng = crate::util::rng::Rng::new(10);
+        let st = SpikeTrain::bernoulli(20, 4, 0.4, &mut rng);
+        let mut buf = Vec::new();
+        st.write_wire(&mut buf);
+        buf.extend_from_slice(&[1, 2, 3, 4, 5]); // trailing bytes untouched
+        let (back, consumed) = SpikeTrain::read_wire(&buf).unwrap();
+        assert_eq!(back, st);
+        assert_eq!(consumed, buf.len() - 5);
+    }
+
+    #[test]
+    fn wire_rejects_malformed() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let st = SpikeTrain::bernoulli(16, 3, 0.5, &mut rng);
+        let mut good = Vec::new();
+        st.write_wire(&mut good);
+        // Truncations at every length must error, never panic.
+        for cut in 0..good.len() {
+            assert!(SpikeTrain::read_wire(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // Out-of-range index.
+        let mut bad = Vec::new();
+        let mut big = SpikeTrain::new(4, 1);
+        big.spikes[0] = vec![1, 9];
+        big.write_wire(&mut bad);
+        assert!(SpikeTrain::read_wire(&bad).is_err());
+        // Unsorted / duplicate indices.
+        let mut dup = SpikeTrain::new(8, 1);
+        dup.spikes[0] = vec![3, 3];
+        let mut bad = Vec::new();
+        dup.write_wire(&mut bad);
+        assert!(SpikeTrain::read_wire(&bad).is_err());
+        // count > num_neurons.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&2u32.to_le_bytes()); // 2 neurons
+        bad.extend_from_slice(&1u32.to_le_bytes()); // 1 step
+        bad.extend_from_slice(&3u32.to_le_bytes()); // 3 spikes claimed
+        bad.extend_from_slice(&[0; 12]);
+        assert!(SpikeTrain::read_wire(&bad).is_err());
+        // Absurd dimension headers rejected before allocation.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&u32::MAX.to_le_bytes());
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        assert!(SpikeTrain::read_wire(&bad).is_err());
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&4u32.to_le_bytes());
+        bad.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(SpikeTrain::read_wire(&bad).is_err());
     }
 
     #[test]

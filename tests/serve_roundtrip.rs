@@ -1,0 +1,407 @@
+//! Loopback integration suite for the TCP serving subsystem.
+//!
+//! The acceptance bar: a ≥256-request run over ≥8 concurrent connections
+//! with zero dropped/mismatched responses, server-side outputs
+//! **bit-identical** to in-process [`Menage::run`] for the same inputs
+//! (predicted class, modeled cycles, and the full output spike train).
+//! Plus the failure envelope: malformed/truncated frames must not kill
+//! the server, overload must reject explicitly under a tiny in-flight
+//! cap, deadlines must expire, and graceful shutdown must drain in-flight
+//! work rather than drop it.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::mapping::Strategy;
+use menage::serve::protocol::{write_frame, ErrorCode, FrameKind};
+use menage::serve::{Client, Reply, ServeConfig, Server};
+use menage::snn::SpikeTrain;
+use menage::util::rng::Rng;
+
+fn test_chip() -> Menage {
+    let mcfg = ModelConfig {
+        name: "serve-test".into(),
+        layer_sizes: vec![30, 16, 8],
+        timesteps: 6,
+        beta: 0.9,
+        v_threshold: 1.0,
+        v_reset: 0.0,
+    };
+    let mut cfg = AcceleratorConfig::accel1();
+    cfg.num_cores = 2;
+    cfg.a_neurons_per_core = 4;
+    cfg.a_syns_per_core = 4;
+    cfg.virtual_per_a_neuron = 4;
+    let mut rng = Rng::new(8);
+    let net = menage::snn::QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 2).unwrap()
+}
+
+/// Deterministic per-(connection, request) input with heterogeneous train
+/// lengths (T cycles through 1..=6 while the model was trained at T=6 —
+/// the serving path must handle both shorter and full-length trains).
+fn train_for(conn: usize, i: usize) -> SpikeTrain {
+    let mut rng = Rng::new(9_000 + conn as u64 * 101 + i as u64);
+    let t = 1 + (conn + i) % 6;
+    SpikeTrain::bernoulli(30, t, 0.25, &mut rng)
+}
+
+fn start_server(cfg: ServeConfig) -> Server {
+    let chip = test_chip();
+    Server::start(&chip, "127.0.0.1:0", cfg).unwrap()
+}
+
+/// The acceptance-criteria run: 256 requests over 8 concurrent
+/// connections (pipelined, heterogeneous lengths), every response
+/// bit-identical to an in-process `Menage::run` of the same input.
+#[test]
+fn concurrent_roundtrip_bit_identical_to_in_process() {
+    const CONNS: usize = 8;
+    const PER_CONN: usize = 32; // 256 total
+    const PIPELINE: usize = 4;
+
+    // In-process golden results, computed on a private chip.
+    let mut local = test_chip();
+    let mut golden: Vec<Vec<(usize, u64, SpikeTrain)>> = Vec::new();
+    for c in 0..CONNS {
+        let mut per = Vec::new();
+        for i in 0..PER_CONN {
+            let out = local.run(&train_for(c, i)).unwrap();
+            per.push((out.predicted_class(), out.cycles, out.output().clone()));
+        }
+        golden.push(per);
+    }
+
+    let server = start_server(ServeConfig {
+        workers: 2,
+        lanes_per_worker: 4,
+        fill_wait: Duration::from_micros(500),
+        ..ServeConfig::default()
+    });
+    let addr = server.local_addr();
+
+    let threads: Vec<_> = golden
+        .into_iter()
+        .enumerate()
+        .map(|(c, expected)| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut outstanding: Vec<u64> = Vec::new();
+                let mut sent = 0usize;
+                let mut got = 0usize;
+                while got < PER_CONN {
+                    while sent < PER_CONN && outstanding.len() < PIPELINE {
+                        let id = client.send_infer(&train_for(c, sent), 0, None).unwrap();
+                        assert_eq!(id as usize, sent, "client ids are sequential");
+                        outstanding.push(id);
+                        sent += 1;
+                    }
+                    match client.recv_reply().unwrap() {
+                        Reply::Infer(r) => {
+                            let i = r.id as usize;
+                            assert!(
+                                outstanding.contains(&r.id),
+                                "conn {c}: unexpected/duplicate response id {i}"
+                            );
+                            outstanding.retain(|&x| x != r.id);
+                            let (pred, cycles, ref output) = expected[i];
+                            assert_eq!(r.predicted as usize, pred, "conn {c} req {i}: class");
+                            assert_eq!(r.cycles, cycles, "conn {c} req {i}: cycles");
+                            assert_eq!(&r.output, output, "conn {c} req {i}: output train");
+                            got += 1;
+                        }
+                        other => panic!("conn {c}: unexpected reply {other:?}"),
+                    }
+                }
+                assert!(outstanding.is_empty(), "conn {c}: dropped responses");
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("connection thread failed");
+    }
+
+    let metrics = server.metrics();
+    let chips = server.shutdown();
+    use std::sync::atomic::Ordering;
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), (CONNS * PER_CONN) as u64);
+    assert_eq!(metrics.rejected_overload.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.dropped_responses.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.protocol_errors.load(Ordering::Relaxed), 0);
+    // Every served input is visible on the returned worker chips.
+    let total: u64 = chips.iter().map(|ch| ch.inputs_processed).sum();
+    assert_eq!(total, (CONNS * PER_CONN) as u64);
+}
+
+/// Garbage bytes (bad magic) must close only that connection — with an
+/// ERROR Malformed answer where possible — while the server keeps serving
+/// other clients.
+#[test]
+fn malformed_frames_reject_without_killing_server() {
+    let server = start_server(ServeConfig::default());
+    let addr = server.local_addr();
+
+    // Raw garbage: not even a valid header.
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.write_all(&[0xFFu8; 64]).unwrap();
+    raw.flush().unwrap();
+    // The server answers ERROR Malformed and closes; tolerate either a
+    // clean read of that frame or an immediate reset.
+    let mut fr = menage::serve::protocol::FrameReader::new(1 << 20);
+    match fr.read_frame(&mut raw) {
+        Ok(Some(f)) => {
+            assert_eq!(FrameKind::from_u8(f.kind), Some(FrameKind::Error));
+            let ef = menage::serve::protocol::ErrorFrame::decode(&f.payload).unwrap();
+            assert_eq!(ef.code, ErrorCode::Malformed);
+        }
+        Ok(None) | Err(_) => {} // connection torn down before the frame
+    }
+
+    // A valid INFER_REQUEST whose payload is garbage: well-framed, so the
+    // server answers BadRequest and KEEPS the connection.
+    let mut c = Client::connect(addr).unwrap();
+    {
+        // Reach the raw stream by sending through a second raw socket.
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_frame(&mut s, FrameKind::InferRequest, &[1, 2, 3]).unwrap();
+        let mut fr = menage::serve::protocol::FrameReader::new(1 << 20);
+        let f = fr.read_frame(&mut s).unwrap().unwrap();
+        assert_eq!(FrameKind::from_u8(f.kind), Some(FrameKind::Error));
+        let ef = menage::serve::protocol::ErrorFrame::decode(&f.payload).unwrap();
+        assert_eq!(ef.code, ErrorCode::BadRequest);
+        // Same connection still serves a valid request.
+        let mut rng = Rng::new(1);
+        let train = SpikeTrain::bernoulli(30, 3, 0.3, &mut rng);
+        let req = menage::serve::protocol::InferRequest {
+            id: 77,
+            deadline_ms: 0,
+            label: None,
+            train,
+        };
+        write_frame(&mut s, FrameKind::InferRequest, &req.encode()).unwrap();
+        let f = fr.read_frame(&mut s).unwrap().unwrap();
+        assert_eq!(FrameKind::from_u8(f.kind), Some(FrameKind::InferResponse));
+        let resp = menage::serve::protocol::InferResponse::decode(&f.payload).unwrap();
+        assert_eq!(resp.id, 77);
+    }
+
+    // Unknown frame kind: answered with Unsupported, connection kept.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut header = [0u8; 8];
+        header[0..2].copy_from_slice(&menage::serve::protocol::MAGIC.to_le_bytes());
+        header[2] = menage::serve::protocol::VERSION;
+        header[3] = 0xEE; // no such kind
+        s.write_all(&header).unwrap();
+        s.flush().unwrap();
+        let mut fr = menage::serve::protocol::FrameReader::new(1 << 20);
+        let f = fr.read_frame(&mut s).unwrap().unwrap();
+        let ef = menage::serve::protocol::ErrorFrame::decode(&f.payload).unwrap();
+        assert_eq!(ef.code, ErrorCode::Unsupported);
+    }
+
+    // Through all of that, a normal client still gets service.
+    let r = c.infer(&train_for(0, 0)).unwrap();
+    assert!((r.predicted as usize) < 8);
+    let metrics = server.metrics();
+    server.shutdown();
+    use std::sync::atomic::Ordering;
+    assert!(metrics.protocol_errors.load(Ordering::Relaxed) >= 1);
+    assert!(metrics.rejected_bad_request.load(Ordering::Relaxed) >= 1);
+}
+
+/// A connection dropped mid-frame must not wedge or kill the server.
+#[test]
+fn truncated_frame_then_disconnect_leaves_server_healthy() {
+    let server = start_server(ServeConfig::default());
+    let addr = server.local_addr();
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        // First half of a valid frame, then vanish.
+        let mut full = Vec::new();
+        let mut rng = Rng::new(2);
+        let req = menage::serve::protocol::InferRequest {
+            id: 1,
+            deadline_ms: 0,
+            label: None,
+            train: SpikeTrain::bernoulli(30, 4, 0.3, &mut rng),
+        };
+        write_frame(&mut full, FrameKind::InferRequest, &req.encode()).unwrap();
+        s.write_all(&full[..full.len() / 2]).unwrap();
+        s.flush().unwrap();
+    } // dropped here
+    std::thread::sleep(Duration::from_millis(100));
+    let mut c = Client::connect(addr).unwrap();
+    let r = c.infer(&train_for(1, 1)).unwrap();
+    assert!((r.predicted as usize) < 8);
+    server.shutdown();
+}
+
+/// Admission control: with an in-flight cap of 1, a second request
+/// arriving while a heavy one runs is rejected with ERROR Overload — an
+/// explicit, immediate reject, not silent queueing.
+#[test]
+fn overload_rejects_beyond_in_flight_cap() {
+    let server = start_server(ServeConfig {
+        workers: 1,
+        lanes_per_worker: 1,
+        max_in_flight: 1,
+        fill_wait: Duration::ZERO,
+        ..ServeConfig::default()
+    });
+    let addr = server.local_addr();
+    let mut c = Client::connect(addr).unwrap();
+    // Heavy: ~1500 busy steps dominates any scheduling jitter.
+    let mut rng = Rng::new(3);
+    let heavy = SpikeTrain::bernoulli(30, 1500, 0.5, &mut rng);
+    let light = SpikeTrain::bernoulli(30, 2, 0.2, &mut rng);
+    let heavy_id = c.send_infer(&heavy, 0, None).unwrap();
+    let light_id = c.send_infer(&light, 0, None).unwrap();
+    let (mut got_ok, mut got_overload) = (false, false);
+    for _ in 0..2 {
+        match c.recv_reply().unwrap() {
+            Reply::Infer(r) => {
+                assert_eq!(r.id, heavy_id);
+                got_ok = true;
+            }
+            Reply::Error(e) => {
+                assert_eq!(e.id, light_id);
+                assert_eq!(e.code, ErrorCode::Overload, "{}", e.message);
+                got_overload = true;
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(got_ok && got_overload);
+    let metrics = server.metrics();
+    server.shutdown();
+    use std::sync::atomic::Ordering;
+    assert_eq!(metrics.rejected_overload.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 1);
+}
+
+/// A request whose deadline lapses before its result is routed gets
+/// ERROR DeadlineExceeded instead of the (discarded) result.
+#[test]
+fn deadline_exceeded_is_reported() {
+    let server = start_server(ServeConfig {
+        workers: 1,
+        lanes_per_worker: 1,
+        ..ServeConfig::default()
+    });
+    let addr = server.local_addr();
+    let mut c = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(4);
+    // Heavy enough that 1 ms is long gone by completion.
+    let heavy = SpikeTrain::bernoulli(30, 3000, 0.5, &mut rng);
+    let err = c.infer_with_deadline(&heavy, 1).unwrap_err().to_string();
+    assert!(err.contains("deadline_exceeded"), "{err}");
+    let metrics = server.metrics();
+    server.shutdown();
+    use std::sync::atomic::Ordering;
+    assert_eq!(metrics.deadline_expired.load(Ordering::Relaxed), 1);
+}
+
+/// STATS must report the model block (what loadgen synthesizes inputs
+/// from) and live counters.
+#[test]
+fn stats_frame_reports_model_and_counters() {
+    let server = start_server(ServeConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    c.ping().unwrap();
+    let before = c.stats().unwrap();
+    let model = before.get("model").unwrap();
+    assert_eq!(model.get("input_dim").unwrap().as_usize().unwrap(), 30);
+    assert_eq!(model.get("timesteps").unwrap().as_usize().unwrap(), 6);
+    assert_eq!(model.get("classes").unwrap().as_usize().unwrap(), 8);
+    assert_eq!(
+        before.get("counters").unwrap().get("completed").unwrap().as_usize().unwrap(),
+        0
+    );
+    c.infer(&train_for(2, 0)).unwrap();
+    let after = c.stats().unwrap();
+    assert_eq!(
+        after.get("counters").unwrap().get("completed").unwrap().as_usize().unwrap(),
+        1
+    );
+    assert!(after.get("latency_us").unwrap().get("p50").unwrap().as_f64().unwrap() > 0.0);
+    assert!(
+        after.get("counters").unwrap().get("events_in").unwrap().as_usize().unwrap() > 0
+    );
+    server.shutdown();
+}
+
+/// Graceful shutdown drains: requests in flight when shutdown begins are
+/// still answered (through the coordinator's drain/salvage path) before
+/// connections close; afterwards the listener is gone.
+#[test]
+fn graceful_shutdown_drains_in_flight() {
+    const N: usize = 6;
+    let server = start_server(ServeConfig {
+        workers: 1,
+        lanes_per_worker: 2,
+        max_in_flight: 64,
+        ..ServeConfig::default()
+    });
+    let addr = server.local_addr();
+
+    let (ingested_tx, ingested_rx) = std::sync::mpsc::channel::<()>();
+    let client_thread = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        let mut rng = Rng::new(5);
+        // One heavy request keeps the worker busy so the rest are still
+        // queued/in-flight when shutdown starts.
+        c.send_infer(&SpikeTrain::bernoulli(30, 1200, 0.5, &mut rng), 0, None).unwrap();
+        for i in 1..N {
+            c.send_infer(&train_for(3, i), 0, None).unwrap();
+        }
+        // PING after the requests: its PONG proves the reader ingested
+        // everything above (frames are processed in order).
+        c.ping().unwrap();
+        ingested_tx.send(()).unwrap();
+        // Now collect every response; shutdown must not drop any.
+        let mut got = 0usize;
+        while got < N {
+            match c.recv_reply().unwrap() {
+                Reply::Infer(_) => got += 1,
+                other => panic!("unexpected reply during drain: {other:?}"),
+            }
+        }
+        got
+    });
+
+    ingested_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    let chips = server.shutdown(); // drains the N in-flight requests
+    assert_eq!(client_thread.join().unwrap(), N, "responses lost in shutdown drain");
+    let total: u64 = chips.iter().map(|ch| ch.inputs_processed).sum();
+    assert_eq!(total, N as u64);
+    // The listener is gone: connecting now must fail (allow a beat for the
+    // OS to tear the socket down).
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(TcpStream::connect(addr).is_err(), "server still accepting after shutdown");
+}
+
+/// SHUTDOWN frame: refused by default, honored (and visible to the
+/// embedding loop) when enabled — the `loadgen --shutdown-server` path.
+#[test]
+fn remote_shutdown_gated_by_config() {
+    let server = start_server(ServeConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let err = c.request_shutdown().unwrap_err().to_string();
+    assert!(err.contains("unsupported"), "{err}");
+    assert!(!server.remote_shutdown_requested());
+    server.shutdown();
+
+    let server = start_server(ServeConfig {
+        allow_remote_shutdown: true,
+        ..ServeConfig::default()
+    });
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    c.request_shutdown().unwrap();
+    assert!(server.remote_shutdown_requested());
+    server.shutdown();
+}
