@@ -9,9 +9,9 @@ CARGO ?= cargo
 ## Loopback port for the serve smoke test (override on collision).
 SMOKE_PORT ?= 7471
 
-.PHONY: verify build test test-lanes test-serve smoke-serve lint fmt clippy bench-hotpath bench clean
+.PHONY: verify build test test-lanes test-serve test-shard smoke-serve smoke-shard lint fmt clippy bench-hotpath bench clean
 
-verify: build test test-lanes
+verify: build test test-lanes test-shard
 
 build:
 	$(CARGO) build --release
@@ -30,6 +30,19 @@ test-lanes:
 ## kept addressable so CI can surface it separately).
 test-serve:
 	$(CARGO) test -q --test serve_roundtrip
+
+## The multi-chip sharding differential suite: sharded execution pinned
+## bit-identical to the monolithic engine (also covered by `test`).
+test-shard:
+	$(CARGO) test -q --test shard_differential
+
+## CLI-level sharding smoke, bounded runtime: run a small synthetic model
+## through a 2-shard pipeline AND a monolithic oracle in one process;
+## --check-monolithic exits non-zero unless every classifier train and
+## cycle count is bit-identical.
+smoke-shard: build
+	./target/release/menage simulate --synthetic --model nmnist \
+		--samples 6 --workers 2 --shards 2 --check-monolithic
 
 ## End-to-end serving smoke over loopback, bounded runtime: start
 ## `menage serve` on a synthetic model, drive it with `menage loadgen`

@@ -15,6 +15,7 @@ use menage::config::{AcceleratorConfig, ModelConfig};
 use menage::coordinator::Coordinator;
 use menage::datasets::{Dataset, DatasetKind};
 use menage::mapping::Strategy;
+use menage::shard::ShardedMenage;
 use menage::snn::{reference_forward, QuantNetwork, SpikeTrain};
 use menage::util::json::Json;
 use menage::util::rng::Rng;
@@ -161,6 +162,28 @@ fn main() {
          ({nonideal_lanes_sps:.1} samples/s)"
     );
 
+    // Multi-chip sharded pipeline (2 shards over the 4-layer model):
+    // boundary frontiers forwarded chip-to-chip per step, outputs
+    // bit-identical to the monolithic chip (tests/shard_differential.rs).
+    // The interesting number is the overhead of the shard walk vs the
+    // monolithic run loop on identical work.
+    let mut chip_sharded =
+        ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7, 2)
+            .unwrap();
+    let mut si = 0usize;
+    let r_sharded = b.run("sharded_x2_run_sample", || {
+        si = (si + 1) % samples.len();
+        chip_sharded.run_into(&samples[si], &mut out).unwrap();
+        out.cycles
+    });
+    let sharded_sps = r_sharded.throughput(1.0);
+    let sharded_vs_mono = r_sharded.speedup_over(&r_chip);
+    println!(
+        "  sharded x2: {sharded_sps:.1} samples/s ({sharded_vs_mono:.2}× monolithic; \
+         cut traffic estimate {})",
+        chip_sharded.plan.cut_cost
+    );
+
     // Coordinator scaling on the work-stealing queue: 1 vs 4 workers over a
     // 256-sample batch. Coordinator::new (thread spawn + W chip clones) is
     // setup, NOT workload — it stays outside the timed region.
@@ -231,6 +254,15 @@ fn main() {
                     ("nonideal_sequential_samples_per_s", nonideal_seq_sps.into()),
                     ("nonideal_lanes_samples_per_s", nonideal_lanes_sps.into()),
                     ("speedup_nonideal", nonideal_speedup.into()),
+                ]),
+            ),
+            (
+                "sharded",
+                Json::obj(vec![
+                    ("shards", 2usize.into()),
+                    ("cut_cost", (chip_sharded.plan.cut_cost as usize).into()),
+                    ("samples_per_s", sharded_sps.into()),
+                    ("speedup_over_monolithic", sharded_vs_mono.into()),
                 ]),
             ),
             (

@@ -60,8 +60,63 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::accel::Menage;
+use crate::shard::ShardedMenage;
 use crate::snn::SpikeTrain;
 use crate::util::stats::Summary;
+
+/// What a worker thread executes requests on: one chip, or a sharded
+/// pipeline of chips. Both expose the same run surface (the sharded path
+/// is bit-identical to the monolithic one — `tests/shard_differential.rs`)
+/// so the scheduling, lane-packing, and error-routing machinery is
+/// backend-agnostic.
+#[derive(Clone)]
+enum Backend {
+    Mono(Menage),
+    Sharded(ShardedMenage),
+}
+
+impl Backend {
+    fn input_dim(&self) -> usize {
+        match self {
+            Backend::Mono(c) => c.cores[0].in_dim(),
+            Backend::Sharded(s) => s.input_dim(),
+        }
+    }
+
+    fn run_into(&mut self, input: &SpikeTrain, out: &mut crate::accel::RunOutput) -> anyhow::Result<()> {
+        match self {
+            Backend::Mono(c) => c.run_into(input, out),
+            Backend::Sharded(s) => s.run_into(input, out),
+        }
+    }
+
+    fn run_lanes_into(
+        &mut self,
+        inputs: &[SpikeTrain],
+        outs: &mut Vec<crate::accel::RunOutput>,
+    ) -> anyhow::Result<()> {
+        match self {
+            Backend::Mono(c) => c.run_lanes_into(inputs, outs),
+            Backend::Sharded(s) => s.run_lanes_into(inputs, outs),
+        }
+    }
+
+    fn fold_lane_stats(&mut self) {
+        match self {
+            Backend::Mono(c) => c.fold_lane_stats(),
+            Backend::Sharded(s) => s.fold_lane_stats(),
+        }
+    }
+
+    /// Collapse into the monolithic-shaped stats carrier shutdown hands
+    /// back (sharded cores are reassembled in global layer order).
+    fn into_chip(self) -> Menage {
+        match self {
+            Backend::Mono(c) => c,
+            Backend::Sharded(s) => s.into_monolithic(),
+        }
+    }
+}
 
 /// One inference request.
 #[derive(Debug, Clone)]
@@ -102,9 +157,31 @@ pub struct Metrics {
     /// Simulated cycles across completed requests.
     pub total_cycles: AtomicU64,
     pub latency: Mutex<Summary>,
+    /// Worker dispatches (one per batch handed to a chip — a singleton
+    /// request and a full lane batch each count once).
+    pub dispatches: AtomicU64,
+    /// Requests across all dispatches (Σ batch widths); divided by
+    /// `dispatches` this is the mean lane occupancy — how full
+    /// micro-batches actually run under the live traffic pattern.
+    pub lanes_dispatched: AtomicU64,
+    /// Widest batch any worker dispatched (≤ `lane_capacity` always).
+    pub max_lane_occupancy: AtomicU64,
+    /// The configured lanes-per-worker L (set at construction; the bound
+    /// the occupancy gauges are read against).
+    pub lane_capacity: AtomicU64,
 }
 
 impl Metrics {
+    /// Mean requests per dispatch (`NaN` before the first dispatch);
+    /// bounded by [`Self::lane_capacity`].
+    pub fn mean_lane_occupancy(&self) -> f64 {
+        let d = self.dispatches.load(Ordering::Relaxed);
+        if d == 0 {
+            return f64::NAN;
+        }
+        self.lanes_dispatched.load(Ordering::Relaxed) as f64 / d as f64
+    }
+
     pub fn accuracy(&self) -> f64 {
         let l = self.labelled.load(Ordering::Relaxed);
         if l == 0 {
@@ -292,9 +369,44 @@ impl Coordinator {
         lanes_per_worker: usize,
         fill_wait: Duration,
     ) -> Self {
+        Self::with_backend(Backend::Mono(chip.clone()), num_workers, lanes_per_worker, fill_wait)
+    }
+
+    /// [`Self::new`] over a sharded pipeline: each worker owns a clone of
+    /// the whole multi-chip [`ShardedMenage`] and serves one request at a
+    /// time through it. Outputs are bit-identical to the monolithic
+    /// coordinator (`tests/shard_differential.rs`).
+    pub fn sharded(chip: &ShardedMenage, num_workers: usize) -> Self {
+        Self::sharded_with_lanes_wait(chip, num_workers, 1, Duration::ZERO)
+    }
+
+    /// [`Self::with_lanes_wait`] over a sharded pipeline — W workers × L
+    /// lanes, every lane flowing through all shards with boundary
+    /// frontiers forwarded per (step, lane).
+    pub fn sharded_with_lanes_wait(
+        chip: &ShardedMenage,
+        num_workers: usize,
+        lanes_per_worker: usize,
+        fill_wait: Duration,
+    ) -> Self {
+        Self::with_backend(
+            Backend::Sharded(chip.clone()),
+            num_workers,
+            lanes_per_worker,
+            fill_wait,
+        )
+    }
+
+    fn with_backend(
+        backend: Backend,
+        num_workers: usize,
+        lanes_per_worker: usize,
+        fill_wait: Duration,
+    ) -> Self {
         assert!(num_workers > 0);
         assert!(lanes_per_worker > 0);
         let metrics = Arc::new(Metrics::default());
+        metrics.lane_capacity.store(lanes_per_worker as u64, Ordering::Relaxed);
         let queue = Arc::new(SharedQueue::new(num_workers, fill_wait));
         let (results_tx, results_rx) = mpsc::channel::<Result<Response>>();
         let mut workers = Vec::with_capacity(num_workers);
@@ -302,7 +414,7 @@ impl Coordinator {
             let results_tx = results_tx.clone();
             let metrics = Arc::clone(&metrics);
             let queue = Arc::clone(&queue);
-            let mut chip = chip.clone();
+            let mut chip = backend.clone();
             workers.push(std::thread::spawn(move || {
                 let record = |out: &crate::accel::RunOutput,
                               req: &Request,
@@ -338,6 +450,16 @@ impl Coordinator {
                         // Single request: the sequential engine (identical
                         // to the pre-lane coordinator).
                         let req = batch.pop().unwrap();
+                        // Occupancy gauges count only valid dispatched
+                        // requests — the lane path filters width
+                        // mismatches before its gauges, so the singleton
+                        // path must too or the metric's meaning would
+                        // shift with queue depth.
+                        if req.input.num_neurons == chip.input_dim() {
+                            metrics.dispatches.fetch_add(1, Ordering::Relaxed);
+                            metrics.lanes_dispatched.fetch_add(1, Ordering::Relaxed);
+                            metrics.max_lane_occupancy.fetch_max(1, Ordering::Relaxed);
+                        }
                         let t0 = Instant::now();
                         let res = chip
                             .run_into(&req.input, &mut out)
@@ -353,7 +475,7 @@ impl Coordinator {
                     // individually up front so one bad request cannot
                     // poison (or drop responses for) the rest of the
                     // batch.
-                    let expect = chip.cores[0].in_dim();
+                    let expect = chip.input_dim();
                     let t0 = Instant::now();
                     lane_reqs.clear();
                     inputs.clear();
@@ -376,6 +498,13 @@ impl Coordinator {
                     if lane_reqs.is_empty() || disconnected {
                         continue;
                     }
+                    metrics.dispatches.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .lanes_dispatched
+                        .fetch_add(lane_reqs.len() as u64, Ordering::Relaxed);
+                    metrics
+                        .max_lane_occupancy
+                        .fetch_max(lane_reqs.len() as u64, Ordering::Relaxed);
                     match chip.run_lanes_into(&inputs, &mut lane_outs) {
                         Ok(()) => {
                             let sim_latency = t0.elapsed();
@@ -399,7 +528,9 @@ impl Coordinator {
                 // the chips handed back by shutdown() report everything
                 // they served (merge_chips/energy/trace read core stats).
                 chip.fold_lane_stats();
-                chip
+                // Sharded pipelines hand back one monolithic-shaped stats
+                // carrier (cores reassembled in global layer order).
+                chip.into_chip()
             }));
         }
         Self {
@@ -1152,6 +1283,43 @@ mod tests {
         // Non-worker errors parse to None.
         assert_eq!(request_id_of_error(&anyhow!("all workers terminated")), None);
         assert_eq!(request_id_of_error(&anyhow!("request x: nope")), None);
+    }
+
+    /// Lane-occupancy gauges (the STATS follow-up): every dispatch is
+    /// counted, the request total matches, and mean/max occupancy are
+    /// bounded by the configured lanes-per-worker L.
+    #[test]
+    fn lane_occupancy_reported_and_bounded() {
+        let (chip, _) = test_chip();
+        let lanes = 4usize;
+        let mut coord = Coordinator::with_lanes(&chip, 2, lanes);
+        let res = coord.run_batch(inputs(24)).unwrap();
+        assert_eq!(res.len(), 24);
+        let m = &coord.metrics;
+        assert_eq!(m.lane_capacity.load(Ordering::Relaxed), lanes as u64);
+        let d = m.dispatches.load(Ordering::Relaxed);
+        assert!(d > 0, "no dispatches recorded");
+        assert_eq!(
+            m.lanes_dispatched.load(Ordering::Relaxed),
+            24,
+            "every request must be attributed to exactly one dispatch"
+        );
+        let mean = m.mean_lane_occupancy();
+        assert!(
+            (1.0..=lanes as f64).contains(&mean),
+            "mean occupancy {mean} outside [1, L={lanes}]"
+        );
+        let max = m.max_lane_occupancy.load(Ordering::Relaxed);
+        assert!(
+            (1..=lanes as u64).contains(&max),
+            "max occupancy {max} outside [1, L={lanes}]"
+        );
+        coord.shutdown();
+        // An idle coordinator reports NaN mean (no dispatches yet).
+        let (chip, _) = test_chip();
+        let coord = Coordinator::new(&chip, 1);
+        assert!(coord.metrics.mean_lane_occupancy().is_nan());
+        coord.shutdown();
     }
 
     #[test]

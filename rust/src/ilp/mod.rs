@@ -140,6 +140,20 @@ impl Problem {
         self.constraints.push(Constraint { terms, cmp, rhs, name: name.into() });
     }
 
+    /// Cardinality equality `Σ vars = k` — the "pick exactly k" constraint
+    /// (e.g. the shard partitioner's cut-count budget).
+    pub fn add_exactly_k(&mut self, name: impl Into<String>, vars: &[VarId], k: f64) {
+        let terms = vars.iter().map(|&v| (v, 1.0)).collect();
+        self.add_constraint(name, terms, Cmp::Eq, k);
+    }
+
+    /// Set-cover constraint `Σ vars ≥ 1` — "at least one of these" (e.g.
+    /// a sliding capacity window that must contain a cut).
+    pub fn add_cover(&mut self, name: impl Into<String>, vars: &[VarId]) {
+        let terms = vars.iter().map(|&v| (v, 1.0)).collect();
+        self.add_constraint(name, terms, Cmp::Ge, 1.0);
+    }
+
     /// Number of variables.
     pub fn num_vars(&self) -> usize {
         self.domains.len()
@@ -243,6 +257,18 @@ mod tests {
         assert_eq!(d.hi(), 7.0);
         let c = Domain::Continuous { lo: 0.5, hi: 2.5 };
         assert!(!c.is_integer());
+    }
+
+    #[test]
+    fn cardinality_and_cover_helpers() {
+        let mut p = Problem::minimize();
+        let vars: Vec<VarId> = (0..4).map(|i| p.add_binary(format!("v{i}"), 1.0)).collect();
+        p.add_exactly_k("pick2", &vars, 2.0);
+        p.add_cover("one-of-front", &vars[..2]);
+        assert_eq!(p.num_constraints(), 2);
+        assert!(p.is_feasible(&[1.0, 0.0, 1.0, 0.0], 1e-9));
+        assert!(!p.is_feasible(&[1.0, 1.0, 1.0, 0.0], 1e-9)); // three picked
+        assert!(!p.is_feasible(&[0.0, 0.0, 1.0, 1.0], 1e-9)); // cover violated
     }
 
     #[test]

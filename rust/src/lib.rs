@@ -31,6 +31,10 @@
 //! * [`trace`] — memory-utilization and event traces (Figures 6–7).
 //! * [`runtime`] — PJRT bridge that loads the JAX-lowered golden model
 //!   (`artifacts/*.hlo.txt`) and executes it from rust.
+//! * [`shard`] — multi-chip pipeline-parallel sharding: the layer chain is
+//!   split across several chips by an ILP/DP partitioner that minimizes
+//!   inter-shard spike traffic, with boundary frontiers forwarded
+//!   chip-to-chip per time step, bit-identical to monolithic execution.
 //! * [`coordinator`] — the thin L3 driver: async inference request loop,
 //!   batching across simulator workers, metrics.
 //! * [`serve`] — the network layer: a std-only TCP inference server whose
@@ -56,6 +60,7 @@ pub mod mapping;
 pub mod neuracore;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod snn;
 pub mod trace;
 pub mod util;

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use menage::accel::Menage;
+use menage::accel::{Menage, RunOutput};
 use menage::analog::AnalogParams;
 use menage::bench::{emit_json_file, Table};
 use menage::config::{AcceleratorConfig, ModelConfig};
@@ -35,6 +35,7 @@ use menage::mapping::{map_network, Strategy};
 use menage::runtime::{artifacts_dir, cpu_client, pjrt_available, GoldenModel};
 use menage::serve::protocol::NO_ID;
 use menage::serve::{Client, ErrorCode, Reply, ServeConfig, Server};
+use menage::shard::ShardedMenage;
 use menage::snn::{QuantNetwork, SpikeTrain};
 use menage::trace::MemoryTrace;
 use menage::util::json::Json;
@@ -272,8 +273,8 @@ fn cmd_map(args: &Args) -> Result<()> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     args.expect_known(
-        &["model", "accel", "strategy", "analog", "workers", "samples", "out"],
-        &["golden", "synthetic"],
+        &["model", "accel", "strategy", "analog", "workers", "samples", "shards", "out"],
+        &["golden", "synthetic", "check-monolithic"],
     )?;
     let (mcfg, kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
     let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
@@ -281,6 +282,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let analog = resolve_analog(args)?;
     let workers = args.get_usize("workers", 4)?;
     let samples = args.get_usize("samples", 40)?;
+    let shards_req = args.get_usize("shards", 1)?.max(1);
+    let check_mono = args.has("check-monolithic");
     let synthetic = args.has("synthetic");
 
     let net = load_network(base, &mcfg, synthetic)?;
@@ -292,14 +295,48 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         net.sparsity(),
         net.timesteps
     );
-    let chip = Menage::build(&net, &cfg, strategy, &analog, 7)?;
-    for (l, core) in chip.cores.iter().enumerate() {
+    let sharded = if shards_req > 1 {
+        let s = ShardedMenage::build(&net, &cfg, strategy, &analog, 7, shards_req)?;
         println!(
-            "  core {l}: {} rounds, {} SN rows, {} weight bytes",
-            core.rounds(),
-            core.image_sn_rows(),
-            core.weight_bytes()
+            "sharded over {} chips (estimated cut traffic {}):",
+            s.num_shards(),
+            s.plan.cut_cost
         );
+        for (si, (range, chip)) in s.plan.ranges().iter().zip(&s.shards).enumerate() {
+            println!(
+                "  shard {si}: layers {}..{} on {} cores{}",
+                range.start,
+                range.end,
+                chip.cores.len(),
+                if si > 0 {
+                    format!(", cut cost in {}", s.boundary_cost[si - 1])
+                } else {
+                    String::new()
+                }
+            );
+        }
+        Some(s)
+    } else {
+        None
+    };
+    // The monolithic chip: the execution backend when not sharding, the
+    // cross-check oracle under --check-monolithic. A sharded run without
+    // the check never builds it — sharding exists precisely for models
+    // deeper than one chip.
+    let mono = if sharded.is_none() || check_mono {
+        Some(Menage::build(&net, &cfg, strategy, &analog, 7)?)
+    } else {
+        None
+    };
+    if let Some(chip) = &mono {
+        for (l, core) in chip.cores.iter().enumerate() {
+            println!(
+                "  core {l}: {} rounds, {} SN rows, {} weight bytes",
+                core.rounds(),
+                core.image_sn_rows(),
+                core.weight_bytes()
+            );
+        }
     }
 
     // Inputs: trained eval split or synthetic events.
@@ -314,7 +351,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     };
     println!("running {} samples on {} workers…", eval.len(), workers);
 
-    let mut coord = Coordinator::new(&chip, workers);
+    let mut coord = match &sharded {
+        Some(s) => Coordinator::sharded(s, workers),
+        None => Coordinator::new(mono.as_ref().expect("mono built when not sharded"), workers),
+    };
     let t0 = std::time::Instant::now();
     let batch: Vec<(SpikeTrain, Option<usize>)> = eval
         .iter()
@@ -322,6 +362,35 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .collect();
     let responses = coord.run_batch(batch)?;
     let wall = t0.elapsed();
+
+    // The smoke-shard gate: replay every input through a monolithic chip
+    // and require the classifier train + modeled cycles the (possibly
+    // sharded) coordinator returned to be bit-identical.
+    if check_mono {
+        let mut oracle = mono.clone().expect("mono built under --check-monolithic");
+        let mut out = RunOutput::default();
+        for ((st, _, _), resp) in eval.iter().zip(&responses) {
+            oracle.run_into(st, &mut out)?;
+            if resp.output != *out.output() {
+                bail!(
+                    "sharded-vs-monolithic mismatch: request {} classifier train diverges",
+                    resp.id
+                );
+            }
+            if resp.cycles != out.cycles {
+                bail!(
+                    "sharded-vs-monolithic mismatch: request {} cycles {} != {}",
+                    resp.id,
+                    resp.cycles,
+                    out.cycles
+                );
+            }
+        }
+        println!(
+            "sharded-vs-monolithic check: {} samples bit-identical (trains + cycles)",
+            eval.len()
+        );
+    }
 
     // Optional golden cross-check through PJRT (skipped, not fatal, on a
     // build without the `pjrt` feature).
@@ -468,6 +537,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "fill-wait-us",
             "max-in-flight",
             "duration-secs",
+            "shards",
         ],
         &["synthetic", "allow-remote-shutdown"],
     )?;
@@ -475,8 +545,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
     let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
     let analog = resolve_analog(args)?;
+    let shards_req = args.get_usize("shards", 1)?.max(1);
     let net = load_network(base, &mcfg, args.has("synthetic"))?;
-    let chip = Menage::build(&net, &cfg, strategy, &analog, 7)?;
 
     let serve_cfg = ServeConfig {
         workers: args.get_usize("workers", 4)?.max(1),
@@ -490,9 +560,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = serve_cfg.workers;
     let lanes = serve_cfg.lanes_per_worker;
     let cap = serve_cfg.max_in_flight;
-    let server = Server::start(&chip, args.get_or("addr", "127.0.0.1:7471").as_str(), serve_cfg)?;
+    let addr = args.get_or("addr", "127.0.0.1:7471");
+    let (server, shard_note) = if shards_req > 1 {
+        let sharded = ShardedMenage::build(&net, &cfg, strategy, &analog, 7, shards_req)?;
+        // serve's --shards is a topology contract (loadgen --shards
+        // asserts it over STATS): refuse to silently serve fewer shards
+        // than requested instead of clamping like `simulate` does.
+        if sharded.num_shards() != shards_req {
+            bail!(
+                "--shards {shards_req} exceeds the model's {} layers (one layer per shard max); \
+                 the server would run {} shards",
+                net.layers.len(),
+                sharded.num_shards()
+            );
+        }
+        let note = format!(
+            ", {} shards (cut traffic {})",
+            sharded.num_shards(),
+            sharded.plan.cut_cost
+        );
+        (Server::start_sharded(&sharded, addr.as_str(), serve_cfg)?, note)
+    } else {
+        let chip = Menage::build(&net, &cfg, strategy, &analog, 7)?;
+        (Server::start(&chip, addr.as_str(), serve_cfg)?, String::new())
+    };
     println!(
-        "serving {} on {} — {workers} workers × {lanes} lanes, in-flight cap {cap}{}",
+        "serving {} on {} — {workers} workers × {lanes} lanes, in-flight cap {cap}{shard_note}{}",
         net.name,
         server.local_addr(),
         if duration > 0 { format!(", for {duration}s") } else { String::new() }
@@ -562,7 +655,15 @@ struct LoadPlan {
 /// outstanding until `requests` are answered, with heterogeneous train
 /// lengths (cycling 1..=timesteps) at the given spike rate.
 fn loadgen_connection(plan: &LoadPlan) -> Result<LoadStats> {
-    let mut client = Client::connect_retry(plan.addr.as_str(), 40, Duration::from_millis(250))?;
+    // Jittered exponential backoff with a per-connection seed, so N
+    // connections racing one server start don't retry in lockstep.
+    let mut client = Client::connect_backoff(
+        plan.addr.as_str(),
+        40,
+        Duration::from_millis(50),
+        Duration::from_millis(500),
+        plan.seed.wrapping_mul(31).wrapping_add(plan.conn_idx as u64),
+    )?;
     let mut rng = Rng::new(plan.seed.wrapping_mul(10_007).wrapping_add(plan.conn_idx as u64));
     let mut stats = LoadStats::default();
     let mut outstanding: BTreeMap<u64, Instant> = BTreeMap::new();
@@ -619,7 +720,17 @@ fn loadgen_connection(plan: &LoadPlan) -> Result<LoadStats> {
 /// machine-readable `BENCH_serve.json` for the cross-PR perf trajectory.
 fn cmd_loadgen(args: &Args) -> Result<()> {
     args.expect_known(
-        &["addr", "connections", "requests", "pipeline", "rate", "deadline-ms", "seed", "out"],
+        &[
+            "addr",
+            "connections",
+            "requests",
+            "pipeline",
+            "rate",
+            "deadline-ms",
+            "seed",
+            "shards",
+            "out",
+        ],
         &["shutdown-server"],
     )?;
     let addr = args.get_or("addr", "127.0.0.1:7471");
@@ -635,15 +746,31 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let out = args.get_or("out", "BENCH_serve.json");
 
     // Probe: wait for the server and learn the model's dimensions.
-    let mut probe = Client::connect_retry(addr.as_str(), 40, Duration::from_millis(250))?;
+    let mut probe = Client::connect_backoff(
+        addr.as_str(),
+        40,
+        Duration::from_millis(50),
+        Duration::from_millis(500),
+        seed,
+    )?;
     let pre = probe.stats()?;
     let model = pre.get("model")?;
     let input_dim = model.get("input_dim")?.as_usize()?;
     let timesteps = model.get("timesteps")?.as_usize()?;
     let classes = model.get("classes")?.as_usize()?;
+    // Shard topology check: a monolithic server reports no `shards` block
+    // (counted as 1); `--shards N` asserts the server actually runs N.
+    let server_shards = match pre.get("shards") {
+        Ok(Json::Arr(a)) => a.len(),
+        _ => 1,
+    };
+    let expect_shards = args.get_usize("shards", 0)?;
+    if expect_shards > 0 && server_shards != expect_shards {
+        bail!("server runs {server_shards} shard(s), --shards expected {expect_shards}");
+    }
     println!(
         "loadgen → {addr}: {connections} connections × pipeline {pipeline}, {total} requests \
-         (input_dim {input_dim}, T≤{timesteps}, rate {rate})"
+         (input_dim {input_dim}, T≤{timesteps}, rate {rate}, {server_shards} shard(s))"
     );
 
     let t0 = Instant::now();
@@ -723,6 +850,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ("pipeline", pipeline.into()),
         ("rate", rate.into()),
         ("deadline_ms", (deadline_ms as usize).into()),
+        ("server_shards", server_shards.into()),
         ("ok", agg.ok.into()),
         ("overload_rejected", agg.overload.into()),
         ("deadline_expired", agg.deadline.into()),
@@ -776,18 +904,25 @@ USAGE:
   menage simulate  --model M --accel A [--samples N] [--workers W]
                    [--strategy ilp_flow|ilp_exact|greedy|first_fit|round_robin]
                    [--analog ideal|paper] [--golden] [--synthetic] [--out FILE]
+                   [--shards K] [--check-monolithic]
   menage waveform  [--out FILE]
   menage serve     --model M --accel A [--synthetic] [--addr HOST:PORT]
                    [--workers W] [--lanes L] [--fill-wait-us U]
-                   [--max-in-flight N] [--duration-secs S]
+                   [--max-in-flight N] [--duration-secs S] [--shards K]
                    [--allow-remote-shutdown] [--strategy S] [--analog A]
   menage loadgen   [--addr HOST:PORT] [--connections C] [--requests N]
                    [--pipeline P] [--rate R] [--deadline-ms D] [--seed S]
-                   [--out BENCH_serve.json] [--shutdown-server]
+                   [--shards K] [--out BENCH_serve.json] [--shutdown-server]
 
 serve/loadgen speak the length-prefixed binary protocol documented in
 menage::serve::protocol (and README.md); loadgen prints a latency/
 throughput table and writes BENCH_serve.json.
+
+--shards K partitions the layer pipeline across K chips (ILP/DP cut
+minimizing inter-shard spike traffic under per-chip capacity), with
+boundary spike frontiers forwarded chip-to-chip each time step —
+bit-identical to monolithic execution (simulate --check-monolithic
+asserts it end-to-end; loadgen --shards K asserts the server topology).
 
 Run `make artifacts` first to produce trained weights + HLO under artifacts/,
 or pass --synthetic to run on a generated network."

@@ -753,6 +753,325 @@ pub fn distill_network(
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// Cross-chip pipeline partitioner (multi-chip sharding).
+// ---------------------------------------------------------------------------
+
+/// Estimated inter-shard spike traffic of cutting the pipeline after each
+/// layer: `costs[b]` prices the boundary between layer `b` and `b+1`
+/// (`b ∈ 0..layers-1`).
+///
+/// The events crossing a cut per time step are the boundary layer's output
+/// spikes (train width `out_dim(b)`), and each forwarded spike triggers a
+/// MEM_E2A lookup plus a fan-out walk in the next shard's first core — in
+/// expectation `nnz(b+1)/out_dim(b)` synapse rows per spike. Scaling by
+/// the boundary width gives the static per-step estimate
+/// `out_dim(b) + nnz(b+1)`: wide, densely fanned-out boundaries are
+/// expensive cuts, pruned narrow ones are cheap — exactly the traffic
+/// bottleneck the multi-core routing literature optimizes for.
+pub fn shard_cut_costs(net: &QuantNetwork) -> Vec<u64> {
+    net.layers
+        .windows(2)
+        .map(|w| w[0].out_dim as u64 + w[1].nnz() as u64)
+        .collect()
+}
+
+/// Per-layer A-SYN weight-SRAM footprint (one byte per non-zero synapse —
+/// what [`distill`] actually emits), the quantity the per-chip memory
+/// budget constrains.
+pub fn layer_weight_bytes(net: &QuantNetwork) -> Vec<usize> {
+    net.layers.iter().map(|l| l.nnz()).collect()
+}
+
+/// Per-chip capacity limits the shard partitioner must respect.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardLimits {
+    /// A chip hosts one layer per MX-NEURACORE, so a shard can carry at
+    /// most this many layers (= the chip's `num_cores`).
+    pub max_layers_per_shard: usize,
+    /// Optional aggregate weight-SRAM budget per chip (bytes across the
+    /// shard's layers). `None` = unconstrained.
+    pub chip_weight_budget: Option<usize>,
+}
+
+impl ShardLimits {
+    /// Limits implied by an accelerator preset: one layer per core, no
+    /// aggregate weight budget beyond the per-core SRAM already enforced
+    /// by the distiller.
+    pub fn from_accel(cfg: &AcceleratorConfig) -> Self {
+        Self { max_layers_per_shard: cfg.num_cores, chip_weight_budget: None }
+    }
+}
+
+/// A layer→shard assignment for pipeline-parallel multi-chip execution.
+/// Shards are contiguous layer ranges in pipeline order (layer `l` feeds
+/// `l+1`, so any non-contiguous assignment would route traffic through a
+/// chip twice).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// `shard_of[l]` = shard index of layer `l`; non-decreasing, starting
+    /// at 0, covering `0..num_shards`.
+    pub shard_of: Vec<usize>,
+    pub num_shards: usize,
+    /// Total estimated inter-shard traffic over the chosen cuts
+    /// ([`shard_cut_costs`] summed over boundaries where the shard index
+    /// changes).
+    pub cut_cost: u64,
+    /// Branch-and-bound nodes explored (0 for the DP path).
+    pub solver_nodes: usize,
+}
+
+impl ShardPlan {
+    /// A trivial single-shard plan over `layers` layers.
+    pub fn monolithic(layers: usize) -> Self {
+        Self { shard_of: vec![0; layers], num_shards: 1, cut_cost: 0, solver_nodes: 0 }
+    }
+
+    /// Contiguous layer range of each shard.
+    pub fn ranges(&self) -> Vec<std::ops::Range<usize>> {
+        let mut ranges = Vec::with_capacity(self.num_shards);
+        let mut start = 0usize;
+        for s in 0..self.num_shards {
+            let end = start
+                + self.shard_of[start..].iter().take_while(|&&x| x == s).count();
+            ranges.push(start..end);
+            start = end;
+        }
+        ranges
+    }
+
+    /// Boundary indices (cut after layer `b`) where shards change.
+    pub fn cuts(&self) -> Vec<usize> {
+        self.shard_of
+            .windows(2)
+            .enumerate()
+            .filter(|(_, w)| w[0] != w[1])
+            .map(|(b, _)| b)
+            .collect()
+    }
+
+    /// Check structural validity and the per-chip capacity limits.
+    pub fn validate(&self, net: &QuantNetwork, limits: &ShardLimits) -> Result<()> {
+        let l = net.layers.len();
+        if self.shard_of.len() != l {
+            bail!("plan covers {} layers, network has {l}", self.shard_of.len());
+        }
+        if self.num_shards == 0 || self.shard_of.first() != Some(&0) {
+            bail!("plan must start at shard 0 with ≥1 shard");
+        }
+        for (b, w) in self.shard_of.windows(2).enumerate() {
+            if w[1] != w[0] && w[1] != w[0] + 1 {
+                bail!("shard index jumps {}→{} after layer {b} (must be contiguous)", w[0], w[1]);
+            }
+        }
+        if self.shard_of.last() != Some(&(self.num_shards - 1)) {
+            bail!(
+                "last layer on shard {:?}, expected {} (every shard must be non-empty)",
+                self.shard_of.last(),
+                self.num_shards - 1
+            );
+        }
+        let weights = layer_weight_bytes(net);
+        for (s, range) in self.ranges().into_iter().enumerate() {
+            let count = range.len();
+            if count == 0 {
+                bail!("shard {s} is empty");
+            }
+            if count > limits.max_layers_per_shard {
+                bail!(
+                    "shard {s} holds {count} layers, chip provides {} cores",
+                    limits.max_layers_per_shard
+                );
+            }
+            if let Some(budget) = limits.chip_weight_budget {
+                let bytes: usize = weights[range.clone()].iter().sum();
+                if bytes > budget {
+                    bail!("shard {s} needs {bytes} weight bytes, chip budget is {budget}");
+                }
+            }
+        }
+        let costs = shard_cut_costs(net);
+        let actual: u64 = self.cuts().iter().map(|&b| costs[b]).sum();
+        if actual != self.cut_cost {
+            bail!("plan cut_cost {} != recomputed {actual}", self.cut_cost);
+        }
+        Ok(())
+    }
+}
+
+/// Shared feasibility preamble for both partitioner paths.
+fn partition_check(net: &QuantNetwork, num_shards: usize, limits: &ShardLimits) -> Result<()> {
+    let l = net.layers.len();
+    if num_shards == 0 {
+        bail!("cannot partition into 0 shards");
+    }
+    if num_shards > l {
+        bail!("cannot split {l} layers into {num_shards} non-empty shards");
+    }
+    if let Some(budget) = limits.chip_weight_budget {
+        let weights = layer_weight_bytes(net);
+        if let Some((i, &w)) = weights.iter().enumerate().find(|(_, &w)| w > budget) {
+            bail!("layer {i} alone needs {w} weight bytes, chip budget is {budget}");
+        }
+    }
+    Ok(())
+}
+
+fn plan_from_cuts(
+    net: &QuantNetwork,
+    cut_after: &[bool],
+    num_shards: usize,
+    solver_nodes: usize,
+) -> ShardPlan {
+    let costs = shard_cut_costs(net);
+    let mut shard_of = Vec::with_capacity(net.layers.len());
+    let mut s = 0usize;
+    let mut cut_cost = 0u64;
+    for l in 0..net.layers.len() {
+        shard_of.push(s);
+        if l + 1 < net.layers.len() && cut_after[l] {
+            cut_cost += costs[l];
+            s += 1;
+        }
+    }
+    ShardPlan { shard_of, num_shards, cut_cost, solver_nodes }
+}
+
+/// Partition the pipeline into exactly `num_shards` contiguous shards
+/// minimizing total inter-shard spike traffic ([`shard_cut_costs`]) under
+/// the per-chip capacity `limits`. Exact: contiguous chain partitioning is
+/// solved by dynamic programming over (layers-consumed, shards-used); the
+/// ILP formulation ([`partition_layers_ilp`]) is pinned to the same
+/// optimum by unit test.
+pub fn partition_layers(
+    net: &QuantNetwork,
+    num_shards: usize,
+    limits: &ShardLimits,
+) -> Result<ShardPlan> {
+    partition_check(net, num_shards, limits)?;
+    let l = net.layers.len();
+    let costs = shard_cut_costs(net);
+    let weights = layer_weight_bytes(net);
+    let cmax = limits.max_layers_per_shard.max(1);
+    const INF: u64 = u64::MAX;
+    // dp[k][i]: min cut cost placing layers 0..i on k chips.
+    let mut dp = vec![vec![INF; l + 1]; num_shards + 1];
+    let mut from = vec![vec![usize::MAX; l + 1]; num_shards + 1];
+    dp[0][0] = 0;
+    for k in 1..=num_shards {
+        for i in k..=l {
+            // Last shard = layers j..i (j decreasing grows the segment).
+            let mut wsum = 0usize;
+            for j in (k - 1..i).rev() {
+                if i - j > cmax {
+                    break;
+                }
+                wsum += weights[j];
+                if limits.chip_weight_budget.is_some_and(|b| wsum > b) {
+                    break;
+                }
+                if dp[k - 1][j] == INF {
+                    continue;
+                }
+                let cut = if j == 0 { 0 } else { costs[j - 1] };
+                let cand = dp[k - 1][j] + cut;
+                if cand < dp[k][i] {
+                    dp[k][i] = cand;
+                    from[k][i] = j;
+                }
+            }
+        }
+    }
+    if dp[num_shards][l] == INF {
+        bail!(
+            "no feasible {num_shards}-way partition of {l} layers \
+             (≤{cmax} layers/chip{})",
+            limits
+                .chip_weight_budget
+                .map(|b| format!(", ≤{b} weight bytes/chip"))
+                .unwrap_or_default()
+        );
+    }
+    let mut cut_after = vec![false; l.saturating_sub(1)];
+    let (mut k, mut i) = (num_shards, l);
+    while k > 0 {
+        let j = from[k][i];
+        if j > 0 {
+            cut_after[j - 1] = true;
+        }
+        i = j;
+        k -= 1;
+    }
+    let plan = plan_from_cuts(net, &cut_after, num_shards, 0);
+    debug_assert_eq!(plan.cut_cost, dp[num_shards][l]);
+    plan.validate(net, limits)?;
+    Ok(plan)
+}
+
+/// The same partitioning problem posed as an explicit ILP over boundary
+/// binaries `y_b` ("cut after layer b"), solved by the in-tree branch &
+/// bound: minimize `Σ cost_b·y_b` subject to exactly `num_shards − 1` cuts
+/// and sliding-window covering constraints — any `max_layers_per_shard`
+/// consecutive boundaries must contain a cut (else some chip hosts more
+/// layers than it has cores), and any minimal layer window whose weights
+/// exceed the chip budget must contain a cut.
+///
+/// [`partition_layers`] (the DP) is the production path; this certifies it
+/// and keeps the solver honest on a second ILP family (equality +
+/// covering constraints, unlike the assignment ILP of eqs. 3–7).
+pub fn partition_layers_ilp(
+    net: &QuantNetwork,
+    num_shards: usize,
+    limits: &ShardLimits,
+) -> Result<ShardPlan> {
+    partition_check(net, num_shards, limits)?;
+    let l = net.layers.len();
+    let costs = shard_cut_costs(net);
+    let weights = layer_weight_bytes(net);
+    let cmax = limits.max_layers_per_shard.max(1);
+    if num_shards == 1 {
+        let plan = ShardPlan::monolithic(l);
+        plan.validate(net, limits)?;
+        return Ok(plan);
+    }
+    let mut p = Problem::minimize();
+    let y: Vec<usize> =
+        (0..l - 1).map(|b| p.add_binary(format!("cut_{b}"), costs[b] as f64)).collect();
+    p.add_exactly_k("num_cuts", &y, (num_shards - 1) as f64);
+    // Core capacity: boundaries i..i+cmax span cmax+1 layers — cut-free,
+    // they would put cmax+1 layers on one chip.
+    if cmax < l {
+        for i in 0..=(l - 1 - cmax) {
+            p.add_cover(format!("len_window_{i}"), &y[i..i + cmax]);
+        }
+    }
+    // Weight budget: minimal over-budget layer windows [a..=d] need a cut
+    // strictly inside (boundaries a..d). Minimal windows dominate larger
+    // ones, so these suffice.
+    if let Some(budget) = limits.chip_weight_budget {
+        for a in 0..l {
+            let mut wsum = 0usize;
+            for d in a..l {
+                wsum += weights[d];
+                if wsum > budget {
+                    // partition_check rejected single over-budget layers,
+                    // so d > a and the boundary range is non-empty.
+                    p.add_cover(format!("weight_window_{a}"), &y[a..d]);
+                    break;
+                }
+            }
+        }
+    }
+    let sol = branch_bound::solve(&p, &BnbConfig::default());
+    if sol.status != Status::Optimal && sol.status != Status::LimitReached {
+        bail!("shard partition ILP solve failed: {:?}", sol.status);
+    }
+    let cut_after: Vec<bool> = y.iter().map(|&v| sol.is_one(v)).collect();
+    let plan = plan_from_cuts(net, &cut_after, num_shards, sol.nodes_explored);
+    plan.validate(net, limits)?;
+    Ok(plan)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -950,6 +1269,150 @@ mod tests {
         let mp = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
         assert!(mp.rounds.len() >= 3, "rounds={}", mp.rounds.len());
         mp.validate(&layer, &cfg).unwrap();
+    }
+
+    // -- shard partitioner ---------------------------------------------------
+
+    /// Network with fully dense layers of the given widths (deterministic
+    /// cut costs: `costs[b] = sizes[b+1] + sizes[b+1]·sizes[b+2]`).
+    fn dense_net(sizes: &[usize]) -> QuantNetwork {
+        let layers = sizes
+            .windows(2)
+            .map(|w| {
+                QuantLayer::new(w[0], w[1], vec![1i8; w[0] * w[1]], 0.1, LifParams::default())
+                    .unwrap()
+            })
+            .collect();
+        QuantNetwork { name: "dense".into(), layers, timesteps: 4 }
+    }
+
+    fn limits(max_layers: usize, budget: Option<usize>) -> ShardLimits {
+        ShardLimits { max_layers_per_shard: max_layers, chip_weight_budget: budget }
+    }
+
+    #[test]
+    fn cut_costs_price_boundary_width_and_fanout() {
+        let net = dense_net(&[2, 1, 8, 8, 1]);
+        // costs[b] = out_dim(b) + nnz(b+1)
+        assert_eq!(shard_cut_costs(&net), vec![1 + 8, 8 + 64, 8 + 8]);
+        assert_eq!(layer_weight_bytes(&net), vec![2, 8, 64, 8]);
+    }
+
+    #[test]
+    fn dp_picks_cheapest_cut_when_unconstrained() {
+        let net = dense_net(&[2, 1, 8, 8, 1]); // costs [9, 72, 16]
+        let plan = partition_layers(&net, 2, &limits(4, None)).unwrap();
+        assert_eq!(plan.cuts(), vec![0], "should cut the cheapest boundary");
+        assert_eq!(plan.cut_cost, 9);
+        assert_eq!(plan.shard_of, vec![0, 1, 1, 1]);
+        plan.validate(&net, &limits(4, None)).unwrap();
+    }
+
+    /// The acceptance-criteria capacity test: with only 2 cores per chip
+    /// the traffic-optimal 1+3 split is infeasible and the partitioner
+    /// must take the more expensive balanced cut instead.
+    #[test]
+    fn partitioner_respects_per_chip_core_capacity() {
+        let net = dense_net(&[2, 1, 8, 8, 1]); // costs [9, 72, 16]
+        let lim = limits(2, None);
+        for plan in [
+            partition_layers(&net, 2, &lim).unwrap(),
+            partition_layers_ilp(&net, 2, &lim).unwrap(),
+        ] {
+            assert_eq!(plan.cuts(), vec![1], "capacity must force the 2+2 split");
+            assert_eq!(plan.cut_cost, 72);
+            for r in plan.ranges() {
+                assert!(r.len() <= 2);
+            }
+            plan.validate(&net, &lim).unwrap();
+        }
+    }
+
+    /// Same forcing via the per-chip weight budget: layer 2 is heavy (64
+    /// bytes), so a budget of 72 forbids co-locating it with both
+    /// neighbours even though cores would allow it.
+    #[test]
+    fn partitioner_respects_chip_weight_budget() {
+        let net = dense_net(&[2, 1, 8, 8, 1]); // weights [2, 8, 64, 8]
+        let lim = limits(4, Some(72));
+        let dp = partition_layers(&net, 2, &lim).unwrap();
+        let ilp = partition_layers_ilp(&net, 2, &lim).unwrap();
+        assert_eq!(dp.cut_cost, ilp.cut_cost);
+        for plan in [dp, ilp] {
+            let weights = layer_weight_bytes(&net);
+            for r in plan.ranges() {
+                assert!(weights[r].iter().sum::<usize>() <= 72);
+            }
+            plan.validate(&net, &lim).unwrap();
+        }
+        // A budget smaller than the heaviest layer is infeasible outright.
+        assert!(partition_layers(&net, 2, &limits(4, Some(10))).is_err());
+        assert!(partition_layers_ilp(&net, 2, &limits(4, Some(10))).is_err());
+    }
+
+    /// The DP and the explicit ILP are the same optimizer: equal optimal
+    /// cost (and both valid) across randomized networks, shard counts,
+    /// and capacity limits.
+    #[test]
+    fn dp_and_ilp_partitioners_agree() {
+        for seed in 0..6u64 {
+            let mut rng = Rng::new(seed);
+            let n_layers = 3 + rng.below(4); // 3..=6
+            let mut sizes = vec![4 + rng.below(12)];
+            for _ in 0..n_layers {
+                sizes.push(2 + rng.below(10));
+            }
+            let mcfg = crate::config::ModelConfig {
+                name: "p".into(),
+                layer_sizes: sizes,
+                timesteps: 3,
+                beta: 0.9,
+                v_threshold: 1.0,
+                v_reset: 0.0,
+            };
+            let net = QuantNetwork::random(&mcfg, 0.4, &mut rng);
+            let lim = limits(1 + rng.below(3), None);
+            for k in 1..=net.layers.len() {
+                let dp = partition_layers(&net, k, &lim);
+                let ilp = partition_layers_ilp(&net, k, &lim);
+                match (dp, ilp) {
+                    (Ok(a), Ok(b)) => {
+                        assert_eq!(a.cut_cost, b.cut_cost, "seed {seed} k {k}");
+                        a.validate(&net, &lim).unwrap();
+                        b.validate(&net, &lim).unwrap();
+                    }
+                    (Err(_), Err(_)) => {} // both infeasible (capacity)
+                    (a, b) => panic!("seed {seed} k {k}: DP {a:?} vs ILP {b:?} disagree"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partitioner_edge_cases_and_validation() {
+        let net = dense_net(&[3, 4, 5, 2]);
+        let lim = limits(4, None);
+        // 1 shard: no cuts, zero cost.
+        let one = partition_layers(&net, 1, &lim).unwrap();
+        assert_eq!(one, ShardPlan::monolithic(3));
+        // shards == layers: every boundary cut.
+        let all = partition_layers(&net, 3, &lim).unwrap();
+        assert_eq!(all.cuts(), vec![0, 1]);
+        assert_eq!(all.cut_cost, shard_cut_costs(&net).iter().sum::<u64>());
+        // shards > layers / zero shards: errors.
+        assert!(partition_layers(&net, 4, &lim).is_err());
+        assert!(partition_layers(&net, 0, &lim).is_err());
+        // validate() rejects structural breakage.
+        let mut broken = all.clone();
+        broken.shard_of = vec![0, 2, 1];
+        assert!(broken.validate(&net, &lim).is_err());
+        let mut wrong_cost = partition_layers(&net, 2, &lim).unwrap();
+        wrong_cost.cut_cost += 1;
+        assert!(wrong_cost.validate(&net, &lim).is_err());
+        let mut over = partition_layers(&net, 2, &lim).unwrap();
+        assert!(over.validate(&net, &limits(1, None)).is_err(), "{over:?} over capacity");
+        over.num_shards = 3;
+        assert!(over.validate(&net, &lim).is_err(), "empty shard accepted");
     }
 
     #[test]

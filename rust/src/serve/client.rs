@@ -10,17 +10,44 @@
 //!   to keep the server's admission window full.
 
 use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::snn::SpikeTrain;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 use super::protocol::{
     decode_stats_reply, write_frame, ErrorCode, ErrorFrame, Frame, FrameKind, FrameReader,
     InferRequest, InferResponse, DEFAULT_MAX_FRAME_LEN,
 };
+
+/// Exponential backoff schedule with jitter: attempt `i` waits
+/// `min(cap, base·2^i)` scaled by a jitter factor uniform in `[0.5, 1.0)`
+/// drawn from a seeded [`Rng`] — so retries from many clients (e.g. the
+/// load generator's N connections racing one server start) spread out
+/// instead of stampeding in lockstep, while any given seed reproduces its
+/// schedule exactly (pinned by unit test).
+pub fn backoff_schedule(
+    attempts: usize,
+    base: Duration,
+    cap: Duration,
+    seed: u64,
+) -> Vec<Duration> {
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    (0..attempts)
+        .map(|i| {
+            let full = base
+                .as_nanos()
+                .saturating_mul(1u128 << i.min(32) as u32)
+                .min(cap.as_nanos());
+            let jitter = 0.5 + 0.5 * rng.f64();
+            Duration::from_nanos((full as f64 * jitter).min(u64::MAX as f64) as u64)
+        })
+        .collect()
+}
 
 /// A successfully decoded INFER_RESPONSE (see [`InferResponse`]).
 pub type InferReply = InferResponse;
@@ -50,9 +77,36 @@ impl Client {
 
     /// [`Self::connect`] with retries — for racing a server that is still
     /// binding (the loadgen-vs-serve startup in `make smoke-serve`).
-    pub fn connect_retry(addr: impl ToSocketAddrs + Copy, attempts: usize, delay: Duration) -> Result<Self> {
+    /// Retries follow [`backoff_schedule`] with base `delay`, capped at
+    /// 16× `delay`. The seed mixes the process id with a per-call counter
+    /// so concurrent callers — including threads of one process —
+    /// desynchronize; callers that need a reproducible schedule use
+    /// [`Self::connect_backoff`] with an explicit seed.
+    pub fn connect_retry(
+        addr: impl ToSocketAddrs + Copy,
+        attempts: usize,
+        delay: Duration,
+    ) -> Result<Self> {
+        static CALL: AtomicU64 = AtomicU64::new(0);
+        let seed = (std::process::id() as u64)
+            ^ CALL.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Self::connect_backoff(addr, attempts, delay, delay * 16, seed)
+    }
+
+    /// [`Self::connect`] retried along an explicit jittered
+    /// [`backoff_schedule`] — callers with many concurrent connections
+    /// (the load generator) pass distinct seeds so their retry storms
+    /// spread out.
+    pub fn connect_backoff(
+        addr: impl ToSocketAddrs + Copy,
+        attempts: usize,
+        base: Duration,
+        cap: Duration,
+        seed: u64,
+    ) -> Result<Self> {
+        let schedule = backoff_schedule(attempts.max(1), base, cap, seed);
         let mut last = None;
-        for _ in 0..attempts.max(1) {
+        for delay in schedule {
             match Self::connect(addr) {
                 Ok(c) => return Ok(c),
                 Err(e) => last = Some(e),
@@ -151,5 +205,66 @@ impl Client {
             Reply::Error(e) => bail!("SHUTDOWN refused: [{}] {}", e.code.name(), e.message),
             other => bail!("expected shutdown ack, got {other:?}"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_grows_caps_and_jitters() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(160);
+        let sched = backoff_schedule(8, base, cap, 42);
+        assert_eq!(sched.len(), 8);
+        for (i, &d) in sched.iter().enumerate() {
+            // Envelope: jitter ∈ [0.5, 1.0) around min(cap, base·2^i).
+            let full = std::cmp::min(cap, base * (1u32 << i.min(16)));
+            assert!(d >= full / 2, "attempt {i}: {d:?} below jitter floor {:?}", full / 2);
+            assert!(d <= full, "attempt {i}: {d:?} above envelope {full:?}");
+        }
+        // The envelope doubles until the cap: the later delays must sit at
+        // the cap's jitter band, strictly above the first delay.
+        assert!(sched[7] >= cap / 2);
+        assert!(sched[0] < cap / 2, "first delay should be near base, got {:?}", sched[0]);
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_per_seed() {
+        let base = Duration::from_millis(5);
+        let cap = Duration::from_secs(1);
+        assert_eq!(backoff_schedule(6, base, cap, 7), backoff_schedule(6, base, cap, 7));
+        // Different seeds jitter differently (with overwhelming likelihood
+        // over 6 draws — this is a fixed-seed check, not a statistical one).
+        assert_ne!(backoff_schedule(6, base, cap, 7), backoff_schedule(6, base, cap, 8));
+    }
+
+    #[test]
+    fn backoff_schedule_edge_shapes() {
+        // Zero attempts → empty; zero base → all-zero delays (busy retry).
+        assert!(backoff_schedule(0, Duration::from_millis(1), Duration::from_secs(1), 1)
+            .is_empty());
+        let zeros = backoff_schedule(4, Duration::ZERO, Duration::from_secs(1), 1);
+        assert!(zeros.iter().all(|d| d.is_zero()));
+        // Huge attempt counts must not overflow the shift.
+        let long = backoff_schedule(80, Duration::from_millis(1), Duration::from_millis(50), 3);
+        assert!(long.iter().all(|&d| d <= Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn connect_backoff_fails_after_schedule_on_dead_port() {
+        // Port 1 on loopback is essentially never listening; the call must
+        // return the last connect error, not hang or panic.
+        let t0 = std::time::Instant::now();
+        let r = Client::connect_backoff(
+            "127.0.0.1:1",
+            2,
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            9,
+        );
+        assert!(r.is_err());
+        assert!(t0.elapsed() < Duration::from_secs(30));
     }
 }

@@ -241,6 +241,71 @@ mod tests {
         assert!(h.quantile_micros(0.0) >= 0.0);
     }
 
+    /// Empty histogram: every percentile and the mean are NaN (rendered as
+    /// JSON null by the STATS snapshot), max and count are zero — a fresh
+    /// server must not report fabricated latencies.
+    #[test]
+    fn histogram_empty_percentiles() {
+        let h = LatencyHistogram::default();
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert!(h.quantile_micros(q).is_nan(), "q={q} on empty histogram");
+        }
+        assert!(h.mean_micros().is_nan());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max_micros(), 0);
+    }
+
+    /// One sample: every quantile collapses to that sample (the bucket
+    /// midpoint estimate is clamped to the observed maximum).
+    #[test]
+    fn histogram_single_sample() {
+        let h = LatencyHistogram::default();
+        h.record_micros(300);
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_micros(q), 300.0, "q={q}");
+        }
+        assert_eq!(h.mean_micros(), 300.0);
+        assert_eq!(h.max_micros(), 300);
+        assert_eq!(h.count(), 1);
+    }
+
+    /// Exact powers of two sit on bucket boundaries: 2^k must land in
+    /// bucket k (half-open `[2^k, 2^(k+1))`), quantiles stay monotone in
+    /// q, and no estimate exceeds the observed maximum.
+    #[test]
+    fn histogram_bucket_boundary_values() {
+        for k in 0..12u32 {
+            let v = 1u64 << k;
+            assert_eq!(
+                LatencyHistogram::bucket_of(v),
+                k as usize,
+                "2^{k} must open bucket {k}"
+            );
+            assert_eq!(
+                LatencyHistogram::bucket_of(v.saturating_sub(1).max(1)),
+                (k as usize).saturating_sub(1).max(0),
+                "2^{k}-1 must close bucket {}",
+                (k as usize).saturating_sub(1)
+            );
+        }
+        // 0 and 1 µs share bucket 0.
+        assert_eq!(LatencyHistogram::bucket_of(0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(1), 0);
+        let h = LatencyHistogram::default();
+        for k in 0..10u32 {
+            h.record_micros(1 << k);
+        }
+        let qs: Vec<f64> =
+            [0.1, 0.3, 0.5, 0.7, 0.9, 1.0].iter().map(|&q| h.quantile_micros(q)).collect();
+        for w in qs.windows(2) {
+            assert!(w[0] <= w[1], "quantiles must be monotone: {qs:?}");
+        }
+        for &q in &qs {
+            assert!(q <= h.max_micros() as f64);
+        }
+        assert_eq!(h.count(), 10);
+    }
+
     #[test]
     fn snapshot_shape() {
         let m = ServeMetrics::default();

@@ -33,7 +33,7 @@ pub mod metrics;
 pub mod protocol;
 pub mod server;
 
-pub use client::{Client, InferReply, Reply};
+pub use client::{backoff_schedule, Client, InferReply, Reply};
 pub use metrics::ServeMetrics;
 pub use protocol::{ErrorCode, FrameKind};
 pub use server::{ModelInfo, ServeConfig, Server};

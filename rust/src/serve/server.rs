@@ -52,6 +52,7 @@ use anyhow::{Context, Result};
 
 use crate::accel::Menage;
 use crate::coordinator::{request_id_of_error, Coordinator, Response};
+use crate::shard::ShardedMenage;
 use crate::util::json::Json;
 
 use super::metrics::ServeMetrics;
@@ -162,6 +163,12 @@ struct Shared {
     /// [`quiesce_after_worker_death`]): the server no longer serves and
     /// the embedding loop should shut it down.
     quiesced: AtomicBool,
+    /// The coordinator's worker-side gauges (lane occupancy), sampled by
+    /// the STATS snapshot.
+    coord_metrics: Arc<crate::coordinator::Metrics>,
+    /// Static shard topology (sharded servers only) — reported verbatim
+    /// as the STATS `shards` block.
+    shards: Option<Json>,
     model: ModelInfo,
     started: Instant,
     readers: Mutex<Vec<JoinHandle<()>>>,
@@ -177,6 +184,32 @@ impl Shared {
         );
         if let Json::Obj(map) = &mut j {
             map.insert("model".to_string(), self.model.to_json());
+            // Lane occupancy (ROADMAP follow-up): how full micro-batches
+            // actually run. `mean`/`max` are bounded by `capacity` (= the
+            // configured lanes-per-worker L).
+            let cm = &self.coord_metrics;
+            let mean = cm.mean_lane_occupancy();
+            map.insert(
+                "lane_occupancy".to_string(),
+                Json::obj(vec![
+                    (
+                        "capacity",
+                        (cm.lane_capacity.load(Ordering::Relaxed) as usize).into(),
+                    ),
+                    (
+                        "dispatches",
+                        (cm.dispatches.load(Ordering::Relaxed) as usize).into(),
+                    ),
+                    ("mean", if mean.is_nan() { Json::Null } else { Json::Num(mean) }),
+                    (
+                        "max",
+                        (cm.max_lane_occupancy.load(Ordering::Relaxed) as usize).into(),
+                    ),
+                ]),
+            );
+            if let Some(shards) = &self.shards {
+                map.insert("shards".to_string(), shards.clone());
+            }
         }
         j
     }
@@ -195,11 +228,9 @@ impl Server {
     /// Bind `addr` (port 0 picks an ephemeral port — read it back via
     /// [`Self::local_addr`]) and start serving `chip` with `cfg`.
     pub fn start(chip: &Menage, addr: impl ToSocketAddrs, cfg: ServeConfig) -> Result<Self> {
+        // Bind before spawning workers: a bind failure (port in use) must
+        // fail fast, not after cloning the model W times.
         let listener = TcpListener::bind(addr).context("binding server socket")?;
-        let local_addr = listener.local_addr()?;
-        // Non-blocking accept so the loop can poll the stop flag.
-        listener.set_nonblocking(true)?;
-
         let coord =
             Coordinator::with_lanes_wait(chip, cfg.workers, cfg.lanes_per_worker, cfg.fill_wait);
         let model = ModelInfo {
@@ -207,8 +238,48 @@ impl Server {
             timesteps: chip.timesteps,
             classes: chip.cores.last().expect("chip has cores").out_dim(),
         };
+        Self::start_inner(coord, model, None, listener, cfg)
+    }
+
+    /// [`Self::start`] over a multi-chip sharded pipeline: every worker
+    /// clones the whole [`ShardedMenage`], and the STATS snapshot gains a
+    /// per-shard `shards` block (layer ranges, dims, estimated cut
+    /// traffic). Wire-level outputs stay bit-identical to a monolithic
+    /// server (`tests/shard_differential.rs` + `tests/serve_roundtrip.rs`).
+    pub fn start_sharded(
+        chip: &ShardedMenage,
+        addr: impl ToSocketAddrs,
+        cfg: ServeConfig,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("binding server socket")?;
+        let coord = Coordinator::sharded_with_lanes_wait(
+            chip,
+            cfg.workers,
+            cfg.lanes_per_worker,
+            cfg.fill_wait,
+        );
+        let model = ModelInfo {
+            input_dim: chip.input_dim(),
+            timesteps: chip.timesteps,
+            classes: chip.output_dim(),
+        };
+        Self::start_inner(coord, model, Some(chip.shards_json()), listener, cfg)
+    }
+
+    fn start_inner(
+        coord: Coordinator,
+        model: ModelInfo,
+        shards: Option<Json>,
+        listener: TcpListener,
+        cfg: ServeConfig,
+    ) -> Result<Self> {
+        let local_addr = listener.local_addr()?;
+        // Non-blocking accept so the loop can poll the stop flag.
+        listener.set_nonblocking(true)?;
+
         let shared = Arc::new(Shared {
             handle: coord.handle(),
+            coord_metrics: Arc::clone(&coord.metrics),
             cfg,
             metrics: Arc::new(ServeMetrics::default()),
             pending: Mutex::new(HashMap::new()),
@@ -218,6 +289,7 @@ impl Server {
             router_stop: AtomicBool::new(false),
             remote_shutdown: AtomicBool::new(false),
             quiesced: AtomicBool::new(false),
+            shards,
             model,
             started: Instant::now(),
             readers: Mutex::new(Vec::new()),

@@ -1,0 +1,544 @@
+//! Multi-chip pipeline-parallel sharding.
+//!
+//! A [`ShardedMenage`] runs one model across several MENAGE chips: the
+//! layer chain is split into contiguous **shards** by the ILP/DP
+//! partitioner ([`crate::mapping::partition_layers`], minimizing
+//! inter-shard spike traffic under per-chip core/memory capacity), each
+//! shard is a full [`Menage`] chip, and per global time step every shard
+//! consumes its predecessor's boundary [`SpikeTrain`] frontier — the same
+//! intra-step forward propagation the cores inside one chip use, lifted to
+//! the chip-to-chip links.
+//!
+//! **Bit-identity.** Sharded execution is pinned bit-identical to
+//! [`Menage::run`] (output trains, modeled cycles, per-core `CoreStats`)
+//! by `tests/shard_differential.rs`, and the equivalence is structural
+//! rather than coincidental:
+//!
+//! * every core is built in **monolithic order from one RNG stream**
+//!   (identical images, identical non-ideal C2C mismatch draws), then the
+//!   chain is split into per-shard chips via [`Menage::from_cores`];
+//! * the run loop visits (shard, core) pairs in exactly the global layer
+//!   order of the monolithic chip, forwarding each boundary frontier
+//!   within the step — the same dataflow, so the same arithmetic in ideal
+//!   *and* non-ideal analog mode;
+//! * modeled cycles take the per-step max across **all** cores of **all**
+//!   shards, modeling chips on one synchronous clock (exactly the
+//!   monolithic cost model).
+//!
+//! Because sharded chips each host at most `num_cores` layers, a sharded
+//! system can carry models **deeper than one chip allows** — the
+//! capacity-scaling case `tests/shard_differential.rs` pins against the
+//! reference model (no monolithic chip exists to compare with there).
+
+use anyhow::{bail, Result};
+
+use crate::accel::{Menage, RunOutput};
+use crate::analog::AnalogParams;
+use crate::config::AcceleratorConfig;
+use crate::mapping::{
+    distill_network, map_layer, partition_layers, shard_cut_costs, ShardLimits, ShardPlan,
+    Strategy,
+};
+use crate::neuracore::NeuraCore;
+use crate::snn::{QuantNetwork, SpikeTrain};
+use crate::util::json::Json;
+
+/// A pipeline of MENAGE chips executing one model (module docs).
+#[derive(Debug, Clone)]
+pub struct ShardedMenage {
+    /// One chip per shard, in pipeline order; shard `s` hosts the
+    /// contiguous layer range `plan.ranges()[s]`.
+    pub shards: Vec<Menage>,
+    pub plan: ShardPlan,
+    /// Estimated traffic cost of each chosen cut (`len = shards − 1`),
+    /// from [`shard_cut_costs`].
+    pub boundary_cost: Vec<u64>,
+    /// Spikes actually forwarded across each cut so far (`len = shards −
+    /// 1`) — the observable the partitioner's estimate is judged against.
+    pub boundary_events: Vec<u64>,
+    pub timesteps: usize,
+    pub inputs_processed: u64,
+    step_scratch: Vec<u32>,
+    lane_scratch: Vec<Vec<u32>>,
+    lane_prev_cycles: Vec<u64>,
+}
+
+impl ShardedMenage {
+    /// Map, distill, and load `net` onto `num_shards` chips described by
+    /// `cfg`. `num_shards` is clamped to the layer count (a shard cannot
+    /// be empty), so `shards > layers` degrades gracefully to one layer
+    /// per chip and `num_shards = 1` is exactly a monolithic build.
+    ///
+    /// Unlike [`Menage::build`], the pipeline may be **deeper than one
+    /// chip**: the only per-chip limit is `cfg.num_cores` layers per
+    /// shard (enforced by the partitioner).
+    pub fn build(
+        net: &QuantNetwork,
+        cfg: &AcceleratorConfig,
+        strategy: Strategy,
+        analog: &AnalogParams,
+        seed: u64,
+        num_shards: usize,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        net.validate()?;
+        if num_shards == 0 {
+            bail!("cannot run on 0 shards");
+        }
+        let k = num_shards.min(net.layers.len());
+        let plan = partition_layers(net, k, &ShardLimits::from_accel(cfg))?;
+        // Per-layer mapping exactly as the monolithic build performs it
+        // (map_network is map_layer per layer plus a chip-level core-count
+        // check that sharding deliberately relaxes).
+        let mappings = net
+            .layers
+            .iter()
+            .map(|l| map_layer(l, cfg, strategy))
+            .collect::<Result<Vec<_>>>()?;
+        for (mp, layer) in mappings.iter().zip(&net.layers) {
+            mp.validate(layer, cfg)?;
+        }
+        let images = distill_network(net, &mappings, cfg)?;
+        // The literal monolithic constructor builds the whole core chain
+        // (one RNG stream in layer order — identical non-ideal mismatch
+        // draws), so bit-identity to `Menage::build` holds by
+        // construction, not by keeping two loops in sync.
+        let chain = Menage::from_images(net, cfg, images, analog, seed)?;
+        Self::from_core_chain(cfg, chain.cores, net.timesteps, plan, shard_cut_costs(net))
+    }
+
+    /// Split a monolithic-order core chain into per-shard chips.
+    fn from_core_chain(
+        cfg: &AcceleratorConfig,
+        mut cores: Vec<NeuraCore>,
+        timesteps: usize,
+        plan: ShardPlan,
+        all_cut_costs: Vec<u64>,
+    ) -> Result<Self> {
+        if cores.len() != plan.shard_of.len() {
+            bail!("{} cores for a {}-layer plan", cores.len(), plan.shard_of.len());
+        }
+        let boundary_cost: Vec<u64> =
+            plan.cuts().iter().map(|&b| all_cut_costs[b]).collect();
+        let mut shards = Vec::with_capacity(plan.num_shards);
+        for range in plan.ranges().into_iter().rev() {
+            let tail = cores.split_off(range.start);
+            shards.push(Menage::from_cores(cfg, tail, timesteps)?);
+        }
+        shards.reverse();
+        let cuts = plan.num_shards - 1;
+        Ok(Self {
+            shards,
+            plan,
+            boundary_cost,
+            boundary_events: vec![0; cuts],
+            timesteps,
+            inputs_processed: 0,
+            step_scratch: Vec::new(),
+            lane_scratch: Vec::new(),
+            lane_prev_cycles: Vec::new(),
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.shards.iter().map(|s| s.cores.len()).sum()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.shards[0].cores[0].in_dim()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.shards.last().unwrap().cores.last().unwrap().out_dim()
+    }
+
+    /// Reassemble the pipeline into one monolithic-shaped [`Menage`]
+    /// carrying every core's accumulated stats — the stats carrier the
+    /// coordinator hands back at shutdown so `merge_chips`, the energy
+    /// report, and the trace figures are shard-agnostic.
+    pub fn into_monolithic(self) -> Menage {
+        let timesteps = self.timesteps;
+        let inputs = self.inputs_processed;
+        let mut shards = self.shards.into_iter();
+        let mut base = shards.next().expect("sharded chip has ≥1 shard");
+        for shard in shards {
+            base.cores.extend(shard.cores);
+        }
+        let mut chip = Menage::from_cores(&base.config, base.cores, timesteps)
+            .expect("non-empty core chain");
+        chip.inputs_processed = inputs;
+        chip
+    }
+
+    /// Run one input through the pipeline (fresh [`RunOutput`]); see
+    /// [`Self::run_into`].
+    pub fn run(&mut self, input: &SpikeTrain) -> Result<RunOutput> {
+        let mut out = RunOutput::default();
+        self.run_into(input, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Menage::run_into`] semantics across chips: per global time step
+    /// the shards execute in pipeline order, each consuming its
+    /// predecessor's boundary frontier of the same step (`trains[l−1]` at
+    /// the cut is exactly the `SpikeTrain` frontier a chip-to-chip link
+    /// would carry). Bit-identical to the monolithic chip by construction
+    /// — same cores, same visit order, same double-buffered scratch
+    /// discipline.
+    pub fn run_into(&mut self, input: &SpikeTrain, out: &mut RunOutput) -> Result<()> {
+        if input.num_neurons != self.input_dim() {
+            bail!(
+                "input has {} neurons, first shard expects {}",
+                input.num_neurons,
+                self.input_dim()
+            );
+        }
+        let t_steps = input.timesteps();
+        let total = self.num_layers();
+        out.trains.resize_with(total, SpikeTrain::default);
+        {
+            let mut l = 0usize;
+            for shard in self.shards.iter_mut() {
+                for core in shard.cores.iter_mut() {
+                    core.reset_membranes();
+                    out.trains[l].reset_to(core.out_dim(), t_steps);
+                    l += 1;
+                }
+            }
+        }
+        out.cycles = 0;
+        let shards = &mut self.shards;
+        let scratch = &mut self.step_scratch;
+        let boundary_events = &mut self.boundary_events;
+        for t in 0..t_steps {
+            // Chips share one synchronous clock: the step's wall cycles
+            // are set by the busiest core of the busiest shard.
+            let mut step_cycles = 0u64;
+            let mut l = 0usize;
+            for (si, shard) in shards.iter_mut().enumerate() {
+                for (ci, core) in shard.cores.iter_mut().enumerate() {
+                    {
+                        let events: &[u32] = if l == 0 {
+                            &input.spikes[t]
+                        } else {
+                            &out.trains[l - 1].spikes[t]
+                        };
+                        if ci == 0 && si > 0 {
+                            // The frontier just crossed a chip boundary.
+                            boundary_events[si - 1] += events.len() as u64;
+                        }
+                        core.push_events(events);
+                    }
+                    let before = core.stats.cycles;
+                    core.step_into(scratch);
+                    step_cycles = step_cycles.max(core.stats.cycles - before);
+                    std::mem::swap(&mut out.trains[l].spikes[t], scratch);
+                    l += 1;
+                }
+            }
+            out.cycles += step_cycles;
+        }
+        self.inputs_processed += 1;
+        Ok(())
+    }
+
+    /// Lane-batched pipeline execution (fresh output vector); see
+    /// [`Self::run_lanes_into`].
+    pub fn run_lanes(&mut self, inputs: &[SpikeTrain]) -> Result<Vec<RunOutput>> {
+        let mut outs = Vec::new();
+        self.run_lanes_into(inputs, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// [`Menage::run_lanes_into`] across chips: every shard's cores carry
+    /// the batch as SIMD lanes, boundary frontiers are forwarded
+    /// shard-to-shard per (step, lane), and per-lane outputs/stats stay
+    /// bit-identical to sequential monolithic runs (same unified engine,
+    /// same visit order — pinned by `tests/shard_differential.rs`).
+    pub fn run_lanes_into(
+        &mut self,
+        inputs: &[SpikeTrain],
+        outs: &mut Vec<RunOutput>,
+    ) -> Result<()> {
+        for (i, input) in inputs.iter().enumerate() {
+            if input.num_neurons != self.input_dim() {
+                bail!(
+                    "lane {i}: input has {} neurons, first shard expects {}",
+                    input.num_neurons,
+                    self.input_dim()
+                );
+            }
+        }
+        let b = inputs.len();
+        outs.resize_with(b, RunOutput::default);
+        if b == 0 {
+            return Ok(());
+        }
+        let total = self.num_layers();
+        for shard in self.shards.iter_mut() {
+            for core in shard.cores.iter_mut() {
+                core.ensure_lanes(b);
+                core.reset_lanes();
+            }
+        }
+        for (i, out) in outs.iter_mut().enumerate() {
+            let t_i = inputs[i].timesteps();
+            out.trains.resize_with(total, SpikeTrain::default);
+            let mut l = 0usize;
+            for shard in self.shards.iter() {
+                for core in shard.cores.iter() {
+                    out.trains[l].reset_to(core.out_dim(), t_i);
+                    l += 1;
+                }
+            }
+            out.cycles = 0;
+        }
+        let t_max = inputs.iter().map(|s| s.timesteps()).max().unwrap_or(0);
+
+        let shards = &mut self.shards;
+        let scratch = &mut self.lane_scratch;
+        scratch.resize_with(b, Vec::new);
+        let prev = &mut self.lane_prev_cycles;
+        prev.resize(b, 0);
+        let boundary_events = &mut self.boundary_events;
+        let mut active: Vec<usize> = Vec::with_capacity(b);
+        let mut step_cycles = vec![0u64; b];
+        for t in 0..t_max {
+            active.clear();
+            active.extend((0..b).filter(|&i| t < inputs[i].timesteps()));
+            for c in step_cycles.iter_mut() {
+                *c = 0;
+            }
+            let mut l = 0usize;
+            for (si, shard) in shards.iter_mut().enumerate() {
+                for (ci, core) in shard.cores.iter_mut().enumerate() {
+                    for (ai, &i) in active.iter().enumerate() {
+                        let events: &[u32] = if l == 0 {
+                            &inputs[i].spikes[t]
+                        } else {
+                            &outs[i].trains[l - 1].spikes[t]
+                        };
+                        if ci == 0 && si > 0 {
+                            boundary_events[si - 1] += events.len() as u64;
+                        }
+                        core.push_events_lane(i, events);
+                        prev[ai] = core.lane_stats(i).cycles;
+                    }
+                    core.step_lanes_into(&active, &mut scratch[..active.len()]);
+                    for (ai, &i) in active.iter().enumerate() {
+                        let delta = core.lane_stats(i).cycles - prev[ai];
+                        step_cycles[i] = step_cycles[i].max(delta);
+                        std::mem::swap(&mut outs[i].trains[l].spikes[t], &mut scratch[ai]);
+                    }
+                    l += 1;
+                }
+            }
+            for &i in &active {
+                outs[i].cycles += step_cycles[i];
+            }
+        }
+        self.inputs_processed += b as u64;
+        Ok(())
+    }
+
+    /// Classify a batch sequentially, reusing one [`RunOutput`].
+    pub fn run_batch(&mut self, inputs: &[SpikeTrain]) -> Result<Vec<(usize, u64)>> {
+        let mut out = RunOutput::default();
+        let mut res = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            self.run_into(input, &mut out)?;
+            res.push((out.predicted_class(), out.cycles));
+        }
+        Ok(res)
+    }
+
+    /// Fold lane-attributed statistics into every core's totals (see
+    /// [`Menage::fold_lane_stats`]).
+    pub fn fold_lane_stats(&mut self) {
+        for shard in self.shards.iter_mut() {
+            shard.fold_lane_stats();
+        }
+    }
+
+    /// Total analog energy across all shards (J).
+    pub fn analog_energy(&self) -> f64 {
+        self.shards.iter().map(|s| s.analog_energy()).sum()
+    }
+
+    /// Total synaptic MACs across all shards.
+    pub fn total_macs(&self) -> u64 {
+        self.shards.iter().map(|s| s.total_macs()).sum()
+    }
+
+    /// Total events dispatched across all shards.
+    pub fn total_events(&self) -> u64 {
+        self.shards.iter().map(|s| s.total_events()).sum()
+    }
+
+    /// Static shard topology as JSON — the `shards` block the serving
+    /// layer's STATS frame reports.
+    pub fn shards_json(&self) -> Json {
+        Json::Arr(
+            self.plan
+                .ranges()
+                .into_iter()
+                .enumerate()
+                .map(|(s, range)| {
+                    let chip = &self.shards[s];
+                    Json::obj(vec![
+                        ("shard", s.into()),
+                        ("layer_lo", range.start.into()),
+                        ("layer_hi", range.end.into()),
+                        ("cores", chip.cores.len().into()),
+                        ("input_dim", chip.cores[0].in_dim().into()),
+                        ("output_dim", chip.cores.last().unwrap().out_dim().into()),
+                        (
+                            "cut_cost_in",
+                            if s == 0 {
+                                0usize.into()
+                            } else {
+                                (self.boundary_cost[s - 1] as usize).into()
+                            },
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::snn::reference_forward;
+    use crate::util::rng::Rng;
+
+    fn model(sizes: &[usize], t: usize) -> ModelConfig {
+        ModelConfig {
+            name: "shard".into(),
+            layer_sizes: sizes.to_vec(),
+            timesteps: t,
+            beta: 0.9,
+            v_threshold: 1.0,
+            v_reset: 0.0,
+        }
+    }
+
+    fn accel(cores: usize) -> AcceleratorConfig {
+        let mut c = AcceleratorConfig::accel1();
+        c.num_cores = cores;
+        c.a_neurons_per_core = 4;
+        c.a_syns_per_core = 4;
+        c.virtual_per_a_neuron = 4;
+        c
+    }
+
+    fn input(dim: usize, t: usize, rate: f64, seed: u64) -> SpikeTrain {
+        let mut rng = Rng::new(seed);
+        SpikeTrain::bernoulli(dim, t, rate, &mut rng)
+    }
+
+    /// A pipeline deeper than one chip: 5 layers on 2-core chips needs 3
+    /// shards and must still match the reference model spike-for-spike.
+    #[test]
+    fn sharding_hosts_models_deeper_than_one_chip() {
+        let mcfg = model(&[20, 14, 10, 8, 6, 4], 6);
+        let mut rng = Rng::new(3);
+        let net = QuantNetwork::random(&mcfg, 0.4, &mut rng);
+        let cfg = accel(2);
+        // Monolithic build is impossible: 5 layers > 2 cores.
+        assert!(Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).is_err());
+        let mut sharded =
+            ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7, 3)
+                .unwrap();
+        assert_eq!(sharded.num_shards(), 3);
+        assert_eq!(sharded.num_layers(), 5);
+        for seed in 0..4 {
+            let st = input(20, 6, 0.25, seed);
+            let golden = reference_forward(&net, &st).unwrap();
+            let out = sharded.run(&st).unwrap();
+            assert!(out.matches_reference(&golden), "seed {seed}");
+        }
+        assert_eq!(sharded.inputs_processed, 4);
+        assert!(sharded.boundary_events.iter().sum::<u64>() > 0, "no boundary traffic seen");
+        assert!(sharded.total_macs() > 0);
+    }
+
+    #[test]
+    fn shards_clamped_to_layers_and_json_shape() {
+        let mcfg = model(&[16, 10, 6], 4);
+        let mut rng = Rng::new(5);
+        let net = QuantNetwork::random(&mcfg, 0.4, &mut rng);
+        let sharded = ShardedMenage::build(
+            &net,
+            &accel(4),
+            Strategy::IlpFlow,
+            &AnalogParams::ideal(),
+            7,
+            99,
+        )
+        .unwrap();
+        assert_eq!(sharded.num_shards(), 2, "shards > layers must clamp to one layer per shard");
+        let j = sharded.shards_json();
+        let Json::Arr(arr) = &j else { panic!("shards_json must be an array") };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("layer_lo").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(arr[1].get("cut_cost_in").unwrap().as_usize().unwrap() as u64,
+                   sharded.boundary_cost[0]);
+        assert!(ShardedMenage::build(
+            &net,
+            &accel(4),
+            Strategy::IlpFlow,
+            &AnalogParams::ideal(),
+            7,
+            0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn into_monolithic_reassembles_core_chain() {
+        let mcfg = model(&[18, 12, 8, 4], 5);
+        let mut rng = Rng::new(8);
+        let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+        let cfg = accel(4);
+        let mut sharded =
+            ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7, 2)
+                .unwrap();
+        let st = input(18, 5, 0.3, 1);
+        sharded.run(&st).unwrap();
+        let total_macs = sharded.total_macs();
+        let chip = sharded.into_monolithic();
+        assert_eq!(chip.cores.len(), 3);
+        assert_eq!(chip.inputs_processed, 1);
+        assert_eq!(chip.total_macs(), total_macs);
+        // Core order preserved: in/out dims chain.
+        for w in chip.cores.windows(2) {
+            assert_eq!(w[0].out_dim(), w[1].in_dim());
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_input_width() {
+        let mcfg = model(&[12, 8, 4], 3);
+        let mut rng = Rng::new(2);
+        let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+        let mut sharded = ShardedMenage::build(
+            &net,
+            &accel(2),
+            Strategy::IlpFlow,
+            &AnalogParams::ideal(),
+            7,
+            2,
+        )
+        .unwrap();
+        assert!(sharded.run(&SpikeTrain::new(99, 3)).is_err());
+        assert!(sharded.run_lanes(&[SpikeTrain::new(99, 3)]).is_err());
+        assert_eq!(sharded.run_lanes(&[]).unwrap().len(), 0);
+    }
+}

@@ -734,6 +734,41 @@ mod tests {
         }
     }
 
+    /// Property: any Bernoulli train (including degenerate 0-neuron and
+    /// 0-step shapes) wire-round-trips exactly, `wire_len` matches the
+    /// encoder, and every strict truncation errors instead of panicking.
+    #[test]
+    fn prop_wire_roundtrip_randomized() {
+        crate::util::prop::check("spiketrain-wire-roundtrip", |rng| {
+            let n = rng.below(120); // 0..=119 neurons
+            let t = rng.below(16); // 0..=15 steps
+            let rate = rng.f64();
+            let st = SpikeTrain::bernoulli(n, t, rate, rng);
+            let mut buf = Vec::new();
+            st.write_wire(&mut buf);
+            if buf.len() != st.wire_len() {
+                return Err(format!("wire_len {} != encoded {}", st.wire_len(), buf.len()));
+            }
+            let (back, consumed) =
+                SpikeTrain::read_wire(&buf).map_err(|e| format!("decode failed: {e}"))?;
+            if consumed != buf.len() {
+                return Err(format!("consumed {consumed} of {}", buf.len()));
+            }
+            if back != st {
+                return Err("round-trip changed the train".to_string());
+            }
+            back.validate().map_err(|e| format!("decoded train invalid: {e}"))?;
+            // A random strict truncation must be a clean error.
+            if !buf.is_empty() {
+                let cut = rng.below(buf.len());
+                if SpikeTrain::read_wire(&buf[..cut]).is_ok() {
+                    return Err(format!("truncation at {cut}/{} decoded", buf.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn wire_decode_consumes_prefix_only() {
         let mut rng = crate::util::rng::Rng::new(10);

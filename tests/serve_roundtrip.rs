@@ -385,6 +385,101 @@ fn graceful_shutdown_drains_in_flight() {
     assert!(TcpStream::connect(addr).is_err(), "server still accepting after shutdown");
 }
 
+/// A sharded server answers bit-identically to a monolithic one and its
+/// STATS snapshot carries the per-shard topology block plus the
+/// lane-occupancy gauges (reported, and bounded by the configured L).
+#[test]
+fn sharded_server_stats_and_bit_identity() {
+    use menage::shard::ShardedMenage;
+    let mcfg = ModelConfig {
+        name: "serve-shard".into(),
+        layer_sizes: vec![30, 16, 8],
+        timesteps: 6,
+        beta: 0.9,
+        v_threshold: 1.0,
+        v_reset: 0.0,
+    };
+    let mut cfg = AcceleratorConfig::accel1();
+    cfg.num_cores = 2;
+    cfg.a_neurons_per_core = 4;
+    cfg.a_syns_per_core = 4;
+    cfg.virtual_per_a_neuron = 4;
+    let mut rng = Rng::new(8);
+    let net = menage::snn::QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let sharded =
+        ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 2, 2)
+            .unwrap();
+    let lanes = 4usize;
+    let server = Server::start_sharded(
+        &sharded,
+        "127.0.0.1:0",
+        ServeConfig { workers: 2, lanes_per_worker: lanes, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    // Bit-identity over the wire vs in-process monolithic execution.
+    let mut local = test_chip();
+    for i in 0..12 {
+        let train = train_for(1, i);
+        let golden = local.run(&train).unwrap();
+        let reply = client.infer(&train).unwrap();
+        assert_eq!(reply.predicted as usize, golden.predicted_class(), "request {i}");
+        assert_eq!(reply.cycles, golden.cycles, "request {i}");
+        assert_eq!(&reply.output, golden.output(), "request {i}");
+    }
+
+    let stats = client.stats().unwrap();
+    // Per-shard topology block.
+    let shards = stats.get("shards").unwrap();
+    let menage::util::json::Json::Arr(arr) = shards else {
+        panic!("shards block must be an array, got {shards:?}");
+    };
+    assert_eq!(arr.len(), 2);
+    assert_eq!(arr[0].get("layer_lo").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(arr[0].get("input_dim").unwrap().as_usize().unwrap(), 30);
+    assert_eq!(arr[1].get("output_dim").unwrap().as_usize().unwrap(), 8);
+    assert!(arr[1].get("cut_cost_in").unwrap().as_usize().unwrap() > 0);
+    // Lane-occupancy gauges: present, bounded by L.
+    let occ = stats.get("lane_occupancy").unwrap();
+    assert_eq!(occ.get("capacity").unwrap().as_usize().unwrap(), lanes);
+    assert!(occ.get("dispatches").unwrap().as_usize().unwrap() > 0);
+    let mean = occ.get("mean").unwrap().as_f64().unwrap();
+    assert!((1.0..=lanes as f64).contains(&mean), "mean occupancy {mean}");
+    let max = occ.get("max").unwrap().as_usize().unwrap();
+    assert!((1..=lanes).contains(&max), "max occupancy {max}");
+
+    let chips = server.shutdown();
+    assert_eq!(chips.len(), 2);
+    let total: u64 = chips.iter().map(|c| c.inputs_processed).sum();
+    assert_eq!(total, 12);
+}
+
+/// A monolithic server's STATS has the occupancy gauges too (and no
+/// shards block) — the follow-up's unit bar: occupancy is reported and
+/// bounded by L even on the un-sharded path.
+#[test]
+fn monolithic_stats_report_lane_occupancy() {
+    let lanes = 4usize;
+    let server = start_server(ServeConfig {
+        workers: 2,
+        lanes_per_worker: lanes,
+        ..ServeConfig::default()
+    });
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    for i in 0..6 {
+        client.infer(&train_for(2, i)).unwrap();
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.get("shards").is_err(), "monolithic server must not report shards");
+    let occ = stats.get("lane_occupancy").unwrap();
+    assert_eq!(occ.get("capacity").unwrap().as_usize().unwrap(), lanes);
+    let mean = occ.get("mean").unwrap().as_f64().unwrap();
+    assert!((1.0..=lanes as f64).contains(&mean), "mean occupancy {mean}");
+    assert!(occ.get("max").unwrap().as_usize().unwrap() <= lanes);
+    server.shutdown();
+}
+
 /// SHUTDOWN frame: refused by default, honored (and visible to the
 /// embedding loop) when enabled — the `loadgen --shutdown-server` path.
 #[test]

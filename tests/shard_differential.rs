@@ -1,0 +1,341 @@
+//! Differential harness pinning multi-chip sharded execution to the
+//! monolithic engine.
+//!
+//! The contract (see `menage::shard` module docs): for any model that fits
+//! one chip, `ShardedMenage` over any shard count must produce
+//! **bit-identical** layer spike trains, modeled cycles, and per-core
+//! `CoreStats` to `Menage::run` — in ideal *and* non-ideal analog mode
+//! (cores are built from the same per-layer mappings and the same RNG
+//! stream, and visited in the same global order per step). The suite
+//! drives randomized models × shard counts × inputs through that
+//! assertion, sequentially and lane-batched, plus the edge cases the
+//! acceptance criteria name: 1 shard, shards > layers, and the
+//! capacity-constrained partitions. Models too deep for one chip — where
+//! no monolithic oracle exists — are pinned to the reference model
+//! instead.
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::coordinator::Coordinator;
+use menage::mapping::{partition_layers, ShardLimits, Strategy};
+use menage::shard::ShardedMenage;
+use menage::snn::{reference_forward, QuantNetwork, SpikeTrain};
+use menage::util::prop;
+use menage::util::rng::Rng;
+
+fn model(sizes: &[usize], t: usize) -> ModelConfig {
+    ModelConfig {
+        name: "shard-diff".into(),
+        layer_sizes: sizes.to_vec(),
+        timesteps: t,
+        beta: 0.9,
+        v_threshold: 1.0,
+        v_reset: 0.0,
+    }
+}
+
+fn accel(cores: usize, m: usize, n: usize) -> AcceleratorConfig {
+    let mut c = AcceleratorConfig::accel1();
+    c.num_cores = cores;
+    c.a_neurons_per_core = m;
+    c.a_syns_per_core = m;
+    c.virtual_per_a_neuron = n;
+    c
+}
+
+/// The core assertion: a sharded pipeline over `num_shards` chips is
+/// bit-identical to the monolithic chip — every layer train, the modeled
+/// cycles, and every core's folded `CoreStats`, per input AND accumulated
+/// across the whole input sequence. Returns an error string for the
+/// property driver.
+fn assert_sharded_equals_monolithic(
+    net: &QuantNetwork,
+    cfg: &AcceleratorConfig,
+    analog: &AnalogParams,
+    num_shards: usize,
+    inputs: &[SpikeTrain],
+    tag: &str,
+) -> Result<(), String> {
+    let mono0 = Menage::build(net, cfg, Strategy::IlpFlow, analog, 7)
+        .map_err(|e| format!("{tag}: mono build failed: {e}"))?;
+    let sharded0 = ShardedMenage::build(net, cfg, Strategy::IlpFlow, analog, 7, num_shards)
+        .map_err(|e| format!("{tag}: sharded build failed: {e}"))?;
+    if num_shards <= net.layers.len() && sharded0.num_shards() != num_shards {
+        return Err(format!(
+            "{tag}: asked for {num_shards} shards, got {}",
+            sharded0.num_shards()
+        ));
+    }
+
+    // Accumulating instances: the folded-stats comparison at the end.
+    let mut mono_acc = mono0.clone();
+    let mut sharded_acc = sharded0.clone();
+    for (k, input) in inputs.iter().enumerate() {
+        // Fresh instances: per-input equality (trains + cycles + stats).
+        let mut mono = mono0.clone();
+        let mut sharded = sharded0.clone();
+        let mout = mono.run(input).map_err(|e| format!("{tag}: mono run: {e}"))?;
+        let sout = sharded.run(input).map_err(|e| format!("{tag}: sharded run: {e}"))?;
+        if mout.cycles != sout.cycles {
+            return Err(format!(
+                "{tag}: input {k}: sharded cycles {} != monolithic {}",
+                sout.cycles, mout.cycles
+            ));
+        }
+        if mout.trains.len() != sout.trains.len() {
+            return Err(format!("{tag}: input {k}: layer count diverges"));
+        }
+        for (l, (a, b)) in sout.trains.iter().zip(&mout.trains).enumerate() {
+            if a.spikes != b.spikes {
+                return Err(format!("{tag}: input {k}: layer {l} spike trains diverge"));
+            }
+        }
+        let scores: Vec<_> = sharded.shards.iter().flat_map(|s| &s.cores).collect();
+        for (l, (sc, mc)) in scores.iter().zip(&mono.cores).enumerate() {
+            if sc.stats != mc.stats {
+                return Err(format!(
+                    "{tag}: input {k}: core {l} CoreStats diverge:\n sharded: {:?}\n mono:    {:?}",
+                    sc.stats, mc.stats
+                ));
+            }
+        }
+        mono_acc.run(input).map_err(|e| e.to_string())?;
+        sharded_acc.run(input).map_err(|e| e.to_string())?;
+    }
+    // Folded across the whole sequence (cumulative counters, the energy
+    // model's input) — and through into_monolithic, the stats carrier the
+    // coordinator hands back.
+    if (sharded_acc.analog_energy() - mono_acc.analog_energy()).abs()
+        > 1e-9 * mono_acc.analog_energy().abs().max(1e-30)
+    {
+        return Err(format!("{tag}: accumulated analog energy diverges"));
+    }
+    let reassembled = sharded_acc.into_monolithic();
+    if reassembled.inputs_processed != inputs.len() as u64 {
+        return Err(format!(
+            "{tag}: reassembled inputs_processed {} != {}",
+            reassembled.inputs_processed,
+            inputs.len()
+        ));
+    }
+    for (l, (sc, mc)) in reassembled.cores.iter().zip(&mono_acc.cores).enumerate() {
+        if sc.stats != mc.stats {
+            return Err(format!("{tag}: folded core {l} CoreStats diverge after {} inputs", inputs.len()));
+        }
+    }
+    Ok(())
+}
+
+fn rand_inputs(rng: &mut Rng, dim: usize, t_max: usize, count: usize) -> Vec<SpikeTrain> {
+    (0..count)
+        .map(|_| {
+            let t = rng.below(t_max + 1);
+            let rate = 0.05 + rng.f64() * 0.4;
+            SpikeTrain::bernoulli(dim, t, rate, rng)
+        })
+        .collect()
+}
+
+/// Randomized models × shard counts × inputs, ideal analog mode.
+#[test]
+fn prop_sharded_bit_identical_ideal() {
+    prop::check_n("sharded-vs-monolithic-ideal", 10, |rng| {
+        let l0 = 8 + rng.below(20);
+        let l1 = 4 + rng.below(12);
+        let l2 = 3 + rng.below(8);
+        let l3 = 2 + rng.below(6);
+        let mcfg = model(&[l0, l1, l2, l3], 3 + rng.below(6));
+        let net = QuantNetwork::random(&mcfg, 0.3 + rng.f64() * 0.5, rng);
+        let cfg = accel(3, 2 + rng.below(4), 2 + rng.below(4));
+        let shards = 1 + rng.below(3); // 1..=3 over 3 layers
+        let count = 1 + rng.below(3);
+        let inputs = rand_inputs(rng, l0, 8, count);
+        assert_sharded_equals_monolithic(
+            &net,
+            &cfg,
+            &AnalogParams::ideal(),
+            shards,
+            &inputs,
+            &format!("ideal k={shards}"),
+        )
+    });
+}
+
+/// Same property in non-ideal analog mode: the C2C mismatch draws come
+/// from one RNG stream consumed in monolithic core order, so even the
+/// per-engine mismatch state is bit-identical.
+#[test]
+fn prop_sharded_bit_identical_nonideal() {
+    prop::check_n("sharded-vs-monolithic-nonideal", 6, |rng| {
+        let l0 = 8 + rng.below(16);
+        let l1 = 4 + rng.below(10);
+        let l2 = 2 + rng.below(6);
+        let mcfg = model(&[l0, l1, l2], 3 + rng.below(5));
+        let net = QuantNetwork::random(&mcfg, 0.3 + rng.f64() * 0.4, rng);
+        let cfg = accel(2, 2 + rng.below(3), 2 + rng.below(3));
+        let shards = 1 + rng.below(2); // 1..=2 over 2 layers
+        let count = 1 + rng.below(3);
+        let inputs = rand_inputs(rng, l0, 6, count);
+        assert_sharded_equals_monolithic(
+            &net,
+            &cfg,
+            &AnalogParams::paper(),
+            shards,
+            &inputs,
+            &format!("nonideal k={shards}"),
+        )
+    });
+}
+
+/// The acceptance-criteria edge cases: 1 shard (the degenerate pipeline)
+/// and shards > layers (clamped to one layer per chip) both stay
+/// bit-identical, in both analog modes; an empty (0-step) train is a
+/// valid input.
+#[test]
+fn shard_count_edge_cases() {
+    let mcfg = model(&[20, 12, 8, 4], 6);
+    let mut rng = Rng::new(11);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let cfg = accel(3, 4, 4);
+    let mut inputs = rand_inputs(&mut rng, 20, 8, 2);
+    inputs.push(SpikeTrain::new(20, 0)); // empty train
+    inputs.push(SpikeTrain::new(20, 4)); // quiescent train
+    for analog in [AnalogParams::ideal(), AnalogParams::paper()] {
+        for shards in [1usize, 2, 3, 99] {
+            assert_sharded_equals_monolithic(
+                &net,
+                &cfg,
+                &analog,
+                shards,
+                &inputs,
+                &format!("edge k={shards}"),
+            )
+            .unwrap();
+        }
+    }
+    // shards > layers really did clamp to one layer per chip.
+    let sharded =
+        ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7, 99)
+            .unwrap();
+    assert_eq!(sharded.num_shards(), 3);
+    for chip in &sharded.shards {
+        assert_eq!(chip.cores.len(), 1);
+    }
+}
+
+/// Lane-batched sharded execution: per-lane outputs, cycles, and per-core
+/// per-lane stats bit-identical to sequential monolithic runs on fresh
+/// chips — the same contract `tests/lanes_differential.rs` pins for the
+/// monolithic engine, lifted across chips (both modes).
+#[test]
+fn sharded_lanes_match_monolithic_sequential() {
+    let mcfg = model(&[24, 14, 8, 4], 6);
+    let mut rng = Rng::new(21);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let cfg = accel(3, 4, 3);
+    for analog in [AnalogParams::ideal(), AnalogParams::paper()] {
+        let mono0 = Menage::build(&net, &cfg, Strategy::IlpFlow, &analog, 7).unwrap();
+        let mut sharded =
+            ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &analog, 7, 2).unwrap();
+        // Heterogeneous lengths, including an empty lane.
+        let mut inputs = rand_inputs(&mut rng, 24, 9, 4);
+        inputs.push(SpikeTrain::new(24, 0));
+        let louts = sharded.run_lanes(&inputs).unwrap();
+        assert_eq!(louts.len(), inputs.len());
+        for (i, input) in inputs.iter().enumerate() {
+            let mut seq = mono0.clone();
+            let sout = seq.run(input).unwrap();
+            assert_eq!(louts[i].cycles, sout.cycles, "lane {i}: cycles");
+            for (l, (a, b)) in louts[i].trains.iter().zip(&sout.trains).enumerate() {
+                assert_eq!(a.spikes, b.spikes, "lane {i} layer {l}");
+            }
+            let cores: Vec<_> = sharded.shards.iter().flat_map(|s| &s.cores).collect();
+            for (l, (sc, mc)) in cores.iter().zip(&seq.cores).enumerate() {
+                assert_eq!(sc.lane_stats(i), &mc.stats, "lane {i} core {l}: stats");
+            }
+        }
+        assert_eq!(sharded.inputs_processed, inputs.len() as u64);
+    }
+}
+
+/// The coordinator's sharded backend: predictions, cycles, and output
+/// trains bit-identical to the monolithic coordinator under lane packing,
+/// with the shutdown chips carrying the served work.
+#[test]
+fn sharded_coordinator_matches_monolithic() {
+    let mcfg = model(&[30, 16, 8], 6);
+    let mut rng = Rng::new(31);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let cfg = accel(2, 4, 4);
+    let mono = Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let sharded =
+        ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7, 2)
+            .unwrap();
+    let ins: Vec<(SpikeTrain, Option<usize>)> = (0..20)
+        .map(|s| {
+            let mut r = Rng::new(500 + s as u64);
+            (SpikeTrain::bernoulli(30, 6, 0.25, &mut r), Some(s % 8))
+        })
+        .collect();
+
+    let mut plain = Coordinator::new(&mono, 1);
+    let baseline = plain.run_batch(ins.clone()).unwrap();
+    plain.shutdown();
+
+    let mut coord = Coordinator::sharded_with_lanes_wait(
+        &sharded,
+        2,
+        4,
+        std::time::Duration::from_micros(200),
+    );
+    let res = coord.run_batch(ins).unwrap();
+    assert_eq!(res.len(), baseline.len());
+    for (r, b) in res.iter().zip(&baseline) {
+        assert_eq!(r.id, b.id);
+        assert_eq!(r.predicted, b.predicted, "request {}", r.id);
+        assert_eq!(r.cycles, b.cycles, "request {}", r.id);
+        assert_eq!(r.output, b.output, "request {}", r.id);
+    }
+    // Occupancy gauges live on the sharded path too.
+    assert!(coord.metrics.mean_lane_occupancy() >= 1.0);
+    assert!(coord.metrics.max_lane_occupancy.load(std::sync::atomic::Ordering::Relaxed) <= 4);
+    let chips = coord.shutdown();
+    assert_eq!(chips.len(), 2);
+    // Reassembled monolithic-shaped carriers: full layer chain each.
+    for chip in &chips {
+        assert_eq!(chip.cores.len(), 2);
+    }
+    let total: u64 = chips.iter().map(|c| c.inputs_processed).sum();
+    assert_eq!(total, 20);
+    let macs: u64 = chips.iter().map(|c| c.total_macs()).sum();
+    assert!(macs > 0, "sharded lane work invisible after shutdown fold");
+}
+
+/// Capacity scaling: a model deeper than one chip runs only sharded —
+/// pinned against the reference model, and the partitioner's plan
+/// respects the per-chip core limit (validated plus spot-checked here).
+#[test]
+fn deep_model_runs_sharded_and_matches_reference() {
+    let mcfg = model(&[16, 12, 10, 8, 6, 4, 4], 5); // 6 layers
+    let mut rng = Rng::new(41);
+    let net = QuantNetwork::random(&mcfg, 0.4, &mut rng);
+    let cfg = accel(2, 4, 4); // 2 cores/chip → needs ≥3 shards
+    assert!(Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).is_err());
+    let plan = partition_layers(&net, 3, &ShardLimits::from_accel(&cfg)).unwrap();
+    for r in plan.ranges() {
+        assert!(r.len() <= 2, "plan shard wider than the chip: {r:?}");
+    }
+    let mut sharded =
+        ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7, 3)
+            .unwrap();
+    for seed in 0..3 {
+        let st = SpikeTrain::bernoulli(16, 5, 0.3, &mut Rng::new(70 + seed));
+        let golden = reference_forward(&net, &st).unwrap();
+        let out = sharded.run(&st).unwrap();
+        assert!(out.matches_reference(&golden), "seed {seed}");
+        // Lane path agrees with the sequential sharded path too.
+        let louts = sharded.run_lanes(std::slice::from_ref(&st)).unwrap();
+        assert_eq!(louts[0].trains.last().unwrap().spikes, out.output().spikes);
+    }
+}
