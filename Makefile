@@ -8,8 +8,10 @@
 CARGO ?= cargo
 ## Loopback port for the serve smoke test (override on collision).
 SMOKE_PORT ?= 7471
+## Loopback port for the chaos smoke test (override on collision).
+CHAOS_PORT ?= 7473
 
-.PHONY: verify build test test-lanes test-serve test-shard smoke-serve smoke-shard lint fmt clippy bench-hotpath bench clean
+.PHONY: verify build test test-lanes test-serve test-shard test-chaos chaos smoke-serve smoke-shard smoke-chaos lint fmt clippy bench-hotpath bench clean
 
 verify: build test test-lanes test-shard
 
@@ -35,6 +37,38 @@ test-serve:
 ## bit-identical to the monolithic engine (also covered by `test`).
 test-shard:
 	$(CARGO) test -q --test shard_differential
+
+## The robustness gate: wire-protocol fuzz, hardware fault-plan
+## determinism, and the self-healing chaos suite (injected worker
+## panics, dropped responses, connection resets, bounded shutdown with
+## dead workers). The test half is also covered by `test`; kept
+## addressable so CI surfaces it separately, then the CLI smoke drives
+## the same machinery end-to-end.
+chaos: test-chaos smoke-chaos
+
+test-chaos:
+	$(CARGO) test -q --test protocol_fuzz --test chaos --test failure_injection
+
+## End-to-end self-healing smoke over loopback, bounded runtime: a server
+## with BOTH planes of fault injection armed (analog hardware faults plus
+## serving-layer chaos — worker panics, dropped responses, connection
+## resets), driven by loadgen, which retries transient failures and exits
+## non-zero only on terminal loss: a dropped/mismatched/unanswered
+## request despite recovery.
+smoke-chaos: build
+	./target/release/menage serve --synthetic --model nmnist \
+		--addr 127.0.0.1:$(CHAOS_PORT) --workers 2 --lanes 4 \
+		--duration-secs 120 --allow-remote-shutdown \
+		--faults seed=7,stuck=0.02,dead=0.01,flip=0.0005 \
+		--chaos panic=40,drop=60,reset=90 & \
+	SERVER_PID=$$!; \
+	sleep 1; \
+	if ./target/release/menage loadgen --addr 127.0.0.1:$(CHAOS_PORT) \
+		--requests 256 --connections 8 --pipeline 4 --shutdown-server; then \
+		wait $$SERVER_PID; \
+	else \
+		kill $$SERVER_PID 2>/dev/null; wait $$SERVER_PID 2>/dev/null; exit 1; \
+	fi
 
 ## CLI-level sharding smoke, bounded runtime: run a small synthetic model
 ## through a 2-shard pipeline AND a monolithic oracle in one process;

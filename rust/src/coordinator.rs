@@ -49,10 +49,28 @@
 //! lane packing, where one failure arrives alongside many successes). The
 //! successes a failing drain consumed stay retrievable via
 //! [`Coordinator::take_salvaged_responses`].
+//!
+//! **Worker supervision** ([`Coordinator::heal`]): a worker parks every
+//! batch it steals in a per-worker *held slot* (an `Arc<Mutex<Vec<Request>>>`)
+//! and removes each request only after its response is on the results
+//! channel. If the worker panics — injected via
+//! [`Coordinator::inject_worker_panics`] or real — the thread dies with
+//! the slot still populated; `heal` (called from every receive path's
+//! poll loop) detects the dead thread, salvages the held requests through
+//! the poisoned lock, resubmits each at most once (then fails it with a
+//! typed, id-prefixed error), and respawns the worker from a pristine
+//! backend clone so capacity self-heals. Locking throughout uses
+//! [`crate::fault::lock_recover`]: a poisoned mutex is a fact to recover
+//! from, not a reason for 40 other threads to cascade-panic. The
+//! coordinator keeps a clone of the results sender, so the channel stays
+//! open across worker deaths and recovery errors always have somewhere to
+//! go; the price is that "all workers terminated" is detected by
+//! supervision (`heal` fails queued work when no worker is left) rather
+//! than by channel disconnection.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -60,9 +78,14 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::accel::Menage;
+use crate::fault::{lock_recover, recover, RecoveryStats};
 use crate::shard::ShardedMenage;
 use crate::snn::SpikeTrain;
 use crate::util::stats::Summary;
+
+/// Supervision poll period: how long the receive paths block on the
+/// results channel between [`Coordinator::heal`] passes.
+const HEAL_POLL: Duration = Duration::from_millis(25);
 
 /// What a worker thread executes requests on: one chip, or a sharded
 /// pipeline of chips. Both expose the same run surface (the sharded path
@@ -108,6 +131,22 @@ impl Backend {
         }
     }
 
+    fn has_faults(&self) -> bool {
+        match self {
+            Backend::Mono(c) => c.has_faults(),
+            Backend::Sharded(s) => s.has_faults(),
+        }
+    }
+
+    /// `(stuck_row_hits, dead_slot_hits, events_bit_flipped)` accumulated
+    /// across every core (lane stats included, pre-fold).
+    fn fault_counters(&self) -> (u64, u64, u64) {
+        match self {
+            Backend::Mono(c) => c.fault_counters(),
+            Backend::Sharded(s) => s.fault_counters(),
+        }
+    }
+
     /// Collapse into the monolithic-shaped stats carrier shutdown hands
     /// back (sharded cores are reassembled in global layer order).
     fn into_chip(self) -> Menage {
@@ -125,6 +164,11 @@ pub struct Request {
     pub input: SpikeTrain,
     /// Optional ground-truth label (accuracy accounting).
     pub label: Option<usize>,
+    /// Times this request has been resubmitted after losing its worker to
+    /// a panic. At most one retry: the second loss yields a typed error —
+    /// a request that kills two workers is presumed to be the murder
+    /// weapon, not a bystander.
+    pub attempts: u8,
 }
 
 /// One inference response.
@@ -246,7 +290,7 @@ impl SharedQueue {
     /// waited on — they belong to the other workers.
     fn steal_batch(&self, max: usize, out: &mut Vec<Request>) -> bool {
         out.clear();
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_recover(&self.state);
         loop {
             if !s.jobs.is_empty() {
                 let fair = s.jobs.len().div_ceil(self.workers).max(1);
@@ -262,7 +306,7 @@ impl SharedQueue {
             if s.shutdown {
                 return false;
             }
-            s = self.available.wait(s).unwrap();
+            s = recover(self.available.wait(s));
         }
         if out.len() >= max || self.fill_wait.is_zero() || !s.jobs.is_empty() {
             return true;
@@ -275,7 +319,7 @@ impl SharedQueue {
             else {
                 break;
             };
-            let (guard, timeout) = self.available.wait_timeout(s, left).unwrap();
+            let (guard, timeout) = recover(self.available.wait_timeout(s, left));
             s = guard;
             // Fair share of whatever arrived while parked.
             let fair = s.jobs.len().div_ceil(self.workers).max(1);
@@ -294,29 +338,79 @@ impl SharedQueue {
     }
 
     fn push(&self, req: Request) {
-        self.state.lock().unwrap().jobs.push_back(req);
+        lock_recover(&self.state).jobs.push_back(req);
+        self.available.notify_one();
+    }
+
+    /// Requeue a salvaged request at the *front* so a retry does not also
+    /// pay the queue's full latency a second time.
+    fn push_front(&self, req: Request) {
+        lock_recover(&self.state).jobs.push_front(req);
         self.available.notify_one();
     }
 
     /// Requests queued but not yet stolen by a worker — the backpressure
     /// signal the serving layer's admission control and STATS report read.
     fn depth(&self) -> usize {
-        self.state.lock().unwrap().jobs.len()
+        lock_recover(&self.state).jobs.len()
+    }
+
+    /// Take everything still queued — used when no worker is left to
+    /// serve it, so each request can be failed with a typed error instead
+    /// of waiting forever.
+    fn drain_remaining(&self) -> Vec<Request> {
+        lock_recover(&self.state).jobs.drain(..).collect()
+    }
+
+    fn is_shutdown(&self) -> bool {
+        lock_recover(&self.state).shutdown
     }
 
     fn shutdown(&self) {
-        self.state.lock().unwrap().shutdown = true;
+        lock_recover(&self.state).shutdown = true;
         self.available.notify_all();
     }
+}
+
+/// Everything a worker thread shares with the coordinator — bundled so
+/// [`Coordinator::heal`] can respawn a worker with one clone-per-field.
+struct WorkerCtx {
+    queue: Arc<SharedQueue>,
+    metrics: Arc<Metrics>,
+    recovery: Arc<RecoveryStats>,
+    results_tx: Sender<Result<Response>>,
+    /// This worker's held slot: the batch it is currently processing.
+    held: Arc<Mutex<Vec<Request>>>,
+    lanes_per_worker: usize,
 }
 
 /// Multi-worker inference service over cloned [`Menage`] chips with a
 /// shared work-stealing request queue (module docs).
 pub struct Coordinator {
-    workers: Vec<JoinHandle<Menage>>,
+    /// `None` marks a worker slot whose thread died and was not (or could
+    /// no longer be) respawned.
+    workers: Vec<Option<JoinHandle<Menage>>>,
+    /// Per-worker held slots (module docs §Worker supervision).
+    held: Vec<Arc<Mutex<Vec<Request>>>>,
     queue: Arc<SharedQueue>,
     results_rx: Receiver<Result<Response>>,
+    /// Kept open so supervision can emit typed errors for salvaged
+    /// requests and the channel never disconnects under worker deaths.
+    results_tx: Sender<Result<Response>>,
     pub metrics: Arc<Metrics>,
+    /// Fault/recovery counters + chaos triggers, shared with workers and
+    /// the serving layer's STATS report.
+    recovery: Arc<RecoveryStats>,
+    /// Pristine backend template used to rebuild panicked workers.
+    template: Backend,
+    lanes_per_worker: usize,
+    /// Respawn budget: after this many respawns the coordinator stops
+    /// rebuilding workers (a fault so repeatable that every worker dies on
+    /// it must degrade capacity, not burn CPU rebuilding chips forever).
+    respawns_left: usize,
+    /// Chips recovered from workers that exited cleanly during a
+    /// shutdown/heal race — handed back by [`Self::shutdown`].
+    dead_chips: Vec<Menage>,
     /// Shared with every [`SubmitHandle`] so concurrent submitters (e.g.
     /// the TCP server's per-connection readers) allocate disjoint ids.
     next_id: Arc<AtomicU64>,
@@ -407,137 +501,40 @@ impl Coordinator {
         assert!(lanes_per_worker > 0);
         let metrics = Arc::new(Metrics::default());
         metrics.lane_capacity.store(lanes_per_worker as u64, Ordering::Relaxed);
+        let recovery = Arc::new(RecoveryStats::default());
         let queue = Arc::new(SharedQueue::new(num_workers, fill_wait));
         let (results_tx, results_rx) = mpsc::channel::<Result<Response>>();
         let mut workers = Vec::with_capacity(num_workers);
+        let mut held = Vec::with_capacity(num_workers);
         for _ in 0..num_workers {
-            let results_tx = results_tx.clone();
-            let metrics = Arc::clone(&metrics);
-            let queue = Arc::clone(&queue);
-            let mut chip = backend.clone();
-            workers.push(std::thread::spawn(move || {
-                let record = |out: &crate::accel::RunOutput,
-                              req: &Request,
-                              sim_latency: Duration|
-                 -> Response {
-                    let predicted = out.predicted_class();
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics.total_cycles.fetch_add(out.cycles, Ordering::Relaxed);
-                    if let Some(label) = req.label {
-                        metrics.labelled.fetch_add(1, Ordering::Relaxed);
-                        if label == predicted {
-                            metrics.correct.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                    metrics.latency.lock().unwrap().add(sim_latency.as_secs_f64());
-                    Response {
-                        id: req.id,
-                        predicted,
-                        cycles: out.cycles,
-                        sim_latency,
-                        label: req.label,
-                        output: out.output().clone(),
-                    }
-                };
-                let mut out = crate::accel::RunOutput::default();
-                let mut lane_outs: Vec<crate::accel::RunOutput> = Vec::new();
-                let mut batch: Vec<Request> = Vec::new();
-                let mut lane_reqs: Vec<Request> = Vec::new();
-                let mut inputs: Vec<SpikeTrain> = Vec::new();
-                let mut disconnected = false;
-                while !disconnected && queue.steal_batch(lanes_per_worker, &mut batch) {
-                    if batch.len() == 1 {
-                        // Single request: the sequential engine (identical
-                        // to the pre-lane coordinator).
-                        let req = batch.pop().unwrap();
-                        // Occupancy gauges count only valid dispatched
-                        // requests — the lane path filters width
-                        // mismatches before its gauges, so the singleton
-                        // path must too or the metric's meaning would
-                        // shift with queue depth.
-                        if req.input.num_neurons == chip.input_dim() {
-                            metrics.dispatches.fetch_add(1, Ordering::Relaxed);
-                            metrics.lanes_dispatched.fetch_add(1, Ordering::Relaxed);
-                            metrics.max_lane_occupancy.fetch_max(1, Ordering::Relaxed);
-                        }
-                        let t0 = Instant::now();
-                        let res = chip
-                            .run_into(&req.input, &mut out)
-                            .map(|()| record(&out, &req, t0.elapsed()))
-                            // Every worker error carries the `request {id}:`
-                            // prefix (see [`request_id_of_error`]) so a
-                            // response router can attribute it.
-                            .map_err(|e| anyhow!("request {}: {e:#}", req.id));
-                        disconnected = results_tx.send(res).is_err();
-                        continue;
-                    }
-                    // Lane packing. Width mismatches are answered
-                    // individually up front so one bad request cannot
-                    // poison (or drop responses for) the rest of the
-                    // batch.
-                    let expect = chip.input_dim();
-                    let t0 = Instant::now();
-                    lane_reqs.clear();
-                    inputs.clear();
-                    for mut req in batch.drain(..) {
-                        if req.input.num_neurons != expect {
-                            let err = anyhow!(
-                                "request {}: input has {} neurons, first core expects {expect}",
-                                req.id,
-                                req.input.num_neurons
-                            );
-                            disconnected |= results_tx.send(Err(err)).is_err();
-                        } else {
-                            // Move the train into the lane staging buffer
-                            // (no clone); the Request keeps id/label for
-                            // the response.
-                            inputs.push(std::mem::take(&mut req.input));
-                            lane_reqs.push(req);
-                        }
-                    }
-                    if lane_reqs.is_empty() || disconnected {
-                        continue;
-                    }
-                    metrics.dispatches.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .lanes_dispatched
-                        .fetch_add(lane_reqs.len() as u64, Ordering::Relaxed);
-                    metrics
-                        .max_lane_occupancy
-                        .fetch_max(lane_reqs.len() as u64, Ordering::Relaxed);
-                    match chip.run_lanes_into(&inputs, &mut lane_outs) {
-                        Ok(()) => {
-                            let sim_latency = t0.elapsed();
-                            for (req, o) in lane_reqs.iter().zip(lane_outs.iter()) {
-                                let resp = record(o, req, sim_latency);
-                                disconnected |= results_tx.send(Ok(resp)).is_err();
-                            }
-                        }
-                        Err(e) => {
-                            // One response per request, even on a whole-
-                            // batch failure: nothing may be lost.
-                            for req in &lane_reqs {
-                                let err =
-                                    anyhow!("request {}: lane batch failed: {e}", req.id);
-                                disconnected |= results_tx.send(Err(err)).is_err();
-                            }
-                        }
-                    }
-                }
-                // Collapse lane-attributed work into the core totals so
-                // the chips handed back by shutdown() report everything
-                // they served (merge_chips/energy/trace read core stats).
-                chip.fold_lane_stats();
-                // Sharded pipelines hand back one monolithic-shaped stats
-                // carrier (cores reassembled in global layer order).
-                chip.into_chip()
-            }));
+            let slot: Arc<Mutex<Vec<Request>>> = Arc::new(Mutex::new(Vec::new()));
+            workers.push(Some(spawn_worker(
+                backend.clone(),
+                WorkerCtx {
+                    queue: Arc::clone(&queue),
+                    metrics: Arc::clone(&metrics),
+                    recovery: Arc::clone(&recovery),
+                    results_tx: results_tx.clone(),
+                    held: Arc::clone(&slot),
+                    lanes_per_worker,
+                },
+            )));
+            held.push(slot);
         }
         Self {
             workers,
+            held,
             queue,
             results_rx,
+            results_tx,
             metrics,
+            recovery,
+            template: backend,
+            lanes_per_worker,
+            // 8 rebuilds per configured worker before supervision stops
+            // throwing silicon at a fault that keeps killing it.
+            respawns_left: num_workers * 8,
+            dead_chips: Vec::new(),
             next_id: Arc::new(AtomicU64::new(0)),
             in_flight: Arc::new(AtomicUsize::new(0)),
             started: Instant::now(),
@@ -550,7 +547,7 @@ impl Coordinator {
     pub fn submit(&mut self, input: SpikeTrain, label: Option<usize>) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.in_flight.fetch_add(1, Ordering::Relaxed);
-        self.queue.push(Request { id, input, label });
+        self.queue.push(Request { id, input, label, attempts: 0 });
         id
     }
 
@@ -583,35 +580,36 @@ impl Coordinator {
         self.in_flight.load(Ordering::Relaxed)
     }
 
-    /// One blocking receive. `None` means the results channel is dead (all
-    /// workers terminated) — distinct from a worker-sent `Err`, which does
-    /// consume an in-flight request.
-    fn recv_inner(&mut self) -> Option<Result<Response>> {
-        match self.results_rx.recv() {
-            Ok(res) => {
-                // Decrement before propagating a worker error: the request
-                // is done either way.
-                self.in_flight.fetch_sub(1, Ordering::Relaxed);
-                Some(res)
-            }
-            Err(_) => None,
-        }
+    /// Consume one in-flight slot, saturating at zero (a panic window can
+    /// in principle produce a duplicate response for a resubmitted
+    /// request; an underflowed counter must never wedge the service).
+    fn consume_in_flight(&self) {
+        let _ = self
+            .in_flight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1));
     }
 
     /// Bounded [`Self::recv`]: block up to `timeout` for one result.
     /// `None` means the timeout lapsed with nothing in the channel (not an
     /// error — retry, or check a stop flag, as the serving layer's router
-    /// thread does). A dead results channel yields the same terminal error
-    /// as [`Self::recv`], with the in-flight count zeroed so caller loops
-    /// terminate.
+    /// thread does); a [`Self::heal`] pass runs on every timeout so dead
+    /// workers are detected even on an idle service. A dead results
+    /// channel yields the same terminal error as [`Self::recv`], with the
+    /// in-flight count zeroed so caller loops terminate.
     pub fn recv_timeout(&mut self, timeout: Duration) -> Option<Result<Response>> {
         match self.results_rx.recv_timeout(timeout) {
             Ok(res) => {
-                self.in_flight.fetch_sub(1, Ordering::Relaxed);
+                self.consume_in_flight();
                 Some(res)
             }
-            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Timeout) => {
+                self.heal();
+                None
+            }
             Err(RecvTimeoutError::Disconnected) => {
+                // Defensive: the coordinator keeps a sender, so this arm
+                // is unreachable in practice — but if it ever fires,
+                // terminate caller loops instead of spinning.
                 let n = self.in_flight.swap(0, Ordering::Relaxed);
                 Some(Err(anyhow!(
                     "all workers terminated with {n} requests in flight"
@@ -622,16 +620,26 @@ impl Coordinator {
 
     /// Block until one result is available. A received `Err` still counts
     /// as a consumed in-flight request (so a failed sample cannot make
-    /// [`Self::drain`] wait forever). If the results channel is dead (all
-    /// workers terminated), nothing in flight can ever arrive: the
-    /// in-flight count is zeroed so `recv`/`drain`/streaming loops
-    /// terminate instead of yielding the same error forever.
+    /// [`Self::drain`] wait forever). The wait is a poll loop with a
+    /// [`Self::heal`] pass per [`HEAL_POLL`] tick: a panicked worker's
+    /// held requests are salvaged (resubmitted once, then failed typed)
+    /// instead of blocking this receive forever.
     pub fn recv(&mut self) -> Result<Response> {
-        match self.recv_inner() {
-            Some(res) => res,
-            None => {
-                let n = self.in_flight.swap(0, Ordering::Relaxed);
-                Err(anyhow!("all workers terminated with {n} requests in flight"))
+        loop {
+            match self.results_rx.recv_timeout(HEAL_POLL) {
+                Ok(res) => {
+                    self.consume_in_flight();
+                    return res;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    self.heal();
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    let n = self.in_flight.swap(0, Ordering::Relaxed);
+                    return Err(anyhow!(
+                        "all workers terminated with {n} requests in flight"
+                    ));
+                }
             }
         }
     }
@@ -650,15 +658,27 @@ impl Coordinator {
         let mut out = Vec::with_capacity(self.in_flight());
         let mut first_err = None;
         while self.in_flight() > 0 {
-            match self.recv_inner() {
-                Some(Ok(r)) => out.push(r),
-                Some(Err(e)) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
+            match self.results_rx.recv_timeout(HEAL_POLL) {
+                Ok(res) => {
+                    self.consume_in_flight();
+                    match res {
+                        Ok(r) => out.push(r),
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
                     }
                 }
-                None => {
-                    // Channel dead: nothing else will ever arrive.
+                Err(RecvTimeoutError::Timeout) => {
+                    // A dead worker is the only way a drain can stall:
+                    // salvage its held requests (retry once, then typed
+                    // error) so this loop always terminates.
+                    self.heal();
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Defensive (the coordinator keeps a sender): nothing
+                    // else will ever arrive.
                     if first_err.is_none() {
                         first_err = Some(anyhow!(
                             "all workers terminated with {} requests in flight",
@@ -725,15 +745,314 @@ impl Coordinator {
         self.metrics.throughput(self.started.elapsed())
     }
 
+    /// The shared fault/recovery counter block (the STATS frame's
+    /// `recovery`/`faults` source).
+    pub fn recovery(&self) -> Arc<RecoveryStats> {
+        Arc::clone(&self.recovery)
+    }
+
+    /// Chaos knob: make workers panic on every `every`-th stolen batch
+    /// (0 disarms). The panic fires after the batch is parked in the held
+    /// slot and before anything is answered, so supervision has the full
+    /// batch to salvage — the honest worst case.
+    pub fn inject_worker_panics(&self, every: u64) {
+        self.recovery.panic_trigger.arm(every);
+    }
+
+    /// Worker threads currently believed alive.
+    pub fn alive_workers(&self) -> usize {
+        self.workers
+            .iter()
+            .filter(|w| w.as_ref().is_some_and(|h| !h.is_finished()))
+            .count()
+    }
+
+    /// One supervision pass (module docs §Worker supervision): detect dead
+    /// worker threads, salvage their held requests (resubmit each at most
+    /// once, then fail it with a typed `request <id>:` error), respawn the
+    /// worker from the pristine backend template while the respawn budget
+    /// lasts, and — if no worker is left alive — fail everything still
+    /// queued so no request waits on a service that cannot serve it.
+    /// Returns the number of workers respawned. Cheap when nothing is
+    /// wrong (one `is_finished` check per worker); runs automatically from
+    /// every receive path's poll loop.
+    pub fn heal(&mut self) -> usize {
+        if self.queue.is_shutdown() {
+            // Workers exiting after shutdown is the normal drain-and-leave
+            // path, not a fault; shutdown() handles their remains.
+            return 0;
+        }
+        let mut respawned = 0;
+        for w in 0..self.workers.len() {
+            let finished = self.workers[w].as_ref().is_some_and(|h| h.is_finished());
+            if !finished {
+                continue;
+            }
+            let handle = self.workers[w].take().expect("checked above");
+            match handle.join() {
+                Ok(chip) => {
+                    // Clean exit can only mean a shutdown race; keep the
+                    // chip so shutdown() still hands back its stats.
+                    self.dead_chips.push(chip);
+                    continue;
+                }
+                Err(_) => {
+                    self.recovery.worker_panics.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Salvage the batch the dead worker was holding.
+            let orphans: Vec<Request> = lock_recover(&self.held[w]).drain(..).collect();
+            for mut req in orphans {
+                if req.attempts == 0 {
+                    req.attempts = 1;
+                    self.recovery.requests_resubmitted.fetch_add(1, Ordering::Relaxed);
+                    // in_flight is untouched: the request is still in
+                    // flight, just riding a different worker now.
+                    self.queue.push_front(req);
+                } else {
+                    self.recovery.requests_failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = self.results_tx.send(Err(anyhow!(
+                        "request {}: lost to a worker panic (already retried once)",
+                        req.id
+                    )));
+                }
+            }
+            if self.respawns_left > 0 {
+                self.respawns_left -= 1;
+                // Fresh (unpoisoned) held slot for the replacement.
+                let slot: Arc<Mutex<Vec<Request>>> = Arc::new(Mutex::new(Vec::new()));
+                self.held[w] = Arc::clone(&slot);
+                self.workers[w] = Some(spawn_worker(
+                    self.template.clone(),
+                    WorkerCtx {
+                        queue: Arc::clone(&self.queue),
+                        metrics: Arc::clone(&self.metrics),
+                        recovery: Arc::clone(&self.recovery),
+                        results_tx: self.results_tx.clone(),
+                        held: slot,
+                        lanes_per_worker: self.lanes_per_worker,
+                    },
+                ));
+                self.recovery.workers_respawned.fetch_add(1, Ordering::Relaxed);
+                respawned += 1;
+            }
+        }
+        if self.workers.iter().all(|w| w.is_none()) {
+            // Respawn budget exhausted with every worker dead: nothing
+            // queued can ever run. Exactly-one-response still holds —
+            // each queued request gets a typed error now.
+            for req in self.queue.drain_remaining() {
+                self.recovery.requests_failed.fetch_add(1, Ordering::Relaxed);
+                let _ = self.results_tx.send(Err(anyhow!(
+                    "request {}: no workers alive (respawn budget exhausted)",
+                    req.id
+                )));
+            }
+        }
+        respawned
+    }
+
+    /// Fail every request still parked in worker `w`'s held slot with a
+    /// typed error (shutdown-time salvage: no retries, bounded exit).
+    fn fail_held(&self, w: usize, why: &str) {
+        let orphans: Vec<Request> = lock_recover(&self.held[w]).drain(..).collect();
+        for req in orphans {
+            self.recovery.requests_failed.fetch_add(1, Ordering::Relaxed);
+            let _ = self
+                .results_tx
+                .send(Err(anyhow!("request {}: {why}", req.id)));
+        }
+    }
+
     /// Shut down workers (pending requests are still processed) and return
     /// their chips (with accumulated stats).
+    ///
+    /// Bounded even with dead workers: a panicked worker's join is
+    /// tolerated (its held requests are failed with typed errors on the
+    /// still-open results channel), and anything left queued when no
+    /// worker survived is failed the same way — never a hang, and fewer
+    /// (possibly zero) chips come back instead.
     pub fn shutdown(mut self) -> Vec<Menage> {
         self.queue.shutdown();
-        std::mem::take(&mut self.workers)
-            .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
-            .collect()
+        let mut chips: Vec<Menage> = Vec::new();
+        for w in 0..self.workers.len() {
+            match self.workers[w].take() {
+                Some(handle) => match handle.join() {
+                    Ok(chip) => chips.push(chip),
+                    Err(_) => {
+                        self.recovery.worker_panics.fetch_add(1, Ordering::Relaxed);
+                        self.fail_held(w, "lost to a worker panic at shutdown");
+                    }
+                },
+                None => self.fail_held(w, "lost to a dead worker at shutdown"),
+            }
+        }
+        chips.append(&mut self.dead_chips);
+        // A live worker drains the queue before exiting, so anything still
+        // here was stranded by dead workers — fail it, don't strand it.
+        for req in self.queue.drain_remaining() {
+            self.recovery.requests_failed.fetch_add(1, Ordering::Relaxed);
+            let _ = self.results_tx.send(Err(anyhow!(
+                "request {}: shutdown with no workers alive",
+                req.id
+            )));
+        }
+        chips
     }
+}
+
+/// Spawn one worker thread. The worker parks every stolen batch in its
+/// held slot and keeps the slot's lock for the whole batch: a panic
+/// anywhere in processing leaves the unanswered requests sitting in the
+/// (poisoned, recoverable) slot for [`Coordinator::heal`] to salvage. A
+/// request is removed from the slot immediately after its response is on
+/// the results channel, so the slot always holds exactly the requests
+/// that would otherwise be lost.
+fn spawn_worker(mut chip: Backend, ctx: WorkerCtx) -> JoinHandle<Menage> {
+    std::thread::spawn(move || {
+        let WorkerCtx { queue, metrics, recovery, results_tx, held, lanes_per_worker } = ctx;
+        let record = |out: &crate::accel::RunOutput,
+                      req: &Request,
+                      sim_latency: Duration|
+         -> Response {
+            let predicted = out.predicted_class();
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.total_cycles.fetch_add(out.cycles, Ordering::Relaxed);
+            if let Some(label) = req.label {
+                metrics.labelled.fetch_add(1, Ordering::Relaxed);
+                if label == predicted {
+                    metrics.correct.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            lock_recover(&metrics.latency).add(sim_latency.as_secs_f64());
+            Response {
+                id: req.id,
+                predicted,
+                cycles: out.cycles,
+                sim_latency,
+                label: req.label,
+                output: out.output().clone(),
+            }
+        };
+        let mut out = crate::accel::RunOutput::default();
+        let mut lane_outs: Vec<crate::accel::RunOutput> = Vec::new();
+        let mut batch: Vec<Request> = Vec::new();
+        let mut inputs: Vec<SpikeTrain> = Vec::new();
+        // Last-published hardware fault counters (delta publishing).
+        let mut hw_last = (0u64, 0u64, 0u64);
+        let mut disconnected = false;
+        while !disconnected && queue.steal_batch(lanes_per_worker, &mut batch) {
+            let mut held_g = lock_recover(&held);
+            held_g.clear();
+            held_g.append(&mut batch);
+            // Chaos hook: the injected panic fires with the whole batch
+            // parked in the held slot and nothing answered yet — the
+            // maximum salvage surface, and the honest worst case.
+            if recovery.panic_trigger.fire() {
+                panic!("injected worker panic");
+            }
+            if held_g.len() == 1 {
+                // Single request: the sequential engine (identical to the
+                // pre-lane coordinator).
+                let req = &held_g[0];
+                // Occupancy gauges count only valid dispatched requests —
+                // the lane path filters width mismatches before its
+                // gauges, so the singleton path must too or the metric's
+                // meaning would shift with queue depth.
+                if req.input.num_neurons == chip.input_dim() {
+                    metrics.dispatches.fetch_add(1, Ordering::Relaxed);
+                    metrics.lanes_dispatched.fetch_add(1, Ordering::Relaxed);
+                    metrics.max_lane_occupancy.fetch_max(1, Ordering::Relaxed);
+                }
+                let t0 = Instant::now();
+                let res = chip
+                    .run_into(&req.input, &mut out)
+                    .map(|()| record(&out, req, t0.elapsed()))
+                    // Every worker error carries the `request {id}:`
+                    // prefix (see [`request_id_of_error`]) so a
+                    // response router can attribute it.
+                    .map_err(|e| anyhow!("request {}: {e:#}", req.id));
+                disconnected = results_tx.send(res).is_err();
+                held_g.clear();
+            } else {
+                // Lane packing. Width mismatches are answered individually
+                // up front so one bad request cannot poison (or drop
+                // responses for) the rest of the batch.
+                let expect = chip.input_dim();
+                let t0 = Instant::now();
+                let mut i = 0;
+                while i < held_g.len() {
+                    if held_g[i].input.num_neurons != expect {
+                        let req = held_g.remove(i);
+                        let err = anyhow!(
+                            "request {}: input has {} neurons, first core expects {expect}",
+                            req.id,
+                            req.input.num_neurons
+                        );
+                        disconnected |= results_tx.send(Err(err)).is_err();
+                    } else {
+                        i += 1;
+                    }
+                }
+                if held_g.is_empty() || disconnected {
+                    continue;
+                }
+                metrics.dispatches.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .lanes_dispatched
+                    .fetch_add(held_g.len() as u64, Ordering::Relaxed);
+                metrics
+                    .max_lane_occupancy
+                    .fetch_max(held_g.len() as u64, Ordering::Relaxed);
+                // The staging buffer clones the trains (instead of the old
+                // move-out) so a held request stays whole until answered —
+                // a resubmitted request must carry its real input.
+                inputs.clear();
+                inputs.extend(held_g.iter().map(|r| r.input.clone()));
+                match chip.run_lanes_into(&inputs, &mut lane_outs) {
+                    Ok(()) => {
+                        let sim_latency = t0.elapsed();
+                        for o in lane_outs.iter() {
+                            let resp = record(o, &held_g[0], sim_latency);
+                            disconnected |= results_tx.send(Ok(resp)).is_err();
+                            held_g.remove(0);
+                        }
+                    }
+                    Err(e) => {
+                        // One response per request, even on a whole-batch
+                        // failure: nothing may be lost.
+                        while !held_g.is_empty() {
+                            let err = anyhow!(
+                                "request {}: lane batch failed: {e}",
+                                held_g[0].id
+                            );
+                            disconnected |= results_tx.send(Err(err)).is_err();
+                            held_g.remove(0);
+                        }
+                    }
+                }
+            }
+            drop(held_g);
+            // Publish hardware fault-counter deltas so live STATS readers
+            // see degradation without waiting for shutdown's stats fold.
+            if chip.has_faults() {
+                let now = chip.fault_counters();
+                recovery.add_hw(
+                    now.0.saturating_sub(hw_last.0),
+                    now.1.saturating_sub(hw_last.1),
+                    now.2.saturating_sub(hw_last.2),
+                );
+                hw_last = now;
+            }
+        }
+        // Collapse lane-attributed work into the core totals so the chips
+        // handed back by shutdown() report everything they served
+        // (merge_chips/energy/trace read core stats).
+        chip.fold_lane_stats();
+        // Sharded pipelines hand back one monolithic-shaped stats carrier
+        // (cores reassembled in global layer order).
+        chip.into_chip()
+    })
 }
 
 impl Drop for Coordinator {
@@ -772,7 +1091,7 @@ impl SubmitHandle {
     /// Enqueue a request under an id from [`Self::reserve_id`].
     pub fn submit_reserved(&self, id: u64, input: SpikeTrain, label: Option<usize>) {
         self.in_flight.fetch_add(1, Ordering::Relaxed);
-        self.queue.push(Request { id, input, label });
+        self.queue.push(Request { id, input, label, attempts: 0 });
     }
 
     /// [`Self::reserve_id`] + [`Self::submit_reserved`].
@@ -921,7 +1240,7 @@ mod tests {
         coord.run_batch(ins).unwrap();
         assert_eq!(coord.metrics.accuracy(), 1.0);
         assert_eq!(coord.metrics.labelled.load(Ordering::Relaxed), 10);
-        let lat = coord.metrics.latency.lock().unwrap().clone();
+        let lat = lock_recover(&coord.metrics.latency).clone();
         assert_eq!(lat.count(), 10);
         coord.shutdown();
     }
@@ -1332,5 +1651,86 @@ mod tests {
             res.iter().map(|r| (r.predicted, r.cycles)).collect::<Vec<_>>()
         };
         assert_eq!(run(&chip), run(&chip));
+    }
+
+    /// Worker supervision: an injected panic kills the worker mid-batch,
+    /// yet every request still completes (the held request is resubmitted
+    /// exactly once), the worker is respawned, and the recovery counters
+    /// say so. W=1, L=1 makes the steal schedule deterministic: 8 fresh
+    /// requests + 1 retry = 9 steals, so a fire-on-5th trigger fires
+    /// exactly once.
+    #[test]
+    fn injected_panic_recovers_without_losing_requests() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::new(&chip, 1);
+        coord.inject_worker_panics(5);
+        let res = coord.run_batch(inputs(8)).unwrap();
+        assert_eq!(res.len(), 8, "every request must be answered");
+        assert_eq!(
+            res.iter().map(|r| r.id).collect::<Vec<_>>(),
+            (0..8).collect::<Vec<u64>>(),
+            "drain order must survive a resubmission"
+        );
+        let rec = coord.recovery();
+        assert_eq!(rec.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(rec.workers_respawned.load(Ordering::Relaxed), 1);
+        assert_eq!(rec.requests_resubmitted.load(Ordering::Relaxed), 1);
+        assert_eq!(rec.requests_failed.load(Ordering::Relaxed), 0);
+        coord.inject_worker_panics(0);
+        // Capacity self-healed: the next batch is clean.
+        let res = coord.run_batch(inputs(4)).unwrap();
+        assert_eq!(res.len(), 4);
+        let chips = coord.shutdown();
+        assert_eq!(chips.len(), 1, "respawned worker must hand back a chip");
+    }
+
+    /// Every stolen batch panics (`every = 1`): each request is retried
+    /// once, then failed with a typed id-prefixed error. Exactly one
+    /// response per request, drain terminates, shutdown is bounded.
+    #[test]
+    fn permanent_panic_fails_typed_and_bounded() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::with_lanes(&chip, 1, 2);
+        coord.inject_worker_panics(1);
+        let n = 6;
+        for (st, l) in inputs(n) {
+            coord.submit(st, l);
+        }
+        let t0 = Instant::now();
+        let items: Vec<Result<Response>> = coord.run_batch_streaming(Vec::new()).collect();
+        assert_eq!(items.len(), n, "exactly one response per request");
+        for item in &items {
+            let e = item.as_ref().expect_err("all batches panicked");
+            assert!(
+                request_id_of_error(e).is_some(),
+                "recovery error must be id-attributable: {e}"
+            );
+        }
+        assert!(t0.elapsed() < Duration::from_secs(60), "drain not bounded");
+        let rec = coord.recovery();
+        assert_eq!(rec.requests_failed.load(Ordering::Relaxed), n as u64);
+        assert_eq!(rec.requests_resubmitted.load(Ordering::Relaxed), n as u64);
+        let t0 = Instant::now();
+        coord.shutdown();
+        assert!(t0.elapsed() < Duration::from_secs(30), "shutdown not bounded");
+    }
+
+    /// drain() with a panicked worker and disarmed respawn trigger: the
+    /// mixed batch (successes + salvaged retries) comes back complete.
+    #[test]
+    fn drain_survives_single_worker_death() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::with_lanes(&chip, 2, 4);
+        for (st, l) in inputs(8) {
+            coord.submit(st, l);
+        }
+        // Arm late so some work may already be done; the 1st batch stolen
+        // after arming dies.
+        coord.inject_worker_panics(1);
+        coord.inject_worker_panics(0);
+        let res = coord.drain().unwrap();
+        assert_eq!(res.len(), 8);
+        assert_eq!(coord.in_flight(), 0);
+        coord.shutdown();
     }
 }

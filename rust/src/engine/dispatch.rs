@@ -48,6 +48,7 @@ use std::collections::BinaryHeap;
 use crate::analog::{kahan_add, ASyn, AnalogParams};
 use crate::engine::state::{LaneCtl, RoundSoa, SoaState};
 use crate::engine::sweep::sweep_round;
+use crate::fault::CoreFaults;
 use crate::mapping::CoreImage;
 use crate::neuracore::{CoreStats, STEP_SERIES_CAP};
 use crate::snn::LifParams;
@@ -81,6 +82,10 @@ pub struct CoreView<'a> {
     pub syns: &'a [ASyn],
     /// Capacitors per A-NEURON (N).
     pub caps_per_engine: usize,
+    /// Installed hardware faults ([`crate::fault::FaultPlan`]); `None`
+    /// keeps the deposit and sweep loops on the identical fault-free code
+    /// path (bit-identity with pre-fault builds is structural).
+    pub faults: Option<&'a CoreFaults>,
     /// Test/debug knob: full sweep arithmetic for every resident slot.
     pub force_dense_sweep: bool,
     /// Test/debug knob: dispatch each MEM_E entry individually (runs of
@@ -247,7 +252,7 @@ pub fn step(
                 stats[li].integrations += mult_u * entries.len() as u64;
             }
             if !entries.is_empty() {
-                deposit(view, st, stride, &scratch.carriers, entries, n, ideal, mac_count);
+                deposit(view, st, stride, &scratch.carriers, entries, n, ideal, mac_count, stats);
             }
         }
 
@@ -288,11 +293,31 @@ fn deposit(
     n: usize,
     ideal: bool,
     mac_count: &mut [u64],
+    stats: &mut [CoreStats],
 ) {
     let scale = view.image.scale;
     let legacy = view.legacy_error_oracle;
+    // Fault gates (both None/absent on the fault-free path): a stuck row
+    // suppresses the charge while the silicon still streams and prices the
+    // row; drift scales the analog error term beyond its calibration point.
+    let stuck_rows: Option<&[bool]> =
+        view.faults.filter(|f| f.any_stuck()).map(|f| f.stuck_row.as_slice());
     for &(j, virt, w) in entries {
         let j = j as usize;
+        if let Some(sr) = stuck_rows {
+            if sr[j] {
+                // Dead C2C ladder column: the row read, MAC activity, and
+                // energy still happen (the controller streams the row
+                // regardless), but no charge reaches any capacitor.
+                let mut group_mult = 0u64;
+                for &(li, _, mult) in carriers {
+                    stats[li as usize].stuck_row_hits += mult as u64;
+                    group_mult += mult as u64;
+                }
+                mac_count[j] += group_mult;
+                continue;
+            }
+        }
         let base = (j * n + virt as usize) * stride;
         // Analog sidecar term: deviation of the real C2C packet from the
         // ideal deposit, plus switch injection — identical for every lane
@@ -304,7 +329,13 @@ fn deposit(
                 * 256.0
                 * scale as f64
                 / view.analog.v_ref;
-            real - w as f64 * scale as f64 + view.analog.switch_injection * 0.01
+            let mut e = real - w as f64 * scale as f64 + view.analog.switch_injection * 0.01;
+            if let Some(f) = view.faults {
+                if f.drift_scale != 1.0 {
+                    e *= f.drift_scale;
+                }
+            }
+            e
         };
         let mut group_mult = 0u64;
         for &(li, _, mult) in carriers {

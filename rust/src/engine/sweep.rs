@@ -62,15 +62,33 @@ pub(crate) fn sweep_round(
     let scale = view.image.scale;
     let skip = view.sweep_skip;
     let dense = view.force_dense_sweep;
+    // Dead-slot fault gate (absent on the fault-free path): a dead op-amp
+    // freezes the membrane, drains deposited charge, and never fires.
+    let dead_slots: Option<&[bool]> =
+        view.faults.filter(|f| f.any_dead()).map(|f| f.dead_slot.as_slice());
     for &li in active {
         stats[li].fire_ops += residents.len() as u64;
     }
     for &(slot, dst) in residents {
         let base = slot as usize * stride;
+        let dead = dead_slots.is_some_and(|d| d[slot as usize]);
         for (ai, &li) in active.iter().enumerate() {
             let idx = base + li;
             if !dense && !st.dirty[idx] {
                 continue; // provably a no-op (quiescent fixed point)
+            }
+            if dead {
+                // Op-amp failure: discard the step's charge and error,
+                // keep the membrane frozen, emit nothing. Counted only
+                // when charge was actually lost.
+                if st.acc[idx] != 0 {
+                    stats[li].dead_slot_hits += 1;
+                }
+                st.acc[idx] = 0;
+                st.err[idx] = 0.0;
+                st.err_c[idx] = 0.0;
+                st.dirty[idx] = !skip;
+                continue;
             }
             // Reference-exact arithmetic (see neuracore module docs).
             let mut v = beta * st.mem[idx] + st.acc[idx] as f32 * scale;

@@ -1,0 +1,476 @@
+//! Unified fault-injection subsystem: deterministic hardware faults for
+//! the analog simulator, chaos knobs for the serving stack, and the
+//! poison-tolerant locking/recovery primitives that make injected faults
+//! survivable.
+//!
+//! # Two planes
+//!
+//! **Hardware plane** — a seeded [`FaultPlan`] describes the silicon-level
+//! defects the memristive/analog-SNN literature identifies as the dominant
+//! deployment risk for mixed-signal neuromorphic chips:
+//!
+//! * *stuck-at synapse rows*: a C2C ladder column is dead — every MEM_S&N
+//!   entry driving that A-SYN engine deposits nothing;
+//! * *dead neuron slots*: an op-amp failed — the virtual-neuron capacitor's
+//!   membrane is frozen, accumulated charge drains away, the neuron never
+//!   fires;
+//! * *transient MEM_E bit flips*: an event's source id is corrupted with a
+//!   single-bit flip at latch time (out-of-range results address no
+//!   MEM_E2A entry and are dropped by the dispatcher, exactly like a
+//!   malformed input spike);
+//! * *analog drift escalation*: the per-deposit analog error term is
+//!   scaled by `drift_scale`, modeling aged/hot silicon drifting beyond
+//!   its calibration point (non-ideal analog mode only).
+//!
+//! The plan is *deterministic*: [`FaultPlan::core_faults`] derives each
+//! core's defect pattern and transient-fault RNG stream from the plan seed
+//! and the core index, so a faulty run is exactly reproducible. An empty
+//! plan installs nothing and the engine's hot loops take the identical
+//! code path as before — bit-identity with fault-free execution is pinned
+//! by the existing differential suites.
+//!
+//! **System plane** — [`SystemChaos`] gates injectable process-level
+//! faults into the serving stack: worker panics every Nth request,
+//! dropped/delayed responses, and socket resets mid-frame. All knobs
+//! default to off; the production path pays one predicted-false branch.
+//!
+//! # Recovery primitives
+//!
+//! [`lock_recover`]/[`recover`] replace bare `lock().unwrap()`: a
+//! `Mutex` poisoned by a panicking thread yields its guard instead of
+//! cascading the panic into every peer (the data under our mutexes is
+//! queue/routing state whose invariants are re-validated by the
+//! consumers, not broken mid-transaction by the panic). [`RecoveryStats`]
+//! is the shared counter block the coordinator's worker supervision and
+//! the serving layer's STATS frame report recovery activity through.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Recover the value inside a poisoned-lock result. A poisoned `Mutex`
+/// (or `Condvar` wait) only means *some* thread panicked while holding
+/// the guard; the shared state this crate protects (request queues,
+/// routing maps, latency histograms) stays structurally valid across a
+/// panic, so the guard is safe to use and the alternative — propagating
+/// the panic into every thread that ever touches the lock — is exactly
+/// the cascade this helper exists to stop.
+#[inline]
+pub fn recover<T>(r: Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant `Mutex::lock`: the drop-in replacement for
+/// `lock().unwrap()` (see [`recover`]).
+#[inline]
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    recover(m.lock())
+}
+
+// ---------------------------------------------------------------------
+// Hardware plane
+// ---------------------------------------------------------------------
+
+/// Chip-level hardware fault specification (module docs). Deterministic:
+/// the realized per-core defect patterns are a pure function of
+/// `(seed, core index)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for defect placement and transient-fault streams.
+    pub seed: u64,
+    /// Fraction of A-SYN engines (C2C ladder columns) stuck dead per core,
+    /// in `[0, 1]`.
+    pub stuck_row_frac: f64,
+    /// Fraction of physical virtual-neuron capacitor slots dead per core
+    /// (op-amp failure), in `[0, 1]`.
+    pub dead_slot_frac: f64,
+    /// Per-latched-event probability of a transient single-bit flip in the
+    /// event's source id.
+    pub bit_flip_p: f64,
+    /// Multiplier on the per-deposit analog error term (1.0 = nominal;
+    /// only observable in non-ideal analog mode).
+    pub drift_scale: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self { seed: 0, stuck_row_frac: 0.0, dead_slot_frac: 0.0, bit_flip_p: 0.0, drift_scale: 1.0 }
+    }
+}
+
+impl FaultPlan {
+    /// Whether the plan injects nothing (installation is a no-op).
+    pub fn is_empty(&self) -> bool {
+        self.stuck_row_frac <= 0.0
+            && self.dead_slot_frac <= 0.0
+            && self.bit_flip_p <= 0.0
+            && self.drift_scale == 1.0
+    }
+
+    /// Parse the CLI spec: comma-separated `key=value` pairs with keys
+    /// `seed`, `stuck`, `dead`, `flip`, `drift` — e.g.
+    /// `"seed=9,stuck=0.05,dead=0.02,flip=0.001,drift=2.0"`. Unknown keys
+    /// and out-of-range values are errors.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--faults: expected key=value, got {part:?}"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let frac = |name: &str| -> Result<f64> {
+                let x: f64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!("--faults: {name}={v:?} is not a number")
+                })?;
+                if !(0.0..=1.0).contains(&x) {
+                    bail!("--faults: {name} must be in [0, 1], got {x}");
+                }
+                Ok(x)
+            };
+            match k {
+                "seed" => {
+                    plan.seed = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--faults: seed={v:?} is not an integer"))?
+                }
+                "stuck" => plan.stuck_row_frac = frac("stuck")?,
+                "dead" => plan.dead_slot_frac = frac("dead")?,
+                "flip" => plan.bit_flip_p = frac("flip")?,
+                "drift" => {
+                    let x: f64 = v.parse().map_err(|_| {
+                        anyhow::anyhow!("--faults: drift={v:?} is not a number")
+                    })?;
+                    if !x.is_finite() || x < 0.0 {
+                        bail!("--faults: drift must be finite and ≥ 0, got {x}");
+                    }
+                    plan.drift_scale = x;
+                }
+                other => bail!(
+                    "--faults: unknown key {other:?} (valid: seed, stuck, dead, flip, drift)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Realize this plan for one core with `engines` A-SYN columns and
+    /// `caps_per_engine` capacitors per A-NEURON. Returns `None` when the
+    /// plan is empty, so fault-free cores carry no per-event overhead.
+    pub fn core_faults(
+        &self,
+        core_index: usize,
+        engines: usize,
+        caps_per_engine: usize,
+    ) -> Option<CoreFaults> {
+        if self.is_empty() {
+            return None;
+        }
+        // Per-core stream: independent of every other core, stable under
+        // re-installation (reinstalling the same plan replays the same
+        // transient faults — the determinism the chaos suite pins).
+        let mut rng = Rng::new(
+            self.seed ^ (core_index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let stuck_row: Vec<bool> =
+            (0..engines).map(|_| rng.bernoulli(self.stuck_row_frac)).collect();
+        let dead_slot: Vec<bool> = (0..engines * caps_per_engine)
+            .map(|_| rng.bernoulli(self.dead_slot_frac))
+            .collect();
+        Some(CoreFaults {
+            stuck_row,
+            dead_slot,
+            bit_flip_p: self.bit_flip_p,
+            drift_scale: self.drift_scale,
+            rng,
+        })
+    }
+}
+
+/// Realized hardware faults of one core (see [`FaultPlan::core_faults`]).
+#[derive(Debug, Clone)]
+pub struct CoreFaults {
+    /// `stuck_row[j]`: A-SYN engine `j`'s C2C ladder is dead — its
+    /// deposits are suppressed.
+    pub stuck_row: Vec<bool>,
+    /// `dead_slot[slot]` for physical slot `j·N + k`: the op-amp is dead —
+    /// membrane frozen, accumulated charge discarded, never fires. The
+    /// physical capacitor is reused by every mapping round, so the defect
+    /// applies to all rounds.
+    pub dead_slot: Vec<bool>,
+    /// Per-event transient bit-flip probability at MEM_E latch time.
+    pub bit_flip_p: f64,
+    /// Analog error-term multiplier (non-ideal mode only).
+    pub drift_scale: f64,
+    /// Deterministic stream driving the transient faults.
+    pub rng: Rng,
+}
+
+impl CoreFaults {
+    /// Whether any stuck row is present (cheap gate for the deposit loop).
+    pub fn any_stuck(&self) -> bool {
+        self.stuck_row.iter().any(|&b| b)
+    }
+
+    /// Whether any dead slot is present (cheap gate for the sweep loop).
+    pub fn any_dead(&self) -> bool {
+        self.dead_slot.iter().any(|&b| b)
+    }
+}
+
+// ---------------------------------------------------------------------
+// System plane
+// ---------------------------------------------------------------------
+
+/// Config-gated chaos injection for the serving stack. All knobs are
+/// "every Nth occurrence" counters with 0 = disabled; the production
+/// default is fully off.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SystemChaos {
+    /// Panic a coordinator worker after every Nth request it begins
+    /// processing (0 = off).
+    pub worker_panic_every: u64,
+    /// Drop every Nth completed response at the router instead of writing
+    /// it to the client (0 = off) — the client sees a lost reply.
+    pub drop_response_every: u64,
+    /// Delay every Nth completed response by [`Self::delay_ms`] before
+    /// writing it (0 = off).
+    pub delay_response_every: u64,
+    /// Delay applied by `delay_response_every`, in milliseconds.
+    pub delay_ms: u64,
+    /// Reset (short-write then sever) every Nth connection's socket after
+    /// a response frame (0 = off).
+    pub reset_conn_every: u64,
+}
+
+impl SystemChaos {
+    /// Whether any knob is armed.
+    pub fn enabled(&self) -> bool {
+        self.worker_panic_every > 0
+            || self.drop_response_every > 0
+            || self.delay_response_every > 0
+            || self.reset_conn_every > 0
+    }
+
+    /// Parse the CLI spec: comma-separated `key=value` pairs with keys
+    /// `panic`, `drop`, `delay`, `delay_ms`, `reset` — e.g.
+    /// `"panic=40,drop=64,reset=0"`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut c = Self::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--chaos: expected key=value, got {part:?}"))?;
+            let n: u64 = v
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--chaos: {k}={v:?} is not an integer"))?;
+            match k.trim() {
+                "panic" => c.worker_panic_every = n,
+                "drop" => c.drop_response_every = n,
+                "delay" => c.delay_response_every = n,
+                "delay_ms" => c.delay_ms = n,
+                "reset" => c.reset_conn_every = n,
+                other => bail!(
+                    "--chaos: unknown key {other:?} (valid: panic, drop, delay, delay_ms, reset)"
+                ),
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// A deterministic "every Nth occurrence" trigger backed by an atomic
+/// counter — the shared gate every chaos knob runs through.
+#[derive(Debug, Default)]
+pub struct ChaosTrigger {
+    every: AtomicU64,
+    count: AtomicU64,
+}
+
+impl ChaosTrigger {
+    /// Arm the trigger to fire on every `every`-th [`Self::fire`] call
+    /// (0 disarms).
+    pub fn arm(&self, every: u64) {
+        self.every.store(every, Ordering::Relaxed);
+    }
+
+    /// Whether the trigger is armed at all (cheap fast-path gate).
+    pub fn armed(&self) -> bool {
+        self.every.load(Ordering::Relaxed) > 0
+    }
+
+    /// Count one occurrence; returns `true` on every Nth call while armed.
+    pub fn fire(&self) -> bool {
+        let every = self.every.load(Ordering::Relaxed);
+        if every == 0 {
+            return false;
+        }
+        let n = self.count.fetch_add(1, Ordering::Relaxed) + 1;
+        n % every == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared recovery / fault observability
+// ---------------------------------------------------------------------
+
+/// Shared fault-and-recovery counters: written by the coordinator's
+/// worker supervision and (for the hardware counters) published by
+/// workers after each batch, read by the serving layer's STATS frame.
+/// All fields are monotonic.
+#[derive(Debug, Default)]
+pub struct RecoveryStats {
+    /// Worker panics observed (injected or real).
+    pub worker_panics: AtomicU64,
+    /// Worker threads respawned from a pristine backend.
+    pub workers_respawned: AtomicU64,
+    /// Requests resubmitted after their worker died mid-flight.
+    pub requests_resubmitted: AtomicU64,
+    /// Requests failed with a typed error after the single retry was
+    /// also lost.
+    pub requests_failed: AtomicU64,
+    /// Hardware plane: deposits suppressed by stuck-at synapse rows.
+    pub hw_stuck_row_hits: AtomicU64,
+    /// Hardware plane: charge discarded by dead neuron slots.
+    pub hw_dead_slot_hits: AtomicU64,
+    /// Hardware plane: transient MEM_E bit flips injected.
+    pub hw_events_bit_flipped: AtomicU64,
+    /// Chaos: worker-panic trigger (armed by [`SystemChaos`] or tests).
+    pub panic_trigger: ChaosTrigger,
+}
+
+impl RecoveryStats {
+    fn get(a: &AtomicU64) -> usize {
+        a.load(Ordering::Relaxed) as usize
+    }
+
+    /// Add a hardware fault-counter delta (published by workers).
+    pub fn add_hw(&self, stuck: u64, dead: u64, flips: u64) {
+        if stuck > 0 {
+            self.hw_stuck_row_hits.fetch_add(stuck, Ordering::Relaxed);
+        }
+        if dead > 0 {
+            self.hw_dead_slot_hits.fetch_add(dead, Ordering::Relaxed);
+        }
+        if flips > 0 {
+            self.hw_events_bit_flipped.fetch_add(flips, Ordering::Relaxed);
+        }
+    }
+
+    /// The `recovery` block of the STATS frame.
+    pub fn recovery_json(&self) -> Json {
+        Json::obj(vec![
+            ("worker_panics", Self::get(&self.worker_panics).into()),
+            ("workers_respawned", Self::get(&self.workers_respawned).into()),
+            ("requests_resubmitted", Self::get(&self.requests_resubmitted).into()),
+            ("requests_failed", Self::get(&self.requests_failed).into()),
+        ])
+    }
+
+    /// The `faults` block of the STATS frame (hardware plane).
+    pub fn faults_json(&self) -> Json {
+        Json::obj(vec![
+            ("stuck_row_hits", Self::get(&self.hw_stuck_row_hits).into()),
+            ("dead_slot_hits", Self::get(&self.hw_dead_slot_hits).into()),
+            ("events_bit_flipped", Self::get(&self.hw_events_bit_flipped).into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_installs_nothing() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        assert!(plan.core_faults(0, 4, 4).is_none());
+    }
+
+    #[test]
+    fn parse_full_spec_and_rejects_garbage() {
+        let p = FaultPlan::parse("seed=9, stuck=0.5,dead=0.25,flip=0.001,drift=2.0").unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.stuck_row_frac, 0.5);
+        assert_eq!(p.dead_slot_frac, 0.25);
+        assert_eq!(p.bit_flip_p, 0.001);
+        assert_eq!(p.drift_scale, 2.0);
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("stuck=1.5").is_err());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("stuck").is_err());
+        assert!(FaultPlan::parse("drift=-1").is_err());
+    }
+
+    #[test]
+    fn core_faults_deterministic_and_per_core_distinct() {
+        let plan = FaultPlan { seed: 7, stuck_row_frac: 0.5, dead_slot_frac: 0.5, ..Default::default() };
+        let a = plan.core_faults(0, 8, 8).unwrap();
+        let b = plan.core_faults(0, 8, 8).unwrap();
+        assert_eq!(a.stuck_row, b.stuck_row, "same (seed, core) must realize identically");
+        assert_eq!(a.dead_slot, b.dead_slot);
+        let c = plan.core_faults(1, 8, 8).unwrap();
+        // 16 independent fair coin draws matching across cores is 2^-16;
+        // this is a fixed-seed check, not a statistical one.
+        assert!(
+            a.stuck_row != c.stuck_row || a.dead_slot != c.dead_slot,
+            "cores must not share a defect pattern"
+        );
+        assert_eq!(a.dead_slot.len(), 64);
+        assert_eq!(a.stuck_row.len(), 8);
+    }
+
+    #[test]
+    fn chaos_parse_and_trigger_cadence() {
+        let c = SystemChaos::parse("panic=3,drop=2").unwrap();
+        assert_eq!(c.worker_panic_every, 3);
+        assert_eq!(c.drop_response_every, 2);
+        assert!(c.enabled());
+        assert!(!SystemChaos::default().enabled());
+        assert!(SystemChaos::parse("panic=x").is_err());
+        assert!(SystemChaos::parse("warp=1").is_err());
+
+        let t = ChaosTrigger::default();
+        assert!(!t.fire(), "disarmed trigger never fires");
+        t.arm(3);
+        let fires: Vec<bool> = (0..9).map(|_| t.fire()).collect();
+        assert_eq!(fires, vec![false, false, true, false, false, true, false, false, true]);
+        t.arm(0);
+        assert!(!t.fire());
+    }
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        use std::sync::Arc;
+        let m = Arc::new(Mutex::new(41usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock_recover(&m);
+        *g += 1;
+        assert_eq!(*g, 42, "poisoned data stays usable");
+    }
+
+    #[test]
+    fn recovery_stats_json_shape() {
+        let rs = RecoveryStats::default();
+        rs.worker_panics.fetch_add(2, Ordering::Relaxed);
+        rs.add_hw(5, 3, 1);
+        let r = rs.recovery_json();
+        assert_eq!(r.get("worker_panics").unwrap().as_usize().unwrap(), 2);
+        let f = rs.faults_json();
+        assert_eq!(f.get("stuck_row_hits").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(f.get("dead_slot_hits").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(f.get("events_bit_flipped").unwrap().as_usize().unwrap(), 1);
+    }
+}

@@ -55,6 +55,7 @@ pub mod coordinator;
 pub mod datasets;
 pub mod energy;
 pub mod engine;
+pub mod fault;
 pub mod ilp;
 pub mod mapping;
 pub mod neuracore;

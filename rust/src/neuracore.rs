@@ -52,6 +52,7 @@ use anyhow::{bail, Result};
 use crate::analog::{ASyn, AnalogParams};
 use crate::config::AcceleratorConfig;
 use crate::engine::{self, CoreView, LaneCtl, SoaState, StepScratch};
+use crate::fault::{CoreFaults, FaultPlan};
 use crate::mapping::CoreImage;
 use crate::snn::LifParams;
 use crate::util::rng::Rng;
@@ -93,6 +94,16 @@ pub struct CoreStats {
     pub sn_rows_touched_per_step: Vec<u64>,
     /// Per-time-step cycle counts.
     pub cycles_per_step: Vec<u64>,
+    /// Injected-fault accounting ([`crate::fault::FaultPlan`]; all three
+    /// stay 0 unless faults are installed, preserving `CoreStats`
+    /// equality with fault-free runs): deposits suppressed because the
+    /// entry's A-SYN engine (C2C ladder column) is stuck dead.
+    pub stuck_row_hits: u64,
+    /// Sweeps that discarded accumulated charge because the slot's op-amp
+    /// is dead (membrane frozen, neuron never fires).
+    pub dead_slot_hits: u64,
+    /// Transient MEM_E single-bit flips injected at latch time.
+    pub events_bit_flipped: u64,
 }
 
 /// Builds the engine's borrowed [`CoreView`] from a `NeuraCore`'s fields.
@@ -113,6 +124,7 @@ macro_rules! core_view {
             analog: &$core.analog,
             syns: &$core.syns,
             caps_per_engine: $core.caps_per_engine,
+            faults: $core.faults.as_ref(),
             force_dense_sweep: $core.force_dense_sweep,
             force_per_event_dispatch: $core.force_per_event_dispatch,
             legacy_error_oracle: $core.force_legacy_error_oracle,
@@ -191,6 +203,12 @@ pub struct NeuraCore {
     /// [`engine::NONIDEAL_ORACLE_TOLERANCE`]. No effect in ideal mode
     /// beyond forcing per-event dispatch.
     pub force_legacy_error_oracle: bool,
+    /// Realized hardware faults ([`FaultPlan::core_faults`]); `None` (the
+    /// default) keeps every hot loop on the identical fault-free code
+    /// path, so bit-identity with pre-fault builds is structural.
+    faults: Option<CoreFaults>,
+    /// Scratch for bit-flip corruption of incoming event batches.
+    fault_scratch: Vec<u32>,
 }
 
 impl NeuraCore {
@@ -287,7 +305,40 @@ impl NeuraCore {
             force_dense_sweep: false,
             force_per_event_dispatch: false,
             force_legacy_error_oracle: false,
+            faults: None,
+            fault_scratch: Vec::new(),
         })
+    }
+
+    /// Install (or, with an empty plan, clear) this core's realized
+    /// hardware faults. The defect pattern and transient-fault stream are
+    /// a pure function of `(plan.seed, self.index)` — reinstalling the
+    /// same plan replays the same faults. Fault counters in
+    /// [`Self::stats`] keep accumulating across installs.
+    pub fn install_faults(&mut self, plan: &FaultPlan) {
+        self.faults = plan.core_faults(self.index, self.syns.len(), self.caps_per_engine);
+    }
+
+    /// Whether hardware faults are installed.
+    pub fn has_faults(&self) -> bool {
+        self.faults.is_some()
+    }
+
+    /// `(stuck_row_hits, dead_slot_hits, events_bit_flipped)` summed over
+    /// the core stats and every lane's stats — the monotonic totals the
+    /// coordinator delta-publishes to [`crate::fault::RecoveryStats`].
+    pub fn fault_counters(&self) -> (u64, u64, u64) {
+        let mut t = (
+            self.stats.stuck_row_hits,
+            self.stats.dead_slot_hits,
+            self.stats.events_bit_flipped,
+        );
+        for l in &self.lane_stats {
+            t.0 += l.stuck_row_hits;
+            t.1 += l.dead_slot_hits;
+            t.2 += l.events_bit_flipped;
+        }
+        t
     }
 
     /// Number of mapping rounds.
@@ -307,7 +358,20 @@ impl NeuraCore {
 
     /// Latch incoming events (source-neuron indices) into MEM_E. Returns
     /// the number of dropped events if the memory overflows.
+    ///
+    /// With an installed [`FaultPlan`] carrying `bit_flip_p > 0`, each
+    /// event's source id may be corrupted by a transient single-bit flip
+    /// *before* the latch — an out-of-range result addresses no MEM_E2A
+    /// entry and is silently dropped by the dispatcher, exactly like a
+    /// malformed input spike.
     pub fn push_events(&mut self, events: &[u32]) -> usize {
+        let events: &[u32] = match self.faults.as_mut() {
+            Some(f) if f.bit_flip_p > 0.0 => {
+                corrupt_events(f, &mut self.fault_scratch, &mut self.stats, self.image.in_dim, events);
+                &self.fault_scratch
+            }
+            _ => events,
+        };
         engine::latch_events(&mut self.seq_ctl.queue, &mut self.stats, self.event_mem_depth, events)
     }
 
@@ -396,6 +460,19 @@ impl NeuraCore {
     /// overflow semantics lockstep), against the lane's private queue and
     /// stats.
     pub fn push_events_lane(&mut self, lane: usize, events: &[u32]) -> usize {
+        let events: &[u32] = match self.faults.as_mut() {
+            Some(f) if f.bit_flip_p > 0.0 => {
+                corrupt_events(
+                    f,
+                    &mut self.fault_scratch,
+                    &mut self.lane_stats[lane],
+                    self.image.in_dim,
+                    events,
+                );
+                &self.fault_scratch
+            }
+            _ => events,
+        };
         engine::latch_events(
             &mut self.lane_ctl[lane].queue,
             &mut self.lane_stats[lane],
@@ -471,6 +548,9 @@ impl NeuraCore {
             self.stats.peak_event_queue =
                 self.stats.peak_event_queue.max(s.peak_event_queue);
             self.stats.dropped_events += s.dropped_events;
+            self.stats.stuck_row_hits += s.stuck_row_hits;
+            self.stats.dead_slot_hits += s.dead_slot_hits;
+            self.stats.events_bit_flipped += s.events_bit_flipped;
         }
     }
 
@@ -518,6 +598,31 @@ impl NeuraCore {
     /// A-SYN MAC energy constant (J) — exposed for the energy model.
     pub fn mac_energy(&self) -> f64 {
         self.syns[0].energy_per_mac
+    }
+}
+
+/// Apply the transient MEM_E bit-flip fault to one incoming event batch:
+/// each event is independently corrupted with probability `bit_flip_p` by
+/// flipping one uniformly chosen bit among the bits that address `in_dim`
+/// sources. The corrupted batch lands in `scratch` (reused allocation);
+/// flips are counted in `stats.events_bit_flipped`. A free function taking
+/// the core's fields separately so the borrow checker sees the disjoint
+/// field borrows.
+fn corrupt_events(
+    f: &mut CoreFaults,
+    scratch: &mut Vec<u32>,
+    stats: &mut CoreStats,
+    in_dim: usize,
+    events: &[u32],
+) {
+    let bits = (usize::BITS - in_dim.saturating_sub(1).leading_zeros()).max(1) as usize;
+    scratch.clear();
+    scratch.extend_from_slice(events);
+    for e in scratch.iter_mut() {
+        if f.rng.bernoulli(f.bit_flip_p) {
+            *e ^= 1 << f.rng.below(bits);
+            stats.events_bit_flipped += 1;
+        }
     }
 }
 

@@ -52,6 +52,17 @@ pub fn backoff_schedule(
 /// A successfully decoded INFER_RESPONSE (see [`InferResponse`]).
 pub type InferReply = InferResponse;
 
+/// Decode one server frame into a [`Reply`].
+fn decode_reply(kind: u8, payload: &[u8]) -> Result<Reply> {
+    Ok(match FrameKind::from_u8(kind) {
+        Some(FrameKind::InferResponse) => Reply::Infer(InferResponse::decode(payload)?),
+        Some(FrameKind::Error) => Reply::Error(ErrorFrame::decode(payload)?),
+        Some(FrameKind::Pong) => Reply::Pong,
+        Some(FrameKind::StatsReply) => Reply::Stats(decode_stats_reply(payload)?),
+        other => bail!("unexpected frame from server: {other:?} (kind byte {kind})"),
+    })
+}
+
 /// Everything a server can send back.
 #[derive(Debug, Clone)]
 pub enum Reply {
@@ -139,13 +150,34 @@ impl Client {
             Ok(None) => bail!("server closed the connection"),
             Err(e) => return Err(e).context("reading server frame"),
         };
-        Ok(match FrameKind::from_u8(kind) {
-            Some(FrameKind::InferResponse) => Reply::Infer(InferResponse::decode(&payload)?),
-            Some(FrameKind::Error) => Reply::Error(ErrorFrame::decode(&payload)?),
-            Some(FrameKind::Pong) => Reply::Pong,
-            Some(FrameKind::StatsReply) => Reply::Stats(decode_stats_reply(&payload)?),
-            other => bail!("unexpected frame from server: {other:?} (kind byte {kind})"),
-        })
+        decode_reply(kind, &payload)
+    }
+
+    /// [`Self::recv_reply`] bounded by a socket read timeout: `Ok(None)`
+    /// when the window expires with no complete frame (the connection
+    /// stays usable — [`FrameReader`] keeps any partial frame and resumes
+    /// on the next call), `Err` on connection loss or protocol violation.
+    /// The load generator uses this to detect lost responses without
+    /// wedging on a dead or chaos-injected server.
+    pub fn recv_reply_timeout(&mut self, timeout: Duration) -> Result<Option<Reply>> {
+        self.stream
+            .set_read_timeout(Some(timeout))
+            .context("setting read timeout")?;
+        let r = match self.reader.read_frame(&mut self.stream) {
+            Ok(Some(Frame { kind, payload })) => decode_reply(kind, &payload).map(Some),
+            Ok(None) => Err(anyhow::anyhow!("server closed the connection")),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(e).context("reading server frame"),
+        };
+        self.stream.set_read_timeout(None).ok();
+        r
     }
 
     /// Synchronous inference: send, then block for this request's reply.

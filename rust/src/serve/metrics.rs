@@ -118,6 +118,10 @@ pub struct ServeMetrics {
     pub worker_errors: AtomicU64,
     /// Responses dropped because their connection had gone away.
     pub dropped_responses: AtomicU64,
+    /// Faults injected by the serve-layer chaos knobs (dropped/delayed
+    /// responses, socket resets). Always 0 in production; lets the chaos
+    /// suite separate injected losses from organic ones.
+    pub chaos_injected: AtomicU64,
     /// Input spikes (events) across admitted requests — the event-delivery
     /// throughput the host-side path is sized by.
     pub events_in: AtomicU64,
@@ -173,6 +177,7 @@ impl ServeMetrics {
                     ("protocol_errors", (Self::get(&self.protocol_errors) as usize).into()),
                     ("worker_errors", (Self::get(&self.worker_errors) as usize).into()),
                     ("dropped_responses", (Self::get(&self.dropped_responses) as usize).into()),
+                    ("chaos_injected", (Self::get(&self.chaos_injected) as usize).into()),
                     ("events_in", (events as usize).into()),
                     ("total_cycles", (Self::get(&self.total_cycles) as usize).into()),
                 ]),

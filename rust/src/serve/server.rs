@@ -52,13 +52,14 @@ use anyhow::{Context, Result};
 
 use crate::accel::Menage;
 use crate::coordinator::{request_id_of_error, Coordinator, Response};
+use crate::fault::{lock_recover, ChaosTrigger, RecoveryStats, SystemChaos};
 use crate::shard::ShardedMenage;
 use crate::util::json::Json;
 
 use super::metrics::ServeMetrics;
 use super::protocol::{
     encode_frame, encode_stats_reply, ErrorCode, ErrorFrame, FrameKind, FrameReader,
-    InferRequest, InferResponse, DEFAULT_MAX_FRAME_LEN, NO_ID,
+    InferRequest, InferResponse, DEFAULT_MAX_FRAME_LEN, MAGIC, NO_ID,
 };
 
 /// Serving knobs. `Default` is sized for tests and small deployments;
@@ -90,6 +91,10 @@ pub struct ServeConfig {
     /// Honor the SHUTDOWN frame (used by `loadgen --shutdown-server` and
     /// the `make smoke-serve` flow; off unless explicitly enabled).
     pub allow_remote_shutdown: bool,
+    /// Chaos injection knobs (worker panics, dropped/delayed responses,
+    /// socket resets). Default is fully off: the production path pays one
+    /// predicted-false branch per response.
+    pub chaos: SystemChaos,
 }
 
 impl Default for ServeConfig {
@@ -103,6 +108,7 @@ impl Default for ServeConfig {
             poll_interval: Duration::from_millis(25),
             write_timeout: Duration::from_secs(10),
             allow_remote_shutdown: false,
+            chaos: SystemChaos::default(),
         }
     }
 }
@@ -166,6 +172,14 @@ struct Shared {
     /// The coordinator's worker-side gauges (lane occupancy), sampled by
     /// the STATS snapshot.
     coord_metrics: Arc<crate::coordinator::Metrics>,
+    /// The coordinator's recovery/fault counters — the STATS `recovery`
+    /// and `faults` blocks.
+    recovery: Arc<RecoveryStats>,
+    /// Chaos triggers (armed from [`ServeConfig::chaos`]; disarmed = the
+    /// production no-op).
+    chaos_drop: ChaosTrigger,
+    chaos_delay: ChaosTrigger,
+    chaos_reset: ChaosTrigger,
     /// Static shard topology (sharded servers only) — reported verbatim
     /// as the STATS `shards` block.
     shards: Option<Json>,
@@ -210,6 +224,8 @@ impl Shared {
             if let Some(shards) = &self.shards {
                 map.insert("shards".to_string(), shards.clone());
             }
+            map.insert("recovery".to_string(), self.recovery.recovery_json());
+            map.insert("faults".to_string(), self.recovery.faults_json());
         }
         j
     }
@@ -277,9 +293,25 @@ impl Server {
         // Non-blocking accept so the loop can poll the stop flag.
         listener.set_nonblocking(true)?;
 
+        // Arm the chaos triggers from the config (all off by default). The
+        // worker-panic trigger lives on the coordinator's RecoveryStats so
+        // workers can check it without touching serve-layer state.
+        let recovery = coord.recovery();
+        recovery.panic_trigger.arm(cfg.chaos.worker_panic_every);
+        let chaos_drop = ChaosTrigger::default();
+        chaos_drop.arm(cfg.chaos.drop_response_every);
+        let chaos_delay = ChaosTrigger::default();
+        chaos_delay.arm(cfg.chaos.delay_response_every);
+        let chaos_reset = ChaosTrigger::default();
+        chaos_reset.arm(cfg.chaos.reset_conn_every);
+
         let shared = Arc::new(Shared {
             handle: coord.handle(),
             coord_metrics: Arc::clone(&coord.metrics),
+            recovery,
+            chaos_drop,
+            chaos_delay,
+            chaos_reset,
             cfg,
             metrics: Arc::new(ServeMetrics::default()),
             pending: Mutex::new(HashMap::new()),
@@ -313,6 +345,13 @@ impl Server {
 
     pub fn metrics(&self) -> Arc<ServeMetrics> {
         Arc::clone(&self.shared.metrics)
+    }
+
+    /// The coordinator's recovery/fault counters (the STATS `recovery` and
+    /// `faults` blocks) — lets embedders and the chaos suite observe
+    /// worker panics, respawns, and hardware fault hits directly.
+    pub fn recovery(&self) -> Arc<RecoveryStats> {
+        Arc::clone(&self.shared.recovery)
     }
 
     /// Current metrics snapshot (same JSON a STATS frame returns).
@@ -355,7 +394,7 @@ impl Server {
             h.join().ok()?;
         }
         self.shared.stop_readers.store(true, Ordering::Relaxed);
-        for h in std::mem::take(&mut *self.shared.readers.lock().unwrap()) {
+        for h in std::mem::take(&mut *lock_recover(&self.shared.readers)) {
             h.join().ok()?;
         }
         // Readers are gone: the router can drain without racing ingress.
@@ -363,7 +402,7 @@ impl Server {
         let chips = self.router.take()?.join().ok()?;
         // The router cleared the pending map, so every writer's channel is
         // closed and each writer exits after flushing.
-        for h in std::mem::take(&mut *self.shared.writers.lock().unwrap()) {
+        for h in std::mem::take(&mut *lock_recover(&self.shared.writers)) {
             h.join().ok()?;
         }
         Some(chips)
@@ -416,21 +455,32 @@ fn spawn_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
     ServeMetrics::bump(&shared.metrics.connections_opened);
     ServeMetrics::bump(&shared.metrics.connections_active);
 
-    let writer = std::thread::spawn(move || {
-        let mut w = BufWriter::new(write_half);
-        while let Ok(frame) = rx.recv() {
-            // Any write failure — including a write timeout on a stalled
-            // client — abandons the connection: after a partial frame the
-            // stream can't be resynchronized anyway. Later sends into the
-            // channel are counted as dropped_responses by the senders.
-            if w.write_all(&frame).and_then(|()| w.flush()).is_err() {
-                break;
+    let writer = {
+        let shared = Arc::clone(shared);
+        std::thread::spawn(move || {
+            let mut w = BufWriter::new(write_half);
+            while let Ok(frame) = rx.recv() {
+                // Any write failure — including a write timeout on a stalled
+                // client — abandons the connection: after a partial frame the
+                // stream can't be resynchronized anyway. Later sends into the
+                // channel are counted as dropped_responses by the senders.
+                if w.write_all(&frame).and_then(|()| w.flush()).is_err() {
+                    break;
+                }
+                // Chaos: reset this connection's socket — emit a short write
+                // (a truncated frame header) and sever, so the peer observes
+                // a mid-frame connection loss and must reconnect.
+                if shared.chaos_reset.fire() {
+                    ServeMetrics::bump(&shared.metrics.chaos_injected);
+                    let _ = w.write_all(&MAGIC.to_le_bytes()).and_then(|()| w.flush());
+                    break;
+                }
             }
-        }
-        if let Ok(s) = w.into_inner() {
-            let _ = s.shutdown(Shutdown::Both);
-        }
-    });
+            if let Ok(s) = w.into_inner() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        })
+    };
 
     let reader = {
         let shared = Arc::clone(shared);
@@ -446,11 +496,11 @@ fn spawn_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
     // *live* connections, not to every connection ever accepted. (Dropping
     // a finished handle is a no-op join-wise; unfinished ones are kept for
     // the shutdown joins.)
-    let mut readers = shared.readers.lock().unwrap();
+    let mut readers = lock_recover(&shared.readers);
     readers.retain(|h| !h.is_finished());
     readers.push(reader);
     drop(readers);
-    let mut writers = shared.writers.lock().unwrap();
+    let mut writers = lock_recover(&shared.writers);
     writers.retain(|h| !h.is_finished());
     writers.push(writer);
     Ok(())
@@ -600,7 +650,7 @@ fn handle_request(shared: &Arc<Shared>, tx: &SyncSender<Vec<u8>>, payload: &[u8]
     // Register the pending entry BEFORE the request becomes runnable, so
     // the router can never receive a response for an unregistered id.
     let cid = shared.handle.reserve_id();
-    shared.pending.lock().unwrap().insert(
+    lock_recover(&shared.pending).insert(
         cid,
         Pending {
             tx: tx.clone(),
@@ -657,13 +707,13 @@ fn router_loop(mut coord: Coordinator, shared: &Arc<Shared>) -> Vec<Menage> {
     // Drop any leftover pending entries (e.g. additional failed requests
     // whose errors `drain` folded into one): closes their writer channels
     // so connection writers can exit; those clients see EOF.
-    shared.pending.lock().unwrap().clear();
+    lock_recover(&shared.pending).clear();
     coord.shutdown()
 }
 
 fn route_response(shared: &Arc<Shared>, resp: Response) {
     let m = &shared.metrics;
-    let Some(p) = shared.pending.lock().unwrap().remove(&resp.id) else {
+    let Some(p) = lock_recover(&shared.pending).remove(&resp.id) else {
         ServeMetrics::bump(&m.dropped_responses);
         return;
     };
@@ -696,6 +746,20 @@ fn route_response(shared: &Arc<Shared>, resp: Response) {
         };
         encode_frame(FrameKind::InferResponse, &reply.encode())
     };
+    // Chaos: drop / delay this response (disarmed in production — one
+    // predicted-false branch each). A dropped response still cleared its
+    // pending entry and in-flight slot above: the *server* stays coherent,
+    // only the client is left waiting, which is exactly the failure mode
+    // loadgen's transient/terminal accounting exists to classify.
+    if shared.chaos_drop.fire() {
+        ServeMetrics::bump(&m.dropped_responses);
+        ServeMetrics::bump(&m.chaos_injected);
+        return;
+    }
+    if shared.chaos_delay.fire() {
+        ServeMetrics::bump(&m.chaos_injected);
+        std::thread::sleep(Duration::from_millis(shared.cfg.chaos.delay_ms));
+    }
     queue_frame(m, &p.tx, frame);
 }
 
@@ -709,7 +773,7 @@ fn route_worker_error(shared: &Arc<Shared>, e: &anyhow::Error) -> bool {
     let Some(cid) = request_id_of_error(e) else {
         return false;
     };
-    if let Some(p) = shared.pending.lock().unwrap().remove(&cid) {
+    if let Some(p) = lock_recover(&shared.pending).remove(&cid) {
         shared.net_in_flight.fetch_sub(1, Ordering::Relaxed);
         send_error(m, &p.tx, p.client_id, ErrorCode::Internal, format!("{e:#}"));
     }
@@ -728,7 +792,7 @@ fn quiesce_after_worker_death(shared: &Arc<Shared>, e: &anyhow::Error) {
     shared.quiesced.store(true, Ordering::Relaxed);
     let m = &shared.metrics;
     let pending: Vec<Pending> =
-        shared.pending.lock().unwrap().drain().map(|(_, p)| p).collect();
+        lock_recover(&shared.pending).drain().map(|(_, p)| p).collect();
     for p in pending {
         shared.net_in_flight.fetch_sub(1, Ordering::Relaxed);
         send_error(

@@ -364,6 +364,35 @@ impl ShardedMenage {
         }
     }
 
+    /// Install the hardware fault plan on every core of every shard.
+    /// Cores keep their monolithic (global layer) index through
+    /// [`Menage::from_cores`], so the realized defects are identical to a
+    /// monolithic chip under the same plan — sharding does not move the
+    /// silicon.
+    pub fn install_faults(&mut self, plan: &crate::fault::FaultPlan) {
+        for shard in self.shards.iter_mut() {
+            shard.install_faults(plan);
+        }
+    }
+
+    /// Whether any core of any shard carries installed hardware faults.
+    pub fn has_faults(&self) -> bool {
+        self.shards.iter().any(|s| s.has_faults())
+    }
+
+    /// `(stuck_row_hits, dead_slot_hits, events_bit_flipped)` summed over
+    /// every shard's cores.
+    pub fn fault_counters(&self) -> (u64, u64, u64) {
+        let mut t = (0u64, 0u64, 0u64);
+        for s in &self.shards {
+            let (a, b, c) = s.fault_counters();
+            t.0 += a;
+            t.1 += b;
+            t.2 += c;
+        }
+        t
+    }
+
     /// Total analog energy across all shards (J).
     pub fn analog_energy(&self) -> f64 {
         self.shards.iter().map(|s| s.analog_energy()).sum()

@@ -1,0 +1,342 @@
+//! Chaos suite: the acceptance gate for fault injection + self-healing.
+//!
+//! Hardware plane: a seeded [`FaultPlan`] must realize deterministically
+//! (same plan → bit-identical faulty runs, monolithic or sharded), and an
+//! empty plan must leave execution bit-identical to a fault-free chip.
+//!
+//! System plane: with chaos injection armed, every accepted request still
+//! gets **exactly one** response (a result or a typed error), the server
+//! never wedges, and clients recover lost responses / torn connections by
+//! retrying. Fault counters must surface in the STATS frame.
+
+use std::time::{Duration, Instant};
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::fault::{FaultPlan, SystemChaos};
+use menage::mapping::Strategy;
+use menage::serve::protocol::ErrorCode;
+use menage::serve::{Client, Reply, ServeConfig, Server};
+use menage::shard::ShardedMenage;
+use menage::snn::{QuantNetwork, SpikeTrain};
+use menage::util::rng::Rng;
+
+fn test_net() -> QuantNetwork {
+    let mcfg = ModelConfig {
+        name: "chaos-test".into(),
+        layer_sizes: vec![30, 16, 8],
+        timesteps: 6,
+        beta: 0.9,
+        v_threshold: 1.0,
+        v_reset: 0.0,
+    };
+    let mut rng = Rng::new(8);
+    QuantNetwork::random(&mcfg, 0.5, &mut rng)
+}
+
+fn test_cfg() -> AcceleratorConfig {
+    let mut cfg = AcceleratorConfig::accel1();
+    cfg.num_cores = 2;
+    cfg.a_neurons_per_core = 4;
+    cfg.a_syns_per_core = 4;
+    cfg.virtual_per_a_neuron = 4;
+    cfg
+}
+
+fn test_chip() -> Menage {
+    Menage::build(&test_net(), &test_cfg(), Strategy::IlpFlow, &AnalogParams::ideal(), 2)
+        .unwrap()
+}
+
+/// An aggressive plan: dense enough that this seed realizes every fault
+/// class on a 2-core chip (deterministic — not a statistical bet once the
+/// seed is fixed).
+fn aggressive_plan() -> FaultPlan {
+    FaultPlan {
+        seed: 5,
+        stuck_row_frac: 0.5,
+        dead_slot_frac: 0.4,
+        bit_flip_p: 0.1,
+        drift_scale: 1.5,
+    }
+}
+
+fn train_for(i: usize) -> SpikeTrain {
+    let mut rng = Rng::new(700 + i as u64);
+    SpikeTrain::bernoulli(30, 1 + i % 6, 0.3, &mut rng)
+}
+
+/// Same plan, two independently built chips → bit-identical faulty
+/// outputs and identical fault counters; the counters actually move.
+#[test]
+fn fault_plan_realizes_deterministically() {
+    let plan = aggressive_plan();
+    let mut a = test_chip();
+    let mut b = test_chip();
+    a.install_faults(&plan);
+    b.install_faults(&plan);
+    assert!(a.has_faults() && b.has_faults());
+    for i in 0..6 {
+        let st = train_for(i);
+        let oa = a.run(&st).unwrap();
+        let ob = b.run(&st).unwrap();
+        assert_eq!(oa.trains, ob.trains, "input {i}: faulty runs diverged");
+        assert_eq!(oa.cycles, ob.cycles, "input {i}: cycles diverged");
+    }
+    assert_eq!(a.fault_counters(), b.fault_counters());
+    let (stuck, dead, flips) = a.fault_counters();
+    assert!(
+        stuck + dead + flips > 0,
+        "aggressive plan injected nothing (stuck {stuck}, dead {dead}, flips {flips})"
+    );
+    for (i, core) in a.cores.iter().enumerate() {
+        assert!(core.has_faults(), "core {i} missed the plan");
+    }
+}
+
+/// Installing the empty plan is a no-op: outputs and every `CoreStats`
+/// stay bit-identical to a chip that never heard of faults.
+#[test]
+fn empty_plan_is_bit_identical_to_fault_free() {
+    let mut plain = test_chip();
+    let mut installed = test_chip();
+    installed.install_faults(&FaultPlan::default());
+    assert!(!installed.has_faults());
+    for i in 0..6 {
+        let st = train_for(i);
+        let op = plain.run(&st).unwrap();
+        let oi = installed.run(&st).unwrap();
+        assert_eq!(op.trains, oi.trains, "input {i}");
+        assert_eq!(op.cycles, oi.cycles, "input {i}");
+    }
+    for (a, b) in plain.cores.iter().zip(&installed.cores) {
+        assert_eq!(a.stats, b.stats, "CoreStats diverged under the empty plan");
+    }
+    assert_eq!(installed.fault_counters(), (0, 0, 0));
+}
+
+/// Sharding does not move the silicon: the same plan on a monolithic chip
+/// and a 2-shard pipeline realizes identical defects and, run over the
+/// same inputs in the same order, produces bit-identical faulty outputs
+/// and counters (cores keep their global index through the split).
+#[test]
+fn sharded_faults_bit_identical_to_monolithic() {
+    let net = test_net();
+    let cfg = test_cfg();
+    let plan = aggressive_plan();
+    let mut mono =
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 2).unwrap();
+    let mut sharded =
+        ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 2, 2)
+            .unwrap();
+    mono.install_faults(&plan);
+    sharded.install_faults(&plan);
+    assert!(sharded.has_faults());
+    for i in 0..6 {
+        let st = train_for(i);
+        let om = mono.run(&st).unwrap();
+        let os = sharded.run(&st).unwrap();
+        assert_eq!(om.trains, os.trains, "input {i}: sharded faulty run diverged");
+        assert_eq!(om.cycles, os.cycles, "input {i}: cycles diverged");
+    }
+    assert_eq!(mono.fault_counters(), sharded.fault_counters());
+}
+
+/// With worker panics injected every Nth request, every accepted request
+/// still gets exactly one reply — a result, or a typed Internal error for
+/// the retry-also-lost case — and the server keeps serving afterwards.
+#[test]
+fn injected_worker_panics_never_lose_a_request() {
+    const N: usize = 24;
+    let chip = test_chip();
+    let server = Server::start(
+        &chip,
+        "127.0.0.1:0",
+        ServeConfig {
+            workers: 2,
+            lanes_per_worker: 2,
+            chaos: SystemChaos { worker_panic_every: 5, ..SystemChaos::default() },
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let mut outstanding = Vec::new();
+    let (mut sent, mut answered, mut failed) = (0usize, 0usize, 0usize);
+    while answered + failed < N {
+        while sent < N && outstanding.len() < 8 {
+            let id = c.send_infer(&train_for(sent), 0, None).unwrap();
+            outstanding.push(id);
+            sent += 1;
+        }
+        match c
+            .recv_reply_timeout(Duration::from_secs(20))
+            .expect("connection died under worker panics")
+            .expect("no reply within 20s: a request was lost")
+        {
+            Reply::Infer(r) => {
+                assert!(outstanding.contains(&r.id), "duplicate response {}", r.id);
+                outstanding.retain(|&x| x != r.id);
+                answered += 1;
+            }
+            Reply::Error(e) => {
+                assert!(outstanding.contains(&e.id), "error for unknown id {}", e.id);
+                assert_eq!(e.code, ErrorCode::Internal, "{}", e.message);
+                outstanding.retain(|&x| x != e.id);
+                failed += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(outstanding.is_empty());
+    assert_eq!(answered + failed, N, "exactly-once accounting broke");
+
+    let recovery = server.recovery();
+    use std::sync::atomic::Ordering;
+    assert!(
+        recovery.worker_panics.load(Ordering::Relaxed) > 0,
+        "panic trigger never fired"
+    );
+    assert!(
+        recovery.workers_respawned.load(Ordering::Relaxed) > 0,
+        "no worker was respawned"
+    );
+    // The server is still healthy: a fresh request round-trips.
+    let r = c.recv_reply_timeout(Duration::from_millis(50)); // drain nothing
+    assert!(matches!(r, Ok(None)), "unexpected extra frame: {r:?}");
+    let reply = c.infer(&train_for(0)).unwrap();
+    assert!((reply.predicted as usize) < 8);
+    server.shutdown();
+}
+
+/// Responses dropped at the router are recovered by client-side retry:
+/// the request is resent under a fresh id and eventually answered.
+#[test]
+fn dropped_responses_recovered_by_retry() {
+    const N: usize = 8;
+    let chip = test_chip();
+    let server = Server::start(
+        &chip,
+        "127.0.0.1:0",
+        ServeConfig {
+            workers: 1,
+            lanes_per_worker: 2,
+            chaos: SystemChaos { drop_response_every: 4, ..SystemChaos::default() },
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let mut retries = 0usize;
+    for i in 0..N {
+        let train = train_for(i);
+        let mut id = c.send_infer(&train, 0, None).unwrap();
+        let mut abandoned: Vec<u64> = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        'req: loop {
+            assert!(Instant::now() < deadline, "request {i} never answered");
+            match c.recv_reply_timeout(Duration::from_millis(400)).unwrap() {
+                Some(Reply::Infer(r)) if r.id == id => break 'req,
+                Some(Reply::Infer(r)) => {
+                    assert!(abandoned.contains(&r.id), "unknown id {}", r.id);
+                }
+                Some(other) => panic!("unexpected reply {other:?}"),
+                None => {
+                    // Window expired: presume the response was dropped and
+                    // resend under a fresh id.
+                    abandoned.push(id);
+                    id = c.send_infer(&train, 0, None).unwrap();
+                    retries += 1;
+                }
+            }
+        }
+    }
+    assert!(retries > 0, "drop trigger never forced a retry");
+    let metrics = server.metrics();
+    use std::sync::atomic::Ordering;
+    assert!(metrics.dropped_responses.load(Ordering::Relaxed) > 0);
+    assert!(metrics.chaos_injected.load(Ordering::Relaxed) > 0);
+    server.shutdown();
+}
+
+/// Connections reset mid-frame are recovered by reconnecting; no request
+/// is abandoned.
+#[test]
+fn connection_resets_recovered_by_reconnect() {
+    const N: usize = 9;
+    let chip = test_chip();
+    let server = Server::start(
+        &chip,
+        "127.0.0.1:0",
+        ServeConfig {
+            workers: 1,
+            lanes_per_worker: 2,
+            chaos: SystemChaos { reset_conn_every: 3, ..SystemChaos::default() },
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let mut c = Client::connect(addr).unwrap();
+    let mut reconnects = 0usize;
+    for i in 0..N {
+        let train = train_for(i);
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            assert!(attempts <= 10, "request {i} unrecoverable after {attempts} attempts");
+            match c.infer(&train) {
+                Ok(r) => {
+                    assert!((r.predicted as usize) < 8);
+                    break;
+                }
+                Err(_) => {
+                    // Torn connection (chaos reset): reconnect and retry.
+                    c = Client::connect_retry(addr, 20, Duration::from_millis(25)).unwrap();
+                    reconnects += 1;
+                }
+            }
+        }
+    }
+    assert!(reconnects > 0, "reset trigger never tore the connection");
+    let metrics = server.metrics();
+    use std::sync::atomic::Ordering;
+    assert!(metrics.chaos_injected.load(Ordering::Relaxed) > 0);
+    server.shutdown();
+}
+
+/// Hardware fault counters and recovery counters surface in the STATS
+/// frame while the server runs.
+#[test]
+fn stats_frame_reports_fault_and_recovery_counters() {
+    let mut chip = test_chip();
+    chip.install_faults(&aggressive_plan());
+    let server = Server::start(
+        &chip,
+        "127.0.0.1:0",
+        ServeConfig { workers: 1, lanes_per_worker: 2, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    for i in 0..4 {
+        c.infer(&train_for(i)).unwrap();
+    }
+    // Workers publish counter deltas after each batch; poll briefly.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let total = loop {
+        let stats = c.stats().unwrap();
+        let recovery = stats.get("recovery").unwrap();
+        assert_eq!(recovery.get("worker_panics").unwrap().as_usize().unwrap(), 0);
+        let faults = stats.get("faults").unwrap();
+        let total = faults.get("stuck_row_hits").unwrap().as_usize().unwrap()
+            + faults.get("dead_slot_hits").unwrap().as_usize().unwrap()
+            + faults.get("events_bit_flipped").unwrap().as_usize().unwrap();
+        if total > 0 || Instant::now() > deadline {
+            break total;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert!(total > 0, "fault counters never surfaced in STATS");
+    server.shutdown();
+}

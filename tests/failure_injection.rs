@@ -243,6 +243,127 @@ fn corrupt_toml_config_rejected_with_line_info() {
     assert!(AcceleratorConfig::from_toml("[accelerator]\nweight_bits = 99").is_err());
 }
 
+/// Worker panics mid-drain: supervision salvages the dead worker's held
+/// batch (resubmit once, then typed error), respawns the worker, and the
+/// drain still terminates with exactly-one-response accounting intact.
+#[test]
+fn drain_with_panicking_workers_answers_every_request() {
+    use std::sync::atomic::Ordering;
+    const N: u64 = 9;
+    let (mut coord, make) = salvage_service();
+    coord.inject_worker_panics(3); // every 3rd stolen batch dies
+    for s in 0..N {
+        coord.submit(make(s), None);
+    }
+    let answered = match coord.drain() {
+        Ok(res) => res.len(),
+        // A request whose retry was also lost arrives as a typed error;
+        // the successes are salvageable, never silently dropped.
+        Err(_) => coord.take_salvaged_responses().len(),
+    };
+    let recovery = coord.recovery();
+    let failed = recovery.requests_failed.load(Ordering::Relaxed) as usize;
+    assert_eq!(
+        answered + failed,
+        N as usize,
+        "exactly-one-response broke: {answered} answered + {failed} typed errors"
+    );
+    assert!(recovery.worker_panics.load(Ordering::Relaxed) > 0, "trigger never fired");
+    assert!(recovery.workers_respawned.load(Ordering::Relaxed) > 0);
+    assert!(recovery.requests_resubmitted.load(Ordering::Relaxed) > 0);
+    // Disarmed, the healed pool serves a clean batch again.
+    coord.inject_worker_panics(0);
+    for s in 0..3 {
+        coord.submit(make(100 + s), None);
+    }
+    let res = coord.drain().expect("healed coordinator must serve cleanly");
+    assert_eq!(res.len(), 3);
+    assert!(res.iter().all(|r| r.id >= N), "stale response leaked into clean batch");
+    coord.shutdown();
+}
+
+/// Coordinator shutdown is bounded even when every worker keeps dying:
+/// held requests become typed errors, never a hang, and fewer (possibly
+/// zero) chips come back.
+#[test]
+fn coordinator_shutdown_bounded_with_dying_workers() {
+    use std::sync::atomic::Ordering;
+    use std::time::Instant;
+    let (mut coord, make) = salvage_service();
+    coord.inject_worker_panics(1); // every stolen batch dies
+    for s in 0..4 {
+        coord.submit(make(s), None);
+    }
+    // Every request fails typed (first loss resubmits, the retry dies too).
+    assert!(coord.drain().is_err());
+    assert!(coord.take_salvaged_responses().is_empty());
+    let recovery = coord.recovery();
+    assert_eq!(recovery.requests_failed.load(Ordering::Relaxed), 4);
+    let t0 = Instant::now();
+    let _chips = coord.shutdown(); // must return, dead workers and all
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "shutdown not bounded with dying workers"
+    );
+}
+
+/// Server shutdown stays bounded when its worker pool keeps panicking:
+/// every accepted request is answered with a typed Internal error first,
+/// and `Server::shutdown` returns instead of wedging on dead threads.
+#[test]
+fn server_shutdown_bounded_after_worker_panics() {
+    use menage::fault::SystemChaos;
+    use menage::serve::protocol::ErrorCode;
+    use menage::serve::{Client, Reply, ServeConfig, Server};
+    use std::time::{Duration, Instant};
+
+    let n = net(&[20, 10]);
+    let mut cfg = AcceleratorConfig::accel1();
+    cfg.num_cores = 1;
+    cfg.a_neurons_per_core = 4;
+    cfg.virtual_per_a_neuron = 4;
+    let chip = Menage::build(&n, &cfg, Strategy::Greedy, &AnalogParams::ideal(), 1).unwrap();
+    let server = Server::start(
+        &chip,
+        "127.0.0.1:0",
+        ServeConfig {
+            workers: 1,
+            lanes_per_worker: 2,
+            chaos: SystemChaos { worker_panic_every: 1, ..SystemChaos::default() },
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let mut rng = Rng::new(11);
+    let mut ids = Vec::new();
+    for _ in 0..3 {
+        let train = SpikeTrain::bernoulli(20, 3, 0.3, &mut rng);
+        ids.push(c.send_infer(&train, 0, None).unwrap());
+    }
+    for _ in 0..ids.len() {
+        match c
+            .recv_reply_timeout(Duration::from_secs(30))
+            .expect("connection died")
+            .expect("request unanswered: server wedged on panicking workers")
+        {
+            Reply::Error(e) => {
+                assert!(ids.contains(&e.id), "error for unknown id {}", e.id);
+                ids.retain(|&x| x != e.id);
+                assert_eq!(e.code, ErrorCode::Internal, "{}", e.message);
+            }
+            other => panic!("every-batch panics cannot produce {other:?}"),
+        }
+    }
+    assert!(ids.is_empty());
+    let t0 = Instant::now();
+    let _chips = server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "Server::shutdown not bounded with panicked workers"
+    );
+}
+
 #[test]
 fn nonideal_analog_never_panics_on_extremes() {
     // Saturating packets, negative storms, denormal scales: the non-ideal

@@ -1,0 +1,198 @@
+//! Property/fuzz suite for the wire-protocol parser: no byte stream —
+//! random soup, truncated valid traffic, or bit-mutated frames — may
+//! panic [`FrameReader`] or the payload decoders. Outcomes are confined
+//! to (a) correctly decoded frames, (b) a clean end-of-stream, or (c) a
+//! typed `io::Error`; valid frames *before* a corruption point must still
+//! come through intact.
+//!
+//! Complements the deterministic malformed-frame cases in
+//! `tests/serve_roundtrip.rs` (which pin server *behavior*); this suite
+//! pins parser *totality* under the seeded property driver
+//! (`menage::util::prop`) so failures reproduce by seed.
+
+use std::io::Cursor;
+
+use menage::serve::protocol::{
+    decode_stats_reply, write_frame, ErrorCode, ErrorFrame, FrameKind, FrameReader,
+    InferRequest, InferResponse, DEFAULT_MAX_FRAME_LEN,
+};
+use menage::snn::SpikeTrain;
+use menage::util::prop::check_n;
+use menage::util::rng::Rng;
+
+/// Pull frames out of `bytes` until end-of-stream or the first error.
+/// Returns the frames successfully read and the terminal error, if any.
+fn drain(bytes: &[u8], max_frame_len: usize) -> (usize, Option<std::io::Error>) {
+    let mut cur = Cursor::new(bytes);
+    let mut fr = FrameReader::new(max_frame_len);
+    let mut frames = 0usize;
+    loop {
+        match fr.read_frame(&mut cur) {
+            Ok(Some(_)) => frames += 1,
+            Ok(None) => return (frames, None),
+            Err(e) => return (frames, Some(e)),
+        }
+    }
+}
+
+/// A syntactically valid multi-frame stream with mixed kinds and
+/// heterogeneous spike trains. Returns the bytes, the frame count, and
+/// each frame's end offset (a frame boundary table for truncation tests).
+fn valid_stream(rng: &mut Rng) -> (Vec<u8>, usize, Vec<usize>) {
+    let mut buf = Vec::new();
+    let mut ends = Vec::new();
+    let k = 1 + rng.below(5);
+    for i in 0..k {
+        match rng.below(4) {
+            0 => {
+                let req = InferRequest {
+                    id: i as u64,
+                    deadline_ms: rng.below(1_000) as u32,
+                    label: if rng.bernoulli(0.5) { Some(rng.below(10) as u32) } else { None },
+                    train: SpikeTrain::bernoulli(1 + rng.below(40), rng.below(8), 0.3, rng),
+                };
+                write_frame(&mut buf, FrameKind::InferRequest, &req.encode()).unwrap();
+            }
+            1 => {
+                let resp = InferResponse {
+                    id: i as u64,
+                    predicted: rng.below(10) as u32,
+                    cycles: rng.next_u64() >> 32,
+                    server_micros: rng.below(1_000_000) as u64,
+                    output: SpikeTrain::bernoulli(1 + rng.below(12), rng.below(6), 0.4, rng),
+                };
+                write_frame(&mut buf, FrameKind::InferResponse, &resp.encode()).unwrap();
+            }
+            2 => {
+                let e = ErrorFrame::new(i as u64, ErrorCode::Overload, "server busy");
+                write_frame(&mut buf, FrameKind::Error, &e.encode()).unwrap();
+            }
+            _ => write_frame(&mut buf, FrameKind::Ping, &[]).unwrap(),
+        }
+        ends.push(buf.len());
+    }
+    (buf, k, ends)
+}
+
+/// Random byte soup: the reader must terminate with frames/EOF/error —
+/// never panic, never loop forever.
+#[test]
+fn random_byte_soup_never_panics() {
+    check_n("protocol-random-soup", 256, |rng| {
+        let n = rng.below(4_096);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let (_frames, _err) = drain(&bytes, 1 << 16);
+        Ok(())
+    });
+}
+
+/// Every truncation of a valid stream yields exactly the frames whose
+/// bytes fully arrived; a cut mid-frame is a clean error (or a resumable
+/// wait), and the untruncated stream drains completely.
+#[test]
+fn truncated_valid_streams_decode_complete_prefix() {
+    check_n("protocol-truncation", 256, |rng| {
+        let (buf, k, ends) = valid_stream(rng);
+        let cut = rng.below(buf.len() + 1);
+        let whole = ends.iter().filter(|&&e| e <= cut).count();
+        let (frames, err) = drain(&buf[..cut], DEFAULT_MAX_FRAME_LEN);
+        if frames != whole {
+            return Err(format!(
+                "cut at {cut}/{}: decoded {frames} frames, {whole} fully present",
+                buf.len()
+            ));
+        }
+        let at_boundary = cut == 0 || ends.contains(&cut);
+        if at_boundary && err.is_some() {
+            return Err(format!("boundary cut at {cut} errored: {err:?}"));
+        }
+        if cut == buf.len() && (frames != k || err.is_some()) {
+            return Err(format!("full stream: {frames}/{k} frames, err {err:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Bit-mutated valid streams: frames before the first mutated byte still
+/// decode; after it, anything goes except a panic or a runaway read.
+#[test]
+fn bit_mutated_streams_never_panic() {
+    check_n("protocol-bit-mutation", 256, |rng| {
+        let (mut buf, _k, ends) = valid_stream(rng);
+        let flips = 1 + rng.below(8);
+        let mut first_mutated = buf.len();
+        for _ in 0..flips {
+            let i = rng.below(buf.len());
+            buf[i] ^= 1 << rng.below(8);
+            first_mutated = first_mutated.min(i);
+        }
+        let intact = ends.iter().filter(|&&e| e <= first_mutated).count();
+        let (frames, _err) = drain(&buf, DEFAULT_MAX_FRAME_LEN);
+        if frames < intact {
+            return Err(format!(
+                "lost intact prefix: {frames} decoded, {intact} frames precede the \
+                 first mutation at byte {first_mutated}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The payload decoders are total over arbitrary bytes: truncated,
+/// oversized-count, and garbage payloads return `Err`, never panic, and
+/// never allocate from an unvalidated length field.
+#[test]
+fn payload_decoders_total_over_random_bytes() {
+    check_n("protocol-decoder-soup", 512, |rng| {
+        let n = rng.below(512);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let _ = InferRequest::decode(&bytes);
+        let _ = InferResponse::decode(&bytes);
+        let _ = ErrorFrame::decode(&bytes);
+        let _ = decode_stats_reply(&bytes);
+        Ok(())
+    });
+}
+
+/// Mutating a well-formed INFER_REQUEST payload (post-framing) either
+/// decodes to *some* valid request or errors — the decoder's validation
+/// can't be bypassed by single-bit damage.
+#[test]
+fn mutated_request_payloads_decode_or_error() {
+    check_n("protocol-request-mutation", 256, |rng| {
+        let req = InferRequest {
+            id: rng.next_u64(),
+            deadline_ms: rng.below(10_000) as u32,
+            label: None,
+            train: SpikeTrain::bernoulli(1 + rng.below(30), 1 + rng.below(6), 0.3, rng),
+        };
+        let mut payload = req.encode();
+        let i = rng.below(payload.len());
+        payload[i] ^= 1 << rng.below(8);
+        if let Ok(back) = InferRequest::decode(&payload) {
+            back.train
+                .validate()
+                .map_err(|e| format!("decoder accepted an invalid train: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// A frame claiming a length beyond the reader's cap is rejected as an
+/// error (no unbounded buffering), for every cap below the claim.
+#[test]
+fn oversized_frame_length_rejected_without_allocation() {
+    check_n("protocol-length-cap", 64, |rng| {
+        let mut buf = Vec::new();
+        let payload = vec![0u8; 64];
+        write_frame(&mut buf, FrameKind::InferRequest, &payload).unwrap();
+        // Mutate the length field (bytes 4..8) to an absurd claim.
+        let claim = (1u32 << 24) + rng.below(1 << 24) as u32;
+        buf[4..8].copy_from_slice(&claim.to_le_bytes());
+        let (frames, err) = drain(&buf, 1 << 16);
+        if frames != 0 || err.is_none() {
+            return Err(format!("oversized claim {claim} accepted ({frames} frames)"));
+        }
+        Ok(())
+    });
+}
