@@ -10,10 +10,13 @@ CARGO ?= cargo
 SMOKE_PORT ?= 7471
 ## Loopback port for the chaos smoke test (override on collision).
 CHAOS_PORT ?= 7473
+## Loopback ports for the distributed-shard smoke test (override on collision).
+DIST_PORT_A ?= 7475
+DIST_PORT_B ?= 7476
 
-.PHONY: verify build test test-lanes test-serve test-shard test-chaos chaos smoke-serve smoke-shard smoke-chaos lint fmt clippy bench-hotpath bench clean
+.PHONY: verify build test test-lanes test-serve test-shard test-dist test-chaos chaos smoke-serve smoke-shard smoke-dist smoke-chaos lint fmt clippy bench-hotpath bench clean
 
-verify: build test test-lanes test-shard
+verify: build test test-lanes test-shard test-dist
 
 build:
 	$(CARGO) build --release
@@ -37,6 +40,38 @@ test-serve:
 ## bit-identical to the monolithic engine (also covered by `test`).
 test-shard:
 	$(CARGO) test -q --test shard_differential
+
+## The distributed-shard identity suite: loopback shard-hosts pinned
+## bit-identical to in-process sharded execution, plus the wire failure
+## semantics (sequence gaps, killed hosts). Also covered by `test`.
+test-dist:
+	$(CARGO) test -q --test dist_identity
+
+## CLI-level distributed smoke, bounded runtime: two `shard-host`
+## processes each serving one chip of the same 2-shard plan, driven by
+## `simulate --remote-shards`; --check-monolithic exits non-zero unless
+## every classifier train and cycle count is bit-identical to an
+## in-process monolithic oracle. Hosts are killed afterwards (their
+## --duration-secs is only the hang backstop).
+smoke-dist: build
+	./target/release/menage shard-host --synthetic --model nmnist \
+		--shards 2 --shard-index 0 --addr 127.0.0.1:$(DIST_PORT_A) \
+		--duration-secs 120 & \
+	HOST_A=$$!; \
+	./target/release/menage shard-host --synthetic --model nmnist \
+		--shards 2 --shard-index 1 --addr 127.0.0.1:$(DIST_PORT_B) \
+		--duration-secs 120 & \
+	HOST_B=$$!; \
+	sleep 1; \
+	if ./target/release/menage simulate --synthetic --model nmnist \
+		--samples 6 --remote-window 2 --check-monolithic \
+		--remote-shards 127.0.0.1:$(DIST_PORT_A),127.0.0.1:$(DIST_PORT_B); then \
+		kill $$HOST_A $$HOST_B 2>/dev/null; \
+		wait $$HOST_A $$HOST_B 2>/dev/null || true; \
+	else \
+		kill $$HOST_A $$HOST_B 2>/dev/null; \
+		wait $$HOST_A $$HOST_B 2>/dev/null; exit 1; \
+	fi
 
 ## The robustness gate: wire-protocol fuzz, hardware fault-plan
 ## determinism, and the self-healing chaos suite (injected worker

@@ -96,6 +96,12 @@ const HEAL_POLL: Duration = Duration::from_millis(25);
 enum Backend {
     Mono(Menage),
     Sharded(ShardedMenage),
+    /// Shards live in other processes behind `shard-host` listeners; the
+    /// worker drives them over TCP ([`crate::serve::RemoteShardPipeline`]).
+    /// The chips — and therefore the stats, fault realizations, and
+    /// membrane state — are remote, which is why `into_chip` has nothing
+    /// local to hand back.
+    Remote(crate::serve::RemoteShardPipeline),
 }
 
 impl Backend {
@@ -103,6 +109,7 @@ impl Backend {
         match self {
             Backend::Mono(c) => c.cores[0].in_dim(),
             Backend::Sharded(s) => s.input_dim(),
+            Backend::Remote(p) => p.input_dim(),
         }
     }
 
@@ -110,6 +117,7 @@ impl Backend {
         match self {
             Backend::Mono(c) => c.run_into(input, out),
             Backend::Sharded(s) => s.run_into(input, out),
+            Backend::Remote(p) => p.run_into(input, out),
         }
     }
 
@@ -121,6 +129,7 @@ impl Backend {
         match self {
             Backend::Mono(c) => c.run_lanes_into(inputs, outs),
             Backend::Sharded(s) => s.run_lanes_into(inputs, outs),
+            Backend::Remote(p) => p.run_lanes_into(inputs, outs),
         }
     }
 
@@ -128,6 +137,8 @@ impl Backend {
         match self {
             Backend::Mono(c) => c.fold_lane_stats(),
             Backend::Sharded(s) => s.fold_lane_stats(),
+            // Remote stats accumulate on the hosts; nothing local to fold.
+            Backend::Remote(_) => {}
         }
     }
 
@@ -135,6 +146,9 @@ impl Backend {
         match self {
             Backend::Mono(c) => c.has_faults(),
             Backend::Sharded(s) => s.has_faults(),
+            // Fault plans are installed host-side; the driver cannot see
+            // them (and must not double-report deltas the hosts own).
+            Backend::Remote(_) => false,
         }
     }
 
@@ -144,15 +158,19 @@ impl Backend {
         match self {
             Backend::Mono(c) => c.fault_counters(),
             Backend::Sharded(s) => s.fault_counters(),
+            Backend::Remote(_) => (0, 0, 0),
         }
     }
 
     /// Collapse into the monolithic-shaped stats carrier shutdown hands
-    /// back (sharded cores are reassembled in global layer order).
-    fn into_chip(self) -> Menage {
+    /// back (sharded cores are reassembled in global layer order). A
+    /// remote backend owns no cores — its stats live in the shard hosts'
+    /// STATS registries — so it yields `None`.
+    fn into_chip(self) -> Option<Menage> {
         match self {
-            Backend::Mono(c) => c,
-            Backend::Sharded(s) => s.into_monolithic(),
+            Backend::Mono(c) => Some(c),
+            Backend::Sharded(s) => Some(s.into_monolithic()),
+            Backend::Remote(_) => None,
         }
     }
 }
@@ -389,7 +407,7 @@ struct WorkerCtx {
 pub struct Coordinator {
     /// `None` marks a worker slot whose thread died and was not (or could
     /// no longer be) respawned.
-    workers: Vec<Option<JoinHandle<Menage>>>,
+    workers: Vec<Option<JoinHandle<Option<Menage>>>>,
     /// Per-worker held slots (module docs §Worker supervision).
     held: Vec<Arc<Mutex<Vec<Request>>>>,
     queue: Arc<SharedQueue>,
@@ -485,6 +503,27 @@ impl Coordinator {
     ) -> Self {
         Self::with_backend(
             Backend::Sharded(chip.clone()),
+            num_workers,
+            lanes_per_worker,
+            fill_wait,
+        )
+    }
+
+    /// [`Self::with_lanes_wait`] over a **distributed** pipeline of
+    /// `shard-host` processes. Each worker clones the pipeline (topology
+    /// + shared link gauges; connections are lazily re-established per
+    /// clone) and drives the remote chips over TCP. Worker supervision
+    /// still applies — a panicked worker respawns from the template and
+    /// reconnects — but shutdown hands back no chips: the stats live in
+    /// the hosts' STATS registries.
+    pub fn remote_with_lanes_wait(
+        pipeline: &crate::serve::RemoteShardPipeline,
+        num_workers: usize,
+        lanes_per_worker: usize,
+        fill_wait: Duration,
+    ) -> Self {
+        Self::with_backend(
+            Backend::Remote(pipeline.clone()),
             num_workers,
             lanes_per_worker,
             fill_wait,
@@ -792,8 +831,9 @@ impl Coordinator {
             match handle.join() {
                 Ok(chip) => {
                     // Clean exit can only mean a shutdown race; keep the
-                    // chip so shutdown() still hands back its stats.
-                    self.dead_chips.push(chip);
+                    // chip (if the backend owned one — remote backends
+                    // don't) so shutdown() still hands back its stats.
+                    self.dead_chips.extend(chip);
                     continue;
                 }
                 Err(_) => {
@@ -878,7 +918,7 @@ impl Coordinator {
         for w in 0..self.workers.len() {
             match self.workers[w].take() {
                 Some(handle) => match handle.join() {
-                    Ok(chip) => chips.push(chip),
+                    Ok(chip) => chips.extend(chip),
                     Err(_) => {
                         self.recovery.worker_panics.fetch_add(1, Ordering::Relaxed);
                         self.fail_held(w, "lost to a worker panic at shutdown");
@@ -908,7 +948,7 @@ impl Coordinator {
 /// request is removed from the slot immediately after its response is on
 /// the results channel, so the slot always holds exactly the requests
 /// that would otherwise be lost.
-fn spawn_worker(mut chip: Backend, ctx: WorkerCtx) -> JoinHandle<Menage> {
+fn spawn_worker(mut chip: Backend, ctx: WorkerCtx) -> JoinHandle<Option<Menage>> {
     std::thread::spawn(move || {
         let WorkerCtx { queue, metrics, recovery, results_tx, held, lanes_per_worker } = ctx;
         let record = |out: &crate::accel::RunOutput,

@@ -35,7 +35,10 @@ use menage::fault::{FaultPlan, SystemChaos};
 use menage::mapping::{map_network, Strategy};
 use menage::runtime::{artifacts_dir, cpu_client, pjrt_available, GoldenModel};
 use menage::serve::protocol::NO_ID;
-use menage::serve::{Client, ErrorCode, Reply, ServeConfig, Server};
+use menage::serve::{
+    Client, ErrorCode, RemoteShardConfig, RemoteShardPipeline, Reply, ServeConfig, Server,
+    ShardHostConfig, ShardHostServer,
+};
 use menage::shard::ShardedMenage;
 use menage::snn::{QuantNetwork, SpikeTrain};
 use menage::trace::MemoryTrace;
@@ -274,9 +277,27 @@ fn cmd_map(args: &Args) -> Result<()> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     args.expect_known(
-        &["model", "accel", "strategy", "analog", "workers", "samples", "shards", "out", "faults"],
+        &[
+            "model",
+            "accel",
+            "strategy",
+            "analog",
+            "workers",
+            "samples",
+            "shards",
+            "out",
+            "faults",
+            "remote-shards",
+            "remote-window",
+        ],
         &["golden", "synthetic", "check-monolithic"],
     )?;
+    if let Some(spec) = args.get("remote-shards") {
+        return cmd_simulate_remote(args, &spec.to_string());
+    }
+    if args.get("remote-window").is_some() {
+        bail!("--remote-window only applies with --remote-shards");
+    }
     let (mcfg, kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
     let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
     let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
@@ -528,6 +549,147 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `--remote-shards host:port,host:port,...` list.
+fn parse_host_list(spec: &str) -> Result<Vec<String>> {
+    let addrs: Vec<String> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if addrs.is_empty() {
+        bail!("--remote-shards needs a comma-separated host:port list");
+    }
+    Ok(addrs)
+}
+
+/// `simulate --remote-shards` — drive already-running `shard-host`
+/// processes through the distributed pipeline driver, one sample at a
+/// time, optionally cross-checking every classifier train + cycle count
+/// against a locally built monolithic oracle (`--check-monolithic`, the
+/// `make smoke-dist` identity gate).
+fn cmd_simulate_remote(args: &Args, spec: &str) -> Result<()> {
+    if args.get("faults").is_some() {
+        bail!(
+            "--faults has no effect with --remote-shards: install the fault plan on the \
+             shard-hosts — their realization is what executes"
+        );
+    }
+    if args.get_usize("shards", 1)?.max(1) > 1 {
+        bail!(
+            "--shards is the in-process sharding path; with --remote-shards the hosts \
+             define the topology"
+        );
+    }
+    if args.has("golden") {
+        bail!("--golden is not supported with --remote-shards");
+    }
+    let (mcfg, kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
+    let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
+    let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
+    let analog = resolve_analog(args)?;
+    let samples = args.get_usize("samples", 40)?;
+    let synthetic = args.has("synthetic");
+    let check_mono = args.has("check-monolithic");
+    let window = args.get_usize("remote-window", 2)?.max(1);
+    let net = load_network(base, &mcfg, synthetic)?;
+
+    let addrs = parse_host_list(spec)?;
+    let mut pipeline = RemoteShardPipeline::connect(
+        &addrs,
+        RemoteShardConfig { window, ..RemoteShardConfig::default() },
+    )?;
+    if pipeline.input_dim() != net.input_dim() || pipeline.output_dim() != net.output_dim() {
+        bail!(
+            "shard-hosts serve a {}→{} pipeline, but the local model is {}→{} — \
+             start them with the same --model/--accel/--shards",
+            pipeline.input_dim(),
+            pipeline.output_dim(),
+            net.input_dim(),
+            net.output_dim()
+        );
+    }
+    println!(
+        "driving {} shard-hosts ({} → {} dims, T={}, window {window})",
+        pipeline.num_shards(),
+        pipeline.input_dim(),
+        pipeline.output_dim(),
+        pipeline.timesteps()
+    );
+
+    let eval: Vec<(SpikeTrain, usize)> = if synthetic {
+        let ds = Dataset::new(kind, 3, net.timesteps);
+        ds.balanced_split(samples, 0).into_iter().map(|s| (s.events, s.label)).collect()
+    } else {
+        load_eval(base, samples)?.into_iter().map(|(st, l, _)| (st, l)).collect()
+    };
+    println!("running {} samples over the wire…", eval.len());
+
+    // The identity oracle: same (model, seed) build the hosts used, so
+    // the distributed run must be bit-identical to it.
+    let mut oracle = if check_mono {
+        Some(Menage::build(&net, &cfg, strategy, &analog, 7)?)
+    } else {
+        None
+    };
+    let mut out = RunOutput::default();
+    let mut oracle_out = RunOutput::default();
+    let mut correct = 0usize;
+    let mut total_cycles = 0u64;
+    let t0 = Instant::now();
+    for (i, (st, label)) in eval.iter().enumerate() {
+        pipeline.run_into(st, &mut out)?;
+        total_cycles += out.cycles;
+        if out.predicted_class() == *label {
+            correct += 1;
+        }
+        if let Some(oracle) = oracle.as_mut() {
+            oracle.run_into(st, &mut oracle_out)?;
+            if *out.output() != *oracle_out.output() {
+                bail!(
+                    "distributed-vs-monolithic mismatch: sample {i} classifier train diverges"
+                );
+            }
+            if out.cycles != oracle_out.cycles {
+                bail!(
+                    "distributed-vs-monolithic mismatch: sample {i} cycles {} != {}",
+                    out.cycles,
+                    oracle_out.cycles
+                );
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    if check_mono {
+        println!(
+            "distributed-vs-monolithic check: {} samples bit-identical (trains + cycles)",
+            eval.len()
+        );
+    }
+    let accuracy = correct as f64 / eval.len().max(1) as f64;
+    let stats = pipeline.stats();
+    println!("\n== results ==");
+    println!("accuracy:        {accuracy:.4}");
+    println!("modeled cycles:  {total_cycles}");
+    println!(
+        "wall time:       {wall:?} ({:.1} samples/s)",
+        eval.len() as f64 / wall.as_secs_f64()
+    );
+    println!("boundary events per cut: {:?}", stats.boundary_events_vec());
+    println!("max in-flight per link:  {:?}", stats.max_in_flight_vec());
+    if let Some(outp) = args.get("out") {
+        let j = Json::obj(vec![
+            ("accuracy", accuracy.into()),
+            ("modeled_cycles", (total_cycles as usize).into()),
+            ("shards", pipeline.num_shards().into()),
+            ("remote_links", stats.to_json()),
+        ]);
+        std::fs::write(outp, j.to_string())?;
+        println!("wrote {outp}");
+    }
+    Ok(())
+}
+
 fn merged_accuracy(responses: &[menage::coordinator::Response]) -> f64 {
     let labelled = responses.iter().filter(|r| r.label.is_some()).count();
     if labelled == 0 {
@@ -622,9 +784,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "shards",
             "faults",
             "chaos",
+            "remote-shards",
+            "remote-window",
         ],
         &["synthetic", "allow-remote-shutdown"],
     )?;
+    if let Some(spec) = args.get("remote-shards") {
+        return cmd_serve_remote(args, &spec.to_string());
+    }
+    if args.get("remote-window").is_some() {
+        bail!("--remote-window only applies with --remote-shards");
+    }
     let (mcfg, _kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
     let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
     let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
@@ -733,6 +903,179 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => println!("no worker chips survived shutdown; per-chip stats unavailable"),
     }
+    Ok(())
+}
+
+/// `menage serve --remote-shards host:port,...` — the same TCP inference
+/// front-end, but execution happens on already-running `shard-host`
+/// processes: every coordinator worker clones the pipeline driver and
+/// streams boundary frontiers host-to-host. The model (and any fault
+/// plan) lives on the hosts; this process never builds a chip.
+fn cmd_serve_remote(args: &Args, spec: &str) -> Result<()> {
+    for k in ["model", "accel", "strategy", "analog", "shards", "faults"] {
+        if args.get(k).is_some() {
+            bail!(
+                "--{k} has no effect with --remote-shards: the model (and any fault plan) \
+                 lives on the shard-hosts"
+            );
+        }
+    }
+    if args.has("synthetic") {
+        bail!("--synthetic has no effect with --remote-shards: the shard-hosts own the model");
+    }
+    let chaos = match args.get("chaos") {
+        Some(spec) => SystemChaos::parse(spec)?,
+        None => SystemChaos::default(),
+    };
+    let serve_cfg = ServeConfig {
+        workers: args.get_usize("workers", 4)?.max(1),
+        lanes_per_worker: args.get_usize("lanes", 4)?.max(1),
+        fill_wait: Duration::from_micros(args.get_usize("fill-wait-us", 500)? as u64),
+        max_in_flight: args.get_usize("max-in-flight", 256)?.max(1),
+        allow_remote_shutdown: args.has("allow-remote-shutdown"),
+        chaos,
+        ..ServeConfig::default()
+    };
+    let duration = args.get_usize("duration-secs", 0)?;
+    let workers = serve_cfg.workers;
+    let lanes = serve_cfg.lanes_per_worker;
+    let cap = serve_cfg.max_in_flight;
+    let addr = args.get_or("addr", "127.0.0.1:7471");
+    if serve_cfg.chaos.enabled() {
+        println!("system chaos injection enabled — NOT a production configuration");
+    }
+    let addrs = parse_host_list(spec)?;
+    let window = args.get_usize("remote-window", 2)?.max(1);
+    let pipeline = RemoteShardPipeline::connect(
+        &addrs,
+        RemoteShardConfig { window, ..RemoteShardConfig::default() },
+    )?;
+    let server = Server::start_remote(&pipeline, addr.as_str(), serve_cfg)?;
+    println!(
+        "serving a {}-shard remote pipeline ({} → {} dims, T={}, window {window}) on {} — \
+         {workers} workers × {lanes} lanes, in-flight cap {cap}{}",
+        pipeline.num_shards(),
+        pipeline.input_dim(),
+        pipeline.output_dim(),
+        pipeline.timesteps(),
+        server.local_addr(),
+        if duration > 0 { format!(", for {duration}s") } else { String::new() }
+    );
+
+    let metrics = server.metrics();
+    let started = Instant::now();
+    let mut last_report = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        if server.remote_shutdown_requested() {
+            println!("shutdown requested by client; draining…");
+            break;
+        }
+        if server.quiesced() {
+            eprintln!("server lost its workers; shutting down");
+            break;
+        }
+        if duration > 0 && started.elapsed() >= Duration::from_secs(duration as u64) {
+            println!("duration reached; draining…");
+            break;
+        }
+        if last_report.elapsed() >= Duration::from_secs(10) {
+            last_report = Instant::now();
+            println!("stats: {}", server.stats_json());
+        }
+    }
+    let stats = pipeline.stats();
+    let chips = server.shutdown();
+    debug_assert!(chips.is_empty(), "remote workers own no local chips");
+    println!("final stats: {}", metrics.to_json(started, 0, 0));
+    println!("boundary events per cut: {:?}", stats.boundary_events_vec());
+    println!("max in-flight per link:  {:?}", stats.max_in_flight_vec());
+    println!("per-core stats live on the shard-hosts — query their STATS frames");
+    Ok(())
+}
+
+/// `menage shard-host` — host ONE chip of the shard plan over TCP (see
+/// `menage::serve::shard_host`). Builds the **full** `ShardedMenage`
+/// (same seed 7 every `serve`/`simulate` build uses, same fault plan
+/// realization) and serves the `--shard-index`-th slice; the other
+/// slices are dropped. Runs until `--duration-secs` elapses or, with
+/// `--allow-remote-shutdown`, a client sends SHUTDOWN.
+fn cmd_shard_host(args: &Args) -> Result<()> {
+    args.expect_known(
+        &[
+            "model",
+            "accel",
+            "strategy",
+            "analog",
+            "addr",
+            "shards",
+            "shard-index",
+            "faults",
+            "duration-secs",
+        ],
+        &["synthetic", "allow-remote-shutdown"],
+    )?;
+    let (mcfg, _kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
+    let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
+    let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
+    let analog = resolve_analog(args)?;
+    let shards_req = args.get_usize("shards", 2)?.max(1);
+    let index: usize = args
+        .get("shard-index")
+        .ok_or_else(|| anyhow!("--shard-index is required (which shard of the plan this host serves)"))?
+        .parse()
+        .context("--shard-index")?;
+    let net = load_network(base, &mcfg, args.has("synthetic"))?;
+    let fault_plan = match args.get("faults") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => FaultPlan::default(),
+    };
+    let mut sharded = ShardedMenage::build(&net, &cfg, strategy, &analog, 7, shards_req)?;
+    // Same topology contract as `serve --shards`: the driver validates
+    // shard count and dims over STATS, so refuse to silently serve a
+    // different plan than requested.
+    if sharded.num_shards() != shards_req {
+        bail!(
+            "--shards {shards_req} exceeds the model's {} layers (one layer per shard max); \
+             this host would serve a {}-shard plan",
+            net.layers.len(),
+            sharded.num_shards()
+        );
+    }
+    sharded.install_faults(&fault_plan);
+    if !fault_plan.is_empty() {
+        println!("hardware fault injection enabled (seed {})", fault_plan.seed);
+    }
+    let host_cfg = ShardHostConfig {
+        allow_remote_shutdown: args.has("allow-remote-shutdown"),
+        ..ShardHostConfig::default()
+    };
+    let addr = args.get_or("addr", "127.0.0.1:7475");
+    let duration = args.get_usize("duration-secs", 0)?;
+    let range = sharded.plan.ranges()[index.min(sharded.num_shards() - 1)].clone();
+    let server = ShardHostServer::start(&sharded, index, addr.as_str(), host_cfg)?;
+    println!(
+        "shard-host {index}/{shards_req}: serving layers {}..{} of {} on {}{}",
+        range.start,
+        range.end,
+        net.name,
+        server.local_addr(),
+        if duration > 0 { format!(", for {duration}s") } else { String::new() }
+    );
+    let started = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        if server.remote_shutdown_requested() {
+            println!("shutdown requested by client; stopping…");
+            break;
+        }
+        if duration > 0 && started.elapsed() >= Duration::from_secs(duration as u64) {
+            println!("duration reached; stopping…");
+            break;
+        }
+    }
+    println!("final stats: {}", server.stats_json());
+    server.shutdown();
     Ok(())
 }
 
@@ -1243,6 +1586,10 @@ USAGE:
                    [--max-in-flight N] [--duration-secs S] [--shards K]
                    [--allow-remote-shutdown] [--strategy S] [--analog A]
                    [--faults SPEC] [--chaos SPEC]
+                   [--remote-shards HOST:PORT,HOST:PORT,...] [--remote-window W]
+  menage shard-host --model M --accel A --shards K --shard-index I
+                   [--addr HOST:PORT] [--synthetic] [--strategy S] [--analog A]
+                   [--faults SPEC] [--duration-secs S] [--allow-remote-shutdown]
   menage loadgen   [--addr HOST:PORT] [--connections C] [--requests N]
                    [--pipeline P] [--rate R] [--deadline-ms D] [--seed S]
                    [--shards K] [--out BENCH_serve.json] [--shutdown-server]
@@ -1256,6 +1603,14 @@ minimizing inter-shard spike traffic under per-chip capacity), with
 boundary spike frontiers forwarded chip-to-chip each time step —
 bit-identical to monolithic execution (simulate --check-monolithic
 asserts it end-to-end; loadgen --shards K asserts the server topology).
+
+Distributed shards: start one `shard-host` per shard (same --model,
+--shards, --faults and seed on every host, distinct --shard-index), then
+point a driver at them with --remote-shards HOST:PORT,... (pipeline
+order). serve --remote-shards fronts the distributed pipeline with the
+usual TCP inference service; simulate --remote-shards drives it directly
+and --check-monolithic asserts bit-identity against a local oracle.
+--remote-window W bounds timesteps in flight per link (default 2).
 
 --faults injects deterministic analog hardware faults, e.g.
   --faults seed=3,stuck=0.05,dead=0.02,flip=0.001,drift=1.2
@@ -1289,6 +1644,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "waveform" => cmd_waveform(&args),
         "serve" => cmd_serve(&args),
+        "shard-host" => cmd_shard_host(&args),
         "loadgen" => cmd_loadgen(&args),
         "help" | "--help" | "-h" => {
             help();
@@ -1358,7 +1714,7 @@ mod tests {
     /// (the handlers call expect_known before doing any work).
     #[test]
     fn subcommand_handlers_reject_unknown_flags() {
-        for cmd in ["info", "map", "simulate", "waveform", "serve", "loadgen"] {
+        for cmd in ["info", "map", "simulate", "waveform", "serve", "shard-host", "loadgen"] {
             let a = Args::parse_from(argv(&[cmd, "--definitely-not-a-flag"])).unwrap();
             let r = match cmd {
                 "info" => cmd_info(&a),
@@ -1366,6 +1722,7 @@ mod tests {
                 "simulate" => cmd_simulate(&a),
                 "waveform" => cmd_waveform(&a),
                 "serve" => cmd_serve(&a),
+                "shard-host" => cmd_shard_host(&a),
                 "loadgen" => cmd_loadgen(&a),
                 _ => unreachable!(),
             };

@@ -21,7 +21,7 @@ use crate::util::rng::Rng;
 
 use super::protocol::{
     decode_stats_reply, write_frame, ErrorCode, ErrorFrame, Frame, FrameKind, FrameReader,
-    InferRequest, InferResponse, DEFAULT_MAX_FRAME_LEN,
+    InferRequest, InferResponse, ShardAckFrame, ShardStepFrame, DEFAULT_MAX_FRAME_LEN,
 };
 
 /// Exponential backoff schedule with jitter: attempt `i` waits
@@ -59,6 +59,7 @@ fn decode_reply(kind: u8, payload: &[u8]) -> Result<Reply> {
         Some(FrameKind::Error) => Reply::Error(ErrorFrame::decode(payload)?),
         Some(FrameKind::Pong) => Reply::Pong,
         Some(FrameKind::StatsReply) => Reply::Stats(decode_stats_reply(payload)?),
+        Some(FrameKind::ShardAck) => Reply::ShardAck(ShardAckFrame::decode(payload)?),
         other => bail!("unexpected frame from server: {other:?} (kind byte {kind})"),
     })
 }
@@ -70,6 +71,8 @@ pub enum Reply {
     Error(ErrorFrame),
     Pong,
     Stats(Json),
+    /// A shard-host's per-timestep result (distributed pipeline link).
+    ShardAck(ShardAckFrame),
 }
 
 /// Blocking connection to a `menage serve` instance.
@@ -117,12 +120,17 @@ impl Client {
     ) -> Result<Self> {
         let schedule = backoff_schedule(attempts.max(1), base, cap, seed);
         let mut last = None;
-        for delay in schedule {
+        for (i, delay) in schedule.iter().enumerate() {
             match Self::connect(addr) {
                 Ok(c) => return Ok(c),
                 Err(e) => last = Some(e),
             }
-            std::thread::sleep(delay);
+            // The delay buys another attempt; after the final failure
+            // there is none, so sleeping would only add up to `cap` of
+            // dead latency before the caller sees the error.
+            if i + 1 < schedule.len() {
+                std::thread::sleep(*delay);
+            }
         }
         Err(last.unwrap())
     }
@@ -143,14 +151,37 @@ impl Client {
         Ok(id)
     }
 
+    /// Send one pipeline-timestep frontier to a shard-host without waiting
+    /// for the SHARD_ACK — the distributed driver keeps several steps in
+    /// flight per link and collects acks with [`Self::recv_reply_timeout`].
+    pub fn send_shard_step(&mut self, step: &ShardStepFrame) -> Result<()> {
+        write_frame(&mut self.stream, FrameKind::ShardStep, &step.encode())
+            .context("sending SHARD_STEP")?;
+        Ok(())
+    }
+
     /// Block until the next server frame and decode it.
     pub fn recv_reply(&mut self) -> Result<Reply> {
-        let Frame { kind, payload } = match self.reader.read_frame(&mut self.stream) {
-            Ok(Some(f)) => f,
-            Ok(None) => bail!("server closed the connection"),
-            Err(e) => return Err(e).context("reading server frame"),
-        };
-        decode_reply(kind, &payload)
+        loop {
+            match self.reader.read_frame(&mut self.stream) {
+                Ok(Some(Frame { kind, payload })) => return decode_reply(kind, &payload),
+                Ok(None) => bail!("server closed the connection"),
+                // A read timeout left armed on the socket (e.g. a failed
+                // restore in [`Self::recv_reply_timeout`]) must not
+                // masquerade as connection loss: resume the read —
+                // [`FrameReader`] keeps any partial frame across the
+                // interruption, so no bytes are lost.
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e).context("reading server frame"),
+            }
+        }
     }
 
     /// [`Self::recv_reply`] bounded by a socket read timeout: `Ok(None)`
@@ -176,8 +207,21 @@ impl Client {
             }
             Err(e) => Err(e).context("reading server frame"),
         };
-        self.stream.set_read_timeout(None).ok();
-        r
+        // Restore the blocking socket. A failure here used to be swallowed
+        // with `.ok()`, leaving the timeout armed so the *next* plain
+        // `recv_reply` could misreport an idle wait as connection loss.
+        // Retry once; if the restore still fails and this call has nothing
+        // better to report, surface it (a decoded reply or a prior error
+        // takes precedence — `recv_reply` now resumes across a stale
+        // timeout, so the socket stays usable either way).
+        let restored = self
+            .stream
+            .set_read_timeout(None)
+            .or_else(|_| self.stream.set_read_timeout(None));
+        match (r, restored) {
+            (Ok(None), Err(e)) => Err(e).context("restoring blocking read mode"),
+            (r, _) => r,
+        }
     }
 
     /// Synchronous inference: send, then block for this request's reply.
@@ -282,6 +326,97 @@ mod tests {
         // Huge attempt counts must not overflow the shift.
         let long = backoff_schedule(80, Duration::from_millis(1), Duration::from_millis(50), 3);
         assert!(long.iter().all(|&d| d <= Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn connect_backoff_skips_sleep_after_final_attempt() {
+        // One attempt with a huge base delay: the old code slept the full
+        // jittered delay (≥ 5 s here) after the only — and final — failed
+        // connect before returning. The fix returns immediately.
+        let t0 = std::time::Instant::now();
+        let r = Client::connect_backoff(
+            "127.0.0.1:1",
+            1,
+            Duration::from_secs(10),
+            Duration::from_secs(10),
+            11,
+        );
+        assert!(r.is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "slept after the final attempt: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn connect_backoff_sleeps_exactly_n_minus_1_delays() {
+        // The schedule is deterministic per seed, so the expected total
+        // sleep is computable exactly: attempts=3 must sleep the first two
+        // delays (lower bound) but not the third (upper bound).
+        let (base, cap, seed) = (Duration::from_millis(80), Duration::from_millis(80), 13);
+        let sched = backoff_schedule(3, base, cap, seed);
+        let lower: Duration = sched[..2].iter().sum();
+        let upper: Duration = sched.iter().sum();
+        let t0 = std::time::Instant::now();
+        let r = Client::connect_backoff("127.0.0.1:1", 3, base, cap, seed);
+        assert!(r.is_err());
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= lower, "fewer than N−1 sleeps: {elapsed:?} < {lower:?}");
+        assert!(elapsed < upper, "slept after the final attempt: {elapsed:?} >= {upper:?}");
+    }
+
+    /// Loopback socket pair with the client wrapped in [`Client`]; the raw
+    /// server side lets tests inject frames byte by byte.
+    fn loopback_client() -> (Client, TcpStream) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = Client::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        (client, server_side)
+    }
+
+    #[test]
+    fn recv_reply_resumes_across_stale_read_timeout() {
+        use std::io::Write;
+        let (mut client, mut server_side) = loopback_client();
+        // Simulate the failure mode the fix targets: a read timeout left
+        // armed on the socket (as if `recv_reply_timeout`'s restore had
+        // failed). The blocking receive must ride across the spurious
+        // WouldBlock wake-ups — including one that lands mid-frame — and
+        // deliver the reply instead of reporting connection loss.
+        client.stream.set_read_timeout(Some(Duration::from_millis(5))).unwrap();
+        let frame = crate::serve::protocol::encode_frame(FrameKind::Pong, &[]);
+        let writer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            server_side.write_all(&frame[..3]).unwrap(); // partial header
+            server_side.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(40));
+            server_side.write_all(&frame[3..]).unwrap();
+            server_side.flush().unwrap();
+            server_side // keep the connection open until joined
+        });
+        assert!(matches!(client.recv_reply().unwrap(), Reply::Pong));
+        drop(writer.join().unwrap());
+    }
+
+    #[test]
+    fn recv_reply_timeout_then_blocking_recv_still_works() {
+        let (mut client, mut server_side) = loopback_client();
+        // Quiet window: expires with no frame, connection stays usable.
+        assert!(client
+            .recv_reply_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+        // The restored blocking socket must then wait indefinitely — well
+        // past the previous 20 ms window — for a real reply.
+        let writer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            write_frame(&mut server_side, FrameKind::Pong, &[]).unwrap();
+            server_side
+        });
+        assert!(matches!(client.recv_reply().unwrap(), Reply::Pong));
+        drop(writer.join().unwrap());
     }
 
     #[test]

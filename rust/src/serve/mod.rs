@@ -20,20 +20,31 @@
 //! * [`client`] — blocking client library (sync and pipelined).
 //! * [`metrics`] — the lock-free per-request metrics registry served over
 //!   the STATS frame.
+//! * [`shard_host`] — serve ONE chip of a [`crate::mapping::ShardPlan`]
+//!   over the same protocol (`menage shard-host`), so a sharded pipeline
+//!   can span processes.
+//! * [`remote_shard`] — the distributed-pipeline driver: one [`Client`]
+//!   per shard host, streaming boundary frontiers link-to-link with a
+//!   bounded number of timesteps in flight per link.
 //!
-//! CLI entry points: `menage serve` (stand up a server) and
-//! `menage loadgen` (drive it over loopback and emit
-//! `BENCH_serve.json`). End-to-end behaviour — including bit-identical
-//! outputs vs in-process execution — is pinned by
-//! `tests/serve_roundtrip.rs`.
+//! CLI entry points: `menage serve` (stand up a server; add
+//! `--remote-shards host:port,...` to execute on shard hosts),
+//! `menage shard-host` (host one shard), and `menage loadgen` (drive a
+//! server over loopback and emit `BENCH_serve.json`). End-to-end
+//! behaviour — including bit-identical outputs vs in-process execution —
+//! is pinned by `tests/serve_roundtrip.rs` and `tests/dist_identity.rs`.
 
 pub mod client;
 pub mod codec;
 pub mod metrics;
 pub mod protocol;
+pub mod remote_shard;
 pub mod server;
+pub mod shard_host;
 
 pub use client::{backoff_schedule, Client, InferReply, Reply};
 pub use metrics::ServeMetrics;
 pub use protocol::{ErrorCode, FrameKind};
+pub use remote_shard::{RemoteLinkStats, RemoteShardConfig, RemoteShardPipeline};
 pub use server::{ModelInfo, ServeConfig, Server};
+pub use shard_host::{ShardHostConfig, ShardHostServer};

@@ -24,6 +24,17 @@
 //! | 6    | STATS          | c→s  | empty |
 //! | 7    | STATS_REPLY    | s→c  | `str json` (the metrics registry snapshot) |
 //! | 8    | SHUTDOWN       | c→s  | empty (honored only with `allow_remote_shutdown`; acked with PONG) |
+//! | 9    | SHARD_STEP     | c→s  | `u64 seq, u32 step, frontier train (exactly 1 timestep)` |
+//! | 10   | SHARD_ACK      | s→c  | `u64 seq, u32 step, u64 step_cycles, frontier train (exactly 1 timestep)` |
+//!
+//! SHARD_STEP/SHARD_ACK carry one pipeline timestep between a distributed
+//! driver and a `menage shard-host` process (see `serve::shard_host` /
+//! `serve::remote_shard`): `seq` is a per-connection link sequence number
+//! starting at 0 (gaps or reorders are protocol errors — a dropped
+//! frontier must never silently desynchronize the pipeline), `step` is the
+//! timestep index within the current input (step 0 begins a new input and
+//! resets the shard's membrane state), and the train holds exactly that
+//! step's boundary spike frontier.
 //!
 //! Framing errors (bad magic/version, oversized length, truncated stream)
 //! are protocol-fatal for the connection: the server answers with an
@@ -68,6 +79,8 @@ pub enum FrameKind {
     Stats = 6,
     StatsReply = 7,
     Shutdown = 8,
+    ShardStep = 9,
+    ShardAck = 10,
 }
 
 impl FrameKind {
@@ -81,6 +94,8 @@ impl FrameKind {
             6 => Self::Stats,
             7 => Self::StatsReply,
             8 => Self::Shutdown,
+            9 => Self::ShardStep,
+            10 => Self::ShardAck,
             _ => return None,
         })
     }
@@ -350,6 +365,86 @@ impl ErrorFrame {
     }
 }
 
+/// SHARD_STEP payload: one pipeline timestep entering a shard-host.
+#[derive(Debug, Clone)]
+pub struct ShardStepFrame {
+    /// Per-connection link sequence number, starting at 0 and
+    /// incrementing by 1 per SHARD_STEP. The host verifies it exactly, so
+    /// a dropped, duplicated, or reordered frontier surfaces as a typed
+    /// protocol error instead of silently desynchronized membrane state.
+    pub seq: u64,
+    /// Timestep index within the current input. Step 0 begins a new input:
+    /// the host resets its shard's membranes before applying the frontier.
+    /// Any other value must be exactly `previous step + 1`.
+    pub step: u32,
+    /// The boundary spike frontier for exactly this step — a 1-timestep
+    /// train whose width is the shard's input dimension.
+    pub frontier: SpikeTrain,
+}
+
+impl ShardStepFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.frontier.wire_len());
+        put_u64(&mut out, self.seq);
+        put_u32(&mut out, self.step);
+        self.frontier.write_wire(&mut out);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let seq = c.u64("seq")?;
+        let step = c.u32("step")?;
+        let frontier = c.train("frontier")?;
+        c.finish("SHARD_STEP")?;
+        if frontier.timesteps() != 1 {
+            bail!("SHARD_STEP frontier must carry exactly 1 timestep, got {}", frontier.timesteps());
+        }
+        Ok(Self { seq, step, frontier })
+    }
+}
+
+/// SHARD_ACK payload: a shard-host's result for one pipeline timestep.
+#[derive(Debug, Clone)]
+pub struct ShardAckFrame {
+    /// Echo of the SHARD_STEP's sequence number.
+    pub seq: u64,
+    /// Echo of the SHARD_STEP's step index.
+    pub step: u32,
+    /// Max per-core cycle delta across this shard for the step — the
+    /// driver folds these with a per-step max across shards to reassemble
+    /// the monolithic synchronous-clock cycle count bit-identically.
+    pub step_cycles: u64,
+    /// The shard's output frontier for this step (1-timestep train of the
+    /// shard's output dimension) — the next link's SHARD_STEP payload, or
+    /// the classifier output at the last shard.
+    pub frontier: SpikeTrain,
+}
+
+impl ShardAckFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + self.frontier.wire_len());
+        put_u64(&mut out, self.seq);
+        put_u32(&mut out, self.step);
+        put_u64(&mut out, self.step_cycles);
+        self.frontier.write_wire(&mut out);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let seq = c.u64("seq")?;
+        let step = c.u32("step")?;
+        let step_cycles = c.u64("step_cycles")?;
+        let frontier = c.train("frontier")?;
+        c.finish("SHARD_ACK")?;
+        if frontier.timesteps() != 1 {
+            bail!("SHARD_ACK frontier must carry exactly 1 timestep, got {}", frontier.timesteps());
+        }
+        Ok(Self { seq, step, step_cycles, frontier })
+    }
+}
+
 /// Encode a STATS_REPLY payload from the metrics snapshot.
 pub fn encode_stats_reply(stats: &Json) -> Vec<u8> {
     let mut out = Vec::new();
@@ -527,12 +622,40 @@ mod tests {
     }
 
     #[test]
+    fn shard_step_and_ack_roundtrip() {
+        let mut rng = Rng::new(4);
+        let frontier = SpikeTrain::bernoulli(16, 1, 0.4, &mut rng);
+        let step = ShardStepFrame { seq: 7, step: 3, frontier: frontier.clone() };
+        let back = ShardStepFrame::decode(&step.encode()).unwrap();
+        assert_eq!(back.seq, 7);
+        assert_eq!(back.step, 3);
+        assert_eq!(back.frontier, frontier);
+        let ack =
+            ShardAckFrame { seq: 7, step: 3, step_cycles: 4096, frontier: frontier.clone() };
+        let back = ShardAckFrame::decode(&ack.encode()).unwrap();
+        assert_eq!(back.seq, 7);
+        assert_eq!(back.step, 3);
+        assert_eq!(back.step_cycles, 4096);
+        assert_eq!(back.frontier, frontier);
+        // Trailing garbage is rejected.
+        let mut p = step.encode();
+        p.push(0);
+        assert!(ShardStepFrame::decode(&p).is_err());
+        // A multi-timestep train is not a frontier.
+        let fat = SpikeTrain::bernoulli(16, 3, 0.4, &mut rng);
+        let bad = ShardStepFrame { seq: 0, step: 0, frontier: fat.clone() };
+        assert!(ShardStepFrame::decode(&bad.encode()).is_err());
+        let bad = ShardAckFrame { seq: 0, step: 0, step_cycles: 0, frontier: fat };
+        assert!(ShardAckFrame::decode(&bad.encode()).is_err());
+    }
+
+    #[test]
     fn kind_and_code_tables_roundtrip() {
-        for k in 1u8..=8 {
+        for k in 1u8..=10 {
             assert_eq!(FrameKind::from_u8(k).unwrap() as u8, k);
         }
         assert!(FrameKind::from_u8(0).is_none());
-        assert!(FrameKind::from_u8(9).is_none());
+        assert!(FrameKind::from_u8(11).is_none());
         for c in 1u8..=7 {
             let code = ErrorCode::from_u8(c).unwrap();
             assert_eq!(code as u8, c);

@@ -1,0 +1,508 @@
+//! The distributed-pipeline driver: streams boundary frontiers between
+//! `menage shard-host` processes (see [`super::shard_host`]).
+//!
+//! A [`RemoteShardPipeline`] holds one [`Client`] connection per shard
+//! host, in pipeline order. Per input it feeds the input train's steps to
+//! link 0 and forwards every SHARD_ACK frontier to the next link, keeping
+//! up to `window` timesteps in flight **per link** — so shard k executes
+//! step t while shard k+1 executes step t−1 and pipeline throughput
+//! approaches one-chip throughput regardless of depth.
+//!
+//! **Scheduling.** The driver is send-preferring: each round it first
+//! sends every frontier that is ready on a link with window room, and
+//! only when nothing can be sent does it block (bounded by `io_timeout`)
+//! on the earliest link with outstanding acks. This makes the pipeline
+//! fill deterministic — with `window ≥ 2` and enough timesteps every
+//! link reaches `window` steps in flight (pinned by
+//! `tests/dist_identity.rs`) — and means a dead or wedged host surfaces
+//! as a typed error naming the shard within one `io_timeout`, never a
+//! hang.
+//!
+//! **Bit-identity.** The cores live on the hosts (built from the same
+//! `(model, seed, fault plan)` the in-process [`crate::shard::ShardedMenage`]
+//! uses), the frontier hand-off is the same spike sets the in-process
+//! loop forwards, and the modeled clock is reassembled exactly: each
+//! SHARD_ACK carries the shard's max per-core cycle delta for its step,
+//! and the driver folds `Σ_t max_k step_cycles[k][t]` — the monolithic
+//! synchronous-clock cost model. Per-cut `boundary_events` counts
+//! distinct frontier sources, matching the fixed in-process accounting
+//! spike for spike.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::accel::RunOutput;
+use crate::shard::distinct_sources;
+use crate::snn::SpikeTrain;
+use crate::util::json::Json;
+
+use super::client::{Client, Reply};
+use super::protocol::ShardStepFrame;
+
+/// Driver knobs; `Default` matches the CLI defaults.
+#[derive(Debug, Clone)]
+pub struct RemoteShardConfig {
+    /// Max timesteps in flight per link (≥ 1; 2 is enough to hide one
+    /// link's latency behind the neighbour's compute).
+    pub window: usize,
+    /// How long a blocked ack wait may last before the driver declares
+    /// the host dead (typed error, not a hang).
+    pub io_timeout: Duration,
+    /// Connect retries per host (jittered backoff, base `connect_delay`).
+    pub connect_attempts: usize,
+    pub connect_delay: Duration,
+}
+
+impl Default for RemoteShardConfig {
+    fn default() -> Self {
+        Self {
+            window: 2,
+            io_timeout: Duration::from_secs(5),
+            connect_attempts: 10,
+            connect_delay: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Live per-link gauges and per-cut counters, shared by every clone of a
+/// pipeline (the serving layer's worker clones) — the STATS
+/// `remote_links` block.
+#[derive(Debug)]
+pub struct RemoteLinkStats {
+    /// Distinct frontier sources forwarded into shard `c+1` (len =
+    /// shards − 1) — the wire-traffic observable, defined exactly as
+    /// [`crate::shard::ShardedMenage::boundary_events`].
+    pub boundary_events: Vec<AtomicU64>,
+    /// SHARD_STEPs currently awaiting their ack, per link.
+    pub in_flight: Vec<AtomicU64>,
+    /// High-water mark of `in_flight`, per link — ≥ 2 here proves the
+    /// pipeline actually overlaps timesteps on that link.
+    pub max_in_flight: Vec<AtomicU64>,
+    /// SHARD_STEP frames sent, per link.
+    pub steps_sent: Vec<AtomicU64>,
+}
+
+impl RemoteLinkStats {
+    fn new(num_shards: usize) -> Self {
+        let zeros = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            boundary_events: zeros(num_shards.saturating_sub(1)),
+            in_flight: zeros(num_shards),
+            max_in_flight: zeros(num_shards),
+            steps_sent: zeros(num_shards),
+        }
+    }
+
+    pub fn boundary_events_vec(&self) -> Vec<u64> {
+        self.boundary_events.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn max_in_flight_vec(&self) -> Vec<u64> {
+        self.max_in_flight.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr = |v: &[AtomicU64]| {
+            Json::Arr(
+                v.iter().map(|a| Json::Num(a.load(Ordering::Relaxed) as f64)).collect(),
+            )
+        };
+        Json::obj(vec![
+            ("boundary_events", arr(&self.boundary_events)),
+            ("in_flight", arr(&self.in_flight)),
+            ("max_in_flight", arr(&self.max_in_flight)),
+            ("steps_sent", arr(&self.steps_sent)),
+        ])
+    }
+}
+
+/// What the driver learned about one host during the probe.
+#[derive(Debug, Clone)]
+struct ShardInfo {
+    input_dim: usize,
+    output_dim: usize,
+}
+
+/// A connected pipeline of shard hosts (module docs). `Clone` yields a
+/// disconnected copy with the same topology and shared [`RemoteLinkStats`]
+/// that lazily reconnects on first use — what the coordinator's worker
+/// template needs.
+pub struct RemoteShardPipeline {
+    addrs: Vec<String>,
+    cfg: RemoteShardConfig,
+    shards: Vec<ShardInfo>,
+    timesteps: usize,
+    /// One connection per shard host, pipeline order; `None` = not (yet)
+    /// connected. The per-connection SHARD_STEP sequence number lives
+    /// beside its link because it is connection state: a reconnect resets
+    /// both together.
+    links: Vec<Option<Client>>,
+    seqs: Vec<u64>,
+    stats: Arc<RemoteLinkStats>,
+}
+
+impl Clone for RemoteShardPipeline {
+    fn clone(&self) -> Self {
+        Self {
+            addrs: self.addrs.clone(),
+            cfg: self.cfg.clone(),
+            shards: self.shards.clone(),
+            timesteps: self.timesteps,
+            links: self.addrs.iter().map(|_| None).collect(),
+            seqs: vec![0; self.addrs.len()],
+            stats: Arc::clone(&self.stats),
+        }
+    }
+}
+
+impl RemoteShardPipeline {
+    /// Connect to every host (with backoff — hosts may still be binding),
+    /// probe each one's STATS, and validate the topology: host k must
+    /// serve shard k of a k-shard plan, dimensions must chain, and every
+    /// host must agree on the timestep count.
+    pub fn connect(addrs: &[String], cfg: RemoteShardConfig) -> Result<Self> {
+        if addrs.is_empty() {
+            bail!("--remote-shards needs at least one host:port");
+        }
+        if cfg.window == 0 {
+            bail!("the in-flight window must be ≥ 1");
+        }
+        let mut links = Vec::with_capacity(addrs.len());
+        let mut shards = Vec::with_capacity(addrs.len());
+        let mut timesteps = None;
+        for (k, addr) in addrs.iter().enumerate() {
+            let (client, info, t) = Self::connect_one(addr, k, addrs.len(), &cfg)?;
+            match timesteps {
+                None => timesteps = Some(t),
+                Some(t0) if t0 != t => bail!(
+                    "shard-host {k} at {addr} runs {t} timesteps, shard-host 0 runs {t0}"
+                ),
+                Some(_) => {}
+            }
+            if let Some(prev) = shards.last() {
+                let prev: &ShardInfo = prev;
+                if prev.output_dim != info.input_dim {
+                    bail!(
+                        "shard-host {k} at {addr} expects {} inputs, predecessor emits {}",
+                        info.input_dim,
+                        prev.output_dim
+                    );
+                }
+            }
+            shards.push(info);
+            links.push(Some(client));
+        }
+        let stats = Arc::new(RemoteLinkStats::new(addrs.len()));
+        Ok(Self {
+            addrs: addrs.to_vec(),
+            cfg,
+            shards,
+            timesteps: timesteps.expect("≥1 host"),
+            seqs: vec![0; links.len()],
+            links,
+            stats,
+        })
+    }
+
+    /// Connect + probe one host and check it serves the expected shard.
+    fn connect_one(
+        addr: &str,
+        k: usize,
+        num_shards: usize,
+        cfg: &RemoteShardConfig,
+    ) -> Result<(Client, ShardInfo, usize)> {
+        let mut client =
+            Client::connect_retry(addr, cfg.connect_attempts.max(1), cfg.connect_delay)
+                .with_context(|| format!("connecting to shard-host {k} at {addr}"))?;
+        let j = client
+            .stats()
+            .with_context(|| format!("probing shard-host {k} at {addr}"))?;
+        let shard = j
+            .get("shard")
+            .with_context(|| format!("{addr} is not a shard-host (no `shard` STATS block)"))?;
+        let index = shard.get("index")?.as_usize()?;
+        let hosted_of = shard.get("num_shards")?.as_usize()?;
+        if index != k || hosted_of != num_shards {
+            bail!(
+                "shard-host at {addr} serves shard {index} of {hosted_of}, \
+                 but position {k} of {num_shards} was expected — check --remote-shards order"
+            );
+        }
+        let info = ShardInfo {
+            input_dim: shard.get("input_dim")?.as_usize()?,
+            output_dim: shard.get("output_dim")?.as_usize()?,
+        };
+        let timesteps = j.get("model")?.get("timesteps")?.as_usize()?;
+        Ok((client, info, timesteps))
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.shards[0].input_dim
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.shards.last().expect("≥1 shard").output_dim
+    }
+
+    pub fn timesteps(&self) -> usize {
+        self.timesteps
+    }
+
+    pub fn addrs(&self) -> &[String] {
+        &self.addrs
+    }
+
+    /// The shared per-link gauges (every clone reports into the same
+    /// registry).
+    pub fn stats(&self) -> Arc<RemoteLinkStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Static topology block for STATS — shaped like the in-process
+    /// `shards` block, with the host address in place of core counts.
+    pub fn topology_json(&self) -> Json {
+        Json::Arr(
+            self.addrs
+                .iter()
+                .zip(&self.shards)
+                .enumerate()
+                .map(|(k, (addr, info))| {
+                    Json::obj(vec![
+                        ("shard", k.into()),
+                        ("addr", Json::Str(addr.clone())),
+                        ("input_dim", info.input_dim.into()),
+                        ("output_dim", info.output_dim.into()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// (Re)establish any missing link. A reconnected link starts a fresh
+    /// sequence space, which the host accepts because connection state is
+    /// per-connection on its side too.
+    fn ensure_connected(&mut self) -> Result<()> {
+        for k in 0..self.addrs.len() {
+            if self.links[k].is_some() {
+                continue;
+            }
+            let (client, info, t) =
+                Self::connect_one(&self.addrs[k], k, self.addrs.len(), &self.cfg)?;
+            if info.input_dim != self.shards[k].input_dim
+                || info.output_dim != self.shards[k].output_dim
+                || t != self.timesteps
+            {
+                bail!(
+                    "shard-host {k} at {} changed shape across reconnect \
+                     ({}→{} in, {}→{} out)",
+                    self.addrs[k],
+                    self.shards[k].input_dim,
+                    info.input_dim,
+                    self.shards[k].output_dim,
+                    info.output_dim
+                );
+            }
+            self.links[k] = Some(client);
+            self.seqs[k] = 0;
+        }
+        Ok(())
+    }
+
+    /// Drop every connection (and its sequence space). Called after any
+    /// mid-run failure: partially-executed state behind the links can no
+    /// longer be trusted, so the next run starts from fresh connections
+    /// (and fresh membrane state via its step-0 resets).
+    fn reset_links(&mut self) {
+        for l in self.links.iter_mut() {
+            *l = None;
+        }
+        for s in self.seqs.iter_mut() {
+            *s = 0;
+        }
+        for g in self.stats.in_flight.iter() {
+            g.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Run one input through the distributed pipeline (fresh output).
+    pub fn run(&mut self, input: &SpikeTrain) -> Result<RunOutput> {
+        let mut out = RunOutput::default();
+        self.run_into(input, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`crate::accel::Menage::run_into`] semantics across hosts. The
+    /// returned [`RunOutput`] carries the classifier train only (the
+    /// intermediate layers live on the hosts); `cycles` is bit-identical
+    /// to the in-process sharded/monolithic cost model.
+    pub fn run_into(&mut self, input: &SpikeTrain, out: &mut RunOutput) -> Result<()> {
+        let r = self.run_into_inner(input, out);
+        if r.is_err() {
+            self.reset_links();
+        }
+        r
+    }
+
+    fn run_into_inner(&mut self, input: &SpikeTrain, out: &mut RunOutput) -> Result<()> {
+        if input.num_neurons != self.input_dim() {
+            bail!(
+                "input has {} neurons, first shard expects {}",
+                input.num_neurons,
+                self.input_dim()
+            );
+        }
+        self.ensure_connected()?;
+        let t_steps = input.timesteps();
+        let k_links = self.addrs.len();
+        out.trains.resize_with(1, SpikeTrain::default);
+        out.trains[0].reset_to(self.output_dim(), t_steps);
+        out.cycles = 0;
+        if t_steps == 0 {
+            return Ok(());
+        }
+
+        // Frontiers ready to send per link. Link 0's are the input's own
+        // steps; link k>0's arrive as acks from link k−1.
+        let mut ready: Vec<VecDeque<(u32, SpikeTrain)>> =
+            (0..k_links).map(|_| VecDeque::new()).collect();
+        for (t, step) in input.spikes.iter().enumerate() {
+            let mut train = SpikeTrain::new(input.num_neurons, 1);
+            train.spikes[0] = step.clone();
+            ready[0].push_back((t as u32, train));
+        }
+        // Outstanding (seq, step) per link, send order — acks must come
+        // back in exactly this order (hosts execute sequentially).
+        let mut inflight: Vec<VecDeque<(u64, u32)>> =
+            (0..k_links).map(|_| VecDeque::new()).collect();
+        // Per-step max of the shards' cycle deltas — the synchronous
+        // clock: chips tick together, the busiest shard sets the step.
+        let mut step_max = vec![0u64; t_steps];
+        let mut completed = 0usize;
+
+        while completed < t_steps {
+            // Send pass: everything ready, every link, while window room
+            // lasts. Preferring sends keeps the pipeline as deep as the
+            // window allows before the driver ever blocks.
+            let mut sent_any = false;
+            for k in 0..k_links {
+                while inflight[k].len() < self.cfg.window {
+                    let Some((step, frontier)) = ready[k].pop_front() else { break };
+                    if k > 0 {
+                        self.stats.boundary_events[k - 1]
+                            .fetch_add(distinct_sources(&frontier.spikes[0]), Ordering::Relaxed);
+                    }
+                    let seq = self.seqs[k];
+                    let frame = ShardStepFrame { seq, step, frontier };
+                    self.links[k]
+                        .as_mut()
+                        .expect("ensure_connected")
+                        .send_shard_step(&frame)
+                        .with_context(|| self.link_name(k))?;
+                    self.seqs[k] += 1;
+                    inflight[k].push_back((seq, step));
+                    self.stats.steps_sent[k].fetch_add(1, Ordering::Relaxed);
+                    let depth = inflight[k].len() as u64;
+                    self.stats.in_flight[k].store(depth, Ordering::Relaxed);
+                    self.stats.max_in_flight[k].fetch_max(depth, Ordering::Relaxed);
+                    sent_any = true;
+                }
+            }
+            if sent_any {
+                continue;
+            }
+            // Nothing to send: block on the earliest link with outstanding
+            // acks (its ack is what unblocks everything downstream).
+            let k = (0..k_links)
+                .find(|&k| !inflight[k].is_empty())
+                .ok_or_else(|| anyhow!("pipeline stalled with no steps in flight"))?;
+            let reply = self.links[k]
+                .as_mut()
+                .expect("ensure_connected")
+                .recv_reply_timeout(self.cfg.io_timeout)
+                .with_context(|| self.link_name(k))?;
+            let ack = match reply {
+                Some(Reply::ShardAck(a)) => a,
+                Some(Reply::Error(e)) => bail!(
+                    "{} rejected step: [{}] {}",
+                    self.link_name(k),
+                    e.code.name(),
+                    e.message
+                ),
+                Some(other) => {
+                    bail!("{} sent unexpected reply {other:?}", self.link_name(k))
+                }
+                None => bail!(
+                    "{} sent no SHARD_ACK within {:?} ({} steps outstanding) — host dead or wedged",
+                    self.link_name(k),
+                    self.cfg.io_timeout,
+                    inflight[k].len()
+                ),
+            };
+            let Some(&(exp_seq, exp_step)) = inflight[k].front() else {
+                bail!("{} acked seq {} with nothing outstanding", self.link_name(k), ack.seq);
+            };
+            if ack.seq != exp_seq || ack.step != exp_step {
+                bail!(
+                    "{} acked (seq {}, step {}), expected (seq {exp_seq}, step {exp_step})",
+                    self.link_name(k),
+                    ack.seq,
+                    ack.step
+                );
+            }
+            inflight[k].pop_front();
+            self.stats.in_flight[k].store(inflight[k].len() as u64, Ordering::Relaxed);
+            let t = ack.step as usize;
+            if t >= t_steps {
+                bail!("{} acked step {t} of a {t_steps}-step input", self.link_name(k));
+            }
+            step_max[t] = step_max[t].max(ack.step_cycles);
+            if k + 1 < k_links {
+                if ack.frontier.num_neurons != self.shards[k + 1].input_dim {
+                    bail!(
+                        "{} emitted a {}-neuron frontier, shard {} expects {}",
+                        self.link_name(k),
+                        ack.frontier.num_neurons,
+                        k + 1,
+                        self.shards[k + 1].input_dim
+                    );
+                }
+                ready[k + 1].push_back((ack.step, ack.frontier));
+            } else {
+                out.trains[0].spikes[t] =
+                    ack.frontier.spikes.into_iter().next().expect("1-step frontier");
+                completed += 1;
+            }
+        }
+        out.cycles = step_max.iter().sum();
+        Ok(())
+    }
+
+    /// Sequential per-input execution with the lane-call signature, so the
+    /// coordinator's lane-packed workers can ride a remote backend. Remote
+    /// shard hosts serialize steps per connection anyway, and sequential
+    /// execution is bit-identical to lanes by the engine's lane-differential
+    /// guarantee — so this does not change results, only overlap.
+    pub fn run_lanes_into(
+        &mut self,
+        inputs: &[SpikeTrain],
+        outs: &mut Vec<RunOutput>,
+    ) -> Result<()> {
+        outs.resize_with(inputs.len(), RunOutput::default);
+        for (input, out) in inputs.iter().zip(outs.iter_mut()) {
+            self.run_into(input, out)?;
+        }
+        Ok(())
+    }
+
+    fn link_name(&self, k: usize) -> String {
+        format!("shard-host {k} at {}", self.addrs[k])
+    }
+}

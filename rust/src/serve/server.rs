@@ -183,6 +183,10 @@ struct Shared {
     /// Static shard topology (sharded servers only) — reported verbatim
     /// as the STATS `shards` block.
     shards: Option<Json>,
+    /// Live per-link gauges of a distributed backend (remote-shard
+    /// servers only) — the STATS `remote_links` block: per-cut
+    /// `boundary_events` and the in-flight depth/high-water per link.
+    remote_links: Option<Arc<super::remote_shard::RemoteLinkStats>>,
     model: ModelInfo,
     started: Instant,
     readers: Mutex<Vec<JoinHandle<()>>>,
@@ -224,6 +228,9 @@ impl Shared {
             if let Some(shards) = &self.shards {
                 map.insert("shards".to_string(), shards.clone());
             }
+            if let Some(links) = &self.remote_links {
+                map.insert("remote_links".to_string(), links.to_json());
+            }
             map.insert("recovery".to_string(), self.recovery.recovery_json());
             map.insert("faults".to_string(), self.recovery.faults_json());
         }
@@ -254,7 +261,7 @@ impl Server {
             timesteps: chip.timesteps,
             classes: chip.cores.last().expect("chip has cores").out_dim(),
         };
-        Self::start_inner(coord, model, None, listener, cfg)
+        Self::start_inner(coord, model, None, None, listener, cfg)
     }
 
     /// [`Self::start`] over a multi-chip sharded pipeline: every worker
@@ -279,13 +286,48 @@ impl Server {
             timesteps: chip.timesteps,
             classes: chip.output_dim(),
         };
-        Self::start_inner(coord, model, Some(chip.shards_json()), listener, cfg)
+        Self::start_inner(coord, model, Some(chip.shards_json()), None, listener, cfg)
+    }
+
+    /// [`Self::start`] over a **distributed** pipeline of `shard-host`
+    /// processes ([`super::remote_shard::RemoteShardPipeline`]): every
+    /// worker clones the pipeline and drives the remote chips over TCP.
+    /// The STATS snapshot gains a `shards` block built from the probed
+    /// topology and a live `remote_links` block (per-cut boundary events,
+    /// in-flight depth per link). Wire-level outputs stay bit-identical
+    /// to a local server over the same plan (`tests/dist_identity.rs`).
+    pub fn start_remote(
+        pipeline: &super::remote_shard::RemoteShardPipeline,
+        addr: impl ToSocketAddrs,
+        cfg: ServeConfig,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("binding server socket")?;
+        let coord = Coordinator::remote_with_lanes_wait(
+            pipeline,
+            cfg.workers,
+            cfg.lanes_per_worker,
+            cfg.fill_wait,
+        );
+        let model = ModelInfo {
+            input_dim: pipeline.input_dim(),
+            timesteps: pipeline.timesteps(),
+            classes: pipeline.output_dim(),
+        };
+        Self::start_inner(
+            coord,
+            model,
+            Some(pipeline.topology_json()),
+            Some(pipeline.stats()),
+            listener,
+            cfg,
+        )
     }
 
     fn start_inner(
         coord: Coordinator,
         model: ModelInfo,
         shards: Option<Json>,
+        remote_links: Option<Arc<super::remote_shard::RemoteLinkStats>>,
         listener: TcpListener,
         cfg: ServeConfig,
     ) -> Result<Self> {
@@ -322,6 +364,7 @@ impl Server {
             remote_shutdown: AtomicBool::new(false),
             quiesced: AtomicBool::new(false),
             shards,
+            remote_links,
             model,
             started: Instant::now(),
             readers: Mutex::new(Vec::new()),

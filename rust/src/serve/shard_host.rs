@@ -1,0 +1,524 @@
+//! `menage shard-host` — serve ONE chip of a [`crate::mapping::ShardPlan`]
+//! over the length-prefixed wire protocol, so a sharded pipeline can span
+//! processes (and, once the TLS/auth story lands, machines).
+//!
+//! A host owns one pristine shard chip. Each accepted connection gets its
+//! **own clone** of that chip — membrane and stats state are per-stream,
+//! so concurrent drivers (or a driver reconnecting after a failure) can
+//! never observe each other's partial state. The per-connection session:
+//!
+//! ```text
+//! driver                                host (shard k)
+//!   SHARD_STEP { seq, step, frontier } ──▶  step==0? reset membranes
+//!                                           run frontier through cores
+//!   ◀── SHARD_ACK { seq, step, cycles, out-frontier }
+//! ```
+//!
+//! `seq` starts at 0 per connection and must increment by exactly 1;
+//! `step` must be 0 (a new input — membranes reset, mirroring
+//! [`crate::accel::Menage::run_into`]) or the previous step + 1. Any
+//! violation — a gap, a replay, a wrong-width frontier — earns a typed
+//! `BadRequest` ERROR and closes the connection, because a chip whose
+//! stream diverged from its driver holds membrane state that can no
+//! longer be trusted. The driver reconnects and replays from step 0.
+//!
+//! When a connection closes, its chip's accumulated [`CoreStats`] fold
+//! into the host's aggregate registry (scalar sums, per-step series
+//! appended), so STATS totals over all *closed* sessions remain
+//! bit-comparable with an in-process [`ShardedMenage`]'s folded stats —
+//! the distributed identity suite leans on exactly this.
+
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::Menage;
+use crate::fault::lock_recover;
+use crate::neuracore::CoreStats;
+use crate::shard::{distinct_sources, ShardedMenage};
+use crate::util::json::Json;
+
+use super::protocol::{
+    encode_stats_reply, write_frame, ErrorCode, ErrorFrame, FrameKind, FrameReader,
+    ShardAckFrame, ShardStepFrame, DEFAULT_MAX_FRAME_LEN, NO_ID,
+};
+
+/// Host knobs; `Default` matches the CLI defaults.
+#[derive(Debug, Clone)]
+pub struct ShardHostConfig {
+    pub max_frame_len: u32,
+    /// Read-timeout granularity: how often blocked connection threads
+    /// check the stop flag.
+    pub poll_interval: Duration,
+    pub write_timeout: Duration,
+    /// Honor SHUTDOWN frames (off by default, same as `serve`).
+    pub allow_remote_shutdown: bool,
+}
+
+impl Default for ShardHostConfig {
+    fn default() -> Self {
+        Self {
+            max_frame_len: DEFAULT_MAX_FRAME_LEN,
+            poll_interval: Duration::from_millis(25),
+            write_timeout: Duration::from_secs(10),
+            allow_remote_shutdown: false,
+        }
+    }
+}
+
+/// Monotonic counters for the host's `host` STATS block.
+#[derive(Debug, Default)]
+struct HostCounters {
+    connections_opened: AtomicU64,
+    connections_active: AtomicU64,
+    /// SHARD_STEP frames executed (acks sent).
+    steps_executed: AtomicU64,
+    /// step==0 frames seen — distinct inputs started.
+    inputs_started: AtomicU64,
+    /// Distinct frontier sources received — this host's inbound cut
+    /// traffic, same accounting as `ShardedMenage::boundary_events`.
+    boundary_events_in: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+struct HostShared {
+    cfg: ShardHostConfig,
+    /// The never-run shard chip every connection clones.
+    pristine: Menage,
+    index: usize,
+    num_shards: usize,
+    layer_lo: usize,
+    layer_hi: usize,
+    cut_cost_in: u64,
+    timesteps: usize,
+    /// Folded stats of every *closed* connection, per core (local index).
+    agg: Mutex<Vec<CoreStats>>,
+    counters: HostCounters,
+    stop_accept: AtomicBool,
+    stop_conns: AtomicBool,
+    remote_shutdown: AtomicBool,
+    started: Instant,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl HostShared {
+    fn input_dim(&self) -> usize {
+        self.pristine.cores[0].in_dim()
+    }
+
+    fn output_dim(&self) -> usize {
+        self.pristine.cores.last().expect("≥1 core").out_dim()
+    }
+
+    fn stats_json(&self) -> Json {
+        let c = &self.counters;
+        let load = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        let agg = lock_recover(&self.agg);
+        let cores = Json::Arr(
+            agg.iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    Json::obj(vec![
+                        ("core", i.into()),
+                        ("cycles", (s.cycles as usize).into()),
+                        ("events_dispatched", (s.events_dispatched as usize).into()),
+                        ("sn_rows_read", (s.sn_rows_read as usize).into()),
+                        ("macs", (s.macs as usize).into()),
+                        ("integrations", (s.integrations as usize).into()),
+                        ("fire_ops", (s.fire_ops as usize).into()),
+                        ("spikes_out", (s.spikes_out as usize).into()),
+                        ("dropped_events", (s.dropped_events as usize).into()),
+                        ("stuck_row_hits", (s.stuck_row_hits as usize).into()),
+                        ("dead_slot_hits", (s.dead_slot_hits as usize).into()),
+                        ("events_bit_flipped", (s.events_bit_flipped as usize).into()),
+                    ])
+                })
+                .collect(),
+        );
+        let (stuck, dead, flipped) = agg.iter().fold((0u64, 0u64, 0u64), |t, s| {
+            (t.0 + s.stuck_row_hits, t.1 + s.dead_slot_hits, t.2 + s.events_bit_flipped)
+        });
+        drop(agg);
+        Json::obj(vec![
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+            // Probe-compatible `model` block (loadgen and the pipeline
+            // driver both read it): a shard host's "model" is its slice.
+            (
+                "model",
+                Json::obj(vec![
+                    ("input_dim", self.input_dim().into()),
+                    ("timesteps", self.timesteps.into()),
+                    ("classes", self.output_dim().into()),
+                ]),
+            ),
+            (
+                "shard",
+                Json::obj(vec![
+                    ("index", self.index.into()),
+                    ("num_shards", self.num_shards.into()),
+                    ("layer_lo", self.layer_lo.into()),
+                    ("layer_hi", self.layer_hi.into()),
+                    ("cores", self.pristine.cores.len().into()),
+                    ("input_dim", self.input_dim().into()),
+                    ("output_dim", self.output_dim().into()),
+                    ("cut_cost_in", (self.cut_cost_in as usize).into()),
+                ]),
+            ),
+            (
+                "host",
+                Json::obj(vec![
+                    ("connections_opened", load(&c.connections_opened)),
+                    ("connections_active", load(&c.connections_active)),
+                    ("steps_executed", load(&c.steps_executed)),
+                    ("inputs_started", load(&c.inputs_started)),
+                    ("boundary_events_in", load(&c.boundary_events_in)),
+                    ("protocol_errors", load(&c.protocol_errors)),
+                ]),
+            ),
+            ("cores", cores),
+            (
+                "faults",
+                Json::obj(vec![
+                    ("stuck_row_hits", (stuck as usize).into()),
+                    ("dead_slot_hits", (dead as usize).into()),
+                    ("events_bit_flipped", (flipped as usize).into()),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// A running shard host (module docs).
+pub struct ShardHostServer {
+    local_addr: std::net::SocketAddr,
+    shared: Arc<HostShared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ShardHostServer {
+    /// Serve shard `index` of `sharded`'s plan on `addr`. The caller
+    /// builds the *full* `ShardedMenage` (same seed, same fault plan) and
+    /// this host clones out its slice — which is exactly what keeps the
+    /// realized cores bit-identical to every other host's view of the
+    /// plan and to an in-process run.
+    pub fn start(
+        sharded: &ShardedMenage,
+        index: usize,
+        addr: &str,
+        cfg: ShardHostConfig,
+    ) -> Result<Self> {
+        if index >= sharded.shards.len() {
+            bail!(
+                "shard index {index} out of range: the plan has {} shards",
+                sharded.shards.len()
+            );
+        }
+        let pristine = sharded.shards[index].clone();
+        let range = sharded.plan.ranges()[index].clone();
+        let num_cores = pristine.cores.len();
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding shard-host listener on {addr}"))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
+        let timesteps = pristine.timesteps;
+        let shared = Arc::new(HostShared {
+            cfg,
+            pristine,
+            index,
+            num_shards: sharded.shards.len(),
+            layer_lo: range.start,
+            layer_hi: range.end,
+            cut_cost_in: if index == 0 { 0 } else { sharded.boundary_cost[index - 1] },
+            timesteps,
+            agg: Mutex::new(vec![CoreStats::default(); num_cores]),
+            counters: HostCounters::default(),
+            stop_accept: AtomicBool::new(false),
+            stop_conns: AtomicBool::new(false),
+            remote_shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(&shared, listener))
+        };
+        Ok(Self { local_addr, shared, accept: Some(accept) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Whether an honored SHUTDOWN frame arrived (the CLI polls this).
+    pub fn remote_shutdown_requested(&self) -> bool {
+        self.shared.remote_shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Current STATS document (same shape the wire reply carries).
+    pub fn stats_json(&self) -> Json {
+        self.shared.stats_json()
+    }
+
+    /// Stop accepting, sever live connections, join all threads. Folds
+    /// any still-open connection's stats on the way out.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shared.stop_accept.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.shared.stop_conns.store(true, Ordering::Relaxed);
+        let conns = std::mem::take(&mut *lock_recover(&self.shared.conns));
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardHostServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(shared: &Arc<HostShared>, listener: TcpListener) {
+    loop {
+        if shared.stop_accept.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                shared.counters.connections_opened.fetch_add(1, Ordering::Relaxed);
+                shared.counters.connections_active.fetch_add(1, Ordering::Relaxed);
+                let conn = {
+                    let shared = Arc::clone(shared);
+                    std::thread::spawn(move || {
+                        conn_loop(&shared, stream);
+                        shared.counters.connections_active.fetch_sub(1, Ordering::Relaxed);
+                    })
+                };
+                let mut conns = lock_recover(&shared.conns);
+                conns.retain(|h| !h.is_finished());
+                conns.push(conn);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Best-effort typed error (the peer may already be gone).
+fn send_host_error(stream: &mut TcpStream, code: ErrorCode, msg: impl Into<String>) {
+    let ef = ErrorFrame::new(NO_ID, code, msg);
+    let _ = write_frame(stream, FrameKind::Error, &ef.encode());
+}
+
+/// One connection = one chip session (single thread: the SHARD_STEP
+/// window is bounded by the driver, so writing acks inline can never
+/// deadlock against unread requests).
+fn conn_loop(shared: &Arc<HostShared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.cfg.poll_interval));
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let mut chip = shared.pristine.clone();
+    let mut fr = FrameReader::new(shared.cfg.max_frame_len);
+    // Per-connection stream state: next acceptable sequence number and the
+    // last executed step (None = no step yet / expecting a fresh input).
+    let mut expected_seq = 0u64;
+    let mut last_step: Option<u32> = None;
+    // Double-buffered frontier scratch, as in the in-process run loop.
+    let mut carry: Vec<u32> = Vec::new();
+    let mut scratch: Vec<u32> = Vec::new();
+    let c = &shared.counters;
+    loop {
+        if shared.stop_conns.load(Ordering::Relaxed) {
+            break;
+        }
+        let frame = match fr.read_frame(&mut stream) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // driver closed cleanly
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => {
+                c.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                send_host_error(&mut stream, ErrorCode::Malformed, e.to_string());
+                break;
+            }
+        };
+        match FrameKind::from_u8(frame.kind) {
+            Some(FrameKind::ShardStep) => {
+                let step = match ShardStepFrame::decode(&frame.payload) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        c.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                        send_host_error(&mut stream, ErrorCode::BadRequest, format!("{e:#}"));
+                        break;
+                    }
+                };
+                if let Err(msg) = check_step(shared, &chip, expected_seq, last_step, &step) {
+                    c.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    send_host_error(&mut stream, ErrorCode::BadRequest, msg);
+                    break;
+                }
+                let frontier = &step.frontier.spikes[0];
+                c.boundary_events_in
+                    .fetch_add(distinct_sources(frontier), Ordering::Relaxed);
+                if step.step == 0 {
+                    // New input: independent classification, membranes
+                    // reset — exactly `Menage::run_into`'s preamble.
+                    for core in chip.cores.iter_mut() {
+                        core.reset_membranes();
+                    }
+                    chip.inputs_processed += 1;
+                    c.inputs_started.fetch_add(1, Ordering::Relaxed);
+                }
+                let step_cycles = run_one_step(&mut chip, frontier, &mut carry, &mut scratch);
+                expected_seq += 1;
+                last_step = Some(step.step);
+                c.steps_executed.fetch_add(1, Ordering::Relaxed);
+                let mut out = crate::snn::SpikeTrain::new(chip.cores.last().unwrap().out_dim(), 1);
+                out.spikes[0] = carry.clone();
+                let ack =
+                    ShardAckFrame { seq: step.seq, step: step.step, step_cycles, frontier: out };
+                if write_frame(&mut stream, FrameKind::ShardAck, &ack.encode()).is_err() {
+                    break; // driver gone mid-ack; fold stats and bail
+                }
+            }
+            Some(FrameKind::Ping) => {
+                if write_frame(&mut stream, FrameKind::Pong, &[]).is_err() {
+                    break;
+                }
+            }
+            Some(FrameKind::Stats) => {
+                let payload = encode_stats_reply(&shared.stats_json());
+                if write_frame(&mut stream, FrameKind::StatsReply, &payload).is_err() {
+                    break;
+                }
+            }
+            Some(FrameKind::Shutdown) => {
+                if shared.cfg.allow_remote_shutdown {
+                    shared.remote_shutdown.store(true, Ordering::Relaxed);
+                    let _ = write_frame(&mut stream, FrameKind::Pong, &[]);
+                } else {
+                    send_host_error(
+                        &mut stream,
+                        ErrorCode::Unsupported,
+                        "remote shutdown is disabled on this shard-host",
+                    );
+                }
+            }
+            // Well-framed but meaningless to a shard host (INFER etc.):
+            // answer and keep the connection — alignment is intact.
+            Some(other) => {
+                send_host_error(
+                    &mut stream,
+                    ErrorCode::Unsupported,
+                    format!("shard-host does not serve {other:?} frames"),
+                );
+            }
+            None => {
+                send_host_error(
+                    &mut stream,
+                    ErrorCode::Unsupported,
+                    format!("unknown frame kind {}", frame.kind),
+                );
+            }
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    // Session over: fold this chip's stats into the host aggregate so
+    // STATS stays comparable with in-process folded CoreStats.
+    let mut agg = lock_recover(&shared.agg);
+    for (into, core) in agg.iter_mut().zip(chip.cores.iter()) {
+        fold_core_stats(into, &core.stats);
+    }
+}
+
+/// Validate a SHARD_STEP against the connection's stream state; `Err` is
+/// the BadRequest message.
+fn check_step(
+    shared: &HostShared,
+    chip: &Menage,
+    expected_seq: u64,
+    last_step: Option<u32>,
+    step: &ShardStepFrame,
+) -> std::result::Result<(), String> {
+    if step.seq != expected_seq {
+        return Err(format!(
+            "sequence gap: got seq {}, expected {expected_seq} — stream state lost, reconnect and replay from step 0",
+            step.seq
+        ));
+    }
+    let step_ok = step.step == 0 || last_step.is_some_and(|p| step.step == p + 1);
+    if !step_ok {
+        return Err(match last_step {
+            Some(p) => format!("step {} does not follow step {p} (and is not a fresh input's step 0)", step.step),
+            None => format!("first step of a connection must be 0, got {}", step.step),
+        });
+    }
+    let want = chip.cores[0].in_dim();
+    if step.frontier.num_neurons != want {
+        return Err(format!(
+            "frontier has {} neurons, shard {} expects {want}",
+            step.frontier.num_neurons, shared.index
+        ));
+    }
+    Ok(())
+}
+
+/// Run one frontier through the shard's core chain — the inner body of
+/// `ShardedMenage::run_into` for a single shard and step: core 0 consumes
+/// the wire frontier, each later core consumes its predecessor's output
+/// of the same step (spikes ripple through the chain within the step),
+/// and the step's cost is the busiest core's cycle delta (synchronous
+/// clock). `carry` ends as the shard's outbound frontier.
+fn run_one_step(
+    chip: &mut Menage,
+    frontier: &[u32],
+    carry: &mut Vec<u32>,
+    scratch: &mut Vec<u32>,
+) -> u64 {
+    let mut step_cycles = 0u64;
+    for (ci, core) in chip.cores.iter_mut().enumerate() {
+        let events: &[u32] = if ci == 0 { frontier } else { &*carry };
+        core.push_events(events);
+        let before = core.stats.cycles;
+        core.step_into(scratch);
+        step_cycles = step_cycles.max(core.stats.cycles - before);
+        std::mem::swap(carry, scratch);
+    }
+    step_cycles
+}
+
+/// Fold one session chip's per-core stats into the host aggregate:
+/// scalars sum (`peak_event_queue` maxes — it is a high-water mark), the
+/// per-step series append, mirroring the CLI's `merge_chips`.
+fn fold_core_stats(into: &mut CoreStats, from: &CoreStats) {
+    into.cycles += from.cycles;
+    into.events_dispatched += from.events_dispatched;
+    into.sn_rows_read += from.sn_rows_read;
+    into.macs += from.macs;
+    into.integrations += from.integrations;
+    into.fire_ops += from.fire_ops;
+    into.spikes_out += from.spikes_out;
+    into.peak_event_queue = into.peak_event_queue.max(from.peak_event_queue);
+    into.dropped_events += from.dropped_events;
+    into.stuck_row_hits += from.stuck_row_hits;
+    into.dead_slot_hits += from.dead_slot_hits;
+    into.events_bit_flipped += from.events_bit_flipped;
+    into.sn_rows_touched_per_step.extend_from_slice(&from.sn_rows_touched_per_step);
+    into.cycles_per_step.extend_from_slice(&from.cycles_per_step);
+}

@@ -63,6 +63,31 @@ pub struct ShardedMenage {
     lane_prev_cycles: Vec<u64>,
 }
 
+/// Number of **distinct** sources in an event slice — the quantity a
+/// chip-to-chip link actually carries. `engine::step` coalesces duplicate
+/// sources into one row fetch with a multiplicity, and a wire frontier is
+/// a spike *set* per step, so counting `len()` at a cut overstates
+/// boundary traffic relative to the [`shard_cut_costs`] estimate the
+/// partitioner optimizes whenever duplicates reach the cut. Cut frontiers
+/// are core outputs today (sorted, already distinct — the O(1) fast
+/// path), but the accounting must stay honest for event sources that
+/// repeat, e.g. future compressed-conv layers emitting per-tap events.
+pub(crate) fn distinct_sources(events: &[u32]) -> u64 {
+    if events.windows(2).all(|w| w[0] < w[1]) {
+        // Strictly ascending (or empty / single): every entry distinct.
+        return events.len() as u64;
+    }
+    if events.windows(2).all(|w| w[0] <= w[1]) {
+        // Sorted with duplicate runs: distinct sources = run starts.
+        return 1 + events.windows(2).filter(|w| w[0] != w[1]).count() as u64;
+    }
+    // Unsorted (duplicate-heavy raw injections): count via sort+dedup.
+    let mut v = events.to_vec();
+    v.sort_unstable();
+    v.dedup();
+    v.len() as u64
+}
+
 impl ShardedMenage {
     /// Map, distill, and load `net` onto `num_shards` chips described by
     /// `cfg`. `num_shards` is clamped to the layer count (a shard cannot
@@ -228,8 +253,9 @@ impl ShardedMenage {
                             &out.trains[l - 1].spikes[t]
                         };
                         if ci == 0 && si > 0 {
-                            // The frontier just crossed a chip boundary.
-                            boundary_events[si - 1] += events.len() as u64;
+                            // The frontier just crossed a chip boundary:
+                            // count distinct sources, i.e. wire spikes.
+                            boundary_events[si - 1] += distinct_sources(events);
                         }
                         core.push_events(events);
                     }
@@ -323,7 +349,8 @@ impl ShardedMenage {
                             &outs[i].trains[l - 1].spikes[t]
                         };
                         if ci == 0 && si > 0 {
-                            boundary_events[si - 1] += events.len() as u64;
+                            // MIRROR of run_into: distinct sources only.
+                            boundary_events[si - 1] += distinct_sources(events);
                         }
                         core.push_events_lane(i, events);
                         prev[ai] = core.lane_stats(i).cycles;
@@ -550,6 +577,60 @@ mod tests {
         for w in chip.cores.windows(2) {
             assert_eq!(w[0].out_dim(), w[1].in_dim());
         }
+    }
+
+    #[test]
+    fn distinct_sources_counts_sets_not_events() {
+        assert_eq!(distinct_sources(&[]), 0);
+        assert_eq!(distinct_sources(&[7]), 1);
+        assert_eq!(distinct_sources(&[1, 2, 5, 9]), 4);
+        // Sorted duplicate runs collapse to their run starts.
+        assert_eq!(distinct_sources(&[1, 1, 1, 2, 5, 5, 9]), 4);
+        assert_eq!(distinct_sources(&[3, 3, 3, 3]), 1);
+        // Unsorted duplicate-heavy slices (the shape
+        // `SpikeTrain::duplicate_events` produces) count set size too.
+        assert_eq!(distinct_sources(&[4, 1, 9, 4, 1, 9, 4]), 3);
+        assert_eq!(distinct_sources(&[2, 0, 2, 0]), 2);
+    }
+
+    /// The regression pinned here: `boundary_events` must equal the number
+    /// of *distinct* sources crossing each cut per step — exactly what the
+    /// returned cut-layer trains carry — not the raw pushed-event count.
+    /// The input is duplicate-heavy (every source fires twice per step),
+    /// so any site that counted `events.len()` on a frontier with
+    /// duplicates would double-count; the independent recount from the
+    /// returned trains is the ground truth.
+    #[test]
+    fn boundary_events_count_distinct_sources_per_cut() {
+        let mcfg = model(&[20, 14, 10, 8, 6, 4], 6);
+        let mut rng = Rng::new(3);
+        let net = QuantNetwork::random(&mcfg, 0.4, &mut rng);
+        let cfg = accel(2);
+        let mut sharded =
+            ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7, 3)
+                .unwrap();
+        let mut st = input(20, 6, 0.3, 5);
+        st.duplicate_events(); // duplicates flow through the pipeline
+        let out = sharded.run(&st).unwrap();
+        let cut_layers: Vec<usize> =
+            sharded.plan.ranges()[1..].iter().map(|r| r.start - 1).collect();
+        let mut expected = vec![0u64; cut_layers.len()];
+        for (c, &cl) in cut_layers.iter().enumerate() {
+            for step in &out.trains[cl].spikes {
+                expected[c] += distinct_sources(step);
+            }
+        }
+        assert!(expected.iter().sum::<u64>() > 0, "no boundary traffic seen");
+        assert_eq!(sharded.boundary_events, expected);
+
+        // MIRROR: the lane path must account identically. Two lanes of the
+        // same input double the per-cut counts exactly.
+        let mut lanes =
+            ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7, 3)
+                .unwrap();
+        lanes.run_lanes(&[st.clone(), st.clone()]).unwrap();
+        let doubled: Vec<u64> = expected.iter().map(|e| e * 2).collect();
+        assert_eq!(lanes.boundary_events, doubled);
     }
 
     #[test]

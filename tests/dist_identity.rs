@@ -1,0 +1,325 @@
+//! Distributed bit-identity suite: the first execution path where
+//! sharded-vs-monolithic identity must survive a real network.
+//!
+//! Same model, same seed, same fault plan: an in-process
+//! [`ShardedMenage`] vs. 2–3 loopback `shard-host` servers driven by
+//! [`RemoteShardPipeline`] must agree on classifier trains, modeled
+//! cycles, per-cut `boundary_events`, folded per-core `CoreStats`, and
+//! fault counters — in ideal AND non-ideal analog mode, with ≥ 2
+//! timesteps in flight per link (the pipeline actually pipelines).
+//! Fault-plan identity holds because realization derives only from
+//! (seed, core index), and cores keep their monolithic index across the
+//! process boundary. Failure semantics are pinned too: a killed host
+//! surfaces as a typed error naming the shard within the io deadline,
+//! never a hang; a sequence gap earns `BadRequest` and a closed
+//! connection.
+
+use std::time::{Duration, Instant};
+
+use menage::analog::AnalogParams;
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::fault::FaultPlan;
+use menage::mapping::Strategy;
+use menage::serve::protocol::ShardStepFrame;
+use menage::serve::{
+    Client, ErrorCode, RemoteShardConfig, RemoteShardPipeline, Reply, ShardHostConfig,
+    ShardHostServer,
+};
+use menage::shard::ShardedMenage;
+use menage::snn::{QuantNetwork, SpikeTrain};
+use menage::util::json::Json;
+use menage::util::rng::Rng;
+
+fn model(sizes: &[usize], t: usize) -> ModelConfig {
+    ModelConfig {
+        name: "dist".into(),
+        layer_sizes: sizes.to_vec(),
+        timesteps: t,
+        beta: 0.9,
+        v_threshold: 1.0,
+        v_reset: 0.0,
+    }
+}
+
+fn accel(cores: usize) -> AcceleratorConfig {
+    let mut c = AcceleratorConfig::accel1();
+    c.num_cores = cores;
+    c.a_neurons_per_core = 4;
+    c.a_syns_per_core = 4;
+    c.virtual_per_a_neuron = 4;
+    c
+}
+
+/// Build the full sharded pipeline twice from the same (net, seed, fault
+/// plan) — one copy runs in-process, the other is sliced across hosts —
+/// and start one loopback `ShardHostServer` per shard.
+fn spawn_hosts(
+    net: &QuantNetwork,
+    cfg: &AcceleratorConfig,
+    analog: &AnalogParams,
+    num_shards: usize,
+    faults: &FaultPlan,
+) -> (ShardedMenage, Vec<ShardHostServer>, Vec<String>) {
+    let mut local = ShardedMenage::build(net, cfg, Strategy::IlpFlow, analog, 7, num_shards)
+        .expect("in-process build");
+    local.install_faults(faults);
+    let mut hosted = ShardedMenage::build(net, cfg, Strategy::IlpFlow, analog, 7, num_shards)
+        .expect("hosted build");
+    hosted.install_faults(faults);
+    let mut hosts = Vec::new();
+    let mut addrs = Vec::new();
+    for k in 0..hosted.shards.len() {
+        let h = ShardHostServer::start(&hosted, k, "127.0.0.1:0", ShardHostConfig::default())
+            .expect("start host");
+        addrs.push(h.local_addr().to_string());
+        hosts.push(h);
+    }
+    (local, hosts, addrs)
+}
+
+fn inputs(dim: usize, t: usize, count: usize, seed: u64) -> Vec<SpikeTrain> {
+    let mut rng = Rng::new(seed);
+    (0..count).map(|_| SpikeTrain::bernoulli(dim, t, 0.3, &mut rng)).collect()
+}
+
+fn num(j: &Json, key: &str) -> u64 {
+    j.get(key).unwrap().as_usize().unwrap() as u64
+}
+
+/// Poll a host until every connection has closed and folded its stats
+/// (connection teardown is asynchronous on the host side).
+fn wait_quiesced(host: &ShardHostServer) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let j = host.stats_json();
+        if num(j.get("host").unwrap(), "connections_active") == 0 {
+            return j;
+        }
+        assert!(Instant::now() < deadline, "host never quiesced");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The tentpole assertion, both analog modes × with/without a fault plan.
+#[test]
+fn distributed_matches_in_process_ideal_nonideal_and_faulted() {
+    let scenarios: [(&str, AnalogParams, FaultPlan); 3] = [
+        ("ideal", AnalogParams::ideal(), FaultPlan::default()),
+        ("nonideal", AnalogParams::paper(), FaultPlan::default()),
+        (
+            "ideal+faults",
+            AnalogParams::ideal(),
+            FaultPlan::parse("seed=9,stuck=0.2,dead=0.2,flip=0.01").unwrap(),
+        ),
+    ];
+    for (tag, analog, faults) in scenarios {
+        let mcfg = model(&[20, 14, 10, 8, 6, 4], 6);
+        let mut rng = Rng::new(3);
+        let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+        let cfg = accel(2); // 6 layers / 2 cores per chip → 3 hosts
+        let (mut local, hosts, addrs) = spawn_hosts(&net, &cfg, &analog, 3, &faults);
+        let mut pipeline = RemoteShardPipeline::connect(
+            &addrs,
+            RemoteShardConfig { window: 2, ..RemoteShardConfig::default() },
+        )
+        .expect("connect pipeline");
+        assert_eq!(pipeline.num_shards(), 3, "{tag}");
+        assert_eq!(pipeline.input_dim(), local.input_dim(), "{tag}");
+
+        let samples = inputs(20, 6, 4, 50);
+        let mut lout = menage::accel::RunOutput::default();
+        let mut rout = menage::accel::RunOutput::default();
+        for (i, st) in samples.iter().enumerate() {
+            local.run_into(st, &mut lout).unwrap();
+            pipeline.run_into(st, &mut rout).unwrap();
+            // The driver returns the classifier train only; the in-process
+            // run returns every layer. Last layer must match spike for
+            // spike, and the reassembled synchronous clock must agree.
+            assert_eq!(
+                rout.trains[0].spikes,
+                lout.trains.last().unwrap().spikes,
+                "{tag}: input {i}: classifier trains diverge"
+            );
+            assert_eq!(rout.cycles, lout.cycles, "{tag}: input {i}: cycles diverge");
+        }
+
+        // Per-cut wire traffic: the driver's distinct-source accounting
+        // must equal the in-process boundary_events, spike for spike.
+        let stats = pipeline.stats();
+        assert_eq!(
+            stats.boundary_events_vec(),
+            local.boundary_events,
+            "{tag}: boundary events diverge"
+        );
+        // The pipeline genuinely overlapped timesteps: ≥ 2 in flight on
+        // every link (window 2, T=6 — the send-preferring scheduler fills
+        // the window before it ever blocks).
+        for (k, depth) in stats.max_in_flight_vec().iter().enumerate() {
+            assert!(*depth >= 2, "{tag}: link {k} max in-flight {depth} < 2");
+        }
+
+        // Close the driver's connections so every host folds its session
+        // stats, then compare folded CoreStats and fault counters.
+        drop(pipeline);
+        let mut flat_local = local.shards.iter().flat_map(|s| &s.cores);
+        let mut fault_totals = (0u64, 0u64, 0u64);
+        for (k, host) in hosts.iter().enumerate() {
+            let j = wait_quiesced(host);
+            let cores = j.get("cores").unwrap().as_arr().unwrap();
+            for (c, cj) in cores.iter().enumerate() {
+                let lc = flat_local.next().expect("local core");
+                let s = &lc.stats;
+                let pairs: [(&str, u64); 11] = [
+                    ("cycles", s.cycles),
+                    ("events_dispatched", s.events_dispatched),
+                    ("sn_rows_read", s.sn_rows_read),
+                    ("macs", s.macs),
+                    ("integrations", s.integrations),
+                    ("fire_ops", s.fire_ops),
+                    ("spikes_out", s.spikes_out),
+                    ("dropped_events", s.dropped_events),
+                    ("stuck_row_hits", s.stuck_row_hits),
+                    ("dead_slot_hits", s.dead_slot_hits),
+                    ("events_bit_flipped", s.events_bit_flipped),
+                ];
+                for (key, want) in pairs {
+                    assert_eq!(
+                        num(cj, key),
+                        want,
+                        "{tag}: host {k} core {c}: {key} diverges"
+                    );
+                }
+            }
+            let f = j.get("faults").unwrap();
+            fault_totals.0 += num(f, "stuck_row_hits");
+            fault_totals.1 += num(f, "dead_slot_hits");
+            fault_totals.2 += num(f, "events_bit_flipped");
+        }
+        assert!(flat_local.next().is_none(), "{tag}: host core count mismatch");
+        assert_eq!(fault_totals, local.fault_counters(), "{tag}: fault counters diverge");
+        if tag == "ideal+faults" {
+            assert!(local.has_faults(), "{tag}: fault plan did not install");
+        }
+        for h in hosts {
+            h.shutdown();
+        }
+    }
+}
+
+/// The wire STATS frame itself (not the in-process accessor) carries the
+/// probe-able shard block — what `--remote-shards` validates against —
+/// and the host counters move.
+#[test]
+fn host_stats_frame_describes_the_shard() {
+    let mcfg = model(&[16, 10, 6, 4], 5);
+    let mut rng = Rng::new(5);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let (_, hosts, addrs) = spawn_hosts(
+        &net,
+        &accel(2),
+        &AnalogParams::ideal(),
+        2,
+        &FaultPlan::default(),
+    );
+    let mut total_cores = 0;
+    for (k, addr) in addrs.iter().enumerate() {
+        let mut c = Client::connect(addr.as_str()).unwrap();
+        let j = c.stats().unwrap();
+        let shard = j.get("shard").unwrap();
+        assert_eq!(num(shard, "index"), k as u64);
+        assert_eq!(num(shard, "num_shards"), 2);
+        let cores = num(shard, "cores");
+        assert!(cores >= 1, "host {k} hosts no cores");
+        total_cores += cores;
+        let m = j.get("model").unwrap();
+        assert_eq!(num(m, "timesteps"), 5);
+        if k == 0 {
+            assert_eq!(num(m, "input_dim"), 16);
+        } else {
+            assert_eq!(num(m, "classes"), 4);
+        }
+        c.ping().unwrap();
+    }
+    assert_eq!(total_cores, 3, "hosts must cover every layer exactly once");
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// A sequence gap is a typed `BadRequest` (with a reconnect hint), and
+/// the host closes the stream — its chip state can't be trusted after a
+/// divergence.
+#[test]
+fn sequence_gap_yields_bad_request_and_close() {
+    let mcfg = model(&[12, 8, 4], 4);
+    let mut rng = Rng::new(8);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let (_, hosts, addrs) = spawn_hosts(
+        &net,
+        &accel(2),
+        &AnalogParams::ideal(),
+        2,
+        &FaultPlan::default(),
+    );
+    let mut c = Client::connect(addrs[0].as_str()).unwrap();
+    let mut frontier = SpikeTrain::new(12, 1);
+    frontier.spikes[0] = vec![0, 3, 7];
+    c.send_shard_step(&ShardStepFrame { seq: 5, step: 0, frontier }).unwrap();
+    match c.recv_reply().unwrap() {
+        Reply::Error(e) => {
+            assert_eq!(e.code, ErrorCode::BadRequest);
+            assert!(e.message.contains("seq"), "unhelpful message: {}", e.message);
+        }
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+    // Host hung up after the violation: the next read sees a closed stream.
+    assert!(c.recv_reply().is_err());
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// Kill one shard-host mid-stream: the driver must surface a typed error
+/// naming the dead shard within the io deadline — not hang.
+#[test]
+fn killed_host_is_a_typed_error_within_the_deadline() {
+    let mcfg = model(&[16, 10, 6, 4], 5);
+    let mut rng = Rng::new(13);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let (_, mut hosts, addrs) = spawn_hosts(
+        &net,
+        &accel(2),
+        &AnalogParams::ideal(),
+        2,
+        &FaultPlan::default(),
+    );
+    let io_timeout = Duration::from_millis(500);
+    let mut pipeline = RemoteShardPipeline::connect(
+        &addrs,
+        RemoteShardConfig { window: 2, io_timeout, ..RemoteShardConfig::default() },
+    )
+    .unwrap();
+    let st = SpikeTrain::bernoulli(16, 5, 0.3, &mut Rng::new(60));
+    pipeline.run(&st).expect("healthy pipeline runs");
+
+    // Kill the downstream host; its connections are severed.
+    hosts.remove(1).shutdown();
+    let t0 = Instant::now();
+    let err = pipeline.run(&st).expect_err("dead host must fail the run");
+    let elapsed = t0.elapsed();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("shard-host 1"),
+        "error does not name the dead shard: {msg}"
+    );
+    // Bounded: one io_timeout of ack-waiting plus scheduling slack —
+    // nowhere near a hang (reconnect backoff would add ~10 × 50 ms if the
+    // failure surfaces at connect time instead).
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "driver took {elapsed:?} to report a dead host"
+    );
+    for h in hosts {
+        h.shutdown();
+    }
+}
