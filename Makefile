@@ -14,9 +14,9 @@ CHAOS_PORT ?= 7473
 DIST_PORT_A ?= 7475
 DIST_PORT_B ?= 7476
 
-.PHONY: verify build test test-lanes test-serve test-shard test-dist test-chaos chaos smoke-serve smoke-shard smoke-dist smoke-chaos lint fmt clippy bench-hotpath bench clean
+.PHONY: verify build test test-lanes test-serve test-shard test-dist test-conv test-chaos chaos smoke-serve smoke-shard smoke-dist smoke-conv smoke-chaos lint fmt clippy bench-hotpath bench clean
 
-verify: build test test-lanes test-shard test-dist
+verify: build test test-lanes test-shard test-dist test-conv
 
 build:
 	$(CARGO) build --release
@@ -46,6 +46,20 @@ test-shard:
 ## semantics (sequence gaps, killed hosts). Also covered by `test`.
 test-dist:
 	$(CARGO) test -q --test dist_identity
+
+## The compressed-conv differential suite: generator-based row fetch
+## pinned bit-identical to the dense expand_conv() oracle across
+## sequential, lane-batched (ideal + non-ideal), sharded and faulted
+## execution, plus the weight-SRAM capacity win. Also covered by `test`.
+test-conv:
+	$(CARGO) test -q --test conv_differential
+
+## Compressed-conv smoke: the CIFAR10-DVS e2e example runs every sample
+## through the compressed chip AND the dense expand_conv() oracle chip and
+## exits non-zero unless spike trains and cycle counts are bit-identical
+## (synthetic fallback model when artifacts are absent, so it runs in CI).
+smoke-conv: build
+	$(CARGO) run --release --example cifar10dvs_e2e
 
 ## CLI-level distributed smoke, bounded runtime: two `shard-host`
 ## processes each serving one chip of the same 2-shard plan, driven by

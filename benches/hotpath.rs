@@ -14,9 +14,9 @@ use menage::bench::{emit_json_file, Bencher};
 use menage::config::{AcceleratorConfig, ModelConfig};
 use menage::coordinator::Coordinator;
 use menage::datasets::{Dataset, DatasetKind};
-use menage::mapping::Strategy;
+use menage::mapping::{layer_weight_bytes, Strategy};
 use menage::shard::ShardedMenage;
-use menage::snn::{reference_forward, QuantNetwork, SpikeTrain};
+use menage::snn::{reference_forward, ConvSpec, QuantNetwork, SpikeTrain};
 use menage::util::json::Json;
 use menage::util::rng::Rng;
 
@@ -230,6 +230,59 @@ fn main() {
         sps
     };
 
+    // Compressed conv synapses vs the dense expand_conv() oracle. Behaviour
+    // is bit-identical (tests/conv_differential.rs), so the interesting
+    // numbers are the generator-based row fetch's throughput against the
+    // CSR walk over the expanded matrix, and the weight-SRAM footprint
+    // ratio that lets CIFAR10-DVS-scale conv stacks fit on-chip.
+    let c1 = ConvSpec {
+        in_channels: 2,
+        in_h: 32,
+        in_w: 32,
+        out_channels: 8,
+        kernel_h: 3,
+        kernel_w: 3,
+        stride: 2,
+        padding: 1,
+    };
+    let c2 = ConvSpec { in_channels: 8, in_h: 16, in_w: 16, ..c1 };
+    let mut crng = Rng::new(9);
+    let conv_net =
+        QuantNetwork::random_conv("cifar10dvs_conv", &[c1, c2], 10, mcfg.timesteps, 0.5, &mut crng)
+            .unwrap();
+    let conv_oracle = conv_net.expand_convs().unwrap();
+    let cfg2 = AcceleratorConfig::accel2();
+    let conv_inputs: Vec<SpikeTrain> = (0..4)
+        .map(|s| rate_input(conv_net.input_dim(), conv_net.timesteps, 0.1, 200 + s))
+        .collect();
+    let mut chip_conv =
+        Menage::build(&conv_net, &cfg2, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let mut ci = 0usize;
+    let r_conv = b.run("conv_compressed_run_sample", || {
+        ci = (ci + 1) % conv_inputs.len();
+        chip_conv.run_into(&conv_inputs[ci], &mut out).unwrap();
+        out.cycles
+    });
+    let mut chip_conv_exp =
+        Menage::build(&conv_oracle, &cfg2, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let mut ce = 0usize;
+    let r_conv_exp = b.run("conv_expanded_run_sample", || {
+        ce = (ce + 1) % conv_inputs.len();
+        chip_conv_exp.run_into(&conv_inputs[ce], &mut out).unwrap();
+        out.cycles
+    });
+    let conv_sps = r_conv.throughput(1.0);
+    let conv_exp_sps = r_conv_exp.throughput(1.0);
+    let conv_vs_expanded = r_conv.speedup_over(&r_conv_exp);
+    let conv_wb: usize = layer_weight_bytes(&conv_net, cfg2.weight_bits).iter().sum();
+    let conv_wb_exp: usize = layer_weight_bytes(&conv_oracle, cfg2.weight_bits).iter().sum();
+    let footprint_ratio = conv_wb_exp as f64 / conv_wb as f64;
+    println!(
+        "  conv compressed: {conv_sps:.1} samples/s ({conv_vs_expanded:.2}× expanded's \
+         {conv_exp_sps:.1}), weight SRAM {conv_wb} B vs {conv_wb_exp} B \
+         ({footprint_ratio:.0}× smaller)"
+    );
+
     emit_json_file(
         "BENCH_hotpath.json",
         &Json::obj(vec![
@@ -263,6 +316,20 @@ fn main() {
                     ("cut_cost", (chip_sharded.plan.cut_cost as usize).into()),
                     ("samples_per_s", sharded_sps.into()),
                     ("speedup_over_monolithic", sharded_vs_mono.into()),
+                ]),
+            ),
+            (
+                "conv",
+                Json::obj(vec![
+                    ("model", conv_net.name.as_str().into()),
+                    ("stored_weights_compressed", conv_net.stored_weights().into()),
+                    ("stored_weights_expanded", conv_oracle.stored_weights().into()),
+                    ("weight_bytes_compressed", conv_wb.into()),
+                    ("weight_bytes_expanded", conv_wb_exp.into()),
+                    ("footprint_ratio", footprint_ratio.into()),
+                    ("compressed_samples_per_s", conv_sps.into()),
+                    ("expanded_samples_per_s", conv_exp_sps.into()),
+                    ("speedup_vs_expanded", conv_vs_expanded.into()),
                 ]),
             ),
             (

@@ -1,113 +1,172 @@
-//! CIFAR10-DVS end-to-end driver: the paper's second (larger, denser)
-//! workload on the Accel₂ design point — 20 A-NEURONs × 32 virtual
-//! neurons per core, 5 MX-NEURACOREs.
+//! CIFAR10-DVS end-to-end driver on the Accel₂ design point, running the
+//! **compressed convolutional** model: conv layers store one kernel
+//! (`oc·ic·kh·kw` taps) instead of a dense `[out,in]` matrix, and the
+//! engines regenerate each MEM_S&N row arithmetically at dispatch time.
 //!
-//! Uses the scaled-down CIFAR10-DVS artifact (`cifar_small`, 32×32 input;
-//! the full 128×128 model is identical code but ~30 min of CPU training —
-//! see DESIGN.md). Reports the same metrics as nmnist_e2e plus the
-//! activity comparison the paper's Figures 6–7 rest on.
+//! The driver always builds a second chip from the dense `expand_conv()`
+//! oracle and gates on bit-identical behaviour — spike trains *and* cycle
+//! counts must agree on every sample, else the process exits non-zero
+//! (`make smoke-conv` rides on this). Prefers the trained
+//! `cifar_conv.weights.mtz` artifact when present and falls back to a
+//! synthetic compressed net of the same topology, so the gate also runs in
+//! artifact-free CI checkouts.
 //!
 //! ```bash
+//! cargo run --release --example cifar10dvs_e2e        # synthetic fallback
 //! make artifacts && cargo run --release --example cifar10dvs_e2e
 //! ```
 
-use anyhow::Context;
 use menage::accel::Menage;
 use menage::analog::AnalogParams;
 use menage::config::AcceleratorConfig;
-use menage::coordinator::Coordinator;
 use menage::energy::{report, EnergyModel, PAPER_ACCEL2_TOPS_W};
-use menage::mapping::Strategy;
+use menage::mapping::{layer_weight_bytes, Strategy};
 use menage::runtime::artifacts_dir;
-use menage::snn::{QuantNetwork, SpikeTrain};
-use menage::trace::MemoryTrace;
+use menage::snn::{ConvSpec, QuantNetwork, SpikeTrain};
+use menage::util::rng::Rng;
 use menage::util::tensorfile::TensorFile;
 
-fn main() -> anyhow::Result<()> {
-    let dir = artifacts_dir();
-    let tf = TensorFile::load(dir.join("cifar_small.weights.mtz"))
-        .context("run `make artifacts` first")?;
-    let net = QuantNetwork::from_tensorfile("cifar_small", &tf)?;
-    println!(
-        "cifar10dvs(small) model: {} params / {} nnz, T={}",
-        net.num_params(),
-        net.nnz(),
-        net.timesteps
-    );
+/// The conv stack the python `cifar_conv` preset trains: 2×32×32 events →
+/// 8×16×16 → 8×8×8, both 3×3 stride-2 pad-1 (matches `--model cifar_conv`
+/// in the CLI).
+fn conv_specs() -> Vec<ConvSpec> {
+    let c1 = ConvSpec {
+        in_channels: 2,
+        in_h: 32,
+        in_w: 32,
+        out_channels: 8,
+        kernel_h: 3,
+        kernel_w: 3,
+        stride: 2,
+        padding: 1,
+    };
+    let c2 = ConvSpec { in_channels: 8, in_h: 16, in_w: 16, ..c1 };
+    vec![c1, c2]
+}
 
-    let etf = TensorFile::load(dir.join("cifar_small.eval.mtz"))?;
-    let events = etf.get("events")?;
-    let dims = events.dims().to_vec();
-    let raw = events.as_u8()?;
-    let labels = etf.get("labels")?.as_i32()?;
-    let (n, t, d) = (dims[0].min(40), dims[1], dims[2]);
-    let mut inputs = Vec::with_capacity(n);
-    for i in 0..n {
-        let mut st = SpikeTrain::new(d, t);
-        for (ti, step) in st.spikes.iter_mut().enumerate() {
-            for j in 0..d {
-                if raw[i * t * d + ti * d + j] != 0 {
-                    step.push(j as u32);
-                }
+fn random_input(dim: usize, t: usize, rate: f64, seed: u64) -> SpikeTrain {
+    let mut rng = Rng::new(seed);
+    let mut st = SpikeTrain::new(dim, t);
+    for step in st.spikes.iter_mut() {
+        for j in 0..dim {
+            if rng.bernoulli(rate) {
+                step.push(j as u32);
             }
         }
-        inputs.push(st);
     }
-    let input_rate = inputs
-        .iter()
-        .map(|s| s.rate())
-        .sum::<f64>()
-        / inputs.len() as f64;
-    println!("eval: {n} samples, input spike rate {input_rate:.4}");
+    st
+}
 
+/// Load the trained artifact if present, else synthesize the same topology.
+fn load_model(n_inputs: usize) -> anyhow::Result<(QuantNetwork, Vec<SpikeTrain>, Vec<Option<usize>>)> {
+    let dir = artifacts_dir();
+    let wpath = dir.join("cifar_conv.weights.mtz");
+    if wpath.exists() {
+        let net = QuantNetwork::from_tensorfile("cifar_conv", &TensorFile::load(&wpath)?)?;
+        let etf = TensorFile::load(dir.join("cifar_conv.eval.mtz"))?;
+        let events = etf.get("events")?;
+        let dims = events.dims().to_vec();
+        let raw = events.as_u8()?;
+        let labels = etf.get("labels")?.as_i32()?;
+        let (n, t, d) = (dims[0].min(n_inputs), dims[1], dims[2]);
+        let mut inputs = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut st = SpikeTrain::new(d, t);
+            for (ti, step) in st.spikes.iter_mut().enumerate() {
+                for j in 0..d {
+                    if raw[i * t * d + ti * d + j] != 0 {
+                        step.push(j as u32);
+                    }
+                }
+            }
+            inputs.push(st);
+        }
+        let labels = labels.iter().take(n).map(|&l| Some(l as usize)).collect();
+        println!("model: trained artifact {}", wpath.display());
+        return Ok((net, inputs, labels));
+    }
+    println!("model: synthetic (no {} — run `make artifacts`)", wpath.display());
+    let mut rng = Rng::new(7);
+    let net = QuantNetwork::random_conv("cifar10dvs_conv", &conv_specs(), 10, 16, 0.5, &mut rng)?;
+    let dim = net.layers[0].in_dim;
+    let inputs =
+        (0..n_inputs).map(|i| random_input(dim, net.timesteps, 0.25, 100 + i as u64)).collect();
+    Ok((net, inputs, vec![None; n_inputs]))
+}
+
+fn main() -> anyhow::Result<()> {
+    let (net, inputs, labels) = load_model(16)?;
+    let oracle = net.expand_convs()?;
     let cfg = AcceleratorConfig::accel2();
-    let chip = Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7)?;
-    for (l, core) in chip.cores.iter().enumerate() {
-        println!(
-            "core {l}: {} rounds, {} SN rows, {} weight bytes",
-            core.rounds(),
-            core.image_sn_rows(),
-            core.weight_bytes()
-        );
-    }
-    let mut coord = Coordinator::new(&chip, 4);
-    let t0 = std::time::Instant::now();
-    let batch: Vec<(SpikeTrain, Option<usize>)> = inputs
-        .iter()
-        .zip(labels)
-        .map(|(st, &l)| (st.clone(), Some(l as usize)))
-        .collect();
-    let responses = coord.run_batch(batch)?;
-    let wall = t0.elapsed();
 
-    let correct = responses
-        .iter()
-        .filter(|r| r.label == Some(r.predicted))
-        .count();
-    let chips = coord.shutdown();
-    let merged = chips.into_iter().next().unwrap();
-
-    println!("\n== cifar10dvs(small) on accel2 ==");
-    println!("accuracy:    {:.4} ({correct}/{n})", correct as f64 / n as f64);
     println!(
-        "throughput:  {:.1} samples/s (wall {wall:?})",
-        n as f64 / wall.as_secs_f64()
+        "cifar10dvs conv model: {} stored weights ({} dense), T={}",
+        net.stored_weights(),
+        oracle.stored_weights(),
+        net.timesteps
     );
-    let eff = report(&merged, &EnergyModel::paper_90nm(cfg.clock_hz));
+    let wb_c = layer_weight_bytes(&net, cfg.weight_bits);
+    let wb_e = layer_weight_bytes(&oracle, cfg.weight_bits);
+    for (i, (c, e)) in wb_c.iter().zip(&wb_e).enumerate() {
+        let kind = if net.layers[i].is_compressed() { "conv" } else { "dense" };
+        println!("  layer {i} ({kind}): {c} B compressed vs {e} B expanded");
+    }
+    let (tot_c, tot_e) = (wb_c.iter().sum::<usize>(), wb_e.iter().sum::<usize>());
+    println!(
+        "weight SRAM: {:.1} KB vs {:.1} KB expanded ({:.0}× smaller)",
+        tot_c as f64 / 1024.0,
+        tot_e as f64 / 1024.0,
+        tot_e as f64 / tot_c as f64
+    );
+
+    let mut chip = Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7)?;
+    let mut oracle_chip = Menage::build(&oracle, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7)?;
+
+    // --- the gate: compressed must be bit-identical to the dense oracle ---
+    let n = inputs.len();
+    let mut correct = 0usize;
+    let t0 = std::time::Instant::now();
+    for (i, (st, label)) in inputs.iter().zip(&labels).enumerate() {
+        let a = chip.run(st)?;
+        let b = oracle_chip.run(st)?;
+        if a.trains != b.trains || a.cycles != b.cycles {
+            eprintln!(
+                "DIVERGENCE at sample {i}: compressed (pred {}, {} cycles) vs \
+                 expanded (pred {}, {} cycles)",
+                a.predicted_class(),
+                a.cycles,
+                b.predicted_class(),
+                b.cycles
+            );
+            std::process::exit(1);
+        }
+        if *label == Some(a.predicted_class()) {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    println!("\n== cifar10dvs conv on accel2 ==");
+    println!("gate:        PASS — {n} samples bit-identical to the expand_conv oracle");
+    if labels.iter().any(|l| l.is_some()) {
+        println!("accuracy:    {:.4} ({correct}/{n})", correct as f64 / n as f64);
+    }
+    println!(
+        "throughput:  {:.1} samples/s on each representation (wall {wall:?})",
+        2.0 * n as f64 / wall.as_secs_f64()
+    );
+    let eff = report(&chip, &EnergyModel::paper_90nm(cfg.clock_hz));
     println!(
         "TOPS/W:      {:.2}  (paper Accel₂: {PAPER_ACCEL2_TOPS_W})",
         eff.tops_per_watt
     );
-    let trace = MemoryTrace::from_chip(&merged, "cifar10dvs_syn", t, n / 4);
-    println!(
-        "MEM_S&N:     mean {:.1} KB, peak {:.1} KB",
-        trace.mean_kb(),
-        trace.peak_kb()
-    );
-    println!(
-        "\nThe paper's Figs 6–7 contrast: CIFAR10-DVS event rate ({input_rate:.3}) \
-         drives much higher memory traffic than N-MNIST — compare with \
-         nmnist_e2e's trace output."
-    );
+    for (l, core) in chip.cores.iter().enumerate() {
+        println!(
+            "core {l}: {} rounds, {} SN rows, {} weight bytes (oracle {})",
+            core.rounds(),
+            core.image_sn_rows(),
+            core.weight_bytes(),
+            oracle_chip.cores[l].weight_bytes()
+        );
+    }
     Ok(())
 }

@@ -31,7 +31,14 @@ from jax._src.lib import xla_client as xc
 
 from . import mtz
 from . import train as trainmod
-from .model import BETA, V_RESET, V_TH, make_inference_fn, snn_forward_quant
+from .model import (
+    BETA,
+    V_RESET,
+    V_TH,
+    densify_qparams,
+    make_inference_fn,
+    snn_forward_quant,
+)
 
 
 def to_hlo_text(lowered) -> str:
@@ -49,22 +56,36 @@ def to_hlo_text(lowered) -> str:
 def export_model(name: str, result: dict, out_dir: str, log=print) -> dict:
     cfg = result["config"]
     qparams = result["qparams"]
+    convs = result.get("conv_specs") or (None,) * len(qparams)
     os.makedirs(out_dir, exist_ok=True)
 
     # --- weights for the rust mapper -------------------------------------
+    # Conv layers ship compressed: the kernel `k{i}` [oc,ic,kh,kw] plus its
+    # geometry `conv{i}` [in_h,in_w,stride,padding] — the rust mapper
+    # re-expands rows on demand, so the dense matrix never hits the wire.
     tensors: dict[str, np.ndarray] = {
         "meta_lif": np.asarray([BETA, V_TH, V_RESET], np.float32),
         "meta_timesteps": np.asarray([cfg.timesteps], np.int32),
     }
-    for i, (w_q, scale) in enumerate(qparams):
-        tensors[f"w{i}"] = w_q
+    for i, ((w_q, scale), spec) in enumerate(zip(qparams, convs)):
+        if spec is not None:
+            tensors[f"k{i}"] = np.asarray(w_q, np.int8).reshape(spec.kernel_shape)
+            tensors[f"conv{i}"] = np.asarray(
+                [spec.in_h, spec.in_w, spec.stride, spec.padding], np.int32
+            )
+        else:
+            tensors[f"w{i}"] = w_q
         tensors[f"scale{i}"] = np.asarray([scale], np.float32)
     wpath = os.path.join(out_dir, f"{name}.weights.mtz")
     mtz.save(wpath, tensors)
     log(f"[aot] wrote {wpath}")
 
     # --- eval split + golden predictions ---------------------------------
-    qp = [(jnp.asarray(w), jnp.float32(s)) for w, s in qparams]
+    # Golden checks and the HLO lowering run on the dense expansion (the
+    # same oracle the rust side pins its compressed path against).
+    qp = [
+        (jnp.asarray(w), jnp.float32(s)) for w, s in densify_qparams(qparams, convs)
+    ]
 
     @jax.jit
     def golden_counts(e):
@@ -100,6 +121,8 @@ def export_model(name: str, result: dict, out_dir: str, log=print) -> dict:
         "name": name,
         "layer_sizes": list(cfg.layer_sizes),
         "timesteps": cfg.timesteps,
+        "stored_weights": sum(int(np.asarray(w).size) for w, _ in qparams),
+        "conv_layers": [i for i, s in enumerate(convs) if s is not None],
         "acc_dense": result["acc_dense"],
         "acc_quant": result["acc_quant"],
         "eval_samples": int(len(ys)),
@@ -112,6 +135,7 @@ def export_model(name: str, result: dict, out_dir: str, log=print) -> dict:
 MODELS = {
     "nmnist": trainmod.nmnist_quick,
     "cifar_small": trainmod.cifar_small_quick,
+    "cifar_conv": trainmod.cifar_conv_quick,
 }
 
 

@@ -13,10 +13,12 @@ Two views of the same network:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernels.lif_step import lif_step
 from .kernels.ref import lif_step_ref
@@ -43,6 +45,130 @@ def init_params(layer_sizes, key, w_std=None, gain=1.0):
     return params
 
 
+# ---------------------------------------------------------------------------
+# Compressed convolutional layers (python twin of rust `snn::ConvSpec`).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Geometry of a compressed conv layer.
+
+    The trainable parameter is the kernel ``[oc, ic, kh, kw]`` — stored once
+    per layer instead of once per output position. Training runs on the dense
+    expansion so gradients from every tile accumulate back into the shared
+    kernel taps (true weight sharing), and the export writes only the kernel
+    (``k{i}`` + ``conv{i}``), which the rust mapper re-expands on demand.
+    """
+
+    in_channels: int
+    in_h: int
+    in_w: int
+    out_channels: int
+    kernel_h: int
+    kernel_w: int
+    stride: int = 1
+    padding: int = 0
+
+    @property
+    def out_h(self) -> int:
+        return (self.in_h + 2 * self.padding - self.kernel_h) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.in_w + 2 * self.padding - self.kernel_w) // self.stride + 1
+
+    @property
+    def in_dim(self) -> int:
+        return self.in_channels * self.in_h * self.in_w
+
+    @property
+    def out_dim(self) -> int:
+        return self.out_channels * self.out_h * self.out_w
+
+    @property
+    def kernel_shape(self) -> tuple[int, int, int, int]:
+        return (self.out_channels, self.in_channels, self.kernel_h, self.kernel_w)
+
+
+@functools.lru_cache(maxsize=None)
+def conv_index_map(spec: ConvSpec):
+    """``(rows, cols, taps)`` index arrays for densifying a kernel.
+
+    Mirrors the rust enumeration (snn.rs `ConvSpec::for_each_target`):
+    dst = (oc·out_h + oy)·out_w + ox, src = (ic·in_h + iy)·in_w + ix,
+    tap = ((oc·ic_n + ic)·kh + ky)·kw + kx. Each (dst, src) pair is hit by
+    at most one tap, so a plain scatter reproduces the dense matrix.
+    """
+    rows, cols, taps = [], [], []
+    for oc in range(spec.out_channels):
+        for oy in range(spec.out_h):
+            for ox in range(spec.out_w):
+                dst = (oc * spec.out_h + oy) * spec.out_w + ox
+                for ic in range(spec.in_channels):
+                    for ky in range(spec.kernel_h):
+                        iy = oy * spec.stride + ky - spec.padding
+                        if not 0 <= iy < spec.in_h:
+                            continue
+                        for kx in range(spec.kernel_w):
+                            ix = ox * spec.stride + kx - spec.padding
+                            if not 0 <= ix < spec.in_w:
+                                continue
+                            rows.append(dst)
+                            cols.append((ic * spec.in_h + iy) * spec.in_w + ix)
+                            taps.append(
+                                ((oc * spec.in_channels + ic) * spec.kernel_h + ky)
+                                * spec.kernel_w
+                                + kx
+                            )
+    return (
+        np.asarray(rows, np.int32),
+        np.asarray(cols, np.int32),
+        np.asarray(taps, np.int32),
+    )
+
+
+def expand_conv(kernel, spec: ConvSpec):
+    """Densify a kernel to the ``[out_dim, in_dim]`` matrix (rust
+    `QuantLayer::expand_conv` oracle). Differentiable w.r.t. the kernel:
+    the scatter's transpose gathers every tile's gradient into the taps."""
+    rows, cols, taps = conv_index_map(spec)
+    k = jnp.asarray(kernel)
+    dense = jnp.zeros((spec.out_dim, spec.in_dim), k.dtype)
+    return dense.at[rows, cols].set(k.reshape(-1)[taps])
+
+
+def init_conv_params(layer_sizes, convs, key, gain=1.0):
+    """He-style init for a mixed conv/dense stack. `convs` has one entry
+    per layer: a ConvSpec (trainable kernel, fan-in ic·kh·kw) or None
+    (dense ``[out, in]`` matrix, as in `init_params`)."""
+    params = []
+    for (nin, nout), spec in zip(zip(layer_sizes[:-1], layer_sizes[1:]), convs):
+        key, sub = jax.random.split(key)
+        if spec is not None:
+            assert spec.in_dim == nin and spec.out_dim == nout, (spec, nin, nout)
+            fan_in = spec.in_channels * spec.kernel_h * spec.kernel_w
+            std = gain * (2.0 / fan_in) ** 0.5
+            params.append(jax.random.normal(sub, spec.kernel_shape, jnp.float32) * std)
+        else:
+            std = gain * (2.0 / nin) ** 0.5
+            params.append(jax.random.normal(sub, (nout, nin), jnp.float32) * std)
+    return params
+
+
+def densify_qparams(qparams, convs=None):
+    """Expand quantized conv kernels to dense int8 ``[out, in]`` matrices so
+    `snn_forward_quant` / the AOT lowering see the uniform dense shape. The
+    per-tensor scale is unchanged — expansion only replicates taps."""
+    convs = convs or (None,) * len(qparams)
+    out = []
+    for (w, s), spec in zip(qparams, convs):
+        if spec is not None:
+            w = np.asarray(expand_conv(np.asarray(w), spec))
+        out.append((w, s))
+    return out
+
+
 # Fast-sigmoid surrogate slope. SNNTorch's default 25 is fine for shallow
 # nets but starves gradients through the 5-layer CIFAR10-DVS MLP (measured:
 # training collapses to silence); 5.0 trains both of Table I's topologies.
@@ -63,25 +189,30 @@ def _spike_fn_jvp(primals, tangents):
     return out, surr * dv
 
 
-def snn_forward_train(params, events):
+def snn_forward_train(params, events, convs=None):
     """Training forward: float weights, surrogate spikes.
 
     Args:
-      params: list of f32 ``[out, in]`` weights.
+      params: list of f32 weights — ``[out, in]`` dense, or a conv kernel
+        ``[oc, ic, kh, kw]`` where `convs` carries a ConvSpec.
       events: f32 ``[T, in]`` input spike raster.
+      convs: optional per-layer tuple of ConvSpec-or-None; conv layers are
+        densified via `expand_conv` before the scan (once, not per step).
 
     Returns:
       ``(logits f32 [n_classes], spike_counts list)`` — logits are output
       spike counts (rate decoding).
     """
-    sizes = [p.shape[0] for p in params]
+    convs = convs or (None,) * len(params)
+    weights = [expand_conv(p, c) if c is not None else p for p, c in zip(params, convs)]
+    sizes = [w.shape[0] for w in weights]
 
     def step(carry, x_t):
         vs = carry
         new_vs = []
         s = x_t
         outs = []
-        for w, v in zip(params, vs):
+        for w, v in zip(weights, vs):
             cur = w @ s
             v_new = BETA * v + cur
             spk = spike_fn(v_new)
@@ -96,9 +227,9 @@ def snn_forward_train(params, events):
     return out_spikes.sum(axis=0), out_spikes
 
 
-def loss_fn(params, events, label):
+def loss_fn(params, events, label, convs=None):
     """Cross-entropy on spike-count logits (rate decoding)."""
-    logits, _ = snn_forward_train(params, events)
+    logits, _ = snn_forward_train(params, events, convs)
     logp = jax.nn.log_softmax(logits)
     return -logp[label]
 
@@ -116,6 +247,29 @@ grad_fn = jax.jit(jax.value_and_grad(batched_loss))
 def predict_train(params, events_b):
     logits = jax.vmap(lambda e: snn_forward_train(params, e)[0])(events_b)
     return logits.argmax(axis=-1)
+
+
+@functools.lru_cache(maxsize=None)
+def make_train_fns(convs=None):
+    """Jitted ``(grad_fn, predict_fn)`` for a mixed conv/dense stack.
+
+    `convs` is a hashable tuple of ConvSpec-or-None per layer (or None for
+    all-dense, where the pair matches the module-level `grad_fn` /
+    `predict_train`). Cached so repeated calls reuse the jit traces.
+    """
+
+    def _batched_loss(params, events_b, labels_b):
+        losses = jax.vmap(lambda e, l: loss_fn(params, e, l, convs))(events_b, labels_b)
+        return losses.mean()
+
+    grad = jax.jit(jax.value_and_grad(_batched_loss))
+
+    @jax.jit
+    def predict(params, events_b):
+        logits = jax.vmap(lambda e: snn_forward_train(params, e, convs)[0])(events_b)
+        return logits.argmax(axis=-1)
+
+    return grad, predict
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,17 @@ import numpy as np
 
 from . import data as datamod
 from . import quantize as q
-from .model import batched_loss, grad_fn, init_params, predict_train, snn_forward_quant
+from .model import (
+    ConvSpec,
+    batched_loss,
+    densify_qparams,
+    grad_fn,
+    init_conv_params,
+    init_params,
+    make_train_fns,
+    predict_train,
+    snn_forward_quant,
+)
 
 
 @dataclasses.dataclass
@@ -36,6 +46,9 @@ class TrainConfig:
     init_gain: float = 1.0
     # masked fine-tuning steps after pruning (recovers most of the drop).
     finetune_steps: int = 60
+    # Per-layer ConvSpec-or-None; empty tuple = all dense. Conv layers
+    # train a shared kernel and export compressed (k{i} + conv{i}).
+    conv_specs: tuple = ()
 
 
 def nmnist_quick() -> TrainConfig:
@@ -61,6 +74,35 @@ def cifar_small_quick() -> TrainConfig:
         steps=250,
         lr=5e-4,
         init_gain=3.0,
+    )
+
+
+def cifar_conv_quick() -> TrainConfig:
+    """Quick preset: compressed conv stack on the 32×32 CIFAR10-DVS stand-in
+    (2×32×32 → 8×16×16 → 8×8×8 → 10), mirroring rust `cifar_conv_specs()`.
+    The two conv layers store 144 + 576 kernel taps instead of the 4.2M +
+    1.0M dense entries their expansions would occupy."""
+    c1 = ConvSpec(
+        in_channels=2, in_h=32, in_w=32, out_channels=8,
+        kernel_h=3, kernel_w=3, stride=2, padding=1,
+    )
+    c2 = ConvSpec(
+        in_channels=8, in_h=16, in_w=16, out_channels=8,
+        kernel_h=3, kernel_w=3, stride=2, padding=1,
+    )
+    return TrainConfig(
+        layer_sizes=(2048, 2048, 512, 10),
+        timesteps=16,
+        train_samples=200,
+        test_samples=80,
+        batch=8,
+        steps=250,
+        lr=5e-4,
+        init_gain=2.0,
+        # Kernels are already tiny and every tap is shared across tiles —
+        # pruning them trades disproportionate accuracy for nothing.
+        prune_frac=0.2,
+        conv_specs=(c1, c2, None),
     )
 
 
@@ -93,18 +135,19 @@ class Adam:
         return out
 
 
-def accuracy_train_view(params, xs, ys, batch=32) -> float:
+def accuracy_train_view(params, xs, ys, batch=32, predict=predict_train) -> float:
     correct = 0
     for i in range(0, len(xs), batch):
         xb = jnp.asarray(xs[i : i + batch], jnp.float32)
-        pred = predict_train(params, xb)
+        pred = predict(params, xb)
         correct += int((np.asarray(pred) == ys[i : i + batch]).sum())
     return correct / len(xs)
 
 
-def accuracy_quant_view(qparams, xs, ys) -> float:
-    """Quantized-inference accuracy (jnp oracle path, no pallas — fast)."""
-    qp = [(jnp.asarray(w), jnp.float32(s)) for w, s in qparams]
+def accuracy_quant_view(qparams, xs, ys, convs=None) -> float:
+    """Quantized-inference accuracy (jnp oracle path, no pallas — fast).
+    Conv kernels are densified first — the rust `expand_conv` oracle."""
+    qp = [(jnp.asarray(w), jnp.float32(s)) for w, s in densify_qparams(qparams, convs)]
 
     @jax.jit
     def pred(e):
@@ -131,7 +174,17 @@ def run(cfg: TrainConfig, log=print) -> dict:
         f"(train rate {xs_tr.mean():.4f})")
 
     key = jax.random.PRNGKey(cfg.seed)
-    params = init_params(cfg.layer_sizes, key, gain=cfg.init_gain)
+    convs = tuple(cfg.conv_specs) if cfg.conv_specs else None
+    if convs:
+        params = init_conv_params(cfg.layer_sizes, convs, key, gain=cfg.init_gain)
+        step_grad, predict = make_train_fns(convs)
+        stored = sum(int(np.asarray(p).size) for p in params)
+        dense = sum(a * b for a, b in zip(cfg.layer_sizes[1:], cfg.layer_sizes[:-1]))
+        log(f"[train] compressed conv stack: {stored} stored weights "
+            f"(dense expansion would store {dense})")
+    else:
+        params = init_params(cfg.layer_sizes, key, gain=cfg.init_gain)
+        step_grad, predict = grad_fn, predict_train
     opt = Adam(params, lr=cfg.lr)
     rng = np.random.default_rng(cfg.seed)
     t0 = time.time()
@@ -140,14 +193,14 @@ def run(cfg: TrainConfig, log=print) -> dict:
         idx = rng.integers(0, len(xs_tr), cfg.batch)
         xb = jnp.asarray(xs_tr[idx], jnp.float32)
         yb = jnp.asarray(ys_tr[idx])
-        loss, grads = grad_fn(params, xb, yb)
+        loss, grads = step_grad(params, xb, yb)
         params = opt.step(params, grads)
         losses.append(float(loss))
         if step % 25 == 0 or step == cfg.steps - 1:
             log(f"[train] step {step:4d} loss {float(loss):.4f} "
                 f"({time.time()-t0:.0f}s)")
 
-    acc_dense = accuracy_train_view(params, xs_te, ys_te)
+    acc_dense = accuracy_train_view(params, xs_te, ys_te, predict=predict)
     log(f"[train] dense accuracy: {acc_dense:.4f}")
 
     # Prune + quantize (Algorithm 1 step 2), with masked fine-tuning to
@@ -161,13 +214,13 @@ def run(cfg: TrainConfig, log=print) -> dict:
             idx = rng.integers(0, len(xs_tr), cfg.batch)
             xb = jnp.asarray(xs_tr[idx], jnp.float32)
             yb = jnp.asarray(ys_tr[idx])
-            _, grads = grad_fn(ft_params, xb, yb)
+            _, grads = step_grad(ft_params, xb, yb)
             ft_params = ft_opt.step(ft_params, grads)
             ft_params = [p * m for p, m in zip(ft_params, masks)]
         pruned = [np.asarray(p) for p in ft_params]
         log(f"[train] fine-tuned {cfg.finetune_steps} steps after pruning")
     qparams = q.quantize_int8(pruned)
-    acc_quant = accuracy_quant_view(qparams, xs_te, ys_te)
+    acc_quant = accuracy_quant_view(qparams, xs_te, ys_te, convs)
     log(f"[train] pruned+quantized accuracy: {acc_quant:.4f} "
         f"(sparsity {q.sparsity(pruned):.2f}, "
         f"qerr {q.quant_error(pruned, qparams):.4f})")
@@ -175,6 +228,7 @@ def run(cfg: TrainConfig, log=print) -> dict:
     return {
         "config": cfg,
         "spec": spec,
+        "conv_specs": convs,
         "params": [np.asarray(p) for p in params],
         "qparams": qparams,
         "acc_dense": acc_dense,

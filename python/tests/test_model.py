@@ -6,10 +6,15 @@ import numpy as np
 from numpy.testing import assert_allclose
 
 from compile.model import (
+    ConvSpec,
     batched_loss,
+    densify_qparams,
+    expand_conv,
     grad_fn,
+    init_conv_params,
     init_params,
     make_inference_fn,
+    make_train_fns,
     snn_forward_quant,
     snn_forward_train,
 )
@@ -94,3 +99,82 @@ def test_silent_input_no_spikes():
     counts, spikes = snn_forward_quant(qp, ev, use_pallas=False)
     assert float(np.asarray(counts).sum()) == 0.0
     assert float(np.asarray(spikes).sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Compressed conv layers.
+# ---------------------------------------------------------------------------
+
+_CONV = ConvSpec(
+    in_channels=2, in_h=6, in_w=6, out_channels=3,
+    kernel_h=3, kernel_w=3, stride=2, padding=1,
+)
+
+
+def test_expand_conv_matches_manual_enumeration():
+    """Densified matrix must follow the rust snn.rs index math exactly."""
+    rng = np.random.default_rng(7)
+    s = _CONV
+    k = rng.integers(-5, 6, s.kernel_shape).astype(np.int8)
+    dense = np.asarray(expand_conv(k, s))
+    assert dense.shape == (s.out_dim, s.in_dim)
+    want = np.zeros_like(dense)
+    for oc in range(s.out_channels):
+        for oy in range(s.out_h):
+            for ox in range(s.out_w):
+                for ic in range(s.in_channels):
+                    for ky in range(s.kernel_h):
+                        for kx in range(s.kernel_w):
+                            iy = oy * s.stride + ky - s.padding
+                            ix = ox * s.stride + kx - s.padding
+                            if 0 <= iy < s.in_h and 0 <= ix < s.in_w:
+                                dst = (oc * s.out_h + oy) * s.out_w + ox
+                                src = (ic * s.in_h + iy) * s.in_w + ix
+                                want[dst, src] = k[oc, ic, ky, kx]
+    assert (dense == want).all()
+
+
+def test_conv_train_equals_dense_expansion():
+    """Conv training forward == dense forward on the expanded matrix."""
+    convs = (_CONV, None)
+    sizes = (_CONV.in_dim, _CONV.out_dim, 4)
+    params = init_conv_params(sizes, convs, jax.random.PRNGKey(3), gain=2.0)
+    assert params[0].shape == _CONV.kernel_shape
+    ev = _events(dim=_CONV.in_dim, rate=0.4, seed=5)
+    logits_c, _ = snn_forward_train(params, ev, convs)
+    dense = [expand_conv(params[0], _CONV), params[1]]
+    logits_d, _ = snn_forward_train(dense, ev)
+    assert_allclose(np.asarray(logits_c), np.asarray(logits_d), atol=0)
+
+
+def test_conv_gradients_reach_kernel():
+    convs = (_CONV, None)
+    sizes = (_CONV.in_dim, _CONV.out_dim, 4)
+    params = init_conv_params(sizes, convs, jax.random.PRNGKey(4), gain=2.0)
+    g_fn, predict = make_train_fns(convs)
+    xb = jnp.stack([_events(dim=_CONV.in_dim, rate=0.4, seed=s) for s in range(3)])
+    yb = jnp.asarray([0, 1, 2])
+    loss, grads = g_fn(params, xb, yb)
+    assert np.isfinite(float(loss))
+    assert grads[0].shape == _CONV.kernel_shape
+    assert float(jnp.abs(grads[0]).max()) > 0.0, "dead kernel gradient"
+    assert predict(params, xb).shape == (3,)
+
+
+def test_densify_qparams_roundtrip_through_quant_forward():
+    """Quantized conv kernel, densified, runs the standard quant forward."""
+    rng = np.random.default_rng(8)
+    convs = (_CONV, None)
+    raw = [
+        rng.normal(0, 0.5, _CONV.kernel_shape).astype(np.float32),
+        rng.normal(0, 0.5, (4, _CONV.out_dim)).astype(np.float32),
+    ]
+    qp = densify_qparams(quantize_int8(raw), convs)
+    assert qp[0][0].shape == (_CONV.out_dim, _CONV.in_dim)
+    assert qp[0][0].dtype == np.int8
+    ev = _events(dim=_CONV.in_dim, rate=0.5, seed=6)
+    counts, spikes = snn_forward_quant(
+        [(jnp.asarray(w), jnp.float32(s)) for w, s in qp], ev, use_pallas=False
+    )
+    assert counts.shape == (4,)
+    assert float(np.asarray(spikes).sum()) >= 0.0

@@ -1,0 +1,185 @@
+//! Generator-based synapse row fetch for compressed conv layers.
+//!
+//! For a dense/CSR layer the dispatcher answers "what does a spike from
+//! source `s` touch this round?" with a MEM_E2A lookup plus a MEM_S&N row
+//! slice. For a compressed conv layer those memories are empty — the
+//! A-SYN SRAM holds one `[oc][ic][kh][kw]` kernel and [`ConvGen::fetch`]
+//! *generates* the same row block arithmetically (arxiv 2112.07019):
+//! decode `s → (ic, y, x)`, enumerate the kernel taps that land in this
+//! round's canonical slot window, group them into per-engine rows.
+//!
+//! The contract is exact structural equality with the distilled expansion:
+//! for the same source and round, `fetch` returns the same row count and
+//! the same row-major `(engine, virt, weight)` sequence that
+//! [`crate::mapping::distill`] + the core's CSR flattening would produce
+//! for the expanded layer under the same canonical mapping. The dispatcher
+//! therefore charges cycles, rows, and MACs identically on both paths —
+//! bit-identical `CoreStats` is structural, not coincidental.
+
+use crate::snn::ConvSpec;
+
+/// The per-core row generator: kernel + canonical-layout geometry.
+#[derive(Debug, Clone)]
+pub struct ConvGen {
+    spec: ConvSpec,
+    /// Kernel `[oc][ic][kh][kw]` — the core's A-SYN weight SRAM contents.
+    kernel: Vec<i8>,
+    /// Canonical slots per round (M·N).
+    slots_per_round: usize,
+    /// Capacitors per A-NEURON (N).
+    caps_per_engine: usize,
+    out_dim: usize,
+}
+
+/// Reusable fetch scratch (no allocation on the steady state).
+#[derive(Debug, Clone, Default)]
+pub struct ConvScratch {
+    /// This source's in-round targets in ascending destination order, as
+    /// `(engine, virt, weight)`. Engine ids are non-decreasing along the
+    /// list — a consequence of the canonical layout (`j = pos/N` grows
+    /// with the destination id), which is what makes grouping a single
+    /// linear pass.
+    tgt: Vec<(u8, u16, i8)>,
+    /// Contiguous per-engine runs within `tgt`, as `(start, len)`.
+    groups: Vec<(u32, u32)>,
+    /// Row-major generated entries — the drop-in replacement for the
+    /// MEM_S&N row slice the CSR path would have fetched.
+    pub entries: Vec<(u8, u16, i8)>,
+}
+
+impl ConvGen {
+    /// Build from a distilled compressed image's parts: the layer spec,
+    /// the kernel (weight SRAM contents), and the core geometry (M, N).
+    pub fn new(spec: ConvSpec, kernel: Vec<i8>, m: usize, n: usize) -> Self {
+        let out_dim = spec.out_dim();
+        Self { spec, kernel, slots_per_round: m * n, caps_per_engine: n, out_dim }
+    }
+
+    /// Generate the row block a spike from `src` triggers in `round_idx`,
+    /// filling `scratch.entries` row-major (row 0's engine columns in
+    /// ascending engine order, then row 1's, …) and returning the row
+    /// count — the generated `B_i` of the paper's MEM_E2A entry. Sources
+    /// out of range (e.g. bit-flipped MEM_E words) generate zero rows,
+    /// exactly like a missing E2A entry on the CSR path.
+    pub fn fetch(&self, src: u32, round_idx: usize, scratch: &mut ConvScratch) -> u64 {
+        scratch.entries.clear();
+        scratch.tgt.clear();
+        let lo = round_idx * self.slots_per_round;
+        let hi = (lo + self.slots_per_round).min(self.out_dim);
+        let n = self.caps_per_engine;
+        let tgt = &mut scratch.tgt;
+        self.spec.for_each_target(&self.kernel, src as usize, |d, w| {
+            let d = d as usize;
+            if d < lo || d >= hi {
+                return;
+            }
+            let pos = d - lo;
+            tgt.push(((pos / n) as u8, (pos % n) as u16, w));
+        });
+        if tgt.is_empty() {
+            return 0;
+        }
+        // Group the ascending-destination list into contiguous per-engine
+        // runs (engine ids are non-decreasing, so one pass suffices), then
+        // emit row-major: row r takes each group's r-th element.
+        scratch.groups.clear();
+        let mut start = 0usize;
+        for i in 1..=tgt.len() {
+            if i == tgt.len() || tgt[i].0 != tgt[start].0 {
+                scratch.groups.push((start as u32, (i - start) as u32));
+                start = i;
+            }
+        }
+        let rows = scratch.groups.iter().map(|&(_, len)| len).max().unwrap();
+        for r in 0..rows {
+            for &(gs, glen) in scratch.groups.iter() {
+                if r < glen {
+                    scratch.entries.push(tgt[(gs + r) as usize]);
+                }
+            }
+        }
+        rows as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::mapping::{distill, map_layer, Strategy};
+    use crate::snn::{LifParams, QuantLayer};
+    use crate::util::rng::Rng;
+
+    fn small_cfg(m: usize, n: usize) -> AcceleratorConfig {
+        let mut c = AcceleratorConfig::accel1();
+        c.a_neurons_per_core = m;
+        c.a_syns_per_core = m;
+        c.virtual_per_a_neuron = n;
+        c
+    }
+
+    /// The layout contract, pinned directly against the distiller: for
+    /// every (round, source), `fetch` must return exactly the row count
+    /// and row-major entry sequence that distilling the expanded layer
+    /// yields under the same canonical mapping.
+    #[test]
+    fn fetch_matches_distilled_expansion() {
+        let mut rng = Rng::new(21);
+        for (stride, padding, m, n) in [(1, 1, 3, 7), (2, 0, 4, 4), (2, 1, 2, 9)] {
+            let spec = ConvSpec {
+                in_channels: 2,
+                in_h: 6,
+                in_w: 6,
+                out_channels: 3,
+                kernel_h: 3,
+                kernel_w: 3,
+                stride,
+                padding,
+            };
+            let mut kernel = vec![0i8; spec.kernel_len()];
+            for w in kernel.iter_mut() {
+                if !rng.bernoulli(0.25) {
+                    let mag = rng.range_inclusive(1, 127) as i8;
+                    *w = if rng.bernoulli(0.5) { mag } else { -mag };
+                }
+            }
+            let compressed =
+                QuantLayer::conv2d(spec, kernel.clone(), 0.01, LifParams::default()).unwrap();
+            let expanded = compressed.expand_conv().unwrap();
+            let cfg = small_cfg(m, n);
+            let mp = map_layer(&expanded, &cfg, Strategy::IlpFlow).unwrap();
+            let img = distill(&expanded, &mp, &cfg).unwrap();
+            assert!(img.rounds.len() > 1, "want multi-round coverage (m{m} n{n})");
+
+            let gen = ConvGen::new(spec, kernel, m, n);
+            let mut scratch = ConvScratch::default();
+            for (ri, round) in img.rounds.iter().enumerate() {
+                for s in 0..spec.in_dim() {
+                    // Flatten the distilled rows exactly like the core's
+                    // CSR build: per row, engine columns ascending.
+                    let e2a = round.e2a[s];
+                    let mut want: Vec<(u8, u16, i8)> = Vec::new();
+                    for r in 0..e2a.count {
+                        let row = &round.sn_rows[(e2a.start + r) as usize];
+                        for (j, e) in row.per_engine.iter().enumerate() {
+                            if let Some(e) = e {
+                                want.push((
+                                    j as u8,
+                                    e.virt,
+                                    img.weight_mem[e.weight_addr as usize],
+                                ));
+                            }
+                        }
+                    }
+                    let rows = gen.fetch(s as u32, ri, &mut scratch);
+                    assert_eq!(rows, e2a.count as u64, "round {ri} src {s}");
+                    assert_eq!(scratch.entries, want, "round {ri} src {s}");
+                }
+                // Out-of-range sources generate nothing.
+                let rows = gen.fetch(spec.in_dim() as u32 + 5, ri, &mut scratch);
+                assert_eq!(rows, 0);
+                assert!(scratch.entries.is_empty());
+            }
+        }
+    }
+}

@@ -46,6 +46,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::analog::{kahan_add, ASyn, AnalogParams};
+use crate::engine::convgen::{ConvGen, ConvScratch};
 use crate::engine::state::{LaneCtl, RoundSoa, SoaState};
 use crate::engine::sweep::sweep_round;
 use crate::fault::CoreFaults;
@@ -66,6 +67,12 @@ pub struct CoreView<'a> {
     pub rows_index: &'a [Vec<u32>],
     /// CSR entries per round as `(engine, virt, weight)`.
     pub row_entries: &'a [Vec<(u8, u16, i8)>],
+    /// Generator-based row fetch for compressed conv images: `Some` makes
+    /// the dispatcher enumerate each source's rows arithmetically from the
+    /// kernel instead of the (empty) MEM_E2A/MEM_S&N mirror. The generated
+    /// block is structurally identical to what distilling the expanded
+    /// layer would store, so accounting downstream is unchanged.
+    pub conv: Option<&'a ConvGen>,
     /// Flattened `(slot, dst)` residents per round, sorted by destination.
     pub residents_sorted: &'a [Vec<(u32, u32)>],
     /// Per-round sweep cycle cost (max per-engine occupancy).
@@ -113,6 +120,8 @@ pub struct StepScratch {
     heap: BinaryHeap<Reverse<(u32, u32)>>,
     /// Lanes carrying the current source: `(lane id, active pos, mult)`.
     carriers: Vec<(u32, u32, u32)>,
+    /// Generated-row buffer for compressed conv images.
+    conv: ConvScratch,
 }
 
 /// Execute one global time step for the lanes listed in `active`
@@ -224,9 +233,16 @@ pub fn step(
                 }
             }
 
-            // Image fetch, once per distinct source.
+            // Image fetch, once per distinct source: generated from the
+            // kernel for compressed conv images, MEM_E2A + MEM_S&N row
+            // slice otherwise. Both paths yield the same (row count,
+            // row-major entries) shape, so everything downstream —
+            // accounting, deposits, faults — is representation-blind.
             let s = src as usize;
-            let (row_count, entries) = if s < round.e2a.len() && round.e2a[s].count > 0 {
+            let (row_count, entries) = if let Some(gen) = view.conv {
+                let rows = gen.fetch(src, round_idx, &mut scratch.conv);
+                (rows, scratch.conv.entries.as_slice())
+            } else if s < round.e2a.len() && round.e2a[s].count > 0 {
                 let e2a = round.e2a[s];
                 let lo = ridx[e2a.start as usize] as usize;
                 let hi = ridx[(e2a.start + e2a.count) as usize] as usize;

@@ -46,10 +46,12 @@
 //! sum, each a ≤1-ulp-per-add perturbation of a sidecar that is itself
 //! orders of magnitude below the threshold scale.
 
+pub mod convgen;
 pub mod dispatch;
 pub mod state;
 pub mod sweep;
 
+pub use convgen::{ConvGen, ConvScratch};
 pub use dispatch::{step, CoreView, StepScratch};
 pub use state::{latch_events, LaneCtl, RoundSoa, SoaState};
 pub use sweep::quiescent_fixed_point;

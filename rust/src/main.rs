@@ -40,7 +40,7 @@ use menage::serve::{
     ShardHostConfig, ShardHostServer,
 };
 use menage::shard::ShardedMenage;
-use menage::snn::{QuantNetwork, SpikeTrain};
+use menage::snn::{ConvSpec, QuantNetwork, SpikeTrain};
 use menage::trace::MemoryTrace;
 use menage::util::json::Json;
 use menage::util::rng::Rng;
@@ -159,8 +159,64 @@ fn resolve_model(name: &str) -> Result<(ModelConfig, DatasetKind, &'static str)>
         "cifar" | "cifar10dvs" => {
             (ModelConfig::cifar10dvs_mlp(), DatasetKind::Cifar10Dvs, "cifar")
         }
-        _ => bail!("unknown model {name:?} (nmnist | cifar_small | cifar)"),
+        "cifar_conv" | "cifar10dvs_conv" => {
+            // Compressed conv stack over the 2×32×32 event frame; the
+            // layer_sizes here are the layer *dimensions* (the dense proxy
+            // view used for display and capacity reporting — the actual
+            // weights are one kernel per conv layer).
+            let specs = cifar_conv_specs();
+            let mut sizes = vec![specs[0].in_dim()];
+            sizes.extend(specs.iter().map(|s| s.out_dim()));
+            sizes.push(10);
+            let mcfg = ModelConfig {
+                name: "cifar10dvs_conv".into(),
+                layer_sizes: sizes,
+                timesteps: 20,
+                beta: 0.9,
+                v_threshold: 1.0,
+                v_reset: 0.0,
+            };
+            (mcfg, DatasetKind::Cifar10DvsSmall, "cifar_conv")
+        }
+        _ => bail!("unknown model {name:?} (nmnist | cifar_small | cifar | cifar_conv)"),
     })
+}
+
+/// The CIFAR10-DVS conv stack (compressed synapses): 2×32×32 events →
+/// 8×16×16 → 8×8×8, then a dense 10-class head.
+fn cifar_conv_specs() -> Vec<ConvSpec> {
+    vec![
+        ConvSpec {
+            in_channels: 2,
+            in_h: 32,
+            in_w: 32,
+            out_channels: 8,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 2,
+            padding: 1,
+        },
+        ConvSpec {
+            in_channels: 8,
+            in_h: 16,
+            in_w: 16,
+            out_channels: 8,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 2,
+            padding: 1,
+        },
+    ]
+}
+
+/// Apply `--expand-conv`: densify every compressed conv layer into its
+/// expanded synapse table (the oracle representation — useful for A/B
+/// footprint and shard-count comparisons against the same model).
+fn maybe_expand_conv(net: QuantNetwork, args: &Args) -> Result<QuantNetwork> {
+    if args.has("expand-conv") && net.has_compressed() {
+        return net.expand_convs();
+    }
+    Ok(net)
 }
 
 fn resolve_accel(name: &str) -> Result<AcceleratorConfig> {
@@ -184,6 +240,16 @@ fn resolve_analog(args: &Args) -> Result<AnalogParams> {
 fn load_network(base: &str, mcfg: &ModelConfig, synthetic: bool) -> Result<QuantNetwork> {
     if synthetic {
         let mut rng = Rng::new(7);
+        if base == "cifar_conv" {
+            return QuantNetwork::random_conv(
+                &mcfg.name,
+                &cifar_conv_specs(),
+                10,
+                mcfg.timesteps,
+                0.5,
+                &mut rng,
+            );
+        }
         return Ok(QuantNetwork::random(mcfg, 0.5, &mut rng));
     }
     let path = artifacts_dir().join(format!("{base}.weights.mtz"));
@@ -247,11 +313,11 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_map(args: &Args) -> Result<()> {
-    args.expect_known(&["model", "accel", "strategy"], &["synthetic"])?;
+    args.expect_known(&["model", "accel", "strategy"], &["synthetic", "expand-conv"])?;
     let (mcfg, _, base) = resolve_model(&args.get_or("model", "nmnist"))?;
     let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
     let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
-    let net = load_network(base, &mcfg, args.has("synthetic"))?;
+    let net = maybe_expand_conv(load_network(base, &mcfg, args.has("synthetic"))?, args)?;
     let t0 = std::time::Instant::now();
     let mappings = map_network(&net, &cfg, strategy)?;
     let dt = t0.elapsed();
@@ -290,7 +356,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "remote-shards",
             "remote-window",
         ],
-        &["golden", "synthetic", "check-monolithic"],
+        &["golden", "synthetic", "check-monolithic", "expand-conv"],
     )?;
     if let Some(spec) = args.get("remote-shards") {
         return cmd_simulate_remote(args, &spec.to_string());
@@ -323,7 +389,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
     }
 
-    let net = load_network(base, &mcfg, synthetic)?;
+    let net = maybe_expand_conv(load_network(base, &mcfg, synthetic)?, args)?;
+    if net.has_compressed() {
+        println!(
+            "compressed conv synapses: {} stored weights (dense expansion would store {})",
+            net.stored_weights(),
+            net.expand_convs()?.stored_weights()
+        );
+    }
     println!(
         "loaded {}: {} params, {} nnz (sparsity {:.2}), T={}",
         net.name,
@@ -787,7 +860,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "remote-shards",
             "remote-window",
         ],
-        &["synthetic", "allow-remote-shutdown"],
+        &["synthetic", "allow-remote-shutdown", "expand-conv"],
     )?;
     if let Some(spec) = args.get("remote-shards") {
         return cmd_serve_remote(args, &spec.to_string());
@@ -800,7 +873,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let strategy = Strategy::parse(&args.get_or("strategy", "ilp_flow"))?;
     let analog = resolve_analog(args)?;
     let shards_req = args.get_usize("shards", 1)?.max(1);
-    let net = load_network(base, &mcfg, args.has("synthetic"))?;
+    let net = maybe_expand_conv(load_network(base, &mcfg, args.has("synthetic"))?, args)?;
     let fault_plan = match args.get("faults") {
         Some(spec) => FaultPlan::parse(spec)?,
         None => FaultPlan::default(),
@@ -1013,7 +1086,7 @@ fn cmd_shard_host(args: &Args) -> Result<()> {
             "faults",
             "duration-secs",
         ],
-        &["synthetic", "allow-remote-shutdown"],
+        &["synthetic", "allow-remote-shutdown", "expand-conv"],
     )?;
     let (mcfg, _kind, base) = resolve_model(&args.get_or("model", "nmnist"))?;
     let cfg = resolve_accel(&args.get_or("accel", "accel1"))?;
@@ -1025,7 +1098,7 @@ fn cmd_shard_host(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("--shard-index is required (which shard of the plan this host serves)"))?
         .parse()
         .context("--shard-index")?;
-    let net = load_network(base, &mcfg, args.has("synthetic"))?;
+    let net = maybe_expand_conv(load_network(base, &mcfg, args.has("synthetic"))?, args)?;
     let fault_plan = match args.get("faults") {
         Some(spec) => FaultPlan::parse(spec)?,
         None => FaultPlan::default(),
@@ -1574,12 +1647,14 @@ fn help() {
         "menage — MENAGE mixed-signal neuromorphic accelerator reproduction
 
 USAGE:
-  menage info      --model <nmnist|cifar_small|cifar>
+  menage info      --model <nmnist|cifar_small|cifar|cifar_conv>
   menage map       --model M --accel <accel1|accel2|cfg.toml> [--strategy S] [--synthetic]
+                   [--expand-conv]
   menage simulate  --model M --accel A [--samples N] [--workers W]
                    [--strategy ilp_flow|ilp_exact|greedy|first_fit|round_robin]
                    [--analog ideal|paper] [--golden] [--synthetic] [--out FILE]
                    [--shards K] [--check-monolithic] [--faults SPEC]
+                   [--expand-conv]
   menage waveform  [--out FILE]
   menage serve     --model M --accel A [--synthetic] [--addr HOST:PORT]
                    [--workers W] [--lanes L] [--fill-wait-us U]
@@ -1611,6 +1686,14 @@ order). serve --remote-shards fronts the distributed pipeline with the
 usual TCP inference service; simulate --remote-shards drives it directly
 and --check-monolithic asserts bit-identity against a local oracle.
 --remote-window W bounds timesteps in flight per link (default 2).
+
+--model cifar_conv is a compressed convolutional stack (2×32×32 events →
+8×16×16 → 8×8×8 → 10 classes): conv layers store one kernel each and the
+engine generates synapse rows arithmetically per spike (synapse
+compression), instead of an expanded out_dim×in_dim table. --expand-conv
+densifies those layers into the expanded oracle representation — same
+classification and cycles, vastly larger weight SRAM footprint — for A/B
+comparisons of memory and shard counts (serve/shard-host accept it too).
 
 --faults injects deterministic analog hardware faults, e.g.
   --faults seed=3,stuck=0.05,dead=0.02,flip=0.001,drift=1.2

@@ -32,7 +32,7 @@ use crate::config::AcceleratorConfig;
 use crate::ilp::branch_bound::{self, BnbConfig};
 use crate::ilp::mcmf::McmfGraph;
 use crate::ilp::{Cmp, Problem, Status};
-use crate::snn::{QuantLayer, QuantNetwork};
+use crate::snn::{ConvSpec, QuantLayer, QuantNetwork};
 
 /// Mapping strategy selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -115,7 +115,14 @@ pub struct LayerMapping {
 
 impl LayerMapping {
     /// Check the paper's constraints (5)–(7) hold for every round.
+    ///
+    /// Conv layers (compressed or their expansion oracle) use the fixed
+    /// canonical layout instead and are checked against it — see
+    /// [`Self::validate_conv`].
     pub fn validate(&self, layer: &QuantLayer, cfg: &AcceleratorConfig) -> Result<()> {
+        if layer.conv.is_some() {
+            return self.validate_conv(layer, cfg);
+        }
         let m = cfg.a_neurons_per_core;
         let n = cfg.virtual_per_a_neuron;
         let mut seen = vec![false; layer.out_dim];
@@ -179,6 +186,56 @@ impl LayerMapping {
         Ok(())
     }
 
+    /// Check a conv layer's mapping is exactly the canonical layout of
+    /// [`map_conv_canonical`]: destination `d` lives in round `d/(M·N)` at
+    /// slot `(pos/N, pos%N)` with `pos = d mod M·N`, every destination
+    /// assigned (dead ones included — the generator must find its targets
+    /// at arithmetically determined slots, so nothing may be skipped or
+    /// repacked). The fan-out constraint (eq. 7) is deliberately not
+    /// enforced: generated rows never occupy MEM_S&N, which is what the
+    /// limit protects.
+    fn validate_conv(&self, layer: &QuantLayer, cfg: &AcceleratorConfig) -> Result<()> {
+        let m = cfg.a_neurons_per_core;
+        let n = cfg.virtual_per_a_neuron;
+        let capacity = m * n;
+        if !self.unassigned.is_empty() {
+            bail!("conv mapping must assign every destination neuron");
+        }
+        let want_rounds = layer.out_dim.div_ceil(capacity);
+        if self.rounds.len() != want_rounds {
+            bail!(
+                "conv mapping has {} rounds, canonical layout needs {want_rounds}",
+                self.rounds.len()
+            );
+        }
+        for (ri, round) in self.rounds.iter().enumerate() {
+            let lo = ri * capacity;
+            let hi = ((ri + 1) * capacity).min(layer.out_dim);
+            if round.slot_of.len() != hi - lo {
+                bail!(
+                    "conv round {ri} holds {} neurons, canonical layout needs {}",
+                    round.slot_of.len(),
+                    hi - lo
+                );
+            }
+            for (&i, &(j, k)) in &round.slot_of {
+                let d = i as usize;
+                if d < lo || d >= hi {
+                    bail!("conv round {ri}: neuron {i} outside canonical range {lo}..{hi}");
+                }
+                let pos = d - lo;
+                if (j as usize, k as usize) != (pos / n, pos % n) {
+                    bail!(
+                        "conv round {ri}: neuron {i} at slot ({j},{k}), canonical is ({},{})",
+                        pos / n,
+                        pos % n
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Total assigned neurons.
     pub fn assigned_count(&self) -> usize {
         self.rounds.iter().map(|r| r.slot_of.len()).sum()
@@ -201,12 +258,12 @@ impl LayerMapping {
 }
 
 /// In-degree (number of incoming non-zero synapses) per destination neuron.
+/// Works for both layer representations (generated rows for compressed
+/// conv layers).
 pub fn in_degrees(layer: &QuantLayer) -> Vec<usize> {
     let mut deg = vec![0usize; layer.out_dim];
     for s in 0..layer.in_dim {
-        for &(d, _) in layer.targets_of(s) {
-            deg[d as usize] += 1;
-        }
+        layer.for_each_target(s, |d, _| deg[d as usize] += 1);
     }
     deg
 }
@@ -220,6 +277,14 @@ pub fn map_layer(
     cfg: &AcceleratorConfig,
     strategy: Strategy,
 ) -> Result<LayerMapping> {
+    if layer.conv.is_some() {
+        // Conv layers take the canonical arithmetical layout regardless of
+        // strategy — the generator-based row fetch computes slots from the
+        // destination id, so placement freedom would buy nothing and cost a
+        // per-event table lookup. Applying it to the expansion oracle too
+        // keeps the two representations bit-comparable.
+        return Ok(map_conv_canonical(layer, cfg, strategy));
+    }
     let m = cfg.a_neurons_per_core;
     let n = cfg.virtual_per_a_neuron;
     let capacity = m * n;
@@ -298,6 +363,33 @@ pub fn map_layer(
     }
 
     Ok(LayerMapping { rounds, unassigned, strategy, solver_nodes })
+}
+
+/// The canonical conv slot layout: destination `d` is assigned to round
+/// `d/(M·N)`, engine `pos/N`, capacitor `pos%N` with `pos = d mod M·N` —
+/// including destinations with no incoming connections, so the engine's
+/// generator ([`crate::engine::ConvGen`]) can derive any destination's slot
+/// arithmetically without a placement table.
+fn map_conv_canonical(
+    layer: &QuantLayer,
+    cfg: &AcceleratorConfig,
+    strategy: Strategy,
+) -> LayerMapping {
+    let n = cfg.virtual_per_a_neuron;
+    let capacity = cfg.a_neurons_per_core * n;
+    let num_rounds = layer.out_dim.div_ceil(capacity);
+    let mut rounds = Vec::with_capacity(num_rounds);
+    for ri in 0..num_rounds {
+        let lo = ri * capacity;
+        let hi = ((ri + 1) * capacity).min(layer.out_dim);
+        let mut round = RoundAssignment::default();
+        for d in lo..hi {
+            let pos = d - lo;
+            round.slot_of.insert(d as u32, ((pos / n) as u16, (pos % n) as u16));
+        }
+        rounds.push(round);
+    }
+    LayerMapping { rounds, unassigned: vec![], strategy, solver_nodes: 0 }
 }
 
 /// Map every layer of a network onto the accelerator's core chain.
@@ -650,6 +742,12 @@ pub struct CoreImage {
     /// in/out dims of the layer (for checking).
     pub in_dim: usize,
     pub out_dim: usize,
+    /// `Some` when this image is a **compressed** conv layer: `weight_mem`
+    /// holds the `[oc][ic][kh][kw]` kernel and the engine generates synapse
+    /// rows from it at dispatch time instead of reading `e2a`/`sn_rows`
+    /// (which stay empty). `None` for dense/CSR images — including the
+    /// conv expansion oracle, which executes through the MEM_S&N path.
+    pub conv: Option<ConvSpec>,
 }
 
 impl CoreImage {
@@ -671,6 +769,9 @@ pub fn distill(
     mapping: &LayerMapping,
     cfg: &AcceleratorConfig,
 ) -> Result<CoreImage> {
+    if layer.is_compressed() {
+        return distill_conv(layer, mapping, cfg);
+    }
     let m = cfg.a_neurons_per_core;
     let mut weight_mem: Vec<i8> = Vec::new();
     let mut rounds = Vec::with_capacity(mapping.rounds.len());
@@ -734,6 +835,46 @@ pub fn distill(
         num_engines: m,
         in_dim: layer.in_dim,
         out_dim: layer.out_dim,
+        conv: None,
+    })
+}
+
+/// Distill a **compressed** conv layer: the A-SYN weight SRAM holds the
+/// kernel once, and MEM_E2A/MEM_S&N stay empty — at dispatch time the
+/// engine enumerates each source's rows arithmetically from the kernel
+/// ([`crate::engine::ConvGen`]), which is the whole point of synapse
+/// compression (arxiv 2112.07019). Only the per-round residents (the
+/// canonical slot layout, needed for sweeps and multi-round reloads) are
+/// materialized.
+fn distill_conv(
+    layer: &QuantLayer,
+    mapping: &LayerMapping,
+    cfg: &AcceleratorConfig,
+) -> Result<CoreImage> {
+    if layer.kernel.len() > cfg.weight_capacity() {
+        bail!(
+            "conv kernel needs {} weights, core weight SRAM holds {}",
+            layer.kernel.len(),
+            cfg.weight_capacity()
+        );
+    }
+    let rounds = mapping
+        .rounds
+        .iter()
+        .map(|round| RoundImage {
+            e2a: Vec::new(),
+            sn_rows: Vec::new(),
+            residents: round.slot_of.iter().map(|(&i, &slot)| (slot, i)).collect(),
+        })
+        .collect();
+    Ok(CoreImage {
+        rounds,
+        weight_mem: layer.kernel.clone(),
+        scale: layer.scale,
+        num_engines: cfg.a_neurons_per_core,
+        in_dim: layer.in_dim,
+        out_dim: layer.out_dim,
+        conv: layer.conv,
     })
 }
 
@@ -769,6 +910,12 @@ pub fn distill_network(
 /// `out_dim(b) + nnz(b+1)`: wide, densely fanned-out boundaries are
 /// expensive cuts, pruned narrow ones are cheap — exactly the traffic
 /// bottleneck the multi-core routing literature optimizes for.
+///
+/// Deliberately representation-independent: `nnz()` is the *logical*
+/// synapse count, identical for a compressed conv layer and its expansion
+/// — cut traffic depends on spikes and fan-out walks, not on how weights
+/// are stored. Compression pays off through [`layer_weight_bytes`] (fewer
+/// shards needed for the same budget), not through cheaper cuts.
 pub fn shard_cut_costs(net: &QuantNetwork) -> Vec<u64> {
     net.layers
         .windows(2)
@@ -776,11 +923,17 @@ pub fn shard_cut_costs(net: &QuantNetwork) -> Vec<u64> {
         .collect()
 }
 
-/// Per-layer A-SYN weight-SRAM footprint (one byte per non-zero synapse —
-/// what [`distill`] actually emits), the quantity the per-chip memory
-/// budget constrains.
-pub fn layer_weight_bytes(net: &QuantNetwork) -> Vec<usize> {
-    net.layers.iter().map(|l| l.nnz()).collect()
+/// Per-layer A-SYN weight-SRAM footprint in bytes — the quantity the
+/// per-chip memory budget constrains. Counts the weights [`distill`]
+/// actually emits (one per non-zero synapse for dense layers, the kernel
+/// taps once for compressed conv layers) bit-packed at the quantized
+/// `weight_bits` width. Synapse compression shows up exactly here: a conv
+/// layer drops from `nnz` stored weights to `oc·ic·kh·kw`.
+pub fn layer_weight_bytes(net: &QuantNetwork, weight_bits: u32) -> Vec<usize> {
+    net.layers
+        .iter()
+        .map(|l| (l.stored_weights() * weight_bits as usize).div_ceil(8))
+        .collect()
 }
 
 /// Per-chip capacity limits the shard partitioner must respect.
@@ -792,14 +945,21 @@ pub struct ShardLimits {
     /// Optional aggregate weight-SRAM budget per chip (bytes across the
     /// shard's layers). `None` = unconstrained.
     pub chip_weight_budget: Option<usize>,
+    /// Quantized weight width in bits — sets how [`layer_weight_bytes`]
+    /// packs stored weights when charging against the budget.
+    pub weight_bits: u32,
 }
 
 impl ShardLimits {
-    /// Limits implied by an accelerator preset: one layer per core, no
-    /// aggregate weight budget beyond the per-core SRAM already enforced
-    /// by the distiller.
+    /// Limits implied by an accelerator preset: one layer per core, the
+    /// preset's weight width, no aggregate weight budget beyond the
+    /// per-core SRAM already enforced by the distiller.
     pub fn from_accel(cfg: &AcceleratorConfig) -> Self {
-        Self { max_layers_per_shard: cfg.num_cores, chip_weight_budget: None }
+        Self {
+            max_layers_per_shard: cfg.num_cores,
+            chip_weight_budget: None,
+            weight_bits: cfg.weight_bits,
+        }
     }
 }
 
@@ -871,7 +1031,7 @@ impl ShardPlan {
                 self.num_shards - 1
             );
         }
-        let weights = layer_weight_bytes(net);
+        let weights = layer_weight_bytes(net, limits.weight_bits);
         for (s, range) in self.ranges().into_iter().enumerate() {
             let count = range.len();
             if count == 0 {
@@ -909,7 +1069,7 @@ fn partition_check(net: &QuantNetwork, num_shards: usize, limits: &ShardLimits) 
         bail!("cannot split {l} layers into {num_shards} non-empty shards");
     }
     if let Some(budget) = limits.chip_weight_budget {
-        let weights = layer_weight_bytes(net);
+        let weights = layer_weight_bytes(net, limits.weight_bits);
         if let Some((i, &w)) = weights.iter().enumerate().find(|(_, &w)| w > budget) {
             bail!("layer {i} alone needs {w} weight bytes, chip budget is {budget}");
         }
@@ -951,7 +1111,7 @@ pub fn partition_layers(
     partition_check(net, num_shards, limits)?;
     let l = net.layers.len();
     let costs = shard_cut_costs(net);
-    let weights = layer_weight_bytes(net);
+    let weights = layer_weight_bytes(net, limits.weight_bits);
     let cmax = limits.max_layers_per_shard.max(1);
     const INF: u64 = u64::MAX;
     // dp[k][i]: min cut cost placing layers 0..i on k chips.
@@ -1027,7 +1187,7 @@ pub fn partition_layers_ilp(
     partition_check(net, num_shards, limits)?;
     let l = net.layers.len();
     let costs = shard_cut_costs(net);
-    let weights = layer_weight_bytes(net);
+    let weights = layer_weight_bytes(net, limits.weight_bits);
     let cmax = limits.max_layers_per_shard.max(1);
     if num_shards == 1 {
         let plan = ShardPlan::monolithic(l);
@@ -1271,6 +1431,91 @@ mod tests {
         mp.validate(&layer, &cfg).unwrap();
     }
 
+    // -- conv canonical mapping + compressed distillation --------------------
+
+    fn tiny_conv_layer() -> QuantLayer {
+        let spec = crate::snn::ConvSpec {
+            in_channels: 2,
+            in_h: 5,
+            in_w: 5,
+            out_channels: 3,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 1,
+            padding: 1,
+        };
+        let mut rng = Rng::new(33);
+        let mut kernel = vec![0i8; spec.kernel_len()];
+        for w in kernel.iter_mut() {
+            if !rng.bernoulli(0.3) {
+                *w = rng.range_inclusive(-127, 127) as i8;
+            }
+        }
+        QuantLayer::conv2d(spec, kernel, 0.01, LifParams::default()).unwrap()
+    }
+
+    #[test]
+    fn conv_mapping_is_canonical_for_both_representations() {
+        let compressed = tiny_conv_layer();
+        let expanded = compressed.expand_conv().unwrap();
+        let cfg = small_cfg(4, 8); // capacity 32 < out_dim 75 → 3 rounds
+        for strat in [Strategy::IlpFlow, Strategy::Greedy, Strategy::RoundRobin] {
+            let a = map_layer(&compressed, &cfg, strat).unwrap();
+            let b = map_layer(&expanded, &cfg, strat).unwrap();
+            a.validate(&compressed, &cfg).unwrap();
+            b.validate(&expanded, &cfg).unwrap();
+            assert_eq!(a.rounds.len(), compressed.out_dim.div_ceil(32));
+            assert_eq!(a.rounds.len(), b.rounds.len());
+            for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+                assert_eq!(ra.slot_of, rb.slot_of, "both representations must map alike");
+            }
+            assert_eq!(a.assigned_count(), compressed.out_dim, "dead dsts included");
+        }
+    }
+
+    #[test]
+    fn conv_canonical_validate_rejects_repacking() {
+        let layer = tiny_conv_layer();
+        let cfg = small_cfg(4, 8);
+        let mut mp = map_layer(&layer, &cfg, Strategy::IlpFlow).unwrap();
+        // Swap two destinations' slots: structurally fine for an MLP,
+        // but breaks the arithmetic slot derivation the generator uses.
+        let (&i0, &s0) = mp.rounds[0].slot_of.iter().next().unwrap();
+        let (&i1, &s1) = mp.rounds[0].slot_of.iter().nth(1).unwrap();
+        mp.rounds[0].slot_of.insert(i0, s1);
+        mp.rounds[0].slot_of.insert(i1, s0);
+        assert!(mp.validate(&layer, &cfg).is_err());
+    }
+
+    #[test]
+    fn conv_distill_stores_kernel_once() {
+        let compressed = tiny_conv_layer();
+        let expanded = compressed.expand_conv().unwrap();
+        let cfg = small_cfg(4, 8);
+        let mp = map_layer(&compressed, &cfg, Strategy::IlpFlow).unwrap();
+        let img_c = distill(&compressed, &mp, &cfg).unwrap();
+        let img_e = distill(&expanded, &mp, &cfg).unwrap();
+        // Compressed image: kernel in weight SRAM, no row tables.
+        assert_eq!(img_c.conv, compressed.conv);
+        assert_eq!(img_c.weight_mem, compressed.kernel);
+        for r in &img_c.rounds {
+            assert!(r.e2a.is_empty() && r.sn_rows.is_empty());
+        }
+        // Oracle image: CSR-materialized, one weight per synapse.
+        assert_eq!(img_e.conv, None);
+        assert_eq!(img_e.weight_mem.len(), expanded.nnz());
+        assert!(img_c.weight_mem.len() < img_e.weight_mem.len());
+        // Same canonical mapping ⇒ identical residents (sweeps, reloads,
+        // and fire ops price identically on both paths).
+        for (rc, re) in img_c.rounds.iter().zip(&img_e.rounds) {
+            assert_eq!(rc.residents, re.residents);
+        }
+        // Kernel must fit the weight SRAM.
+        let mut tiny = cfg.clone();
+        tiny.weight_mem_bytes = 4;
+        assert!(distill(&compressed, &mp, &tiny).is_err());
+    }
+
     // -- shard partitioner ---------------------------------------------------
 
     /// Network with fully dense layers of the given widths (deterministic
@@ -1287,7 +1532,11 @@ mod tests {
     }
 
     fn limits(max_layers: usize, budget: Option<usize>) -> ShardLimits {
-        ShardLimits { max_layers_per_shard: max_layers, chip_weight_budget: budget }
+        ShardLimits {
+            max_layers_per_shard: max_layers,
+            chip_weight_budget: budget,
+            weight_bits: 8,
+        }
     }
 
     #[test]
@@ -1295,7 +1544,23 @@ mod tests {
         let net = dense_net(&[2, 1, 8, 8, 1]);
         // costs[b] = out_dim(b) + nnz(b+1)
         assert_eq!(shard_cut_costs(&net), vec![1 + 8, 8 + 64, 8 + 8]);
-        assert_eq!(layer_weight_bytes(&net), vec![2, 8, 64, 8]);
+        assert_eq!(layer_weight_bytes(&net, 8), vec![2, 8, 64, 8]);
+    }
+
+    /// The satellite fix: weight bytes are bit-packed at the quantized
+    /// width, not "one byte per nnz" regardless of `weight_bits`.
+    #[test]
+    fn layer_weight_bytes_packs_quantized_width() {
+        // Layer with 3 non-zeros: 3·4 bits = 12 bits → 2 bytes, not 3.
+        let l = QuantLayer::new(3, 1, vec![1, 2, 3], 0.1, LifParams::default()).unwrap();
+        let net = QuantNetwork { name: "p".into(), layers: vec![l], timesteps: 1 };
+        assert_eq!(layer_weight_bytes(&net, 8), vec![3]);
+        assert_eq!(layer_weight_bytes(&net, 4), vec![2]);
+        assert_eq!(layer_weight_bytes(&net, 16), vec![6]);
+        assert_eq!(layer_weight_bytes(&net, 1), vec![1]);
+        // Dense 8×8 at 4 bits: 64 weights → 32 bytes.
+        let net = dense_net(&[8, 8]);
+        assert_eq!(layer_weight_bytes(&net, 4), vec![32]);
     }
 
     #[test]
@@ -1339,7 +1604,7 @@ mod tests {
         let ilp = partition_layers_ilp(&net, 2, &lim).unwrap();
         assert_eq!(dp.cut_cost, ilp.cut_cost);
         for plan in [dp, ilp] {
-            let weights = layer_weight_bytes(&net);
+            let weights = layer_weight_bytes(&net, 8);
             for r in plan.ranges() {
                 assert!(weights[r].iter().sum::<usize>() <= 72);
             }

@@ -51,7 +51,7 @@ use anyhow::{bail, Result};
 
 use crate::analog::{ASyn, AnalogParams};
 use crate::config::AcceleratorConfig;
-use crate::engine::{self, CoreView, LaneCtl, SoaState, StepScratch};
+use crate::engine::{self, ConvGen, CoreView, LaneCtl, SoaState, StepScratch};
 use crate::fault::{CoreFaults, FaultPlan};
 use crate::mapping::CoreImage;
 use crate::snn::LifParams;
@@ -117,6 +117,7 @@ macro_rules! core_view {
             image: &*$core.image,
             rows_index: &$core.rows_index,
             row_entries: &$core.row_entries,
+            conv: $core.conv_gen.as_ref(),
             residents_sorted: &$core.residents_sorted,
             sweep_cost: &$core.sweep_cost,
             sweep_skip: $core.sweep_skip,
@@ -158,6 +159,10 @@ pub struct NeuraCore {
     /// SRAM read is still priced via the MAC count).
     rows_index: Vec<Vec<u32>>,
     row_entries: Vec<Vec<(u8, u16, i8)>>,
+    /// Generator-based row fetch for compressed conv images (`Some` iff the
+    /// image carries a [`crate::snn::ConvSpec`]): the CSR mirror above is
+    /// empty and the dispatcher enumerates rows from the kernel instead.
+    conv_gen: Option<ConvGen>,
     lif: LifParams,
     analog: AnalogParams,
     /// A-SYN engines (one per A-NEURON column, paper Figure 1); provide
@@ -280,6 +285,8 @@ impl NeuraCore {
             rows_index.push(idx);
             row_entries.push(entries);
         }
+        let conv_gen =
+            image.conv.map(|spec| ConvGen::new(spec, image.weight_mem.clone(), m, n));
         let rounds = image.rounds.len();
         Ok(Self {
             index,
@@ -289,6 +296,7 @@ impl NeuraCore {
             sweep_skip,
             rows_index,
             row_entries,
+            conv_gen,
             lif,
             analog: analog.clone(),
             syns,

@@ -35,8 +35,173 @@ impl Default for LifParams {
     }
 }
 
+/// Geometry of a 2-D convolutional layer mapped onto the accelerator.
+///
+/// Source neurons are the flattened `[in_channels][in_h][in_w]` input
+/// volume; destination neurons the flattened `[out_channels][out_h][out_w]`
+/// output volume. A compressed layer stores one `[oc][ic][kh][kw]` kernel
+/// and *generates* each source's synapse row arithmetically (arxiv
+/// 2112.07019) instead of materializing the `out_dim × in_dim` table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub in_channels: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_channels: usize,
+    pub kernel_h: usize,
+    pub kernel_w: usize,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl ConvSpec {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.padding - self.kernel_h) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.padding - self.kernel_w) / self.stride + 1
+    }
+
+    /// Flattened source count `ic·in_h·in_w`.
+    pub fn in_dim(&self) -> usize {
+        self.in_channels * self.in_h * self.in_w
+    }
+
+    /// Flattened destination count `oc·out_h·out_w`.
+    pub fn out_dim(&self) -> usize {
+        self.out_channels * self.out_h() * self.out_w()
+    }
+
+    /// Stored kernel taps `oc·ic·kh·kw` — the compressed weight footprint.
+    pub fn kernel_len(&self) -> usize {
+        self.out_channels * self.in_channels * self.kernel_h * self.kernel_w
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.in_channels == 0
+            || self.in_h == 0
+            || self.in_w == 0
+            || self.out_channels == 0
+            || self.kernel_h == 0
+            || self.kernel_w == 0
+        {
+            bail!("conv spec has a zero dimension: {self:?}");
+        }
+        if self.stride == 0 {
+            bail!("conv stride must be ≥ 1");
+        }
+        if self.in_h + 2 * self.padding < self.kernel_h
+            || self.in_w + 2 * self.padding < self.kernel_w
+        {
+            bail!(
+                "kernel {}×{} larger than padded input {}×{}",
+                self.kernel_h,
+                self.kernel_w,
+                self.in_h + 2 * self.padding,
+                self.in_w + 2 * self.padding
+            );
+        }
+        Ok(())
+    }
+
+    /// Enumerate the non-zero `(dst, w_q)` pairs a spike from `src` reaches,
+    /// **in ascending destination order** — the generator that replaces a
+    /// MEM_S&N row lookup. Both the reference model and the engine's
+    /// generator fetch ([`crate::engine::ConvGen`]) call this, so the
+    /// enumeration order is defined in exactly one place.
+    ///
+    /// Order proof: for fixed `oc`, each valid `ky` yields one output row
+    /// `oy = (iy + padding − ky)/stride`, strictly increasing as `ky`
+    /// decreases; likewise `kx → ox`. So iterating `oc` ascending, `ky`
+    /// descending, `kx` descending emits `dst = (oc·out_h + oy)·out_w + ox`
+    /// ascending, and no `(dst, src)` pair is emitted twice.
+    pub fn for_each_target(&self, kernel: &[i8], src: usize, mut f: impl FnMut(u32, i8)) {
+        if src >= self.in_dim() {
+            return;
+        }
+        let hw = self.in_h * self.in_w;
+        let (ic, rem) = (src / hw, src % hw);
+        let (iy, ix) = (rem / self.in_w, rem % self.in_w);
+        let (out_h, out_w) = (self.out_h(), self.out_w());
+        let (py, px) = (iy + self.padding, ix + self.padding);
+        for oc in 0..self.out_channels {
+            for ky in (0..self.kernel_h).rev() {
+                if py < ky || (py - ky) % self.stride != 0 {
+                    continue;
+                }
+                let oy = (py - ky) / self.stride;
+                if oy >= out_h {
+                    continue;
+                }
+                for kx in (0..self.kernel_w).rev() {
+                    if px < kx || (px - kx) % self.stride != 0 {
+                        continue;
+                    }
+                    let ox = (px - kx) / self.stride;
+                    if ox >= out_w {
+                        continue;
+                    }
+                    let w = kernel
+                        [((oc * self.in_channels + ic) * self.kernel_h + ky) * self.kernel_w + kx];
+                    if w != 0 {
+                        f(((oc * out_h + oy) * out_w + ox) as u32, w);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Logical non-zero synapse count of the expanded matrix: each non-zero
+    /// tap `(oc,ic,ky,kx)` contributes one synapse per valid `(oy,ox)` pair
+    /// (tap→position pairs never collide, so this equals the expanded
+    /// layer's `nnz()` exactly).
+    fn expanded_nnz(&self, kernel: &[i8]) -> usize {
+        let count = |k: usize, pad: usize, in_len: usize, out_len: usize| {
+            (0..out_len)
+                .filter(|o| {
+                    let p = o * self.stride + k;
+                    p >= pad && p - pad < in_len
+                })
+                .count()
+        };
+        let ys: Vec<usize> = (0..self.kernel_h)
+            .map(|ky| count(ky, self.padding, self.in_h, self.out_h()))
+            .collect();
+        let xs: Vec<usize> = (0..self.kernel_w)
+            .map(|kx| count(kx, self.padding, self.in_w, self.out_w()))
+            .collect();
+        let mut nnz = 0usize;
+        for oc in 0..self.out_channels {
+            for ic in 0..self.in_channels {
+                for (ky, &cy) in ys.iter().enumerate() {
+                    for (kx, &cx) in xs.iter().enumerate() {
+                        let w = kernel[((oc * self.in_channels + ic) * self.kernel_h + ky)
+                            * self.kernel_w
+                            + kx];
+                        if w != 0 {
+                            nnz += cy * cx;
+                        }
+                    }
+                }
+            }
+        }
+        nnz
+    }
+}
+
 /// One quantized synaptic layer: `out_dim × in_dim` 8-bit weights plus a
 /// scale, so the effective weight is `w_q · scale`.
+///
+/// Two storage representations share this type:
+/// - **dense/CSR** (`weights` + the CSR mirror) — the MLP layout;
+/// - **compressed conv** (`conv: Some`, `kernel` non-empty) — one kernel
+///   stored once, synapse rows generated on demand via
+///   [`ConvSpec::for_each_target`]. `weights`/CSR stay empty.
+///
+/// A layer produced by [`QuantLayer::expand_conv`] is dense/CSR but keeps
+/// `conv: Some(spec)` so the mapper places it identically to its compressed
+/// twin — that is what makes the two execution paths bit-comparable.
 #[derive(Debug, Clone)]
 pub struct QuantLayer {
     pub in_dim: usize,
@@ -48,8 +213,18 @@ pub struct QuantLayer {
     pub scale: f32,
     /// LIF parameters of the destination neurons.
     pub lif: LifParams,
+    /// Convolutional geometry, when this layer is a conv layer (compressed
+    /// or expanded). `None` for MLP layers.
+    pub conv: Option<ConvSpec>,
+    /// Compressed conv kernel `[oc][ic][kh][kw]`. Non-empty exactly when
+    /// this layer is stored compressed (see [`Self::is_compressed`]).
+    pub kernel: Vec<i8>,
+    /// Cached logical nnz of a compressed layer (equals the expanded
+    /// matrix's nnz; see [`ConvSpec::expanded_nnz`]).
+    conv_nnz: usize,
     /// CSR by *source*: `csr_index[s] .. csr_index[s+1]` indexes
     /// `csr_targets` with `(dst, w_q)` pairs — the event-driven layout.
+    /// Empty for compressed layers (rows are generated, not stored).
     csr_index: Vec<u32>,
     csr_targets: Vec<(u32, i8)>,
 }
@@ -80,6 +255,9 @@ impl QuantLayer {
             weights,
             scale,
             lif,
+            conv: None,
+            kernel: vec![],
+            conv_nnz: 0,
             csr_index: vec![],
             csr_targets: vec![],
         };
@@ -87,14 +265,109 @@ impl QuantLayer {
         Ok(layer)
     }
 
-    /// Dense weight at `(dst, src)`.
+    /// Build a **compressed** conv layer: one `[oc][ic][kh][kw]` kernel,
+    /// no dense/CSR table. Synapse rows are generated on demand.
+    pub fn conv2d(spec: ConvSpec, kernel: Vec<i8>, scale: f32, lif: LifParams) -> Result<Self> {
+        spec.validate()?;
+        if kernel.len() != spec.kernel_len() {
+            bail!(
+                "kernel buffer has {} entries, expected {} ({}×{}×{}×{})",
+                kernel.len(),
+                spec.kernel_len(),
+                spec.out_channels,
+                spec.in_channels,
+                spec.kernel_h,
+                spec.kernel_w
+            );
+        }
+        if !(scale > 0.0) {
+            bail!("scale must be positive, got {scale}");
+        }
+        let conv_nnz = spec.expanded_nnz(&kernel);
+        Ok(Self {
+            in_dim: spec.in_dim(),
+            out_dim: spec.out_dim(),
+            weights: vec![],
+            scale,
+            lif,
+            conv: Some(spec),
+            kernel,
+            conv_nnz,
+            csr_index: vec![],
+            csr_targets: vec![],
+        })
+    }
+
+    /// Whether this layer stores its weights compressed (kernel-only).
+    #[inline]
+    pub fn is_compressed(&self) -> bool {
+        !self.kernel.is_empty()
+    }
+
+    /// Weights actually resident in A-SYN SRAM: the kernel taps for a
+    /// compressed layer, one entry per non-zero synapse otherwise (what
+    /// [`crate::mapping::distill`] emits into `weight_mem`).
+    pub fn stored_weights(&self) -> usize {
+        if self.is_compressed() {
+            self.kernel.len()
+        } else {
+            self.csr_targets.len()
+        }
+    }
+
+    /// Densify a compressed conv layer into the `out_dim × in_dim`
+    /// dense/CSR representation — the expansion oracle the compressed
+    /// execution path is pinned bit-identical against. The result keeps
+    /// `conv: Some(spec)` so the mapper places it exactly like the
+    /// compressed layer.
+    pub fn expand_conv(&self) -> Result<Self> {
+        let Some(spec) = self.conv else {
+            bail!("expand_conv on a non-conv layer");
+        };
+        if !self.is_compressed() {
+            return Ok(self.clone());
+        }
+        let mut weights = vec![0i8; self.in_dim * self.out_dim];
+        for src in 0..self.in_dim {
+            spec.for_each_target(&self.kernel, src, |d, w| {
+                weights[d as usize * self.in_dim + src] = w;
+            });
+        }
+        let mut layer = Self::new(self.in_dim, self.out_dim, weights, self.scale, self.lif)?;
+        layer.conv = Some(spec);
+        Ok(layer)
+    }
+
+    /// Dense weight at `(dst, src)` — derived from the kernel for a
+    /// compressed layer.
     #[inline]
     pub fn weight(&self, dst: usize, src: usize) -> i8 {
+        if self.is_compressed() {
+            let spec = self.conv.unwrap();
+            let (out_h, out_w) = (spec.out_h(), spec.out_w());
+            let (oc, orem) = (dst / (out_h * out_w), dst % (out_h * out_w));
+            let (oy, ox) = (orem / out_w, orem % out_w);
+            let hw = spec.in_h * spec.in_w;
+            let (ic, irem) = (src / hw, src % hw);
+            let (iy, ix) = (irem / spec.in_w, irem % spec.in_w);
+            let (py, px) = (iy + spec.padding, ix + spec.padding);
+            if py < oy * spec.stride || px < ox * spec.stride {
+                return 0;
+            }
+            let (ky, kx) = (py - oy * spec.stride, px - ox * spec.stride);
+            if ky >= spec.kernel_h || kx >= spec.kernel_w {
+                return 0;
+            }
+            return self.kernel
+                [((oc * spec.in_channels + ic) * spec.kernel_h + ky) * spec.kernel_w + kx];
+        }
         self.weights[dst * self.in_dim + src]
     }
 
     /// Non-zero `(dst, w_q)` pairs for a source neuron — the connection rows
-    /// a MEM_S&N lookup returns for one incoming event.
+    /// a MEM_S&N lookup returns for one incoming event. Panics on a
+    /// compressed layer (rows are generated, not stored — use
+    /// [`Self::for_each_target`], which handles both representations).
     #[inline]
     pub fn targets_of(&self, src: usize) -> &[(u32, i8)] {
         let lo = self.csr_index[src] as usize;
@@ -102,9 +375,28 @@ impl QuantLayer {
         &self.csr_targets[lo..hi]
     }
 
-    /// Number of non-zero synapses.
+    /// Visit the non-zero `(dst, w_q)` pairs for a source neuron in
+    /// ascending destination order, for either representation: a CSR slice
+    /// walk for dense layers, kernel-generated for compressed ones.
+    #[inline]
+    pub fn for_each_target(&self, src: usize, mut f: impl FnMut(u32, i8)) {
+        if self.is_compressed() {
+            self.conv.unwrap().for_each_target(&self.kernel, src, f);
+        } else {
+            for &(d, w) in self.targets_of(src) {
+                f(d, w);
+            }
+        }
+    }
+
+    /// Number of non-zero synapses (logical — identical for a compressed
+    /// layer and its expansion).
     pub fn nnz(&self) -> usize {
-        self.csr_targets.len()
+        if self.is_compressed() {
+            self.conv_nnz
+        } else {
+            self.csr_targets.len()
+        }
     }
 
     /// Fraction of pruned (zero) weights.
@@ -114,11 +406,19 @@ impl QuantLayer {
 
     /// Fan-out (non-zero out-degree) of a source neuron.
     pub fn fanout(&self, src: usize) -> usize {
-        self.targets_of(src).len()
+        if self.is_compressed() {
+            let mut n = 0usize;
+            self.for_each_target(src, |_, _| n += 1);
+            n
+        } else {
+            self.targets_of(src).len()
+        }
     }
 
     /// Recompute the CSR mirror after mutating `weights` (e.g. pruning).
+    /// Not meaningful for compressed layers (there is no dense buffer).
     pub fn rebuild_csr(&mut self) {
+        assert!(!self.is_compressed(), "rebuild_csr on a compressed conv layer");
         let mut index = Vec::with_capacity(self.in_dim + 1);
         let mut targets = Vec::new();
         index.push(0u32);
@@ -138,6 +438,7 @@ impl QuantLayer {
     /// Prune the smallest-magnitude weights until `frac` of all weights are
     /// zero (global L1 unstructured pruning within the layer).
     pub fn prune_l1(&mut self, frac: f64) {
+        assert!(!self.is_compressed(), "prune_l1 on a compressed conv layer");
         assert!((0.0..=1.0).contains(&frac));
         let mut mags: Vec<(u8, usize)> = self
             .weights
@@ -200,6 +501,28 @@ impl QuantNetwork {
         1.0 - self.nnz() as f64 / self.num_params() as f64
     }
 
+    /// Weights actually resident in A-SYN SRAM across all layers (kernel
+    /// taps for compressed conv layers, nnz otherwise).
+    pub fn stored_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.stored_weights()).sum()
+    }
+
+    /// Whether any layer is stored compressed.
+    pub fn has_compressed(&self) -> bool {
+        self.layers.iter().any(|l| l.is_compressed())
+    }
+
+    /// Densify every compressed conv layer ([`QuantLayer::expand_conv`]) —
+    /// the dense-expansion oracle network for differential tests.
+    pub fn expand_convs(&self) -> Result<Self> {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| if l.is_compressed() { l.expand_conv() } else { Ok(l.clone()) })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { name: self.name.clone(), layers, timesteps: self.timesteps })
+    }
+
     /// Check layer dimensions chain correctly.
     pub fn validate(&self) -> Result<()> {
         if self.layers.is_empty() {
@@ -258,10 +581,68 @@ impl QuantNetwork {
         net
     }
 
+    /// Generate a random **compressed-conv** network for tests/benches: a
+    /// chain of compressed conv layers (kernel taps zero with probability
+    /// `sparsity`, otherwise uniform in ±[1, 127]) followed by one dense
+    /// classifier head of `classes` outputs. Scales follow the same
+    /// keep-activity-alive heuristic as [`Self::random`], driven by the
+    /// per-destination fan-in instead of the layer width.
+    pub fn random_conv(
+        name: &str,
+        specs: &[ConvSpec],
+        classes: usize,
+        timesteps: usize,
+        sparsity: f64,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        if specs.is_empty() {
+            bail!("random_conv needs at least one conv spec");
+        }
+        let lif = LifParams::default();
+        let mut random_w = |buf: &mut [i8]| {
+            for wq in buf.iter_mut() {
+                if !rng.bernoulli(sparsity) {
+                    let mag = rng.range_inclusive(1, 127) as i8;
+                    *wq = if rng.bernoulli(0.5) { mag } else { -mag };
+                }
+            }
+        };
+        let mut layers: Vec<QuantLayer> = Vec::new();
+        for spec in specs {
+            if let Some(prev) = layers.last() {
+                if prev.out_dim != spec.in_dim() {
+                    bail!(
+                        "conv chain breaks: previous out_dim {} != spec in_dim {}",
+                        prev.out_dim,
+                        spec.in_dim()
+                    );
+                }
+            }
+            let mut kernel = vec![0i8; spec.kernel_len()];
+            random_w(&mut kernel);
+            // Per-destination fan-in is ic·kh·kw; expect ~15% of the
+            // receptive field active per step in an event stream.
+            let fan_in = (spec.in_channels * spec.kernel_h * spec.kernel_w) as f32;
+            let scale = lif.v_threshold / (64.0 * (fan_in * 0.15).max(1.0));
+            layers.push(QuantLayer::conv2d(*spec, kernel, scale, lif)?);
+        }
+        let head_in = layers.last().unwrap().out_dim;
+        let mut weights = vec![0i8; head_in * classes];
+        random_w(&mut weights);
+        let expected_active = (head_in as f32 * 0.02).max(1.0);
+        let scale = lif.v_threshold / (64.0 * expected_active);
+        layers.push(QuantLayer::new(head_in, classes, weights, scale, lif)?);
+        let net = Self { name: name.to_string(), layers, timesteps };
+        net.validate()?;
+        Ok(net)
+    }
+
     /// Load a network exported by `python/compile/aot.py` from a `.mtz`
-    /// tensor file. Expects tensors `w{i}` (i8 `[out,in]`), `scale{i}` (f32
-    /// `[1]`) per layer plus `meta_lif` (f32 `[3]` = beta, v_th, v_reset)
-    /// and `meta_timesteps` (i32 `[1]`).
+    /// tensor file. Per layer, either a dense tensor `w{i}` (i8 `[out,in]`)
+    /// or a compressed conv kernel `k{i}` (i8 `[oc,ic,kh,kw]`) with its
+    /// geometry `conv{i}` (i32 `[4]` = in_h, in_w, stride, padding), plus
+    /// `scale{i}` (f32 `[1]`); globally `meta_lif` (f32 `[3]` = beta, v_th,
+    /// v_reset) and `meta_timesteps` (i32 `[1]`).
     pub fn from_tensorfile(name: &str, tf: &TensorFile) -> Result<Self> {
         let lif_t = tf.get("meta_lif")?.as_f32()?;
         if lif_t.len() != 3 {
@@ -272,28 +653,57 @@ impl QuantNetwork {
         let mut layers = Vec::new();
         for i in 0.. {
             let wname = format!("w{i}");
-            if tf.tensors.get(&wname).is_none() {
+            let kname = format!("k{i}");
+            let scale_of = |tf: &TensorFile| -> Result<f32> {
+                Ok(tf
+                    .get(&format!("scale{i}"))
+                    .with_context(|| format!("scale for layer {i}"))?
+                    .as_f32()?[0])
+            };
+            if tf.tensors.get(&wname).is_some() {
+                let wt = tf.get(&wname)?;
+                let dims = wt.dims().to_vec();
+                if dims.len() != 2 {
+                    bail!("{wname} must be 2-D, got {dims:?}");
+                }
+                layers.push(QuantLayer::new(
+                    dims[1],
+                    dims[0],
+                    wt.as_i8()?.to_vec(),
+                    scale_of(tf)?,
+                    lif,
+                )?);
+            } else if tf.tensors.get(&kname).is_some() {
+                let kt = tf.get(&kname)?;
+                let dims = kt.dims().to_vec();
+                if dims.len() != 4 {
+                    bail!("{kname} must be 4-D [oc,ic,kh,kw], got {dims:?}");
+                }
+                let geo = tf
+                    .get(&format!("conv{i}"))
+                    .with_context(|| format!("conv geometry for layer {i}"))?
+                    .as_i32()?
+                    .to_vec();
+                if geo.len() != 4 || geo.iter().any(|&v| v < 0) {
+                    bail!("conv{i} must be 4 non-negative entries [in_h,in_w,stride,padding]");
+                }
+                let spec = ConvSpec {
+                    out_channels: dims[0],
+                    in_channels: dims[1],
+                    kernel_h: dims[2],
+                    kernel_w: dims[3],
+                    in_h: geo[0] as usize,
+                    in_w: geo[1] as usize,
+                    stride: geo[2] as usize,
+                    padding: geo[3] as usize,
+                };
+                layers.push(QuantLayer::conv2d(spec, kt.as_i8()?.to_vec(), scale_of(tf)?, lif)?);
+            } else {
                 break;
             }
-            let wt = tf.get(&wname)?;
-            let dims = wt.dims().to_vec();
-            if dims.len() != 2 {
-                bail!("{wname} must be 2-D, got {dims:?}");
-            }
-            let scale = tf
-                .get(&format!("scale{i}"))
-                .with_context(|| format!("scale for layer {i}"))?
-                .as_f32()?[0];
-            layers.push(QuantLayer::new(
-                dims[1],
-                dims[0],
-                wt.as_i8()?.to_vec(),
-                scale,
-                lif,
-            )?);
         }
         if layers.is_empty() {
-            bail!("tensor file contains no layers (no w0)");
+            bail!("tensor file contains no layers (no w0 or k0)");
         }
         let net = Self { name: name.to_string(), layers, timesteps };
         net.validate()?;
@@ -314,10 +724,33 @@ impl QuantNetwork {
             Tensor::I32 { dims: vec![1], data: vec![self.timesteps as i32] },
         );
         for (i, l) in self.layers.iter().enumerate() {
-            tf.insert(
-                format!("w{i}"),
-                Tensor::I8 { dims: vec![l.out_dim, l.in_dim], data: l.weights.clone() },
-            );
+            if l.is_compressed() {
+                let s = l.conv.unwrap();
+                tf.insert(
+                    format!("k{i}"),
+                    Tensor::I8 {
+                        dims: vec![s.out_channels, s.in_channels, s.kernel_h, s.kernel_w],
+                        data: l.kernel.clone(),
+                    },
+                );
+                tf.insert(
+                    format!("conv{i}"),
+                    Tensor::I32 {
+                        dims: vec![4],
+                        data: vec![
+                            s.in_h as i32,
+                            s.in_w as i32,
+                            s.stride as i32,
+                            s.padding as i32,
+                        ],
+                    },
+                );
+            } else {
+                tf.insert(
+                    format!("w{i}"),
+                    Tensor::I8 { dims: vec![l.out_dim, l.in_dim], data: l.weights.clone() },
+                );
+            }
             tf.insert(
                 format!("scale{i}"),
                 Tensor::F32 { dims: vec![1], data: vec![l.scale] },
@@ -591,9 +1024,9 @@ pub fn reference_forward(net: &QuantNetwork, input: &SpikeTrain) -> Result<Refer
             };
             let a = &mut acc[li];
             for &s in in_spikes {
-                for &(d, w) in layer.targets_of(s as usize) {
+                layer.for_each_target(s as usize, |d, w| {
                     a[d as usize] += w as i32;
-                }
+                });
             }
             // Membrane update + fire + leak for every neuron.
             let lif = layer.lif;
@@ -641,6 +1074,151 @@ mod tests {
         assert!((l.sparsity() - 0.5).abs() < 1e-12);
         assert_eq!(l.fanout(0), 1);
         assert_eq!(l.weight(0, 2), -5);
+    }
+
+    fn random_kernel(spec: &ConvSpec, sparsity: f64, rng: &mut Rng) -> Vec<i8> {
+        let mut kernel = vec![0i8; spec.kernel_len()];
+        for w in kernel.iter_mut() {
+            if !rng.bernoulli(sparsity) {
+                let mag = rng.range_inclusive(1, 127) as i8;
+                *w = if rng.bernoulli(0.5) { mag } else { -mag };
+            }
+        }
+        kernel
+    }
+
+    #[test]
+    fn conv_generator_matches_expansion() {
+        let mut rng = Rng::new(42);
+        for (stride, padding) in [(1, 0), (1, 1), (2, 1), (3, 2)] {
+            let spec = ConvSpec {
+                in_channels: 2,
+                in_h: 6,
+                in_w: 5,
+                out_channels: 3,
+                kernel_h: 3,
+                kernel_w: 3,
+                stride,
+                padding,
+            };
+            let kernel = random_kernel(&spec, 0.3, &mut rng);
+            let compressed =
+                QuantLayer::conv2d(spec, kernel, 0.01, LifParams::default()).unwrap();
+            let expanded = compressed.expand_conv().unwrap();
+            assert!(compressed.is_compressed() && !expanded.is_compressed());
+            assert_eq!(expanded.conv, Some(spec), "oracle keeps the spec for mapping");
+            assert_eq!(compressed.nnz(), expanded.nnz(), "s{stride} p{padding}");
+            for src in 0..spec.in_dim() {
+                let mut gen: Vec<(u32, i8)> = Vec::new();
+                compressed.for_each_target(src, |d, w| gen.push((d, w)));
+                assert!(
+                    gen.windows(2).all(|p| p[0].0 < p[1].0),
+                    "generator must emit ascending dsts (src {src})"
+                );
+                assert_eq!(gen.as_slice(), expanded.targets_of(src), "src {src}");
+            }
+            for dst in 0..spec.out_dim() {
+                for src in 0..spec.in_dim() {
+                    assert_eq!(compressed.weight(dst, src), expanded.weight(dst, src));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_reference_matches_expanded_oracle() {
+        let mut rng = Rng::new(7);
+        let specs = [
+            ConvSpec {
+                in_channels: 2,
+                in_h: 8,
+                in_w: 8,
+                out_channels: 4,
+                kernel_h: 3,
+                kernel_w: 3,
+                stride: 2,
+                padding: 1,
+            },
+            ConvSpec {
+                in_channels: 4,
+                in_h: 4,
+                in_w: 4,
+                out_channels: 4,
+                kernel_h: 3,
+                kernel_w: 3,
+                stride: 1,
+                padding: 1,
+            },
+        ];
+        let net = QuantNetwork::random_conv("conv-ref", &specs, 5, 6, 0.2, &mut rng).unwrap();
+        let oracle = net.expand_convs().unwrap();
+        assert_eq!(net.nnz(), oracle.nnz());
+        assert!(net.stored_weights() < oracle.stored_weights());
+        let input = SpikeTrain::bernoulli(net.input_dim(), net.timesteps, 0.25, &mut rng);
+        let a = reference_forward(&net, &input).unwrap();
+        let b = reference_forward(&oracle, &input).unwrap();
+        assert_eq!(a.trains, b.trains);
+    }
+
+    #[test]
+    fn conv_tensorfile_roundtrips() {
+        let mut rng = Rng::new(12);
+        let spec = ConvSpec {
+            in_channels: 2,
+            in_h: 6,
+            in_w: 6,
+            out_channels: 3,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 2,
+            padding: 1,
+        };
+        let net = QuantNetwork::random_conv("conv-rt", &[spec], 4, 5, 0.3, &mut rng).unwrap();
+        let back = QuantNetwork::from_tensorfile("conv-rt", &net.to_tensorfile()).unwrap();
+        assert_eq!(back.layers.len(), net.layers.len());
+        assert_eq!(back.layers[0].conv, Some(spec));
+        assert_eq!(back.layers[0].kernel, net.layers[0].kernel);
+        assert_eq!(back.layers[0].nnz(), net.layers[0].nnz());
+        assert_eq!(back.layers[1].weights, net.layers[1].weights);
+        assert_eq!(back.timesteps, net.timesteps);
+    }
+
+    #[test]
+    fn conv_spec_rejects_bad_geometry() {
+        let good = ConvSpec {
+            in_channels: 1,
+            in_h: 4,
+            in_w: 4,
+            out_channels: 1,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 1,
+            padding: 0,
+        };
+        assert!(good.validate().is_ok());
+        assert!(ConvSpec { stride: 0, ..good }.validate().is_err());
+        assert!(ConvSpec { in_channels: 0, ..good }.validate().is_err());
+        assert!(ConvSpec { kernel_h: 9, ..good }.validate().is_err());
+        // Kernel buffer must match the spec.
+        assert!(QuantLayer::conv2d(good, vec![0; 5], 0.1, LifParams::default()).is_err());
+        assert!(QuantLayer::conv2d(good, vec![0; 9], -1.0, LifParams::default()).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "compressed")]
+    fn prune_on_compressed_panics() {
+        let spec = ConvSpec {
+            in_channels: 1,
+            in_h: 3,
+            in_w: 3,
+            out_channels: 1,
+            kernel_h: 2,
+            kernel_w: 2,
+            stride: 1,
+            padding: 0,
+        };
+        let mut l = QuantLayer::conv2d(spec, vec![1; 4], 0.1, LifParams::default()).unwrap();
+        l.prune_l1(0.5);
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! Differential harness pinning compressed conv execution to the
+//! dense-expansion oracle.
+//!
+//! The contract (see `menage::engine::convgen`): a chip built from a
+//! network with compressed conv layers must be **bit-identical** — every
+//! layer spike train, the modeled cycles, and the complete per-core
+//! [`CoreStats`] — to a chip built from `expand_convs()` of the same
+//! network under the same config, seed, and analog mode. Both
+//! representations take the same canonical mapping, the generated row
+//! blocks are structurally equal to the distilled expansion's MEM_S&N
+//! rows, and the dispatcher is representation-blind past the fetch, so
+//! identity holds in sequential, lane-batched (ideal and non-ideal),
+//! sharded, and faulted modes. The suite drives randomized
+//! kernels/strides/paddings plus the edge cases through that assertion,
+//! and covers the capacity story: the same conv chain needs fewer shards
+//! (and ≥10× fewer weight bytes at CIFAR10-DVS scale) compressed.
+
+use menage::accel::Menage;
+use menage::analog::AnalogParams;
+use menage::config::AcceleratorConfig;
+use menage::fault::FaultPlan;
+use menage::mapping::{layer_weight_bytes, partition_layers, ShardLimits, Strategy};
+use menage::shard::ShardedMenage;
+use menage::snn::{reference_forward, ConvSpec, QuantNetwork, SpikeTrain};
+use menage::util::prop;
+use menage::util::rng::Rng;
+
+fn accel(cores: usize, m: usize, n: usize) -> AcceleratorConfig {
+    let mut c = AcceleratorConfig::accel1();
+    c.num_cores = cores;
+    c.a_neurons_per_core = m;
+    c.a_syns_per_core = m;
+    c.virtual_per_a_neuron = n;
+    c
+}
+
+/// A random conv chain at test scale: 1–2 compressed conv layers plus a
+/// dense classifier head, with randomized geometry.
+fn random_conv_net(rng: &mut Rng) -> QuantNetwork {
+    let in_channels = 1 + rng.below(2);
+    let side = 5 + rng.below(4);
+    let stride = 1 + rng.below(2);
+    let padding = rng.below(2);
+    let k = 2 + rng.below(2);
+    let c1 = ConvSpec {
+        in_channels,
+        in_h: side,
+        in_w: side,
+        out_channels: 2 + rng.below(2),
+        kernel_h: k,
+        kernel_w: k,
+        stride,
+        padding,
+    };
+    let mut specs = vec![c1];
+    // Half the time, chain a second conv over the first one's output map.
+    if rng.bernoulli(0.5) && c1.out_h() >= 3 && c1.out_w() >= 3 {
+        specs.push(ConvSpec {
+            in_channels: c1.out_channels,
+            in_h: c1.out_h(),
+            in_w: c1.out_w(),
+            out_channels: 2,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 1,
+            padding: 1,
+        });
+    }
+    let sparsity = 0.2 + rng.f64() * 0.5;
+    QuantNetwork::random_conv("conv-diff", &specs, 4, 4 + rng.below(5), sparsity, rng).unwrap()
+}
+
+/// The core assertion: compressed and expanded chips built identically are
+/// bit-identical over an input sequence — sequentially (accumulating
+/// stats) and lane-batched over the whole set at once. Returns an error
+/// string for the property driver.
+fn assert_compressed_equals_expanded(
+    net: &QuantNetwork,
+    cfg: &AcceleratorConfig,
+    analog: &AnalogParams,
+    faults: Option<&FaultPlan>,
+    inputs: &[SpikeTrain],
+    tag: &str,
+) -> Result<(), String> {
+    let dense = net.expand_convs().map_err(|e| format!("{tag}: expand: {e}"))?;
+    let build = |n: &QuantNetwork| -> Result<Menage, String> {
+        let mut chip = Menage::build(n, cfg, Strategy::IlpFlow, analog, 7)
+            .map_err(|e| format!("{tag}: build: {e}"))?;
+        if let Some(plan) = faults {
+            chip.install_faults(plan);
+        }
+        Ok(chip)
+    };
+    let mut comp = build(net)?;
+    let mut exp = build(&dense)?;
+
+    // Sequential, stats accumulating across the sequence.
+    for (i, input) in inputs.iter().enumerate() {
+        let a = comp.run(input).map_err(|e| format!("{tag}: run: {e}"))?;
+        let b = exp.run(input).map_err(|e| format!("{tag}: oracle run: {e}"))?;
+        if a.cycles != b.cycles {
+            return Err(format!("{tag}: input {i} cycles {} != {}", a.cycles, b.cycles));
+        }
+        for (l, (ta, tb)) in a.trains.iter().zip(&b.trains).enumerate() {
+            if ta.spikes != tb.spikes {
+                return Err(format!("{tag}: input {i} layer {l} trains diverge"));
+            }
+        }
+    }
+    for (l, (ca, cb)) in comp.cores.iter().zip(&exp.cores).enumerate() {
+        if ca.stats != cb.stats {
+            return Err(format!(
+                "{tag}: core {l} CoreStats diverge:\n comp: {:?}\n exp:  {:?}",
+                ca.stats, cb.stats
+            ));
+        }
+    }
+    if comp.fault_counters() != exp.fault_counters() {
+        return Err(format!("{tag}: fault counters diverge"));
+    }
+
+    // Lane-batched over the whole input set on fresh chips.
+    if !inputs.is_empty() {
+        let mut lcomp = build(net)?;
+        let mut lexp = build(&dense)?;
+        let oa = lcomp.run_lanes(inputs).map_err(|e| format!("{tag}: lanes: {e}"))?;
+        let ob = lexp.run_lanes(inputs).map_err(|e| format!("{tag}: oracle lanes: {e}"))?;
+        for i in 0..inputs.len() {
+            if oa[i].cycles != ob[i].cycles {
+                return Err(format!("{tag}: lane {i} cycles diverge"));
+            }
+            for (l, (ta, tb)) in oa[i].trains.iter().zip(&ob[i].trains).enumerate() {
+                if ta.spikes != tb.spikes {
+                    return Err(format!("{tag}: lane {i} layer {l} trains diverge"));
+                }
+            }
+            for (l, (ca, cb)) in lcomp.cores.iter().zip(&lexp.cores).enumerate() {
+                if ca.lane_stats(i) != cb.lane_stats(i) {
+                    return Err(format!("{tag}: lane {i} core {l} CoreStats diverge"));
+                }
+            }
+        }
+        lcomp.fold_lane_stats();
+        lexp.fold_lane_stats();
+        for (l, (ca, cb)) in lcomp.cores.iter().zip(&lexp.cores).enumerate() {
+            if ca.stats != cb.stats {
+                return Err(format!("{tag}: folded core {l} CoreStats diverge"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Randomized kernels × strides × paddings × sparsities, ideal analog,
+/// sequential + lane-batched. Also cross-checks the compressed chip
+/// against the bit-exact reference model.
+#[test]
+fn prop_conv_compressed_bit_identical_ideal() {
+    prop::check_n("conv-compressed-vs-expanded", 10, |rng| {
+        let net = random_conv_net(rng);
+        let m = 2 + rng.below(3);
+        let n = 2 + rng.below(4);
+        let cfg = accel(net.layers.len(), m, n);
+        let t = net.timesteps;
+        let dim = net.input_dim();
+        let inputs: Vec<SpikeTrain> = (0..1 + rng.below(4))
+            .map(|_| SpikeTrain::bernoulli(dim, t, rng.f64() * 0.35, rng))
+            .collect();
+        let tag = format!("m={m} n={n} layers={}", net.layers.len());
+        assert_compressed_equals_expanded(
+            &net,
+            &cfg,
+            &AnalogParams::ideal(),
+            None,
+            &inputs,
+            &tag,
+        )?;
+        let mut chip = Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7)
+            .map_err(|e| e.to_string())?;
+        for input in &inputs {
+            let golden = reference_forward(&net, input).map_err(|e| e.to_string())?;
+            let out = chip.run(input).map_err(|e| e.to_string())?;
+            if !out.matches_reference(&golden) {
+                return Err(format!("{tag}: compressed chip diverges from reference"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Non-ideal analog mode: same mismatch seeds on both chips, so the Kahan
+/// error sidecar folds identical deposit sequences — bit-identity must
+/// survive the analog model, sequentially and lane-batched.
+#[test]
+fn prop_conv_compressed_bit_identical_nonideal() {
+    prop::check_n("conv-compressed-vs-expanded-nonideal", 6, |rng| {
+        let net = random_conv_net(rng);
+        let cfg = accel(net.layers.len(), 2 + rng.below(3), 2 + rng.below(3));
+        let t = net.timesteps;
+        let dim = net.input_dim();
+        let inputs: Vec<SpikeTrain> = (0..1 + rng.below(3))
+            .map(|_| SpikeTrain::bernoulli(dim, t, rng.f64() * 0.3, rng))
+            .collect();
+        assert_compressed_equals_expanded(
+            &net,
+            &cfg,
+            &AnalogParams::paper(),
+            None,
+            &inputs,
+            "nonideal",
+        )
+    });
+}
+
+/// Edge cases: an empty (zero-timestep) train, an all-quiescent input, and
+/// a single spike — sweep/reload accounting with no or minimal activity.
+#[test]
+fn conv_edge_inputs() {
+    let spec = ConvSpec {
+        in_channels: 2,
+        in_h: 6,
+        in_w: 6,
+        out_channels: 3,
+        kernel_h: 3,
+        kernel_w: 3,
+        stride: 1,
+        padding: 1,
+    };
+    let mut rng = Rng::new(51);
+    let net = QuantNetwork::random_conv("conv-edge", &[spec], 4, 6, 0.3, &mut rng).unwrap();
+    // Capacity 8 < 108 conv outputs: deep multi-round coverage.
+    let cfg = accel(2, 2, 4);
+    let dim = net.input_dim();
+    let mut single = SpikeTrain::new(dim, 6);
+    single.spikes[2].push((dim / 2) as u32);
+    let inputs = vec![
+        SpikeTrain::new(dim, 0),
+        SpikeTrain::new(dim, 6),
+        single,
+        SpikeTrain::bernoulli(dim, 6, 0.25, &mut rng),
+    ];
+    assert_compressed_equals_expanded(
+        &net,
+        &cfg,
+        &AnalogParams::ideal(),
+        None,
+        &inputs,
+        "edges",
+    )
+    .unwrap();
+}
+
+/// Duplicate events and the forced per-event dispatch knob: ×multiplicity
+/// accounting through the generator fetch must match the CSR path.
+#[test]
+fn conv_duplicate_events_and_per_event_knob() {
+    let mut rng = Rng::new(52);
+    let net = random_conv_net(&mut rng);
+    let cfg = accel(net.layers.len(), 3, 3);
+    let dim = net.input_dim();
+    let mut dup = SpikeTrain::bernoulli(dim, net.timesteps, 0.25, &mut rng);
+    dup.duplicate_events();
+    let inputs = vec![dup, SpikeTrain::bernoulli(dim, net.timesteps, 0.2, &mut rng)];
+    assert_compressed_equals_expanded(
+        &net,
+        &cfg,
+        &AnalogParams::ideal(),
+        None,
+        &inputs,
+        "dups",
+    )
+    .unwrap();
+
+    // Forced per-event dispatch on both chips stays identical too.
+    let dense = net.expand_convs().unwrap();
+    let mut comp = Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    let mut exp = Menage::build(&dense, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    for chip in [&mut comp, &mut exp] {
+        for core in chip.cores.iter_mut() {
+            core.force_per_event_dispatch = true;
+        }
+    }
+    let a = comp.run(&inputs[0]).unwrap();
+    let b = exp.run(&inputs[0]).unwrap();
+    assert_eq!(a.cycles, b.cycles);
+    for (ca, cb) in comp.cores.iter().zip(&exp.cores) {
+        assert_eq!(ca.stats, cb.stats);
+    }
+}
+
+/// Sharded execution: the compressed pipeline over every feasible shard
+/// count is bit-identical to the expanded sharded pipeline AND to the
+/// compressed monolithic chip.
+#[test]
+fn conv_sharded_matches_expanded_and_monolithic() {
+    let mut rng = Rng::new(53);
+    let specs = [
+        ConvSpec {
+            in_channels: 2,
+            in_h: 8,
+            in_w: 8,
+            out_channels: 3,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 2,
+            padding: 1,
+        },
+        ConvSpec {
+            in_channels: 3,
+            in_h: 4,
+            in_w: 4,
+            out_channels: 3,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 1,
+            padding: 1,
+        },
+    ];
+    let net = QuantNetwork::random_conv("conv-shard", &specs, 4, 6, 0.3, &mut rng).unwrap();
+    let dense = net.expand_convs().unwrap();
+    let cfg = accel(net.layers.len(), 3, 4);
+    let inputs: Vec<SpikeTrain> = (0..3)
+        .map(|_| SpikeTrain::bernoulli(net.input_dim(), 6, 0.25, &mut rng))
+        .collect();
+    let analog = AnalogParams::ideal();
+    let mut mono = Menage::build(&net, &cfg, Strategy::IlpFlow, &analog, 7).unwrap();
+    for num_shards in 1..=net.layers.len() {
+        let mut sc = ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &analog, 7, num_shards)
+            .unwrap();
+        let mut se = ShardedMenage::build(&dense, &cfg, Strategy::IlpFlow, &analog, 7, num_shards)
+            .unwrap();
+        for (i, input) in inputs.iter().enumerate() {
+            let a = sc.run(input).unwrap();
+            let b = se.run(input).unwrap();
+            let m = mono.run(input).unwrap();
+            assert_eq!(a.cycles, b.cycles, "shards={num_shards} input {i}");
+            assert_eq!(a.cycles, m.cycles, "shards={num_shards} input {i} vs monolithic");
+            for ((ta, tb), tm) in a.trains.iter().zip(&b.trains).zip(&m.trains) {
+                assert_eq!(ta.spikes, tb.spikes, "shards={num_shards} input {i}");
+                assert_eq!(ta.spikes, tm.spikes, "shards={num_shards} input {i}");
+            }
+        }
+    }
+}
+
+/// Hardware faults: the same fault plan realizes the same silicon defects
+/// on both representations (per-core seeds), and since the generated
+/// entries equal the distilled entries, every stuck-row suppression,
+/// dead-slot discard, bit-flip, and drift deposit lands identically.
+#[test]
+fn conv_faulted_bit_identity() {
+    let mut rng = Rng::new(54);
+    let net = random_conv_net(&mut rng);
+    let cfg = accel(net.layers.len(), 3, 3);
+    let dim = net.input_dim();
+    let inputs: Vec<SpikeTrain> = (0..3)
+        .map(|_| SpikeTrain::bernoulli(dim, net.timesteps, 0.3, &mut rng))
+        .collect();
+    let plan = FaultPlan {
+        seed: 99,
+        stuck_row_frac: 0.3,
+        dead_slot_frac: 0.2,
+        bit_flip_p: 0.05,
+        drift_scale: 1.5,
+    };
+    assert_compressed_equals_expanded(
+        &net,
+        &cfg,
+        &AnalogParams::ideal(),
+        Some(&plan),
+        &inputs,
+        "faulted-ideal",
+    )
+    .unwrap();
+    assert_compressed_equals_expanded(
+        &net,
+        &cfg,
+        &AnalogParams::paper(),
+        Some(&plan),
+        &inputs,
+        "faulted-nonideal",
+    )
+    .unwrap();
+    // The plan actually bites (fault identity above is not vacuous).
+    let mut chip =
+        Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    chip.install_faults(&plan);
+    for input in &inputs {
+        chip.run(input).unwrap();
+    }
+    let (stuck, dead, flips) = chip.fault_counters();
+    assert!(stuck + dead + flips > 0, "fault plan never fired");
+}
+
+/// The capacity story (ISSUE acceptance): under a per-chip weight budget
+/// sized to the largest expanded layer, the expanded chain only fits
+/// multi-chip while the compressed chain fits a single shard — and at
+/// CIFAR10-DVS scale the conv layer's weight bytes drop ≥10×.
+#[test]
+fn conv_compression_needs_fewer_shards_and_10x_less_weight_sram() {
+    let mut rng = Rng::new(55);
+    // CIFAR10-DVS geometry: 2 polarity channels × 32×32, two conv layers,
+    // 10-class head.
+    let specs = [
+        ConvSpec {
+            in_channels: 2,
+            in_h: 32,
+            in_w: 32,
+            out_channels: 8,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 2,
+            padding: 1,
+        },
+        ConvSpec {
+            in_channels: 8,
+            in_h: 16,
+            in_w: 16,
+            out_channels: 8,
+            kernel_h: 3,
+            kernel_w: 3,
+            stride: 2,
+            padding: 1,
+        },
+    ];
+    let net = QuantNetwork::random_conv("cifar10dvs", &specs, 10, 8, 0.3, &mut rng).unwrap();
+    let dense = net.expand_convs().unwrap();
+    let w_comp = layer_weight_bytes(&net, 8);
+    let w_exp = layer_weight_bytes(&dense, 8);
+    // ≥10× on every conv layer (the head is shared and unchanged).
+    for i in 0..specs.len() {
+        assert!(
+            w_exp[i] >= 10 * w_comp[i],
+            "layer {i}: expanded {} < 10× compressed {}",
+            w_exp[i],
+            w_comp[i]
+        );
+        assert_eq!(w_comp[i], specs[i].kernel_len());
+    }
+    assert_eq!(w_comp[specs.len()], w_exp[specs.len()]);
+
+    // Budget = the largest expanded layer: each expanded layer still fits
+    // a chip alone, but no chip can take two — the expanded chain is
+    // forced multi-shard. The compressed chain (kernels + head) fits one.
+    let budget = *w_exp.iter().max().unwrap();
+    assert!(
+        w_comp.iter().sum::<usize>() <= budget,
+        "compressed chain should fit the budget whole"
+    );
+    let limits = |budget| ShardLimits {
+        max_layers_per_shard: net.layers.len(),
+        chip_weight_budget: Some(budget),
+        weight_bits: 8,
+    };
+    let min_shards = |n: &QuantNetwork| -> Option<usize> {
+        (1..=n.layers.len()).find(|&k| partition_layers(n, k, &limits(budget)).is_ok())
+    };
+    let k_comp = min_shards(&net).expect("compressed chain must partition");
+    let k_exp = min_shards(&dense).expect("expanded chain must partition");
+    assert_eq!(k_comp, 1, "compressed chain should fit a single chip");
+    assert!(
+        k_exp > k_comp,
+        "expanded chain should need more shards ({k_exp}) than compressed ({k_comp})"
+    );
+}
