@@ -13,8 +13,10 @@ CHAOS_PORT ?= 7473
 ## Loopback ports for the distributed-shard smoke test (override on collision).
 DIST_PORT_A ?= 7475
 DIST_PORT_B ?= 7476
+## Loopback port for the observability smoke test (override on collision).
+OBS_PORT ?= 7477
 
-.PHONY: verify build test test-lanes test-serve test-shard test-dist test-conv test-chaos chaos smoke-serve smoke-shard smoke-dist smoke-conv smoke-chaos lint fmt clippy bench-hotpath bench clean
+.PHONY: verify build test test-lanes test-serve test-shard test-dist test-conv test-chaos chaos smoke-serve smoke-shard smoke-dist smoke-conv smoke-chaos smoke-obs lint fmt clippy bench-hotpath bench clean
 
 verify: build test test-lanes test-shard test-dist test-conv
 
@@ -140,6 +142,28 @@ smoke-serve: build
 	sleep 1; \
 	if ./target/release/menage loadgen --addr 127.0.0.1:$(SMOKE_PORT) \
 		--requests 256 --connections 8 --pipeline 4 --shutdown-server; then \
+		wait $$SERVER_PID; \
+	else \
+		kill $$SERVER_PID 2>/dev/null; wait $$SERVER_PID 2>/dev/null; exit 1; \
+	fi
+
+## Observability smoke over loopback, bounded runtime: serve a synthetic
+## model, drive it with `loadgen --profile` (records the server's stage
+## histograms + this run's per-core/per-shard execution-counter delta into
+## BENCH_serve.json), then poll once with `menage top --once`, which exits
+## non-zero unless the versioned STATS `profile` block is present and
+## well-formed. The server is shut down via the SHUTDOWN frame afterwards.
+smoke-obs: build
+	./target/release/menage serve --synthetic --model nmnist \
+		--addr 127.0.0.1:$(OBS_PORT) --workers 2 --lanes 4 \
+		--duration-secs 120 --allow-remote-shutdown & \
+	SERVER_PID=$$!; \
+	sleep 1; \
+	if ./target/release/menage loadgen --addr 127.0.0.1:$(OBS_PORT) \
+		--requests 128 --connections 4 --pipeline 4 --profile \
+		&& ./target/release/menage top --addr 127.0.0.1:$(OBS_PORT) --once \
+		&& ./target/release/menage loadgen --addr 127.0.0.1:$(OBS_PORT) \
+		--requests 4 --connections 1 --out /dev/null --shutdown-server; then \
 		wait $$SERVER_PID; \
 	else \
 		kill $$SERVER_PID 2>/dev/null; wait $$SERVER_PID 2>/dev/null; exit 1; \

@@ -53,6 +53,39 @@ fn main() {
     });
     println!("  frame roundtrip: {:.1}k frames/s", r_frame.throughput(1.0) / 1e3);
 
+    // Observability plane: the per-request cost route_response pays to
+    // record four stage spans + offer the trace to the slow ring (the ring
+    // is kept full so the common rejected-offer fast path dominates).
+    let stages = menage::obs::StageHistograms::default();
+    let ring = menage::obs::SlowTraceRing::default();
+    for i in 0..64 {
+        ring.offer(menage::obs::TraceRecord {
+            id: i,
+            total_us: 1_000_000 + i,
+            queue_us: 1,
+            dispatch_us: 1,
+            step_us: 1,
+            egress_us: 1,
+        });
+    }
+    let mut i = 0u64;
+    let r_obs = b.run("obs_record_stages", || {
+        i += 1;
+        stages.queue.record_micros(i % 512);
+        stages.dispatch.record_micros(i % 64);
+        stages.step.record_micros(i % 4096);
+        stages.egress.record_micros(i % 32);
+        ring.offer(menage::obs::TraceRecord {
+            id: i,
+            total_us: i % 4096, // always below the ring floor → fast path
+            queue_us: i % 512,
+            dispatch_us: i % 64,
+            step_us: i % 4096,
+            egress_us: i % 32,
+        });
+    });
+    println!("  obs record: {:.1} M records/s", r_obs.throughput(1.0) * 1e-6);
+
     // Loopback end-to-end: one synchronous client against a small chip.
     let mut mcfg = ModelConfig::nmnist_mlp();
     mcfg.timesteps = 10;

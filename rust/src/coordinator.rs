@@ -162,6 +162,30 @@ impl Backend {
         }
     }
 
+    /// `shard_of[c]` for every local core, in the same global core order
+    /// [`Self::profile_samples_into`] appends — the shape of the
+    /// coordinator's [`ProfilePlane`]. Empty for remote backends (their
+    /// cores profile host-side).
+    fn profile_shape(&self) -> Vec<usize> {
+        match self {
+            Backend::Mono(c) => vec![0; c.num_cores()],
+            Backend::Sharded(s) => s.core_shard_map(),
+            Backend::Remote(_) => Vec::new(),
+        }
+    }
+
+    /// Clear `out` and append every local core's monotonic profile sample
+    /// (mirrors [`Self::fault_counters`]'s accumulation semantics: core
+    /// stats + lane stats, pre-fold).
+    fn profile_samples_into(&self, out: &mut Vec<crate::obs::CoreSample>) {
+        out.clear();
+        match self {
+            Backend::Mono(c) => c.profile_samples_into(out),
+            Backend::Sharded(s) => s.profile_samples_into(out),
+            Backend::Remote(_) => {}
+        }
+    }
+
     /// Collapse into the monolithic-shaped stats carrier shutdown hands
     /// back (sharded cores are reassembled in global layer order). A
     /// remote backend owns no cores — its stats live in the shard hosts'
@@ -187,6 +211,11 @@ pub struct Request {
     /// a request that kills two workers is presumed to be the murder
     /// weapon, not a bystander.
     pub attempts: u8,
+    /// When the request entered the shared queue — the trace-span anchor
+    /// workers measure queue wait against. Resubmission after a worker
+    /// death keeps the original instant (the requeue wait is part of the
+    /// latency the client experienced).
+    pub submitted: Instant,
 }
 
 /// One inference response.
@@ -208,6 +237,15 @@ pub struct Response {
     /// in-process [`Menage::run`] (the serving layer ships it over the
     /// wire). Small: `classes × timesteps` sparse indices.
     pub output: SpikeTrain,
+    /// Trace span: time spent in the shared queue (submit → steal),
+    /// including adaptive fill-wait and any post-worker-death requeue.
+    pub queue_wait: Duration,
+    /// Trace span: steal → engine start (width filtering, lane staging,
+    /// occupancy gauge updates on the worker thread).
+    pub dispatch_wait: Duration,
+    /// When the worker finished this request (engine done, response
+    /// built); the router's `done.elapsed()` is the egress span.
+    pub done: Instant,
 }
 
 /// Aggregated service metrics.
@@ -396,6 +434,9 @@ struct WorkerCtx {
     queue: Arc<SharedQueue>,
     metrics: Arc<Metrics>,
     recovery: Arc<RecoveryStats>,
+    /// Live per-core execution-profile counters; the worker publishes
+    /// monotonic deltas after every batch, like the fault counters.
+    profile: Arc<crate::obs::ProfilePlane>,
     results_tx: Sender<Result<Response>>,
     /// This worker's held slot: the batch it is currently processing.
     held: Arc<Mutex<Vec<Request>>>,
@@ -419,6 +460,9 @@ pub struct Coordinator {
     /// Fault/recovery counters + chaos triggers, shared with workers and
     /// the serving layer's STATS report.
     recovery: Arc<RecoveryStats>,
+    /// Live per-core/per-shard execution profile, shared with workers and
+    /// the serving layer's STATS `profile` block.
+    profile: Arc<crate::obs::ProfilePlane>,
     /// Pristine backend template used to rebuild panicked workers.
     template: Backend,
     lanes_per_worker: usize,
@@ -541,6 +585,7 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::default());
         metrics.lane_capacity.store(lanes_per_worker as u64, Ordering::Relaxed);
         let recovery = Arc::new(RecoveryStats::default());
+        let profile = Arc::new(crate::obs::ProfilePlane::new(backend.profile_shape()));
         let queue = Arc::new(SharedQueue::new(num_workers, fill_wait));
         let (results_tx, results_rx) = mpsc::channel::<Result<Response>>();
         let mut workers = Vec::with_capacity(num_workers);
@@ -553,6 +598,7 @@ impl Coordinator {
                     queue: Arc::clone(&queue),
                     metrics: Arc::clone(&metrics),
                     recovery: Arc::clone(&recovery),
+                    profile: Arc::clone(&profile),
                     results_tx: results_tx.clone(),
                     held: Arc::clone(&slot),
                     lanes_per_worker,
@@ -568,6 +614,7 @@ impl Coordinator {
             results_tx,
             metrics,
             recovery,
+            profile,
             template: backend,
             lanes_per_worker,
             // 8 rebuilds per configured worker before supervision stops
@@ -586,7 +633,7 @@ impl Coordinator {
     pub fn submit(&mut self, input: SpikeTrain, label: Option<usize>) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.in_flight.fetch_add(1, Ordering::Relaxed);
-        self.queue.push(Request { id, input, label, attempts: 0 });
+        self.queue.push(Request { id, input, label, attempts: 0, submitted: Instant::now() });
         id
     }
 
@@ -790,6 +837,13 @@ impl Coordinator {
         Arc::clone(&self.recovery)
     }
 
+    /// The live per-core/per-shard execution profile (the serving layer's
+    /// STATS `profile` source). Counters are cumulative; pollers diff
+    /// successive snapshots for windowed rates.
+    pub fn profile(&self) -> Arc<crate::obs::ProfilePlane> {
+        Arc::clone(&self.profile)
+    }
+
     /// Chaos knob: make workers panic on every `every`-th stolen batch
     /// (0 disarms). The panic fires after the batch is parked in the held
     /// slot and before anything is answered, so supervision has the full
@@ -868,6 +922,7 @@ impl Coordinator {
                         queue: Arc::clone(&self.queue),
                         metrics: Arc::clone(&self.metrics),
                         recovery: Arc::clone(&self.recovery),
+                        profile: Arc::clone(&self.profile),
                         results_tx: self.results_tx.clone(),
                         held: slot,
                         lanes_per_worker: self.lanes_per_worker,
@@ -950,10 +1005,17 @@ impl Coordinator {
 /// that would otherwise be lost.
 fn spawn_worker(mut chip: Backend, ctx: WorkerCtx) -> JoinHandle<Option<Menage>> {
     std::thread::spawn(move || {
-        let WorkerCtx { queue, metrics, recovery, results_tx, held, lanes_per_worker } = ctx;
+        let WorkerCtx { queue, metrics, recovery, profile, results_tx, held, lanes_per_worker } =
+            ctx;
+        // Trace-span stamps ride the response: queue wait is measured from
+        // the request's own `submitted` anchor to the batch's steal
+        // instant, dispatch from steal to engine start — one `Instant` per
+        // batch, never per spike (hot-path budget: module docs).
         let record = |out: &crate::accel::RunOutput,
                       req: &Request,
-                      sim_latency: Duration|
+                      sim_latency: Duration,
+                      stolen: Instant,
+                      t0: Instant|
          -> Response {
             let predicted = out.predicted_class();
             metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -972,6 +1034,9 @@ fn spawn_worker(mut chip: Backend, ctx: WorkerCtx) -> JoinHandle<Option<Menage>>
                 sim_latency,
                 label: req.label,
                 output: out.output().clone(),
+                queue_wait: stolen.saturating_duration_since(req.submitted),
+                dispatch_wait: t0.saturating_duration_since(stolen),
+                done: Instant::now(),
             }
         };
         let mut out = crate::accel::RunOutput::default();
@@ -980,8 +1045,13 @@ fn spawn_worker(mut chip: Backend, ctx: WorkerCtx) -> JoinHandle<Option<Menage>>
         let mut inputs: Vec<SpikeTrain> = Vec::new();
         // Last-published hardware fault counters (delta publishing).
         let mut hw_last = (0u64, 0u64, 0u64);
+        // Last-published execution-profile samples, same delta pattern
+        // (pre-sized once; the per-batch snapshot reuses `prof_now`).
+        let mut prof_last = vec![crate::obs::CoreSample::default(); profile.num_cores()];
+        let mut prof_now: Vec<crate::obs::CoreSample> = Vec::with_capacity(profile.num_cores());
         let mut disconnected = false;
         while !disconnected && queue.steal_batch(lanes_per_worker, &mut batch) {
+            let stolen = Instant::now();
             let mut held_g = lock_recover(&held);
             held_g.clear();
             held_g.append(&mut batch);
@@ -1007,7 +1077,7 @@ fn spawn_worker(mut chip: Backend, ctx: WorkerCtx) -> JoinHandle<Option<Menage>>
                 let t0 = Instant::now();
                 let res = chip
                     .run_into(&req.input, &mut out)
-                    .map(|()| record(&out, req, t0.elapsed()))
+                    .map(|()| record(&out, req, t0.elapsed(), stolen, t0))
                     // Every worker error carries the `request {id}:`
                     // prefix (see [`request_id_of_error`]) so a
                     // response router can attribute it.
@@ -1053,7 +1123,7 @@ fn spawn_worker(mut chip: Backend, ctx: WorkerCtx) -> JoinHandle<Option<Menage>>
                     Ok(()) => {
                         let sim_latency = t0.elapsed();
                         for o in lane_outs.iter() {
-                            let resp = record(o, &held_g[0], sim_latency);
+                            let resp = record(o, &held_g[0], sim_latency, stolen, t0);
                             disconnected |= results_tx.send(Ok(resp)).is_err();
                             held_g.remove(0);
                         }
@@ -1083,6 +1153,16 @@ fn spawn_worker(mut chip: Backend, ctx: WorkerCtx) -> JoinHandle<Option<Menage>>
                     now.2.saturating_sub(hw_last.2),
                 );
                 hw_last = now;
+            }
+            // Publish execution-profile deltas the same way: live STATS
+            // readers see per-core work attribution batch by batch.
+            if profile.num_cores() > 0 {
+                chip.profile_samples_into(&mut prof_now);
+                for (c, last) in prof_last.iter_mut().enumerate() {
+                    let d = prof_now[c].delta_since(last);
+                    profile.add(c, &d);
+                    *last = prof_now[c];
+                }
             }
         }
         // Collapse lane-attributed work into the core totals so the chips
@@ -1131,7 +1211,7 @@ impl SubmitHandle {
     /// Enqueue a request under an id from [`Self::reserve_id`].
     pub fn submit_reserved(&self, id: u64, input: SpikeTrain, label: Option<usize>) {
         self.in_flight.fetch_add(1, Ordering::Relaxed);
-        self.queue.push(Request { id, input, label, attempts: 0 });
+        self.queue.push(Request { id, input, label, attempts: 0, submitted: Instant::now() });
     }
 
     /// [`Self::reserve_id`] + [`Self::submit_reserved`].
@@ -1247,6 +1327,55 @@ mod tests {
         assert_eq!(chips.len(), 3);
         let total: u64 = chips.iter().map(|c| c.inputs_processed).sum();
         assert_eq!(total, 20);
+    }
+
+    /// The live profile plane must account for exactly the work the
+    /// chips report at shutdown: every worker publishes per-batch deltas,
+    /// so after the last response the cumulative plane totals equal the
+    /// folded per-core stats summed across worker chips — and the
+    /// responses carry sane trace-span stamps.
+    #[test]
+    fn profile_plane_matches_folded_chip_totals() {
+        let (chip, _) = test_chip();
+        let mut coord = Coordinator::with_lanes(&chip, 2, 2);
+        let plane = coord.profile();
+        assert_eq!(plane.num_cores(), 2);
+        assert_eq!(plane.num_shards(), 1);
+        let res = coord.run_batch(inputs(16)).unwrap();
+        for r in &res {
+            // Span stamps: monotone fields a router can fold into stage
+            // histograms. `done` precedes now; the waits are bounded by
+            // the test's own wall time (sanity, not timing assertions).
+            assert!(r.done.elapsed() < Duration::from_secs(120));
+            assert!(r.queue_wait < Duration::from_secs(120));
+            assert!(r.dispatch_wait < Duration::from_secs(120));
+        }
+        let chips = coord.shutdown();
+        let mut macs = 0u64;
+        let mut cycles = 0u64;
+        let mut events = 0u64;
+        let mut spikes = 0u64;
+        for c in &chips {
+            for core in &c.cores {
+                macs += core.stats.macs;
+                cycles += core.stats.cycles;
+                events += core.stats.events_dispatched;
+                spikes += core.stats.spikes_out;
+            }
+        }
+        let shard_totals = plane.shard_samples();
+        assert_eq!(shard_totals.len(), 1);
+        let per_core: Vec<_> = (0..plane.num_cores()).map(|c| plane.core_sample(c)).collect();
+        let plane_macs: u64 = per_core.iter().map(|s| s.macs).sum();
+        let plane_cycles: u64 = per_core.iter().map(|s| s.cycles).sum();
+        let plane_events: u64 = per_core.iter().map(|s| s.events).sum();
+        let plane_spikes: u64 = per_core.iter().map(|s| s.spikes).sum();
+        assert_eq!(plane_macs, macs);
+        assert_eq!(plane_cycles, cycles);
+        assert_eq!(plane_events, events);
+        assert_eq!(plane_spikes, spikes);
+        assert_eq!(shard_totals[0].macs, macs);
+        assert!(macs > 0 && cycles > 0);
     }
 
     #[test]

@@ -37,6 +37,10 @@
 //!   chip-to-chip per time step, bit-identical to monolithic execution.
 //! * [`coordinator`] — the thin L3 driver: async inference request loop,
 //!   batching across simulator workers, metrics.
+//! * [`obs`] — the observability plane: per-request trace spans (admit/
+//!   queue/dispatch/step/egress histograms + a ring of the K slowest
+//!   traces) and the live per-core/per-shard execution profile behind
+//!   the STATS `profile` block and `menage top`.
 //! * [`serve`] — the network layer: a std-only TCP inference server whose
 //!   per-connection readers feed the coordinator's shared queue (micro-
 //!   batching across sockets), with admission control, per-request
@@ -59,6 +63,7 @@ pub mod fault;
 pub mod ilp;
 pub mod mapping;
 pub mod neuracore;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod shard;

@@ -1447,7 +1447,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             "shards",
             "out",
         ],
-        &["shutdown-server"],
+        &["shutdown-server", "profile"],
     )?;
     let addr = args.get_or("addr", "127.0.0.1:7471");
     let connections = args.get_usize("connections", 8)?.max(1);
@@ -1460,8 +1460,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let deadline_ms = args.get_usize("deadline-ms", 0)? as u32;
     let seed = args.get_usize("seed", 1)? as u64;
     let out = args.get_or("out", "BENCH_serve.json");
+    let profile_flag = args.has("profile");
 
     // Probe: wait for the server and learn the model's dimensions.
+    // `--profile` requires the versioned snapshot (it diffs the profile
+    // block pre→post), so schema drift fails here, before any load runs.
     let mut probe = Client::connect_backoff(
         addr.as_str(),
         40,
@@ -1469,7 +1472,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         Duration::from_millis(500),
         seed,
     )?;
-    let pre = probe.stats()?;
+    let pre = if profile_flag { probe.stats_versioned()? } else { probe.stats()? };
     let model = pre.get("model")?;
     let input_dim = model.get("input_dim")?.as_usize()?;
     let timesteps = model.get("timesteps")?.as_usize()?;
@@ -1568,13 +1571,28 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // The probe's idle connection may have been severed by chaos injection
     // (`serve --chaos reset=N`) during the run — reconnect once rather
     // than failing a run whose data connections all recovered.
-    let post = match probe.stats() {
+    let fetch_post = |c: &mut Client| if profile_flag { c.stats_versioned() } else { c.stats() };
+    let post = match fetch_post(&mut probe) {
         Ok(j) => j,
         Err(_) => {
             probe =
                 Client::connect_retry(addr.as_str(), 20, Duration::from_millis(50))?;
-            probe.stats()?
+            fetch_post(&mut probe)?
         }
+    };
+    // Server-side stage histograms (client-vs-server latency attribution:
+    // the client percentiles below include the wire and client queuing,
+    // these partition the server-internal path). Null against a pre-profile
+    // server rather than failing a plain run.
+    let server_stages = post
+        .opt("profile")
+        .and_then(|p| p.opt("stages"))
+        .cloned()
+        .unwrap_or(Json::Null);
+    let profile_delta = if profile_flag {
+        loadgen_profile_delta(&pre, &post)?
+    } else {
+        Json::Null
     };
     let j = Json::obj(vec![
         ("bench", "serve".into()),
@@ -1614,6 +1632,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 .collect(),
             ),
         ),
+        ("server_stages", server_stages),
+        ("profile_delta", profile_delta),
         ("server", post),
     ]);
     emit_json_file(out.as_str(), &j);
@@ -1642,6 +1662,278 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Counter fields of a `profile` cores/shards row, render order (the
+/// [`menage::obs::CoreSample`] JSON field names).
+const PROFILE_COUNTERS: [&str; 7] =
+    ["cycles", "events", "sn_rows", "macs", "integrations", "fire_ops", "spikes"];
+
+/// `loadgen --profile`: the run's execution-profile delta (post − pre
+/// STATS probes), per core and per shard — what this run itself cost the
+/// engine, independent of any earlier traffic on the same server.
+fn loadgen_profile_delta(pre: &Json, post: &Json) -> Result<Json> {
+    let delta_rows = |pre_rows: &[Json], post_rows: &[Json], id_field: &str| -> Result<Json> {
+        let mut out = Vec::new();
+        for row in post_rows {
+            let id = row.get(id_field)?.as_usize()?;
+            let base = pre_rows
+                .iter()
+                .find(|p| p.get(id_field).ok().and_then(|v| v.as_usize().ok()) == Some(id));
+            let mut fields = vec![(id_field, id.into())];
+            for c in PROFILE_COUNTERS {
+                let cur = row.get(c)?.as_f64()?;
+                let before = base
+                    .and_then(|p| p.get(c).ok())
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0);
+                fields.push((c, ((cur - before).max(0.0) as usize).into()));
+            }
+            out.push(Json::obj(fields));
+        }
+        Ok(Json::Arr(out))
+    };
+    let pre_p = pre.get("profile").context("pre-run STATS carries no `profile` block")?;
+    let post_p = post.get("profile").context("post-run STATS carries no `profile` block")?;
+    Ok(Json::obj(vec![
+        (
+            "cores",
+            delta_rows(pre_p.get("cores")?.as_arr()?, post_p.get("cores")?.as_arr()?, "core")?,
+        ),
+        (
+            "shards",
+            delta_rows(pre_p.get("shards")?.as_arr()?, post_p.get("shards")?.as_arr()?, "shard")?,
+        ),
+    ]))
+}
+
+/// Render one summary cell for `menage top`: numbers rounded to integers,
+/// anything else (null percentiles of an empty histogram) as "-".
+fn top_cell(v: Option<&Json>) -> String {
+    match v {
+        Some(Json::Num(x)) => format!("{x:.0}"),
+        _ => "-".to_string(),
+    }
+}
+
+/// Render a `profile` cores/shards counter array as a table. With a
+/// previous snapshot (`prev` rows + window length in seconds) the cells
+/// are windowed per-second *rates*; otherwise cumulative totals.
+fn top_counter_table(
+    title: String,
+    id_field: &str,
+    rows: &[Json],
+    prev: Option<(&[Json], f64)>,
+) -> Result<()> {
+    let unit = if prev.is_some() { "/s" } else { "" };
+    let mut headers: Vec<String> = vec![id_field.to_string()];
+    headers.extend(PROFILE_COUNTERS.iter().map(|c| format!("{c}{unit}")));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &hdr);
+    for row in rows {
+        let id = row.get(id_field)?.as_usize()?;
+        let mut cells = vec![id.to_string()];
+        for c in PROFILE_COUNTERS {
+            let cur = row.get(c)?.as_f64()?;
+            cells.push(match prev {
+                Some((prev_rows, secs)) => {
+                    let base = prev_rows
+                        .iter()
+                        .find(|p| {
+                            p.get(id_field).ok().and_then(|v| v.as_usize().ok()) == Some(id)
+                        })
+                        .and_then(|p| p.get(c).ok())
+                        .and_then(|v| v.as_f64().ok())
+                        .unwrap_or(0.0);
+                    format!("{:.0}", (cur - base).max(0.0) / secs.max(1e-9))
+                }
+                None => format!("{cur:.0}"),
+            });
+        }
+        t.row(&cells);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Render one `menage top` frame from a versioned STATS snapshot.
+/// `window` carries the previous snapshot and its age in seconds; when
+/// present the execution counters become windowed per-second rates.
+fn render_top(snap: &Json, window: Option<(&Json, f64)>) -> Result<()> {
+    // The profile block is the point of the command: its absence is a hard
+    // error (`make smoke-obs` uses `top --once` as exactly this assertion).
+    let profile = snap
+        .get("profile")
+        .context("STATS snapshot carries no `profile` block")?;
+    if matches!(profile, Json::Null) {
+        bail!("STATS `profile` block is null");
+    }
+
+    // Header: uptime / load / end-to-end latency, dash for absent fields.
+    let num = |path: &[&str]| -> String {
+        let mut v = snap;
+        for k in path {
+            match v.opt(k) {
+                Some(n) => v = n,
+                None => return "-".to_string(),
+            }
+        }
+        match v {
+            Json::Num(x) => format!("{x:.0}"),
+            _ => "-".to_string(),
+        }
+    };
+    println!(
+        "uptime {}s  queue {}  in-flight {}  req/s {}  latency p50/p99/max {}/{}/{} µs",
+        num(&["uptime_s"]),
+        num(&["queue_depth"]),
+        num(&["in_flight"]),
+        num(&["throughput", "requests_per_s"]),
+        num(&["latency_us", "p50"]),
+        num(&["latency_us", "p99"]),
+        num(&["latency_us", "max"]),
+    );
+
+    // Per-stage trace-span histograms, pipeline order.
+    let stages = profile.get("stages")?;
+    let mut t = Table::new(
+        "request stages (server-side, µs)",
+        &["stage", "count", "mean", "p50", "p90", "p99", "max"],
+    );
+    for name in ["admit", "queue", "dispatch", "step", "egress"] {
+        let s = stages.get(name)?;
+        t.row(&[
+            name.to_string(),
+            top_cell(s.opt("count")),
+            top_cell(s.opt("mean")),
+            top_cell(s.opt("p50")),
+            top_cell(s.opt("p90")),
+            top_cell(s.opt("p99")),
+            top_cell(s.opt("max")),
+        ]);
+    }
+    t.print();
+
+    // Execution profile: shards first (the placement-relevant view), then
+    // the per-core breakdown.
+    let prev_profile = window.and_then(|(p, secs)| p.opt("profile").map(|pp| (pp, secs)));
+    let mode = |secs: Option<f64>| match secs {
+        Some(s) => format!("windowed, {s:.1}s"),
+        None => "cumulative".to_string(),
+    };
+    let shards = profile.get("shards")?.as_arr()?;
+    if !shards.is_empty() {
+        let prev = prev_profile.and_then(|(pp, secs)| {
+            pp.opt("shards").and_then(|v| v.as_arr().ok()).map(|a| (a, secs))
+        });
+        top_counter_table(
+            format!("per-shard execution ({})", mode(prev.map(|(_, s)| s))),
+            "shard",
+            shards,
+            prev,
+        )?;
+    }
+    let cores = profile.get("cores")?.as_arr()?;
+    if cores.is_empty() {
+        println!("(no local cores — execution counters live in the shard hosts' own STATS)");
+    } else {
+        let prev = prev_profile.and_then(|(pp, secs)| {
+            pp.opt("cores").and_then(|v| v.as_arr().ok()).map(|a| (a, secs))
+        });
+        top_counter_table(
+            format!("per-core execution ({})", mode(prev.map(|(_, s)| s))),
+            "core",
+            cores,
+            prev,
+        )?;
+    }
+
+    // Distributed pipelines: per-link wire/wait attribution.
+    if let Some(links) = snap.opt("remote_links") {
+        let cols = [
+            "boundary_events",
+            "steps_sent",
+            "acks",
+            "in_flight",
+            "max_in_flight",
+            "step_cycles",
+            "wire_us",
+            "wait_us",
+        ];
+        let mut hdr = vec!["link"];
+        hdr.extend(cols);
+        let mut t = Table::new("remote links", &hdr);
+        let n = links.get("steps_sent")?.as_arr()?.len();
+        for k in 0..n {
+            let mut cells = vec![k.to_string()];
+            for col in cols {
+                let v = links.opt(col).and_then(|a| a.as_arr().ok()).and_then(|a| a.get(k));
+                cells.push(top_cell(v));
+            }
+            t.row(&cells);
+        }
+        t.print();
+    }
+
+    // Tail forensics: which stage of the slowest requests dominated.
+    let slowest = profile.get("slowest")?.as_arr()?;
+    if !slowest.is_empty() {
+        let mut t = Table::new(
+            "slowest traces (µs)",
+            &["id", "total", "queue", "dispatch", "step", "egress"],
+        );
+        for r in slowest {
+            t.row(&[
+                top_cell(r.opt("id")),
+                top_cell(r.opt("total_us")),
+                top_cell(r.opt("queue_us")),
+                top_cell(r.opt("dispatch_us")),
+                top_cell(r.opt("step_us")),
+                top_cell(r.opt("egress_us")),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+/// `menage top` — live profiling dashboard: poll a running server's
+/// versioned STATS snapshot and render the observability plane (per-stage
+/// trace spans, per-core/per-shard execution counters, remote-link gauges,
+/// slowest traces). From the second poll on, execution counters render as
+/// windowed per-second rates (successive-snapshot diffs); `--once` prints
+/// a single cumulative frame and exits non-zero unless the profile block
+/// is present and well-formed.
+fn cmd_top(args: &Args) -> Result<()> {
+    args.expect_known(&["addr", "interval-ms", "count"], &["once"])?;
+    let addr = args.get_or("addr", "127.0.0.1:7471");
+    let interval_ms = args.get_usize("interval-ms", 1000)?.max(10) as u64;
+    let count = if args.has("once") { 1 } else { args.get_usize("count", 0)? };
+    let mut client = Client::connect_backoff(
+        addr.as_str(),
+        40,
+        Duration::from_millis(50),
+        Duration::from_millis(500),
+        0,
+    )?;
+    let mut prev: Option<(Json, Instant)> = None;
+    let mut polls = 0usize;
+    loop {
+        let snap = client.stats_versioned()?;
+        let now = Instant::now();
+        if polls > 0 {
+            println!();
+        }
+        let window =
+            prev.as_ref().map(|(p, t)| (p, now.duration_since(*t).as_secs_f64()));
+        render_top(&snap, window)?;
+        polls += 1;
+        if count > 0 && polls >= count {
+            return Ok(());
+        }
+        prev = Some((snap, now));
+        std::thread::sleep(Duration::from_millis(interval_ms));
+    }
+}
+
 fn help() {
     println!(
         "menage — MENAGE mixed-signal neuromorphic accelerator reproduction
@@ -1668,10 +1960,23 @@ USAGE:
   menage loadgen   [--addr HOST:PORT] [--connections C] [--requests N]
                    [--pipeline P] [--rate R] [--deadline-ms D] [--seed S]
                    [--shards K] [--out BENCH_serve.json] [--shutdown-server]
+                   [--profile]
+  menage top       [--addr HOST:PORT] [--interval-ms MS] [--count N] [--once]
 
 serve/loadgen speak the length-prefixed binary protocol documented in
 menage::serve::protocol (and README.md); loadgen prints a latency/
 throughput table and writes BENCH_serve.json.
+
+menage top polls the server's versioned STATS snapshot every
+--interval-ms (default 1000) and renders the observability plane: the
+per-stage trace-span histograms (admit/queue/dispatch/step/egress), the
+per-core and per-shard execution counters (windowed per-second rates from
+the second poll on), remote-link gauges on distributed pipelines, and the
+slowest retained traces. --once prints a single cumulative frame (and
+fails unless the profile block is present); --count N stops after N
+polls. loadgen --profile records the same breakdown into BENCH_serve.json
+(server stage histograms for client-vs-server latency attribution, plus
+this run's per-core/per-shard execution-counter delta).
 
 --shards K partitions the layer pipeline across K chips (ILP/DP cut
 minimizing inter-shard spike traffic under per-chip capacity), with
@@ -1729,6 +2034,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "shard-host" => cmd_shard_host(&args),
         "loadgen" => cmd_loadgen(&args),
+        "top" => cmd_top(&args),
         "help" | "--help" | "-h" => {
             help();
             Ok(())
@@ -1797,7 +2103,9 @@ mod tests {
     /// (the handlers call expect_known before doing any work).
     #[test]
     fn subcommand_handlers_reject_unknown_flags() {
-        for cmd in ["info", "map", "simulate", "waveform", "serve", "shard-host", "loadgen"] {
+        for cmd in
+            ["info", "map", "simulate", "waveform", "serve", "shard-host", "loadgen", "top"]
+        {
             let a = Args::parse_from(argv(&[cmd, "--definitely-not-a-flag"])).unwrap();
             let r = match cmd {
                 "info" => cmd_info(&a),
@@ -1807,6 +2115,7 @@ mod tests {
                 "serve" => cmd_serve(&a),
                 "shard-host" => cmd_shard_host(&a),
                 "loadgen" => cmd_loadgen(&a),
+                "top" => cmd_top(&a),
                 _ => unreachable!(),
             };
             let e = r.unwrap_err();

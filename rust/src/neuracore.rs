@@ -349,6 +349,31 @@ impl NeuraCore {
         t
     }
 
+    /// Monotonic execution-profile counters summed over the core stats and
+    /// every lane's stats (mirrors [`Self::fault_counters`]) — the sample
+    /// the coordinator delta-publishes to [`crate::obs::ProfilePlane`].
+    pub fn profile_sample(&self) -> crate::obs::CoreSample {
+        let mut s = crate::obs::CoreSample {
+            cycles: self.stats.cycles,
+            events: self.stats.events_dispatched,
+            sn_rows: self.stats.sn_rows_read,
+            macs: self.stats.macs,
+            integrations: self.stats.integrations,
+            fire_ops: self.stats.fire_ops,
+            spikes: self.stats.spikes_out,
+        };
+        for l in &self.lane_stats {
+            s.cycles += l.cycles;
+            s.events += l.events_dispatched;
+            s.sn_rows += l.sn_rows_read;
+            s.macs += l.macs;
+            s.integrations += l.integrations;
+            s.fire_ops += l.fire_ops;
+            s.spikes += l.spikes_out;
+        }
+        s
+    }
+
     /// Number of mapping rounds.
     pub fn rounds(&self) -> usize {
         self.image.rounds.len()

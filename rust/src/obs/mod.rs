@@ -1,0 +1,474 @@
+//! Observability plane: per-request trace spans and the dynamic execution
+//! profile behind the STATS `profile` block (`menage top`, `loadgen
+//! --profile`).
+//!
+//! Everything here is std-only and **bounded-memory**: fixed-size atomic
+//! counters and log₂ histograms, one mutex-guarded K-slot ring. Nothing in
+//! this module touches engine arithmetic — observability is bit-identity
+//! neutral by construction (the differential suites run unchanged).
+//!
+//! ## Trace spans
+//!
+//! A request crossing the serving stack is stamped at five monotonic
+//! points, yielding five spans that partition its server-side latency:
+//!
+//! ```text
+//! admit    ingress decode + admission control    (reader thread)
+//! queue    shared-queue wait incl. fill-wait     (submit → steal)
+//! dispatch steal → engine start (width filter,
+//!          staging, occupancy gauges)            (worker thread)
+//! step     the engine run itself (sim_latency)   (worker thread)
+//! egress   results channel + router routing      (done → route)
+//! ```
+//!
+//! The stamps ride through [`crate::coordinator`]: `Request` carries its
+//! submission instant, workers stamp steal/dispatch/done into the
+//! `Response`, and the server's router folds the spans into
+//! [`StageHistograms`] (one [`LatencyHistogram`] per stage) next to the
+//! end-to-end latency histogram. Sampling is **per dispatch, not per
+//! spike** — the hot path pays a handful of `Instant::now()` calls and
+//! relaxed atomic adds per request, no allocation.
+//!
+//! The K slowest complete traces are retained in a [`SlowTraceRing`] for
+//! tail forensics: when p99 moves, the ring says *which stage* of the
+//! slowest requests moved.
+//!
+//! ## Execution profile
+//!
+//! [`ProfilePlane`] accumulates per-core monotonic execution counters
+//! (cycles, distinct events dispatched, MEM_S&N rows, MAC-equivalents,
+//! integrations, sweep ops, spikes) published by the coordinator's workers
+//! as **deltas after every batch** — the exact pattern the hardware fault
+//! counters use — so live STATS readers see work attributed per core and
+//! per shard without waiting for shutdown's stats fold. Counters are
+//! cumulative; *windowed* rates are computed by the poller (`menage top`
+//! diffs successive snapshots, `loadgen --profile` diffs its pre/post
+//! probes), which keeps the hot path free of epoch bookkeeping.
+//!
+//! This is the calibration feed the ROADMAP's measurement-driven placement
+//! item needs: measured per-shard cycles/MACs/boundary traffic instead of
+//! the static `out_dim + nnz` estimate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::fault::lock_recover;
+use crate::serve::metrics::LatencyHistogram;
+use crate::util::json::Json;
+
+/// How many slowest traces [`SlowTraceRing::default`] retains.
+pub const SLOW_TRACE_CAP: usize = 8;
+
+/// One core's monotonic execution counters, as sampled from the engine
+/// (core stats + per-lane stats, pre-fold). A plain value type so workers
+/// can snapshot/diff it without touching `CoreStats`' per-step series.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoreSample {
+    pub cycles: u64,
+    /// Events popped from MEM_E (distinct per dispatch round).
+    pub events: u64,
+    /// MEM_S&N rows streamed.
+    pub sn_rows: u64,
+    /// Synaptic MAC-equivalents (A-SYN operations).
+    pub macs: u64,
+    /// A-NEURON integrate operations.
+    pub integrations: u64,
+    /// A-NEURON sweep operations.
+    pub fire_ops: u64,
+    /// Output spikes emitted.
+    pub spikes: u64,
+}
+
+impl CoreSample {
+    /// Monotonic counter delta (`self` sampled after `prev`); saturating,
+    /// so a respawned worker's fresh chip (counters reset to 0) publishes
+    /// zeros instead of wrapping.
+    pub fn delta_since(&self, prev: &CoreSample) -> CoreSample {
+        CoreSample {
+            cycles: self.cycles.saturating_sub(prev.cycles),
+            events: self.events.saturating_sub(prev.events),
+            sn_rows: self.sn_rows.saturating_sub(prev.sn_rows),
+            macs: self.macs.saturating_sub(prev.macs),
+            integrations: self.integrations.saturating_sub(prev.integrations),
+            fire_ops: self.fire_ops.saturating_sub(prev.fire_ops),
+            spikes: self.spikes.saturating_sub(prev.spikes),
+        }
+    }
+
+    fn accumulate(&mut self, d: &CoreSample) {
+        self.cycles += d.cycles;
+        self.events += d.events;
+        self.sn_rows += d.sn_rows;
+        self.macs += d.macs;
+        self.integrations += d.integrations;
+        self.fire_ops += d.fire_ops;
+        self.spikes += d.spikes;
+    }
+
+    fn to_json_fields(self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("cycles", (self.cycles as usize).into()),
+            ("events", (self.events as usize).into()),
+            ("sn_rows", (self.sn_rows as usize).into()),
+            ("macs", (self.macs as usize).into()),
+            ("integrations", (self.integrations as usize).into()),
+            ("fire_ops", (self.fire_ops as usize).into()),
+            ("spikes", (self.spikes as usize).into()),
+        ]
+    }
+}
+
+/// One core's shared atomic counter slot (the [`ProfilePlane`] cell every
+/// worker clone of that core publishes deltas into).
+#[derive(Debug, Default)]
+struct CoreCounters {
+    cycles: AtomicU64,
+    events: AtomicU64,
+    sn_rows: AtomicU64,
+    macs: AtomicU64,
+    integrations: AtomicU64,
+    fire_ops: AtomicU64,
+    spikes: AtomicU64,
+}
+
+/// The live per-core/per-shard execution-profile registry (module docs).
+/// One instance per coordinator, shared (Arc) by every worker and the
+/// serving layer's STATS snapshot. Counters sum work across all worker
+/// clones of a core — the service-wide view, matching how the latency
+/// histogram sums across connections.
+#[derive(Debug, Default)]
+pub struct ProfilePlane {
+    /// `shard_of[c]` = the shard hosting core `c` (global core order).
+    /// Empty for backends with no local cores (remote pipelines — their
+    /// counters live in the shard hosts' own STATS registries).
+    shard_of: Vec<usize>,
+    cores: Vec<CoreCounters>,
+}
+
+impl ProfilePlane {
+    /// A plane with one counter slot per core; `shard_of` maps each core
+    /// to its shard (all zeros for a monolithic chip).
+    pub fn new(shard_of: Vec<usize>) -> Self {
+        let cores = (0..shard_of.len()).map(|_| CoreCounters::default()).collect();
+        Self { shard_of, cores }
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Number of shards the cores span (0 when the plane is empty).
+    pub fn num_shards(&self) -> usize {
+        self.shard_of.iter().copied().max().map_or(0, |m| m + 1)
+    }
+
+    /// Publish one core's counter delta (relaxed adds — hot path safe).
+    pub fn add(&self, core: usize, d: &CoreSample) {
+        let c = &self.cores[core];
+        c.cycles.fetch_add(d.cycles, Ordering::Relaxed);
+        c.events.fetch_add(d.events, Ordering::Relaxed);
+        c.sn_rows.fetch_add(d.sn_rows, Ordering::Relaxed);
+        c.macs.fetch_add(d.macs, Ordering::Relaxed);
+        c.integrations.fetch_add(d.integrations, Ordering::Relaxed);
+        c.fire_ops.fetch_add(d.fire_ops, Ordering::Relaxed);
+        c.spikes.fetch_add(d.spikes, Ordering::Relaxed);
+    }
+
+    /// Current cumulative totals of one core.
+    pub fn core_sample(&self, core: usize) -> CoreSample {
+        let c = &self.cores[core];
+        CoreSample {
+            cycles: c.cycles.load(Ordering::Relaxed),
+            events: c.events.load(Ordering::Relaxed),
+            sn_rows: c.sn_rows.load(Ordering::Relaxed),
+            macs: c.macs.load(Ordering::Relaxed),
+            integrations: c.integrations.load(Ordering::Relaxed),
+            fire_ops: c.fire_ops.load(Ordering::Relaxed),
+            spikes: c.spikes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Cumulative totals summed per shard (index = shard).
+    pub fn shard_samples(&self) -> Vec<CoreSample> {
+        let mut out = vec![CoreSample::default(); self.num_shards()];
+        for (c, &s) in self.shard_of.iter().enumerate() {
+            out[s].accumulate(&self.core_sample(c));
+        }
+        out
+    }
+
+    /// The `cores`/`shards` halves of the STATS `profile` block.
+    pub fn to_json(&self) -> (Json, Json) {
+        let cores = Json::Arr(
+            (0..self.num_cores())
+                .map(|c| {
+                    let mut fields = vec![
+                        ("core", c.into()),
+                        ("shard", self.shard_of[c].into()),
+                    ];
+                    fields.extend(self.core_sample(c).to_json_fields());
+                    Json::obj(fields)
+                })
+                .collect(),
+        );
+        let shards = Json::Arr(
+            self.shard_samples()
+                .into_iter()
+                .enumerate()
+                .map(|(s, sample)| {
+                    let mut fields = vec![("shard", s.into())];
+                    fields.extend(sample.to_json_fields());
+                    Json::obj(fields)
+                })
+                .collect(),
+        );
+        (cores, shards)
+    }
+}
+
+/// Per-stage latency histograms (module docs §Trace spans): one bounded
+/// log₂ histogram per span, recorded by the server's router (queue/
+/// dispatch/step/egress) and readers (admit).
+#[derive(Debug, Default)]
+pub struct StageHistograms {
+    pub admit: LatencyHistogram,
+    pub queue: LatencyHistogram,
+    pub dispatch: LatencyHistogram,
+    pub step: LatencyHistogram,
+    pub egress: LatencyHistogram,
+}
+
+impl StageHistograms {
+    /// Iterate `(name, histogram)` in pipeline order.
+    pub fn stages(&self) -> [(&'static str, &LatencyHistogram); 5] {
+        [
+            ("admit", &self.admit),
+            ("queue", &self.queue),
+            ("dispatch", &self.dispatch),
+            ("step", &self.step),
+            ("egress", &self.egress),
+        ]
+    }
+
+    /// The `stages` half of the STATS `profile` block: one summary
+    /// (`mean/p50/p90/p99/max/count`) per stage.
+    pub fn to_json(&self) -> Json {
+        Json::obj(
+            self.stages().into_iter().map(|(name, h)| (name, h.summary_json())).collect(),
+        )
+    }
+}
+
+/// One completed request's span breakdown, microseconds. `total_us` is the
+/// accept→route latency (the same value the endpoint histogram records);
+/// the admit span is excluded (it precedes the trace's accept stamp).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceRecord {
+    /// Server-internal (coordinator) request id.
+    pub id: u64,
+    pub total_us: u64,
+    pub queue_us: u64,
+    pub dispatch_us: u64,
+    pub step_us: u64,
+    pub egress_us: u64,
+}
+
+impl TraceRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", (self.id as usize).into()),
+            ("total_us", (self.total_us as usize).into()),
+            ("queue_us", (self.queue_us as usize).into()),
+            ("dispatch_us", (self.dispatch_us as usize).into()),
+            ("step_us", (self.step_us as usize).into()),
+            ("egress_us", (self.egress_us as usize).into()),
+        ])
+    }
+}
+
+/// Bounded registry of the K slowest complete traces (tail forensics).
+///
+/// The hot path is gated by an atomic floor: once the ring is full, a
+/// trace no slower than the current K-th-slowest is rejected with one
+/// relaxed load — the mutex is only taken for genuine tail entries, which
+/// by definition are rare.
+#[derive(Debug)]
+pub struct SlowTraceRing {
+    cap: usize,
+    /// `total_us` of the fastest retained trace once full (0 before): the
+    /// lock-free admission gate.
+    floor: AtomicU64,
+    ring: Mutex<Vec<TraceRecord>>,
+}
+
+impl Default for SlowTraceRing {
+    fn default() -> Self {
+        Self::new(SLOW_TRACE_CAP)
+    }
+}
+
+impl SlowTraceRing {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            floor: AtomicU64::new(0),
+            ring: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Offer a completed trace; retained only if it ranks among the K
+    /// slowest seen so far.
+    pub fn offer(&self, rec: TraceRecord) {
+        // Fast path: the ring is full and this trace is not slower than
+        // its fastest member — drop without locking. (A racing floor is
+        // only ever stale-low, which admits a borderline trace to the
+        // locked path below; never the reverse.)
+        if rec.total_us <= self.floor.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut ring = lock_recover(&self.ring);
+        if ring.len() < self.cap {
+            ring.push(rec);
+        } else {
+            let (mi, _) = ring
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.total_us)
+                .expect("ring is full, cap ≥ 1");
+            if ring[mi].total_us >= rec.total_us {
+                return;
+            }
+            ring[mi] = rec;
+        }
+        if ring.len() == self.cap {
+            let floor = ring.iter().map(|r| r.total_us).min().unwrap_or(0);
+            self.floor.store(floor, Ordering::Relaxed);
+        }
+    }
+
+    /// The retained traces, slowest first.
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        let mut v = lock_recover(&self.ring).clone();
+        v.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+        v
+    }
+
+    /// The `slowest` half of the STATS `profile` block.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.snapshot().iter().map(TraceRecord::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, total: u64) -> TraceRecord {
+        TraceRecord {
+            id,
+            total_us: total,
+            queue_us: total / 4,
+            dispatch_us: total / 8,
+            step_us: total / 2,
+            egress_us: total / 8,
+        }
+    }
+
+    /// The ring keeps exactly the K slowest offers, in slowest-first
+    /// snapshot order, regardless of offer order.
+    #[test]
+    fn slow_ring_keeps_k_slowest() {
+        let ring = SlowTraceRing::new(3);
+        for (i, t) in [50u64, 10, 900, 40, 300, 5, 700, 300].into_iter().enumerate() {
+            ring.offer(rec(i as u64, t));
+        }
+        let snap = ring.snapshot();
+        let totals: Vec<u64> = snap.iter().map(|r| r.total_us).collect();
+        assert_eq!(totals, vec![900, 700, 300]);
+        // The floor gate rejects anything ≤ the fastest retained trace.
+        ring.offer(rec(99, 300));
+        assert_eq!(ring.snapshot().iter().map(|r| r.total_us).collect::<Vec<_>>(), totals);
+        // A new tail entry displaces the fastest member.
+        ring.offer(rec(100, 301));
+        let totals: Vec<u64> = ring.snapshot().iter().map(|r| r.total_us).collect();
+        assert_eq!(totals, vec![900, 700, 301]);
+    }
+
+    /// Under capacity, everything offered is retained and the floor gate
+    /// stays open (0) so later slower traces still enter.
+    #[test]
+    fn slow_ring_under_capacity_keeps_all() {
+        let ring = SlowTraceRing::new(8);
+        ring.offer(rec(0, 10));
+        ring.offer(rec(1, 20));
+        assert_eq!(ring.snapshot().len(), 2);
+        assert_eq!(ring.snapshot()[0].id, 1);
+        // JSON round-trips through the in-tree writer/parser.
+        let j = ring.to_json();
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    /// Plane accounting: deltas accumulate per core, shard totals sum
+    /// their cores, and the JSON block carries both halves.
+    #[test]
+    fn profile_plane_accumulates_and_aggregates() {
+        let plane = ProfilePlane::new(vec![0, 0, 1]);
+        assert_eq!(plane.num_cores(), 3);
+        assert_eq!(plane.num_shards(), 2);
+        let d = CoreSample {
+            cycles: 10,
+            events: 4,
+            sn_rows: 3,
+            macs: 20,
+            integrations: 5,
+            fire_ops: 6,
+            spikes: 2,
+        };
+        plane.add(0, &d);
+        plane.add(0, &d);
+        plane.add(2, &d);
+        assert_eq!(plane.core_sample(0).cycles, 20);
+        assert_eq!(plane.core_sample(1), CoreSample::default());
+        let shards = plane.shard_samples();
+        assert_eq!(shards[0].macs, 40);
+        assert_eq!(shards[1].macs, 20);
+        let (cores, shards) = plane.to_json();
+        let Json::Arr(cores) = cores else { panic!("cores must be an array") };
+        assert_eq!(cores.len(), 3);
+        assert_eq!(cores[2].get("shard").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(cores[0].get("cycles").unwrap().as_usize().unwrap(), 20);
+        let Json::Arr(shards) = shards else { panic!("shards must be an array") };
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("macs").unwrap().as_usize().unwrap(), 40);
+    }
+
+    /// Saturating deltas: a counter that went backwards (worker respawned
+    /// on a fresh chip) publishes zero, never wraps.
+    #[test]
+    fn core_sample_delta_saturates() {
+        let hi = CoreSample { cycles: 100, ..CoreSample::default() };
+        let lo = CoreSample { cycles: 30, ..CoreSample::default() };
+        assert_eq!(hi.delta_since(&lo).cycles, 70);
+        assert_eq!(lo.delta_since(&hi).cycles, 0);
+    }
+
+    /// Stage histograms: names in pipeline order, JSON summaries present
+    /// and null-safe when empty.
+    #[test]
+    fn stage_histograms_json_shape() {
+        let st = StageHistograms::default();
+        st.queue.record_micros(100);
+        let j = st.to_json();
+        let names: Vec<&str> =
+            st.stages().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["admit", "queue", "dispatch", "step", "egress"]);
+        assert_eq!(j.get("queue").unwrap().get("count").unwrap().as_usize().unwrap(), 1);
+        // Empty stage: percentiles are null, not fabricated numbers.
+        assert!(matches!(j.get("admit").unwrap().get("p50").unwrap(), Json::Null));
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+}

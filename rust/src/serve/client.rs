@@ -262,6 +262,27 @@ impl Client {
         }
     }
 
+    /// [`Self::stats`] with schema validation: fails loudly unless the
+    /// snapshot carries `stats_version ==`
+    /// [`super::protocol::STATS_VERSION`]. Structured pollers (`menage
+    /// top`, `loadgen --profile`) use this so shape drift is a typed error
+    /// at the first poll, never silently-null fields in a dashboard.
+    pub fn stats_versioned(&mut self) -> Result<Json> {
+        let j = self.stats()?;
+        let want = super::protocol::STATS_VERSION;
+        match j.get("stats_version").ok().and_then(|v| v.as_usize().ok()) {
+            Some(got) if got as u64 == want => Ok(j),
+            Some(got) => bail!(
+                "server reports stats_version {got}, this client expects {want} — \
+                 upgrade whichever side is older"
+            ),
+            None => bail!(
+                "server's STATS snapshot carries no stats_version (pre-v{want} server) — \
+                 this poller needs a server with the profile block"
+            ),
+        }
+    }
+
     /// Liveness round-trip.
     pub fn ping(&mut self) -> Result<()> {
         write_frame(&mut self.stream, FrameKind::Ping, &[]).context("sending PING")?;

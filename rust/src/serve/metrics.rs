@@ -13,6 +13,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use crate::obs::{SlowTraceRing, StageHistograms};
 use crate::util::json::Json;
 
 /// Number of log₂ microsecond buckets: bucket `i` counts latencies in
@@ -72,6 +73,16 @@ impl LatencyHistogram {
     /// Bucket-resolution quantile estimate in microseconds (the geometric
     /// midpoint of the bucket holding the rank-`q` sample), clamped to the
     /// observed maximum. `NaN` when empty.
+    ///
+    /// **Bias direction:** the geometric midpoint of bucket `[2^i, 2^(i+1))`
+    /// is `2^(i+0.5)`, so the estimate is at most a factor of √2 off in
+    /// either direction — but for samples sitting **exactly on a bucket
+    /// boundary** `2^k` (the bucket's lower edge) the bias is strictly
+    /// **upward** by that full √2 factor, unless the max-clamp catches it
+    /// (which it always does when the rank bucket is also the max bucket —
+    /// e.g. a single-valued histogram reports exact quantiles). Upward bias
+    /// is the safe direction for an ops dashboard: tail estimates
+    /// overstate, never flatter.
     pub fn quantile_micros(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -89,6 +100,33 @@ impl LatencyHistogram {
             }
         }
         self.max_micros() as f64
+    }
+
+    /// The standard JSON summary of one histogram —
+    /// `{mean, p50, p90, p99, max, count}`, `null` percentiles when empty.
+    /// Used verbatim for the endpoint `latency_us` block and for every
+    /// per-stage histogram in the `profile` block, so pollers parse one
+    /// shape everywhere.
+    pub fn summary_json(&self) -> Json {
+        let q = |p: f64| -> Json {
+            let v = self.quantile_micros(p);
+            if v.is_nan() {
+                Json::Null
+            } else {
+                Json::Num(v)
+            }
+        };
+        Json::obj(vec![
+            (
+                "mean",
+                if self.count() == 0 { Json::Null } else { Json::Num(self.mean_micros()) },
+            ),
+            ("p50", q(0.50)),
+            ("p90", q(0.90)),
+            ("p99", q(0.99)),
+            ("max", (self.max_micros() as usize).into()),
+            ("count", (self.count() as usize).into()),
+        ])
     }
 }
 
@@ -129,6 +167,11 @@ pub struct ServeMetrics {
     pub total_cycles: AtomicU64,
     /// Accept→route latency distribution.
     pub latency: LatencyHistogram,
+    /// Per-stage span histograms (admit/queue/dispatch/step/egress) — the
+    /// trace-span half of the STATS `profile` block.
+    pub stages: StageHistograms,
+    /// The K slowest complete traces (tail forensics).
+    pub slowest: SlowTraceRing,
 }
 
 impl ServeMetrics {
@@ -148,15 +191,6 @@ impl ServeMetrics {
         let uptime = started.elapsed().as_secs_f64().max(1e-9);
         let completed = Self::get(&self.completed);
         let events = Self::get(&self.events_in);
-        let lat = &self.latency;
-        let q = |p: f64| -> Json {
-            let v = lat.quantile_micros(p);
-            if v.is_nan() {
-                Json::Null
-            } else {
-                Json::Num(v)
-            }
-        };
         Json::obj(vec![
             ("uptime_s", uptime.into()),
             ("queue_depth", queue_depth.into()),
@@ -189,20 +223,7 @@ impl ServeMetrics {
                     ("events_per_s", (events as f64 / uptime).into()),
                 ]),
             ),
-            (
-                "latency_us",
-                Json::obj(vec![
-                    (
-                        "mean",
-                        if lat.count() == 0 { Json::Null } else { Json::Num(lat.mean_micros()) },
-                    ),
-                    ("p50", q(0.50)),
-                    ("p90", q(0.90)),
-                    ("p99", q(0.99)),
-                    ("max", (lat.max_micros() as usize).into()),
-                    ("count", (lat.count() as usize).into()),
-                ]),
-            ),
+            ("latency_us", self.latency.summary_json()),
         ])
     }
 }
@@ -309,6 +330,43 @@ mod tests {
             assert!(q <= h.max_micros() as f64);
         }
         assert_eq!(h.count(), 10);
+    }
+
+    /// Percentile estimation at exact bucket boundaries. Samples sitting
+    /// on a bucket's lower edge (1 µs, 2 µs, any 2^k µs) expose the
+    /// estimator's documented upward bias: the geometric-midpoint estimate
+    /// is 2^(k+0.5) ≈ √2·2^k, clamped to the observed max — so a
+    /// single-valued histogram reports the exact value, and a mixed one
+    /// overstates boundary samples by at most √2.
+    #[test]
+    fn histogram_percentiles_at_bucket_boundaries() {
+        // Single-valued at each boundary: max-clamp makes quantiles exact.
+        for k in 0..16u32 {
+            let v = 1u64 << k; // 1, 2, 4, ..., 2^15 µs
+            let h = LatencyHistogram::default();
+            for _ in 0..10 {
+                h.record_micros(v);
+            }
+            for q in [0.5, 0.9, 0.99, 1.0] {
+                assert_eq!(h.quantile_micros(q), v as f64, "2^{k} µs, q={q}");
+            }
+        }
+        // Mixed: 2^10 boundary samples dominate, one far-max sample defeats
+        // the clamp, so p50 shows the raw midpoint — biased UP, within √2.
+        let h = LatencyHistogram::default();
+        for _ in 0..99 {
+            h.record_micros(1 << 10);
+        }
+        h.record_micros(1 << 20);
+        let p50 = h.quantile_micros(0.50);
+        let true_val = (1u64 << 10) as f64;
+        assert!(p50 >= true_val, "boundary estimate must not understate: {p50}");
+        assert!(p50 <= true_val * 2f64.sqrt() + 1e-9, "bias bounded by √2: {p50}");
+        // 1 µs is bucket 0's interior (lo clamped to 1): estimate √2,
+        // max-clamped back to 1 when 1 µs is also the max.
+        let h = LatencyHistogram::default();
+        h.record_micros(1);
+        assert_eq!(h.quantile_micros(0.5), 1.0);
     }
 
     #[test]

@@ -19,7 +19,10 @@
 //!   deadlines, graceful drain on shutdown.
 //! * [`client`] — blocking client library (sync and pipelined).
 //! * [`metrics`] — the lock-free per-request metrics registry served over
-//!   the STATS frame.
+//!   the STATS frame, including the [`crate::obs`] observability plane:
+//!   per-stage trace-span histograms, per-core/per-shard execution
+//!   counters, and the slowest-trace ring behind the versioned `profile`
+//!   block (`protocol::STATS_VERSION`; rendered live by `menage top`).
 //! * [`shard_host`] — serve ONE chip of a [`crate::mapping::ShardPlan`]
 //!   over the same protocol (`menage shard-host`), so a sharded pipeline
 //!   can span processes.

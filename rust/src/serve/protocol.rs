@@ -22,7 +22,7 @@
 //! | 4    | PING           | c→s  | empty |
 //! | 5    | PONG           | s→c  | empty |
 //! | 6    | STATS          | c→s  | empty |
-//! | 7    | STATS_REPLY    | s→c  | `str json` (the metrics registry snapshot) |
+//! | 7    | STATS_REPLY    | s→c  | `str json` (the metrics registry snapshot; schema pinned by [`STATS_VERSION`]) |
 //! | 8    | SHUTDOWN       | c→s  | empty (honored only with `allow_remote_shutdown`; acked with PONG) |
 //! | 9    | SHARD_STEP     | c→s  | `u64 seq, u32 step, frontier train (exactly 1 timestep)` |
 //! | 10   | SHARD_ACK      | s→c  | `u64 seq, u32 step, u64 step_cycles, frontier train (exactly 1 timestep)` |
@@ -57,6 +57,14 @@ use super::codec::{put_str, put_u32, put_u64, put_u8, Cursor};
 pub const MAGIC: u16 = 0x454D;
 /// Wire protocol version; bumped on incompatible layout changes.
 pub const VERSION: u8 = 1;
+/// Version of the STATS_REPLY JSON snapshot, carried in the snapshot
+/// itself as `"stats_version"` so pollers (`menage top`, `loadgen`) can
+/// fail loudly on shape drift instead of silently reading nulls. History:
+/// v1 = the pre-profile shape (no version field — absent means v1);
+/// v2 = adds `stats_version` and the `profile` block (per-stage trace
+/// histograms, per-core/per-shard execution counters, slowest traces),
+/// and extends `remote_links` with ack/wire/wait attribution.
+pub const STATS_VERSION: u64 = 2;
 /// Header bytes before the payload.
 pub const HEADER_LEN: usize = 8;
 /// Default cap on a single frame's payload (guards allocations; a server

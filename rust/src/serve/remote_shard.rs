@@ -31,7 +31,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -84,6 +84,20 @@ pub struct RemoteLinkStats {
     pub max_in_flight: Vec<AtomicU64>,
     /// SHARD_STEP frames sent, per link.
     pub steps_sent: Vec<AtomicU64>,
+    /// SHARD_ACKs received, per link.
+    pub acks: Vec<AtomicU64>,
+    /// Σ host-reported `step_cycles` over acked steps, per link — the
+    /// remote half of the execution profile (each host's own STATS has
+    /// the per-core breakdown).
+    pub step_cycles: Vec<AtomicU64>,
+    /// Σ send→ack round-trip per link, µs (wire + remote compute) —
+    /// divide by `acks` for the mean RTT a link contributes.
+    pub wire_us: Vec<AtomicU64>,
+    /// Σ wall time the driver spent *blocked* on this link's ack with no
+    /// send it could still issue, µs. `wire_us` says how slow a link is;
+    /// `wait_us` says whether that slowness actually stalls the pipeline —
+    /// the host-by-host attribution of distributed step latency.
+    pub wait_us: Vec<AtomicU64>,
 }
 
 impl RemoteLinkStats {
@@ -94,6 +108,10 @@ impl RemoteLinkStats {
             in_flight: zeros(num_shards),
             max_in_flight: zeros(num_shards),
             steps_sent: zeros(num_shards),
+            acks: zeros(num_shards),
+            step_cycles: zeros(num_shards),
+            wire_us: zeros(num_shards),
+            wait_us: zeros(num_shards),
         }
     }
 
@@ -116,6 +134,10 @@ impl RemoteLinkStats {
             ("in_flight", arr(&self.in_flight)),
             ("max_in_flight", arr(&self.max_in_flight)),
             ("steps_sent", arr(&self.steps_sent)),
+            ("acks", arr(&self.acks)),
+            ("step_cycles", arr(&self.step_cycles)),
+            ("wire_us", arr(&self.wire_us)),
+            ("wait_us", arr(&self.wait_us)),
         ])
     }
 }
@@ -378,9 +400,11 @@ impl RemoteShardPipeline {
             train.spikes[0] = step.clone();
             ready[0].push_back((t as u32, train));
         }
-        // Outstanding (seq, step) per link, send order — acks must come
-        // back in exactly this order (hosts execute sequentially).
-        let mut inflight: Vec<VecDeque<(u64, u32)>> =
+        // Outstanding (seq, step, sent-at) per link, send order — acks
+        // must come back in exactly this order (hosts execute
+        // sequentially). The send instant feeds the per-link `wire_us`
+        // RTT attribution.
+        let mut inflight: Vec<VecDeque<(u64, u32, Instant)>> =
             (0..k_links).map(|_| VecDeque::new()).collect();
         // Per-step max of the shards' cycle deltas — the synchronous
         // clock: chips tick together, the busiest shard sets the step.
@@ -407,7 +431,7 @@ impl RemoteShardPipeline {
                         .send_shard_step(&frame)
                         .with_context(|| self.link_name(k))?;
                     self.seqs[k] += 1;
-                    inflight[k].push_back((seq, step));
+                    inflight[k].push_back((seq, step, Instant::now()));
                     self.stats.steps_sent[k].fetch_add(1, Ordering::Relaxed);
                     let depth = inflight[k].len() as u64;
                     self.stats.in_flight[k].store(depth, Ordering::Relaxed);
@@ -423,11 +447,17 @@ impl RemoteShardPipeline {
             let k = (0..k_links)
                 .find(|&k| !inflight[k].is_empty())
                 .ok_or_else(|| anyhow!("pipeline stalled with no steps in flight"))?;
+            // Blocked-wait attribution: the driver has nothing to send and
+            // is stalled on this specific link — `wait_us` is the wall
+            // time this link's slowness actually costs the pipeline.
+            let wait_start = Instant::now();
             let reply = self.links[k]
                 .as_mut()
                 .expect("ensure_connected")
                 .recv_reply_timeout(self.cfg.io_timeout)
                 .with_context(|| self.link_name(k))?;
+            self.stats.wait_us[k]
+                .fetch_add(wait_start.elapsed().as_micros() as u64, Ordering::Relaxed);
             let ack = match reply {
                 Some(Reply::ShardAck(a)) => a,
                 Some(Reply::Error(e)) => bail!(
@@ -446,7 +476,7 @@ impl RemoteShardPipeline {
                     inflight[k].len()
                 ),
             };
-            let Some(&(exp_seq, exp_step)) = inflight[k].front() else {
+            let Some(&(exp_seq, exp_step, sent_at)) = inflight[k].front() else {
                 bail!("{} acked seq {} with nothing outstanding", self.link_name(k), ack.seq);
             };
             if ack.seq != exp_seq || ack.step != exp_step {
@@ -459,6 +489,12 @@ impl RemoteShardPipeline {
             }
             inflight[k].pop_front();
             self.stats.in_flight[k].store(inflight[k].len() as u64, Ordering::Relaxed);
+            // Per-link profile: ack count, host-reported step cycles, and
+            // the send→ack RTT (wire + remote compute).
+            self.stats.acks[k].fetch_add(1, Ordering::Relaxed);
+            self.stats.step_cycles[k].fetch_add(ack.step_cycles, Ordering::Relaxed);
+            self.stats.wire_us[k]
+                .fetch_add(sent_at.elapsed().as_micros() as u64, Ordering::Relaxed);
             let t = ack.step as usize;
             if t >= t_steps {
                 bail!("{} acked step {t} of a {t_steps}-step input", self.link_name(k));

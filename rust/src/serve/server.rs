@@ -175,6 +175,10 @@ struct Shared {
     /// The coordinator's recovery/fault counters — the STATS `recovery`
     /// and `faults` blocks.
     recovery: Arc<RecoveryStats>,
+    /// The coordinator's live per-core/per-shard execution profile — the
+    /// `cores`/`shards` halves of the STATS `profile` block (empty for
+    /// remote backends, whose cores profile host-side).
+    profile: Arc<crate::obs::ProfilePlane>,
     /// Chaos triggers (armed from [`ServeConfig::chaos`]; disarmed = the
     /// production no-op).
     chaos_drop: ChaosTrigger,
@@ -201,7 +205,27 @@ impl Shared {
             self.net_in_flight.load(Ordering::Relaxed),
         );
         if let Json::Obj(map) = &mut j {
+            // Schema version first (satellite of the observability PR):
+            // pollers hard-fail on a mismatch instead of reading nulls.
+            map.insert(
+                "stats_version".to_string(),
+                (super::protocol::STATS_VERSION as usize).into(),
+            );
             map.insert("model".to_string(), self.model.to_json());
+            // The observability plane: per-stage trace-span histograms,
+            // per-core/per-shard execution counters (cumulative — pollers
+            // diff successive snapshots for windowed rates), and the K
+            // slowest complete traces.
+            let (prof_cores, prof_shards) = self.profile.to_json();
+            map.insert(
+                "profile".to_string(),
+                Json::obj(vec![
+                    ("stages", self.metrics.stages.to_json()),
+                    ("cores", prof_cores),
+                    ("shards", prof_shards),
+                    ("slowest", self.metrics.slowest.to_json()),
+                ]),
+            );
             // Lane occupancy (ROADMAP follow-up): how full micro-batches
             // actually run. `mean`/`max` are bounded by `capacity` (= the
             // configured lanes-per-worker L).
@@ -351,6 +375,7 @@ impl Server {
             handle: coord.handle(),
             coord_metrics: Arc::clone(&coord.metrics),
             recovery,
+            profile: coord.profile(),
             chaos_drop,
             chaos_delay,
             chaos_reset,
@@ -648,6 +673,10 @@ fn reader_loop(shared: &Arc<Shared>, mut stream: TcpStream, tx: &SyncSender<Vec<
 
 fn handle_request(shared: &Arc<Shared>, tx: &SyncSender<Vec<u8>>, payload: &[u8]) {
     let m = &shared.metrics;
+    // Trace-span anchor: the admit stage covers payload decode, width
+    // check, admission control, and pending registration — everything on
+    // the reader thread before the request becomes runnable.
+    let admit_start = Instant::now();
     let req = match InferRequest::decode(payload) {
         Ok(r) => r,
         Err(e) => {
@@ -703,6 +732,7 @@ fn handle_request(shared: &Arc<Shared>, tx: &SyncSender<Vec<u8>>, payload: &[u8]
             accepted: now,
         },
     );
+    m.stages.admit.record_micros(admit_start.elapsed().as_micros() as u64);
     shared.handle.submit_reserved(cid, req.train, req.label.map(|l| l as usize));
 }
 
@@ -766,6 +796,25 @@ fn route_response(shared: &Arc<Shared>, resp: Response) {
     m.latency.record_micros(micros);
     ServeMetrics::bump(&m.completed);
     m.total_cycles.fetch_add(resp.cycles, Ordering::Relaxed);
+    // Fold the worker-stamped trace spans into the per-stage histograms
+    // and offer the complete trace to the slowest-trace ring (bounded;
+    // lock-free reject once the tail floor is established).
+    let queue_us = resp.queue_wait.as_micros() as u64;
+    let dispatch_us = resp.dispatch_wait.as_micros() as u64;
+    let step_us = resp.sim_latency.as_micros() as u64;
+    let egress_us = resp.done.elapsed().as_micros() as u64;
+    m.stages.queue.record_micros(queue_us);
+    m.stages.dispatch.record_micros(dispatch_us);
+    m.stages.step.record_micros(step_us);
+    m.stages.egress.record_micros(egress_us);
+    m.slowest.offer(crate::obs::TraceRecord {
+        id: resp.id,
+        total_us: micros,
+        queue_us,
+        dispatch_us,
+        step_us,
+        egress_us,
+    });
 
     let frame = if p.deadline.is_some_and(|d| Instant::now() > d) {
         ServeMetrics::bump(&m.deadline_expired);

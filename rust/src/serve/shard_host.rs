@@ -39,12 +39,14 @@ use anyhow::{bail, Context, Result};
 use crate::accel::Menage;
 use crate::fault::lock_recover;
 use crate::neuracore::CoreStats;
+use crate::obs::{CoreSample, ProfilePlane};
 use crate::shard::{distinct_sources, ShardedMenage};
 use crate::util::json::Json;
 
+use super::metrics::LatencyHistogram;
 use super::protocol::{
     encode_stats_reply, write_frame, ErrorCode, ErrorFrame, FrameKind, FrameReader,
-    ShardAckFrame, ShardStepFrame, DEFAULT_MAX_FRAME_LEN, NO_ID,
+    ShardAckFrame, ShardStepFrame, DEFAULT_MAX_FRAME_LEN, NO_ID, STATS_VERSION,
 };
 
 /// Host knobs; `Default` matches the CLI defaults.
@@ -97,6 +99,15 @@ struct HostShared {
     timesteps: usize,
     /// Folded stats of every *closed* connection, per core (local index).
     agg: Mutex<Vec<CoreStats>>,
+    /// Live per-core execution counters, delta-published after every
+    /// executed step across **all** sessions (open ones included) —
+    /// unlike `agg`, which only sees closed sessions. Every core maps to
+    /// this host's shard index.
+    live: ProfilePlane,
+    /// Wall time per executed SHARD_STEP (receipt-validated → ack built):
+    /// the host-side half of the driver's per-link `wire_us` — their gap
+    /// is pure wire + queueing.
+    step_wall: LatencyHistogram,
     counters: HostCounters,
     stop_accept: AtomicBool,
     stop_conns: AtomicBool,
@@ -143,7 +154,11 @@ impl HostShared {
             (t.0 + s.stuck_row_hits, t.1 + s.dead_slot_hits, t.2 + s.events_bit_flipped)
         });
         drop(agg);
+        // Only the cores half of the live plane: a host serves exactly one
+        // shard, so each core row's `shard` field already says which.
+        let (live_cores, _) = self.live.to_json();
         Json::obj(vec![
+            ("stats_version", (STATS_VERSION as usize).into()),
             ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
             // Probe-compatible `model` block (loadgen and the pipeline
             // driver both read it): a shard host's "model" is its slice.
@@ -180,6 +195,13 @@ impl HostShared {
                 ]),
             ),
             ("cores", cores),
+            (
+                "profile",
+                Json::obj(vec![
+                    ("step_wall_us", self.step_wall.summary_json()),
+                    ("cores", live_cores),
+                ]),
+            ),
             (
                 "faults",
                 Json::obj(vec![
@@ -235,6 +257,8 @@ impl ShardHostServer {
             cut_cost_in: if index == 0 { 0 } else { sharded.boundary_cost[index - 1] },
             timesteps,
             agg: Mutex::new(vec![CoreStats::default(); num_cores]),
+            live: ProfilePlane::new(vec![index; num_cores]),
+            step_wall: LatencyHistogram::default(),
             counters: HostCounters::default(),
             stop_accept: AtomicBool::new(false),
             stop_conns: AtomicBool::new(false),
@@ -338,6 +362,9 @@ fn conn_loop(shared: &Arc<HostShared>, mut stream: TcpStream) {
     // Double-buffered frontier scratch, as in the in-process run loop.
     let mut carry: Vec<u32> = Vec::new();
     let mut scratch: Vec<u32> = Vec::new();
+    // Last-published execution-profile sample per core (delta publishing
+    // into the host's live plane, one sample per executed step).
+    let mut prof_last = vec![CoreSample::default(); chip.cores.len()];
     let c = &shared.counters;
     loop {
         if shared.stop_conns.load(Ordering::Relaxed) {
@@ -385,7 +412,17 @@ fn conn_loop(shared: &Arc<HostShared>, mut stream: TcpStream) {
                     chip.inputs_processed += 1;
                     c.inputs_started.fetch_add(1, Ordering::Relaxed);
                 }
+                let wall_start = Instant::now();
                 let step_cycles = run_one_step(&mut chip, frontier, &mut carry, &mut scratch);
+                shared.step_wall.record_micros(wall_start.elapsed().as_micros() as u64);
+                // Publish this step's per-core work into the live plane
+                // (delta vs the last published sample, like the
+                // coordinator's fault/profile counters).
+                for (ci, core) in chip.cores.iter().enumerate() {
+                    let now = core.profile_sample();
+                    shared.live.add(ci, &now.delta_since(&prof_last[ci]));
+                    prof_last[ci] = now;
+                }
                 expected_seq += 1;
                 last_step = Some(step.step);
                 c.steps_executed.fetch_add(1, Ordering::Relaxed);

@@ -420,6 +420,27 @@ impl ShardedMenage {
         t
     }
 
+    /// Append every core's monotonic execution-profile sample, shard by
+    /// shard in global core order (matches [`Self::into_monolithic`]'s
+    /// core concatenation) — see [`Menage::profile_samples_into`].
+    pub fn profile_samples_into(&self, out: &mut Vec<crate::obs::CoreSample>) {
+        for s in &self.shards {
+            s.profile_samples_into(out);
+        }
+    }
+
+    /// `shard_of[c]` for every core in global order — the shard map a
+    /// [`crate::obs::ProfilePlane`] is built from.
+    pub fn core_shard_map(&self) -> Vec<usize> {
+        let mut m = Vec::with_capacity(self.num_layers());
+        for (i, s) in self.shards.iter().enumerate() {
+            for _ in 0..s.cores.len() {
+                m.push(i);
+            }
+        }
+        m
+    }
+
     /// Total analog energy across all shards (J).
     pub fn analog_energy(&self) -> f64 {
         self.shards.iter().map(|s| s.analog_energy()).sum()

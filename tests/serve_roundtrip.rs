@@ -17,9 +17,10 @@ use menage::accel::Menage;
 use menage::analog::AnalogParams;
 use menage::config::{AcceleratorConfig, ModelConfig};
 use menage::mapping::Strategy;
-use menage::serve::protocol::{write_frame, ErrorCode, FrameKind};
+use menage::serve::protocol::{write_frame, ErrorCode, FrameKind, STATS_VERSION};
 use menage::serve::{Client, Reply, ServeConfig, Server};
 use menage::snn::SpikeTrain;
+use menage::util::json::Json;
 use menage::util::rng::Rng;
 
 fn test_chip() -> Menage {
@@ -335,6 +336,149 @@ fn stats_frame_reports_model_and_counters() {
     server.shutdown();
 }
 
+/// Recursively collect every key path of a JSON tree ("a.b", "arr[].k").
+/// Arrays contribute `[]` and recurse into their first element (rows are
+/// homogeneous); an empty array pins just the `arr[]` path itself.
+fn schema_paths(j: &Json, prefix: &str, out: &mut Vec<String>) {
+    match j {
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                schema_paths(v, &p, out);
+            }
+        }
+        Json::Arr(a) => {
+            let p = format!("{prefix}[]");
+            match a.first() {
+                Some(first) => schema_paths(first, &p, out),
+                None => out.push(p),
+            }
+        }
+        _ => out.push(prefix.to_string()),
+    }
+}
+
+/// Golden STATS schema: the full key-path set of a (monolithic) server's
+/// snapshot is pinned, exactly. Adding, renaming, or removing any field is
+/// a deliberate act: bump [`STATS_VERSION`] and update this list in the
+/// same change, so pollers (`menage top`, `loadgen --profile`) never read
+/// silently drifted shapes.
+#[test]
+fn stats_snapshot_schema_is_pinned() {
+    let server = start_server(ServeConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    for i in 0..3 {
+        c.infer(&train_for(4, i)).unwrap();
+    }
+    let stats = c.stats().unwrap();
+    assert_eq!(
+        stats.get("stats_version").unwrap().as_usize().unwrap() as u64,
+        STATS_VERSION
+    );
+    let mut paths = Vec::new();
+    schema_paths(&stats, "", &mut paths);
+    paths.sort();
+    let expected = vec![
+        "counters.accepted",
+        "counters.chaos_injected",
+        "counters.completed",
+        "counters.connections_active",
+        "counters.connections_opened",
+        "counters.deadline_expired",
+        "counters.dropped_responses",
+        "counters.events_in",
+        "counters.protocol_errors",
+        "counters.rejected_bad_request",
+        "counters.rejected_overload",
+        "counters.total_cycles",
+        "counters.worker_errors",
+        "faults.dead_slot_hits",
+        "faults.events_bit_flipped",
+        "faults.stuck_row_hits",
+        "in_flight",
+        "lane_occupancy.capacity",
+        "lane_occupancy.dispatches",
+        "lane_occupancy.max",
+        "lane_occupancy.mean",
+        "latency_us.count",
+        "latency_us.max",
+        "latency_us.mean",
+        "latency_us.p50",
+        "latency_us.p90",
+        "latency_us.p99",
+        "model.classes",
+        "model.input_dim",
+        "model.timesteps",
+        "profile.cores[].core",
+        "profile.cores[].cycles",
+        "profile.cores[].events",
+        "profile.cores[].fire_ops",
+        "profile.cores[].integrations",
+        "profile.cores[].macs",
+        "profile.cores[].shard",
+        "profile.cores[].sn_rows",
+        "profile.cores[].spikes",
+        "profile.shards[].cycles",
+        "profile.shards[].events",
+        "profile.shards[].fire_ops",
+        "profile.shards[].integrations",
+        "profile.shards[].macs",
+        "profile.shards[].shard",
+        "profile.shards[].sn_rows",
+        "profile.shards[].spikes",
+        "profile.slowest[].dispatch_us",
+        "profile.slowest[].egress_us",
+        "profile.slowest[].id",
+        "profile.slowest[].queue_us",
+        "profile.slowest[].step_us",
+        "profile.slowest[].total_us",
+        "profile.stages.admit.count",
+        "profile.stages.admit.max",
+        "profile.stages.admit.mean",
+        "profile.stages.admit.p50",
+        "profile.stages.admit.p90",
+        "profile.stages.admit.p99",
+        "profile.stages.dispatch.count",
+        "profile.stages.dispatch.max",
+        "profile.stages.dispatch.mean",
+        "profile.stages.dispatch.p50",
+        "profile.stages.dispatch.p90",
+        "profile.stages.dispatch.p99",
+        "profile.stages.egress.count",
+        "profile.stages.egress.max",
+        "profile.stages.egress.mean",
+        "profile.stages.egress.p50",
+        "profile.stages.egress.p90",
+        "profile.stages.egress.p99",
+        "profile.stages.queue.count",
+        "profile.stages.queue.max",
+        "profile.stages.queue.mean",
+        "profile.stages.queue.p50",
+        "profile.stages.queue.p90",
+        "profile.stages.queue.p99",
+        "profile.stages.step.count",
+        "profile.stages.step.max",
+        "profile.stages.step.mean",
+        "profile.stages.step.p50",
+        "profile.stages.step.p90",
+        "profile.stages.step.p99",
+        "queue_depth",
+        "recovery.requests_failed",
+        "recovery.requests_resubmitted",
+        "recovery.worker_panics",
+        "recovery.workers_respawned",
+        "stats_version",
+        "throughput.events_per_s",
+        "throughput.requests_per_s",
+        "uptime_s",
+    ];
+    assert_eq!(
+        paths, expected,
+        "STATS schema drifted — bump STATS_VERSION and update this golden list"
+    );
+    server.shutdown();
+}
+
 /// Graceful shutdown drains: requests in flight when shutdown begins are
 /// still answered (through the coordinator's drain/salvage path) before
 /// connections close; afterwards the listener is gone.
@@ -448,6 +592,35 @@ fn sharded_server_stats_and_bit_identity() {
     assert!((1.0..=lanes as f64).contains(&mean), "mean occupancy {mean}");
     let max = occ.get("max").unwrap().as_usize().unwrap();
     assert!((1..=lanes).contains(&max), "max occupancy {max}");
+    // Execution profile (observability plane): versioned, with per-shard
+    // counters attributing the 12 requests' work to both pipeline shards.
+    assert_eq!(
+        stats.get("stats_version").unwrap().as_usize().unwrap() as u64,
+        STATS_VERSION
+    );
+    let profile = stats.get("profile").unwrap();
+    let prof_shards = profile.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(prof_shards.len(), 2);
+    for row in prof_shards {
+        assert!(
+            row.get("cycles").unwrap().as_usize().unwrap() > 0,
+            "every pipeline shard runs every request: {row}"
+        );
+        assert!(row.get("macs").unwrap().as_usize().unwrap() > 0, "{row}");
+    }
+    let prof_cores = profile.get("cores").unwrap().as_arr().unwrap();
+    assert!(prof_cores.len() >= 2);
+    let mapped: std::collections::BTreeSet<usize> = prof_cores
+        .iter()
+        .map(|r| r.get("shard").unwrap().as_usize().unwrap())
+        .collect();
+    assert_eq!(mapped.into_iter().collect::<Vec<_>>(), vec![0, 1], "cores span both shards");
+    // Every routed response recorded one step-stage span.
+    assert_eq!(
+        profile.get("stages").unwrap().get("step").unwrap().get("count").unwrap()
+            .as_usize().unwrap(),
+        stats.get("counters").unwrap().get("completed").unwrap().as_usize().unwrap()
+    );
 
     let chips = server.shutdown();
     assert_eq!(chips.len(), 2);
@@ -477,6 +650,17 @@ fn monolithic_stats_report_lane_occupancy() {
     let mean = occ.get("mean").unwrap().as_f64().unwrap();
     assert!((1.0..=lanes as f64).contains(&mean), "mean occupancy {mean}");
     assert!(occ.get("max").unwrap().as_usize().unwrap() <= lanes);
+    // Monolithic profile: all cores map to shard 0 and the run's work is
+    // attributed (MACs accumulate across the 6 requests).
+    let profile = stats.get("profile").unwrap();
+    let prof_cores = profile.get("cores").unwrap().as_arr().unwrap();
+    assert_eq!(prof_cores.len(), 2, "test chip has 2 cores");
+    for row in prof_cores {
+        assert_eq!(row.get("shard").unwrap().as_usize().unwrap(), 0);
+    }
+    let prof_shards = profile.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(prof_shards.len(), 1);
+    assert!(prof_shards[0].get("macs").unwrap().as_usize().unwrap() > 0);
     server.shutdown();
 }
 
