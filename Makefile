@@ -15,10 +15,12 @@ DIST_PORT_A ?= 7475
 DIST_PORT_B ?= 7476
 ## Loopback port for the observability smoke test (override on collision).
 OBS_PORT ?= 7477
+## Loopback port for the streaming-session smoke test (override on collision).
+STREAM_PORT ?= 7479
 
-.PHONY: verify build test test-lanes test-serve test-shard test-dist test-conv test-chaos chaos smoke-serve smoke-shard smoke-dist smoke-conv smoke-chaos smoke-obs lint fmt clippy bench-hotpath bench clean
+.PHONY: verify build test test-lanes test-serve test-shard test-dist test-conv test-stream test-chaos chaos smoke-serve smoke-shard smoke-dist smoke-conv smoke-chaos smoke-obs smoke-stream lint fmt clippy bench-hotpath bench clean
 
-verify: build test test-lanes test-shard test-dist test-conv
+verify: build test test-lanes test-shard test-dist test-conv test-stream
 
 build:
 	$(CARGO) build --release
@@ -55,6 +57,13 @@ test-dist:
 ## execution, plus the weight-SRAM capacity win. Also covered by `test`.
 test-conv:
 	$(CARGO) test -q --test conv_differential
+
+## The streaming-session differential suite: chunked suspend/resume
+## execution pinned bit-identical to one-shot runs at arbitrary chunk
+## boundaries (engine + serve layer, mono + sharded, ideal + non-ideal,
+## interleaved sessions, eviction accounting). Also covered by `test`.
+test-stream:
+	$(CARGO) test -q --test stream_differential
 
 ## Compressed-conv smoke: the CIFAR10-DVS e2e example runs every sample
 ## through the compressed chip AND the dense expand_conv() oracle chip and
@@ -164,6 +173,27 @@ smoke-obs: build
 		&& ./target/release/menage top --addr 127.0.0.1:$(OBS_PORT) --once \
 		&& ./target/release/menage loadgen --addr 127.0.0.1:$(OBS_PORT) \
 		--requests 4 --connections 1 --out /dev/null --shutdown-server; then \
+		wait $$SERVER_PID; \
+	else \
+		kill $$SERVER_PID 2>/dev/null; wait $$SERVER_PID 2>/dev/null; exit 1; \
+	fi
+
+## Streaming-session smoke over loopback, bounded runtime: serve a
+## synthetic model with session lanes enabled, drive it with
+## `loadgen --stream` (concurrent sessions streaming chunked trains; the
+## client re-derives every rolling prediction from the accumulated chunk
+## outputs and exits non-zero on any mismatch or lost chunk — the
+## integrity gate that proves lane state survives across chunks), then
+## gracefully shut the server down via the SHUTDOWN frame.
+smoke-stream: build
+	./target/release/menage serve --synthetic --model nmnist \
+		--addr 127.0.0.1:$(STREAM_PORT) --workers 2 --lanes 4 \
+		--session-lanes 8 --duration-secs 120 --allow-remote-shutdown & \
+	SERVER_PID=$$!; \
+	sleep 1; \
+	if ./target/release/menage loadgen --addr 127.0.0.1:$(STREAM_PORT) \
+		--stream --requests 64 --connections 4 --chunk-timesteps 2 \
+		--shutdown-server; then \
 		wait $$SERVER_PID; \
 	else \
 		kill $$SERVER_PID 2>/dev/null; wait $$SERVER_PID 2>/dev/null; exit 1; \

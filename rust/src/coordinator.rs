@@ -93,7 +93,7 @@ const HEAL_POLL: Duration = Duration::from_millis(25);
 /// so the scheduling, lane-packing, and error-routing machinery is
 /// backend-agnostic.
 #[derive(Clone)]
-enum Backend {
+pub(crate) enum Backend {
     Mono(Menage),
     Sharded(ShardedMenage),
     /// Shards live in other processes behind `shard-host` listeners; the
@@ -105,7 +105,7 @@ enum Backend {
 }
 
 impl Backend {
-    fn input_dim(&self) -> usize {
+    pub(crate) fn input_dim(&self) -> usize {
         match self {
             Backend::Mono(c) => c.cores[0].in_dim(),
             Backend::Sharded(s) => s.input_dim(),
@@ -133,12 +133,56 @@ impl Backend {
         }
     }
 
-    fn fold_lane_stats(&mut self) {
+    pub(crate) fn fold_lane_stats(&mut self) {
         match self {
             Backend::Mono(c) => c.fold_lane_stats(),
             Backend::Sharded(s) => s.fold_lane_stats(),
             // Remote stats accumulate on the hosts; nothing local to fold.
             Backend::Remote(_) => {}
+        }
+    }
+
+    /// Open (or recycle) streaming-session lane `lane`: grow the lane grid
+    /// if needed and reset exactly that lane's membranes to quiescent,
+    /// leaving every other resident session's state untouched. Remote
+    /// backends cannot host sessions — the membrane state lives in the
+    /// shard-host processes, which the session layer has no way to pin to
+    /// one client.
+    pub(crate) fn open_session_lane(&mut self, lane: usize) -> anyhow::Result<()> {
+        match self {
+            Backend::Mono(c) => c.open_session_lane(lane),
+            Backend::Sharded(s) => s.open_session_lane(lane),
+            Backend::Remote(_) => {
+                return Err(anyhow!("remote backends do not host streaming sessions"))
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold one session lane's per-lane stats into the core totals. MUST
+    /// run before the lane is recycled for another session — an evicted
+    /// session's work would otherwise vanish from the energy report and
+    /// the profile plane (pinned by `session_eviction_folds_lane_stats`).
+    pub(crate) fn fold_session_lane(&mut self, lane: usize) {
+        match self {
+            Backend::Mono(c) => c.fold_session_lane(lane),
+            Backend::Sharded(s) => s.fold_session_lane(lane),
+            Backend::Remote(_) => {}
+        }
+    }
+
+    /// Run one chunk on each of several resident session lanes without
+    /// resetting membranes first (suspend/resume). `jobs` must carry
+    /// strictly ascending lanes, each previously opened.
+    pub(crate) fn run_session_chunks_into(
+        &mut self,
+        jobs: &[(usize, &SpikeTrain)],
+        outs: &mut Vec<crate::accel::RunOutput>,
+    ) -> anyhow::Result<()> {
+        match self {
+            Backend::Mono(c) => c.run_session_chunks_into(jobs, outs),
+            Backend::Sharded(s) => s.run_session_chunks_into(jobs, outs),
+            Backend::Remote(_) => Err(anyhow!("remote backends do not host streaming sessions")),
         }
     }
 
@@ -190,7 +234,7 @@ impl Backend {
     /// back (sharded cores are reassembled in global layer order). A
     /// remote backend owns no cores — its stats live in the shard hosts'
     /// STATS registries — so it yields `None`.
-    fn into_chip(self) -> Option<Menage> {
+    pub(crate) fn into_chip(self) -> Option<Menage> {
         match self {
             Backend::Mono(c) => Some(c),
             Backend::Sharded(s) => Some(s.into_monolithic()),

@@ -135,6 +135,24 @@ impl SoaState {
         self.lanes = lanes;
     }
 
+    /// Reset every round of **one** lane to the quiescent state, leaving
+    /// every other lane's membranes untouched — the primitive behind
+    /// streaming-session lane reuse: a session slot is recycled by
+    /// resetting only its own lane-major column.
+    pub fn reset_lane(&mut self, lane: usize, v_reset: f32, sweep_skip: bool) {
+        assert!(lane < self.lanes, "lane {lane} out of {} lanes", self.lanes);
+        for r in self.rounds.iter_mut() {
+            for slot in 0..self.slots {
+                let i = slot * self.lanes + lane;
+                r.mem[i] = v_reset;
+                r.acc[i] = 0;
+                r.err[i] = 0.0;
+                r.err_c[i] = 0.0;
+                r.dirty[i] = !sweep_skip;
+            }
+        }
+    }
+
     /// Debug/test introspection: `(mem, acc, dirty)` per slot of one
     /// round of one lane.
     pub fn slot_states(&self, round: usize, lane: usize) -> Vec<(f32, i32, bool)> {
@@ -202,6 +220,39 @@ mod tests {
         // Growing to fewer/equal lanes is a no-op.
         st.grow_lanes(3, 0.5, true);
         assert_eq!(st.lanes(), 4);
+    }
+
+    #[test]
+    fn reset_lane_touches_only_its_column() {
+        let mut st = SoaState::new(2, 3, 3, 0.25, false);
+        for r in st.rounds.iter_mut() {
+            for i in 0..r.mem.len() {
+                r.mem[i] = i as f32;
+                r.acc[i] = i as i32;
+                r.err[i] = i as f64;
+                r.err_c[i] = -(i as f64);
+                r.dirty[i] = true;
+            }
+        }
+        st.reset_lane(1, 0.25, true);
+        for r in &st.rounds {
+            for slot in 0..3 {
+                for lane in 0..3 {
+                    let i = slot * 3 + lane;
+                    if lane == 1 {
+                        assert_eq!(r.mem[i], 0.25);
+                        assert_eq!(r.acc[i], 0);
+                        assert_eq!(r.err[i], 0.0);
+                        assert_eq!(r.err_c[i], 0.0);
+                        assert!(!r.dirty[i]);
+                    } else {
+                        assert_eq!(r.mem[i], i as f32, "other lane clobbered");
+                        assert_eq!(r.acc[i], i as i32);
+                        assert!(r.dirty[i]);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

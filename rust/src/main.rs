@@ -859,6 +859,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "chaos",
             "remote-shards",
             "remote-window",
+            "session-lanes",
+            "session-idle-secs",
         ],
         &["synthetic", "allow-remote-shutdown", "expand-conv"],
     )?;
@@ -890,6 +892,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_in_flight: args.get_usize("max-in-flight", 256)?.max(1),
         allow_remote_shutdown: args.has("allow-remote-shutdown"),
         chaos,
+        session_lanes: args.get_usize("session-lanes", 8)?.max(1),
+        session_idle: Duration::from_secs(
+            args.get_usize("session-idle-secs", 60)?.max(1) as u64,
+        ),
         ..ServeConfig::default()
     };
     let duration = args.get_usize("duration-secs", 0)?;
@@ -1431,6 +1437,113 @@ fn loadgen_connection(plan: &LoadPlan) -> Result<LoadStats> {
     Ok(stats)
 }
 
+/// What one streaming load-generator connection is asked to do
+/// (`loadgen --stream`): open `sessions` sessions one after another and
+/// stream each train through in `chunk_timesteps`-step SESSION_CHUNK
+/// frames.
+struct StreamPlan {
+    addr: String,
+    conn_idx: usize,
+    sessions: usize,
+    chunk_timesteps: usize,
+    input_dim: usize,
+    timesteps: usize,
+    classes: usize,
+    rate: f64,
+    seed: u64,
+}
+
+/// One streaming load-generator connection.
+///
+/// Each chunk is a synchronous round trip (per-chunk latency is the
+/// metric of interest), and the server's running prediction is checked
+/// against a client-side fold of the chunk outputs — the server computes
+/// it from session-cumulative class counts, so any divergence means lane
+/// state leaked or was dropped between chunks.
+///
+/// Sessions are stateful: the one-shot path's retry machinery cannot
+/// replay a half-streamed train through a fresh session, so a failed
+/// chunk round trip abandons the session as a terminal `lost` instead of
+/// reconnecting.
+fn loadgen_stream_connection(plan: &StreamPlan) -> Result<LoadStats> {
+    let mut client = Client::connect_backoff(
+        plan.addr.as_str(),
+        40,
+        Duration::from_millis(50),
+        Duration::from_millis(500),
+        plan.seed.wrapping_mul(31).wrapping_add(plan.conn_idx as u64),
+    )?;
+    let mut rng = Rng::new(plan.seed.wrapping_mul(10_007).wrapping_add(plan.conn_idx as u64));
+    let mut stats = LoadStats::default();
+    for s in 0..plan.sessions {
+        let sid = ((plan.conn_idx as u64) << 32) | s as u64;
+        if let Err(e) = client.open_session(sid) {
+            // Admission rejects (session table full) are an expected
+            // outcome under load, not an integrity failure.
+            if format!("{e:#}").contains("[overload]") {
+                stats.overload += 1;
+            } else {
+                stats.errors += 1;
+            }
+            continue;
+        }
+        // Heterogeneous train lengths, same scheme as the one-shot path.
+        let steps = 1 + (s * 7 + plan.conn_idx) % plan.timesteps.max(1);
+        let train = SpikeTrain::bernoulli(plan.input_dim, steps, plan.rate, &mut rng);
+        let mut class_counts = vec![0u64; plan.classes];
+        let (mut t0, mut seq, mut bad) = (0usize, 0u64, false);
+        while t0 < steps {
+            let t1 = (t0 + plan.chunk_timesteps).min(steps);
+            let chunk = train.slice_steps(t0..t1);
+            stats.events_sent += chunk.total_spikes() as u64;
+            let sent = Instant::now();
+            match client.session_chunk(sid, seq, &chunk) {
+                Ok(out) => {
+                    stats.lat_us.push(sent.elapsed().as_secs_f64() * 1e6);
+                    for (i, &c) in out.output.counts().iter().enumerate() {
+                        class_counts[i] += c as u64;
+                    }
+                    // Same strict-`>` argmax as `SpikeTrain::argmax_class`
+                    // (ties toward the lower class index).
+                    let mut expect = 0usize;
+                    for (i, &v) in class_counts.iter().enumerate() {
+                        if v > class_counts[expect] {
+                            expect = i;
+                        }
+                    }
+                    if out.predicted as usize == expect
+                        && out.output.num_neurons == plan.classes
+                    {
+                        stats.ok += 1;
+                    } else {
+                        stats.mismatched += 1;
+                        bad = true;
+                    }
+                }
+                Err(_) => {
+                    stats.lost += 1;
+                    bad = true;
+                }
+            }
+            if bad {
+                break;
+            }
+            seq += 1;
+            t0 = t1;
+        }
+        if bad {
+            continue;
+        }
+        // The close-ack confirms the lane's stats were folded back into
+        // the chip totals; losing it would leak the lane until the idle
+        // sweep, so it counts against integrity.
+        if client.close_session(sid).is_err() {
+            stats.lost += 1;
+        }
+    }
+    Ok(stats)
+}
+
 /// `menage loadgen` — drive a running `menage serve` over N concurrent
 /// connections and report throughput + latency percentiles, emitting the
 /// machine-readable `BENCH_serve.json` for the cross-PR perf trajectory.
@@ -1446,8 +1559,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             "seed",
             "shards",
             "out",
+            "chunk-timesteps",
         ],
-        &["shutdown-server", "profile"],
+        &["shutdown-server", "profile", "stream"],
     )?;
     let addr = args.get_or("addr", "127.0.0.1:7471");
     let connections = args.get_usize("connections", 8)?.max(1);
@@ -1461,6 +1575,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 1)? as u64;
     let out = args.get_or("out", "BENCH_serve.json");
     let profile_flag = args.has("profile");
+    let stream = args.has("stream");
+    if !stream && args.get("chunk-timesteps").is_some() {
+        bail!("--chunk-timesteps only applies with --stream");
+    }
+    let chunk_timesteps = args.get_usize("chunk-timesteps", 4)?.max(1);
 
     // Probe: wait for the server and learn the model's dimensions.
     // `--profile` requires the versioned snapshot (it diffs the profile
@@ -1487,27 +1606,51 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     if expect_shards > 0 && server_shards != expect_shards {
         bail!("server runs {server_shards} shard(s), --shards expected {expect_shards}");
     }
-    println!(
-        "loadgen → {addr}: {connections} connections × pipeline {pipeline}, {total} requests \
-         (input_dim {input_dim}, T≤{timesteps}, rate {rate}, {server_shards} shard(s))"
-    );
+    if stream {
+        println!(
+            "loadgen --stream → {addr}: {connections} connections, {total} sessions in \
+             {chunk_timesteps}-step chunks (input_dim {input_dim}, T≤{timesteps}, rate {rate}, \
+             {server_shards} shard(s))"
+        );
+    } else {
+        println!(
+            "loadgen → {addr}: {connections} connections × pipeline {pipeline}, {total} requests \
+             (input_dim {input_dim}, T≤{timesteps}, rate {rate}, {server_shards} shard(s))"
+        );
+    }
 
     let t0 = Instant::now();
-    let handles: Vec<_> = (0..connections)
+    let handles: Vec<std::thread::JoinHandle<Result<LoadStats>>> = (0..connections)
         .map(|c| {
-            let plan = LoadPlan {
-                addr: addr.clone(),
-                conn_idx: c,
-                requests: total / connections + usize::from(c < total % connections),
-                pipeline,
-                input_dim,
-                timesteps,
-                classes,
-                rate,
-                deadline_ms,
-                seed,
-            };
-            std::thread::spawn(move || loadgen_connection(&plan))
+            let share = total / connections + usize::from(c < total % connections);
+            if stream {
+                let plan = StreamPlan {
+                    addr: addr.clone(),
+                    conn_idx: c,
+                    sessions: share,
+                    chunk_timesteps,
+                    input_dim,
+                    timesteps,
+                    classes,
+                    rate,
+                    seed,
+                };
+                std::thread::spawn(move || loadgen_stream_connection(&plan))
+            } else {
+                let plan = LoadPlan {
+                    addr: addr.clone(),
+                    conn_idx: c,
+                    requests: share,
+                    pipeline,
+                    input_dim,
+                    timesteps,
+                    classes,
+                    rate,
+                    deadline_ms,
+                    seed,
+                };
+                std::thread::spawn(move || loadgen_connection(&plan))
+            }
         })
         .collect();
     let mut agg = LoadStats::default();
@@ -1542,11 +1685,21 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     };
 
     let mut table = Table::new(
-        format!("loadgen: {total} requests over {connections} connections"),
+        if stream {
+            // In stream mode the latency sample set and the ok/mismatched
+            // counters are per *chunk*; overload/errors/lost per session.
+            format!("loadgen --stream: {total} sessions over {connections} connections")
+        } else {
+            format!("loadgen: {total} requests over {connections} connections")
+        },
         &["metric", "value"],
     );
     let mut row = |k: &str, v: String| table.row(&[k.to_string(), v]);
-    row("answered", format!("{answered} / {total}"));
+    if stream {
+        row("chunks answered", answered.to_string());
+    } else {
+        row("answered", format!("{answered} / {total}"));
+    }
     row("ok", agg.ok.to_string());
     row("overload-rejected", agg.overload.to_string());
     row("deadline-expired", agg.deadline.to_string());
@@ -1558,7 +1711,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     row("recovered", agg.recovered.to_string());
     row("lost (terminal)", agg.lost.to_string());
     row("wall time", format!("{:.3}s", wall.as_secs_f64()));
-    row("throughput", format!("{rps:.1} req/s"));
+    row("throughput", format!("{rps:.1} {}", if stream { "chunks/s" } else { "req/s" }));
     row("event throughput", format!("{:.2} M events/s", eps / 1e6));
     row("latency mean", format!("{mean_us:.0} µs"));
     row("latency p50", format!("{:.0} µs", q.quantile(0.50)));
@@ -1596,9 +1749,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     };
     let j = Json::obj(vec![
         ("bench", "serve".into()),
+        ("mode", if stream { "stream" } else { "oneshot" }.into()),
         ("addr", addr.as_str().into()),
         ("connections", connections.into()),
         ("requests", total.into()),
+        ("chunk_timesteps", if stream { chunk_timesteps.into() } else { Json::Null }),
         ("pipeline", pipeline.into()),
         ("rate", rate.into()),
         ("deadline_ms", (deadline_ms as usize).into()),
@@ -1953,6 +2108,7 @@ USAGE:
                    [--max-in-flight N] [--duration-secs S] [--shards K]
                    [--allow-remote-shutdown] [--strategy S] [--analog A]
                    [--faults SPEC] [--chaos SPEC]
+                   [--session-lanes N] [--session-idle-secs S]
                    [--remote-shards HOST:PORT,HOST:PORT,...] [--remote-window W]
   menage shard-host --model M --accel A --shards K --shard-index I
                    [--addr HOST:PORT] [--synthetic] [--strategy S] [--analog A]
@@ -1960,7 +2116,7 @@ USAGE:
   menage loadgen   [--addr HOST:PORT] [--connections C] [--requests N]
                    [--pipeline P] [--rate R] [--deadline-ms D] [--seed S]
                    [--shards K] [--out BENCH_serve.json] [--shutdown-server]
-                   [--profile]
+                   [--profile] [--stream] [--chunk-timesteps T]
   menage top       [--addr HOST:PORT] [--interval-ms MS] [--count N] [--once]
 
 serve/loadgen speak the length-prefixed binary protocol documented in
@@ -1977,6 +2133,17 @@ fails unless the profile block is present); --count N stops after N
 polls. loadgen --profile records the same breakdown into BENCH_serve.json
 (server stage histograms for client-vs-server latency attribution, plus
 this run's per-core/per-shard execution-counter delta).
+
+Streaming sessions: serve pins one chip lane per open session
+(--session-lanes, default 8) whose membrane state persists across
+SESSION_CHUNK frames — a chunked train answers bit-identically to a
+one-shot INFER over the concatenated train. Idle sessions are evicted
+after --session-idle-secs (default 60), folding their stats back into
+the chip totals. loadgen --stream drives this path: each request becomes
+a session streamed in --chunk-timesteps-step chunks (default 4),
+reporting per-chunk latency and sustained events/s, and checking the
+server's running prediction against a client-side fold of the chunk
+outputs.
 
 --shards K partitions the layer pipeline across K chips (ILP/DP cut
 minimizing inter-shard spike traffic under per-chip capacity), with

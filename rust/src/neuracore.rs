@@ -482,6 +482,29 @@ impl NeuraCore {
         }
     }
 
+    /// Reset **one** lane's membrane state and MEM_E queue without
+    /// touching any other lane — the streaming-session primitive: opening
+    /// a session on a recycled lane must not perturb the resident state of
+    /// its neighbours. The lane's accumulated [`CoreStats`] are kept
+    /// (fold them first with [`Self::fold_one_lane`] if the lane is being
+    /// handed to a new owner).
+    pub fn reset_lane(&mut self, lane: usize) {
+        self.lane_state.reset_lane(lane, self.lif.v_reset, self.sweep_skip);
+        self.lane_ctl[lane].queue.clear();
+    }
+
+    /// Fold **one** lane's accumulated scalar statistics into the
+    /// core-level [`Self::stats`] and zero that lane's counters — the
+    /// single-lane form of [`Self::fold_lane_stats`], used when a
+    /// streaming session is evicted and its lane slot reused: without the
+    /// fold, the departing session's work would be attributed to the next
+    /// session or lost entirely at shutdown. Per-step series are dropped,
+    /// exactly as in the all-lane fold.
+    pub fn fold_one_lane(&mut self, lane: usize) {
+        let s = std::mem::take(&mut self.lane_stats[lane]);
+        fold_scalar_stats(&mut self.stats, s);
+    }
+
     /// Per-lane statistics (bit-identical to a fresh sequential core fed
     /// the same input — sequential execution is the same engine at L=1).
     pub fn lane_stats(&self, lane: usize) -> &CoreStats {
@@ -569,21 +592,9 @@ impl NeuraCore {
     /// consumers the series exist for). Capture [`Self::lane_stats`]
     /// before folding if per-lane series are needed.
     pub fn fold_lane_stats(&mut self) {
+        let stats = &mut self.stats;
         for lane in self.lane_stats.iter_mut() {
-            let s = std::mem::take(lane);
-            self.stats.cycles += s.cycles;
-            self.stats.events_dispatched += s.events_dispatched;
-            self.stats.sn_rows_read += s.sn_rows_read;
-            self.stats.macs += s.macs;
-            self.stats.integrations += s.integrations;
-            self.stats.fire_ops += s.fire_ops;
-            self.stats.spikes_out += s.spikes_out;
-            self.stats.peak_event_queue =
-                self.stats.peak_event_queue.max(s.peak_event_queue);
-            self.stats.dropped_events += s.dropped_events;
-            self.stats.stuck_row_hits += s.stuck_row_hits;
-            self.stats.dead_slot_hits += s.dead_slot_hits;
-            self.stats.events_bit_flipped += s.events_bit_flipped;
+            fold_scalar_stats(stats, std::mem::take(lane));
         }
     }
 
@@ -632,6 +643,26 @@ impl NeuraCore {
     pub fn mac_energy(&self) -> f64 {
         self.syns[0].energy_per_mac
     }
+}
+
+/// Fold one lane's scalar counters into a core-level [`CoreStats`] — the
+/// single definition both [`NeuraCore::fold_lane_stats`] and
+/// [`NeuraCore::fold_one_lane`] share, so all-lane and per-lane folding
+/// cannot diverge. Per-step series are intentionally not concatenated
+/// (see [`NeuraCore::fold_lane_stats`]).
+fn fold_scalar_stats(into: &mut CoreStats, s: CoreStats) {
+    into.cycles += s.cycles;
+    into.events_dispatched += s.events_dispatched;
+    into.sn_rows_read += s.sn_rows_read;
+    into.macs += s.macs;
+    into.integrations += s.integrations;
+    into.fire_ops += s.fire_ops;
+    into.spikes_out += s.spikes_out;
+    into.peak_event_queue = into.peak_event_queue.max(s.peak_event_queue);
+    into.dropped_events += s.dropped_events;
+    into.stuck_row_hits += s.stuck_row_hits;
+    into.dead_slot_hits += s.dead_slot_hits;
+    into.events_bit_flipped += s.events_bit_flipped;
 }
 
 /// Apply the transient MEM_E bit-flip fault to one incoming event batch:
@@ -1223,6 +1254,40 @@ mod tests {
             assert_eq!(core.lane_stats(i), &CoreStats::default());
         }
         assert_eq!(core.analog_energy(), energy_before, "folding changed energy");
+    }
+
+    /// reset_lane clears exactly one lane's state (its neighbours' resident
+    /// membranes survive) and fold_one_lane moves exactly one lane's
+    /// counters to the core.
+    #[test]
+    fn reset_lane_and_fold_one_lane_are_per_lane() {
+        let layer = random_layer(30, 12, 0.4, 71);
+        let cfg = small_cfg(4, 3);
+        let inputs: Vec<SpikeTrain> =
+            (0..3).map(|i| random_input(30, 6, 0.25, 95 + i as u64)).collect();
+        let mut core = build_core(&layer, &cfg, true);
+        run_core_lanes(&mut core, &inputs);
+
+        let lane0_before: Vec<_> =
+            (0..core.rounds()).map(|r| core.lane_slot_states(0, r)).collect();
+        let lane1_macs = core.lane_stats(1).macs;
+        let lane0_macs = core.lane_stats(0).macs;
+        assert!(lane1_macs > 0);
+
+        core.reset_lane(1);
+        for r in 0..core.rounds() {
+            assert_eq!(core.lane_slot_states(0, r), lane0_before[r], "lane 0 clobbered");
+            for (mem, acc, _) in core.lane_slot_states(1, r) {
+                assert_eq!(mem, 0.0);
+                assert_eq!(acc, 0);
+            }
+        }
+        // Stats survive the reset; fold_one_lane moves only lane 1's.
+        assert_eq!(core.lane_stats(1).macs, lane1_macs);
+        core.fold_one_lane(1);
+        assert_eq!(core.stats.macs, lane1_macs);
+        assert_eq!(core.lane_stats(1), &CoreStats::default());
+        assert_eq!(core.lane_stats(0).macs, lane0_macs, "lane 0 stats folded too");
     }
 
     #[test]

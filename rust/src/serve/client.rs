@@ -21,7 +21,8 @@ use crate::util::rng::Rng;
 
 use super::protocol::{
     decode_stats_reply, write_frame, ErrorCode, ErrorFrame, Frame, FrameKind, FrameReader,
-    InferRequest, InferResponse, ShardAckFrame, ShardStepFrame, DEFAULT_MAX_FRAME_LEN,
+    InferRequest, InferResponse, SessionChunkFrame, SessionIdFrame, SessionOutFrame,
+    ShardAckFrame, ShardStepFrame, DEFAULT_MAX_FRAME_LEN,
 };
 
 /// Exponential backoff schedule with jitter: attempt `i` waits
@@ -60,6 +61,10 @@ fn decode_reply(kind: u8, payload: &[u8]) -> Result<Reply> {
         Some(FrameKind::Pong) => Reply::Pong,
         Some(FrameKind::StatsReply) => Reply::Stats(decode_stats_reply(payload)?),
         Some(FrameKind::ShardAck) => Reply::ShardAck(ShardAckFrame::decode(payload)?),
+        // Session acks are the request frame echoed back (s→c direction).
+        Some(FrameKind::SessionOpen) => Reply::SessionOpened(SessionIdFrame::decode(payload)?),
+        Some(FrameKind::SessionClose) => Reply::SessionClosed(SessionIdFrame::decode(payload)?),
+        Some(FrameKind::SessionOut) => Reply::SessionOut(SessionOutFrame::decode(payload)?),
         other => bail!("unexpected frame from server: {other:?} (kind byte {kind})"),
     })
 }
@@ -73,6 +78,12 @@ pub enum Reply {
     Stats(Json),
     /// A shard-host's per-timestep result (distributed pipeline link).
     ShardAck(ShardAckFrame),
+    /// SESSION_OPEN ack: the session's lane is pinned server-side.
+    SessionOpened(SessionIdFrame),
+    /// SESSION_CLOSE ack: the lane is folded and freed.
+    SessionClosed(SessionIdFrame),
+    /// One streamed chunk's result (per-chunk cycles + rolling predicted).
+    SessionOut(SessionOutFrame),
 }
 
 /// Blocking connection to a `menage serve` instance.
@@ -280,6 +291,73 @@ impl Client {
                 "server's STATS snapshot carries no stats_version (pre-v{want} server) — \
                  this poller needs a server with the profile block"
             ),
+        }
+    }
+
+    /// Open a streaming session: the server pins a chip lane whose
+    /// membrane state persists across [`Self::session_chunk`] calls until
+    /// [`Self::close_session`] (or eviction). Blocks for the open-ack; a
+    /// full server answers `ERROR Overload` (no free session lane).
+    pub fn open_session(&mut self, sid: u64) -> Result<()> {
+        let f = SessionIdFrame { sid };
+        write_frame(&mut self.stream, FrameKind::SessionOpen, &f.encode())
+            .context("sending SESSION_OPEN")?;
+        loop {
+            match self.recv_reply()? {
+                Reply::SessionOpened(ack) if ack.sid == sid => return Ok(()),
+                Reply::Error(e) if e.id == sid => {
+                    bail!("SESSION_OPEN {sid} refused: [{}] {}", e.code.name(), e.message)
+                }
+                _ => continue,
+            }
+        }
+    }
+
+    /// Send one SESSION_CHUNK without waiting for its SESSION_OUT — the
+    /// pipelined shape (`seq` must be strict from 0; collect replies with
+    /// [`Self::recv_reply`] / [`Self::recv_reply_timeout`]).
+    pub fn send_session_chunk(&mut self, sid: u64, seq: u64, chunk: &SpikeTrain) -> Result<()> {
+        let f = SessionChunkFrame { sid, seq, chunk: chunk.clone() };
+        write_frame(&mut self.stream, FrameKind::SessionChunk, &f.encode())
+            .context("sending SESSION_CHUNK")?;
+        Ok(())
+    }
+
+    /// Synchronous chunk: send, then block for this `(sid, seq)`'s
+    /// SESSION_OUT. A server-sent ERROR for this sid becomes an `Err`
+    /// (after which the session is gone — evicted server-side).
+    pub fn session_chunk(
+        &mut self,
+        sid: u64,
+        seq: u64,
+        chunk: &SpikeTrain,
+    ) -> Result<SessionOutFrame> {
+        self.send_session_chunk(sid, seq, chunk)?;
+        loop {
+            match self.recv_reply()? {
+                Reply::SessionOut(out) if out.sid == sid && out.seq == seq => return Ok(out),
+                Reply::Error(e) if e.id == sid => {
+                    bail!("SESSION_CHUNK {sid}/{seq} failed: [{}] {}", e.code.name(), e.message)
+                }
+                _ => continue,
+            }
+        }
+    }
+
+    /// Close a streaming session (blocks for the close-ack); the server
+    /// folds the lane's stats into its chip totals and frees the lane.
+    pub fn close_session(&mut self, sid: u64) -> Result<()> {
+        let f = SessionIdFrame { sid };
+        write_frame(&mut self.stream, FrameKind::SessionClose, &f.encode())
+            .context("sending SESSION_CLOSE")?;
+        loop {
+            match self.recv_reply()? {
+                Reply::SessionClosed(ack) if ack.sid == sid => return Ok(()),
+                Reply::Error(e) if e.id == sid => {
+                    bail!("SESSION_CLOSE {sid} failed: [{}] {}", e.code.name(), e.message)
+                }
+                _ => continue,
+            }
         }
     }
 

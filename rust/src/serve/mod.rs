@@ -23,6 +23,10 @@
 //!   per-stage trace-span histograms, per-core/per-shard execution
 //!   counters, and the slowest-trace ring behind the versioned `profile`
 //!   block (`protocol::STATS_VERSION`; rendered live by `menage top`).
+//! * [`session`] — server-side streaming sessions: one pool thread pins
+//!   a chip lane per open session so SESSION_CHUNK frames resume from the
+//!   suspended membrane state, bit-identical to a one-shot run over the
+//!   concatenated train (`tests/stream_differential.rs`).
 //! * [`shard_host`] — serve ONE chip of a [`crate::mapping::ShardPlan`]
 //!   over the same protocol (`menage shard-host`), so a sharded pipeline
 //!   can span processes.
@@ -43,6 +47,7 @@ pub mod metrics;
 pub mod protocol;
 pub mod remote_shard;
 pub mod server;
+pub mod session;
 pub mod shard_host;
 
 pub use client::{backoff_schedule, Client, InferReply, Reply};
@@ -50,4 +55,5 @@ pub use metrics::ServeMetrics;
 pub use protocol::{ErrorCode, FrameKind};
 pub use remote_shard::{RemoteLinkStats, RemoteShardConfig, RemoteShardPipeline};
 pub use server::{ModelInfo, ServeConfig, Server};
+pub use session::{SessionCounters, SessionPool};
 pub use shard_host::{ShardHostConfig, ShardHostServer};

@@ -26,6 +26,24 @@
 //! | 8    | SHUTDOWN       | c→s  | empty (honored only with `allow_remote_shutdown`; acked with PONG) |
 //! | 9    | SHARD_STEP     | c→s  | `u64 seq, u32 step, frontier train (exactly 1 timestep)` |
 //! | 10   | SHARD_ACK      | s→c  | `u64 seq, u32 step, u64 step_cycles, frontier train (exactly 1 timestep)` |
+//! | 11   | SESSION_OPEN   | c→s, s→c | `u64 sid` (server echoes the frame back as the open-ack) |
+//! | 12   | SESSION_CHUNK  | c→s  | `u64 sid, u64 seq, chunk train` |
+//! | 13   | SESSION_OUT    | s→c  | `u64 sid, u64 seq, u64 chunk_cycles, u32 predicted, output chunk train` |
+//! | 14   | SESSION_CLOSE  | c→s, s→c | `u64 sid` (server echoes the frame back as the close-ack) |
+//!
+//! SESSION_* frames implement **stateful streaming sessions**: a
+//! SESSION_OPEN pins a server-side lane whose membrane state *persists*
+//! across chunks (admission failures answer `ERROR Overload` with the
+//! sid as the error id). Each SESSION_CHUNK carries the stream's next
+//! event chunk under a strict per-session sequence number starting at 0
+//! — a gap, replay, or reorder evicts the session with `ERROR
+//! BadRequest` (the connection survives). Every chunk is answered by a
+//! SESSION_OUT echoing `sid`/`seq` with the chunk's classifier-layer
+//! output train, its modeled cycles, and the prediction over the
+//! session's **cumulative** per-class spike counts. SESSION_CLOSE (or
+//! connection teardown, or idle timeout) evicts the session and folds
+//! its lane statistics into the chip totals. `sid` is scoped to its
+//! connection.
 //!
 //! SHARD_STEP/SHARD_ACK carry one pipeline timestep between a distributed
 //! driver and a `menage shard-host` process (see `serve::shard_host` /
@@ -63,8 +81,10 @@ pub const VERSION: u8 = 1;
 /// v1 = the pre-profile shape (no version field — absent means v1);
 /// v2 = adds `stats_version` and the `profile` block (per-stage trace
 /// histograms, per-core/per-shard execution counters, slowest traces),
-/// and extends `remote_links` with ack/wire/wait attribution.
-pub const STATS_VERSION: u64 = 2;
+/// and extends `remote_links` with ack/wire/wait attribution;
+/// v3 = adds the `sessions` block (streaming-session open/close/evict/
+/// reject counters and the resident-lane gauge).
+pub const STATS_VERSION: u64 = 3;
 /// Header bytes before the payload.
 pub const HEADER_LEN: usize = 8;
 /// Default cap on a single frame's payload (guards allocations; a server
@@ -89,6 +109,10 @@ pub enum FrameKind {
     Shutdown = 8,
     ShardStep = 9,
     ShardAck = 10,
+    SessionOpen = 11,
+    SessionChunk = 12,
+    SessionOut = 13,
+    SessionClose = 14,
 }
 
 impl FrameKind {
@@ -104,6 +128,10 @@ impl FrameKind {
             8 => Self::Shutdown,
             9 => Self::ShardStep,
             10 => Self::ShardAck,
+            11 => Self::SessionOpen,
+            12 => Self::SessionChunk,
+            13 => Self::SessionOut,
+            14 => Self::SessionClose,
             _ => return None,
         })
     }
@@ -453,6 +481,104 @@ impl ShardAckFrame {
     }
 }
 
+/// SESSION_OPEN / SESSION_CLOSE payload: just the client-chosen session
+/// id (scoped to the connection). The server echoes the same frame back
+/// as the open-/close-ack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionIdFrame {
+    pub sid: u64,
+}
+
+impl SessionIdFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8);
+        put_u64(&mut out, self.sid);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let sid = c.u64("sid")?;
+        c.finish("SESSION_OPEN/CLOSE")?;
+        Ok(Self { sid })
+    }
+}
+
+/// SESSION_CHUNK payload: the next event chunk of one streaming session.
+#[derive(Debug, Clone)]
+pub struct SessionChunkFrame {
+    /// Session id (from the SESSION_OPEN), scoped to the connection.
+    pub sid: u64,
+    /// Strict per-session chunk sequence number, starting at 0 and
+    /// incrementing by 1 — any gap, replay, or reorder evicts the session
+    /// (membrane state would silently desynchronize otherwise).
+    pub seq: u64,
+    /// This chunk's events: a train of the model's input width whose
+    /// timesteps extend the session's stream (may be any length ≥ 0).
+    pub chunk: SpikeTrain,
+}
+
+impl SessionChunkFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.chunk.wire_len());
+        put_u64(&mut out, self.sid);
+        put_u64(&mut out, self.seq);
+        self.chunk.write_wire(&mut out);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let sid = c.u64("sid")?;
+        let seq = c.u64("seq")?;
+        let chunk = c.train("chunk")?;
+        c.finish("SESSION_CHUNK")?;
+        Ok(Self { sid, seq, chunk })
+    }
+}
+
+/// SESSION_OUT payload: the incremental result for one session chunk.
+#[derive(Debug, Clone)]
+pub struct SessionOutFrame {
+    /// Echo of the chunk's session id.
+    pub sid: u64,
+    /// Echo of the chunk's sequence number.
+    pub seq: u64,
+    /// Modeled on-accelerator cycles for exactly this chunk; summing them
+    /// over a session reproduces the one-shot run's total bit-identically.
+    pub chunk_cycles: u64,
+    /// Prediction over the session's **cumulative** classifier spike
+    /// counts (all chunks so far) — ties break to the lower class index,
+    /// matching `SpikeTrain::argmax_class`.
+    pub predicted: u32,
+    /// The classifier layer's output train for exactly this chunk;
+    /// concatenating them reproduces the one-shot output train.
+    pub output: SpikeTrain,
+}
+
+impl SessionOutFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(28 + self.output.wire_len());
+        put_u64(&mut out, self.sid);
+        put_u64(&mut out, self.seq);
+        put_u64(&mut out, self.chunk_cycles);
+        put_u32(&mut out, self.predicted);
+        self.output.write_wire(&mut out);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let sid = c.u64("sid")?;
+        let seq = c.u64("seq")?;
+        let chunk_cycles = c.u64("chunk_cycles")?;
+        let predicted = c.u32("predicted")?;
+        let output = c.train("output")?;
+        c.finish("SESSION_OUT")?;
+        Ok(Self { sid, seq, chunk_cycles, predicted, output })
+    }
+}
+
 /// Encode a STATS_REPLY payload from the metrics snapshot.
 pub fn encode_stats_reply(stats: &Json) -> Vec<u8> {
     let mut out = Vec::new();
@@ -658,12 +784,54 @@ mod tests {
     }
 
     #[test]
+    fn session_frames_roundtrip() {
+        let open = SessionIdFrame { sid: 42 };
+        assert_eq!(SessionIdFrame::decode(&open.encode()).unwrap(), open);
+        let chunk = SessionChunkFrame { sid: 42, seq: 3, chunk: train() };
+        let back = SessionChunkFrame::decode(&chunk.encode()).unwrap();
+        assert_eq!(back.sid, 42);
+        assert_eq!(back.seq, 3);
+        assert_eq!(back.chunk, chunk.chunk);
+        let out = SessionOutFrame {
+            sid: 42,
+            seq: 3,
+            chunk_cycles: 777,
+            predicted: 2,
+            output: train(),
+        };
+        let back = SessionOutFrame::decode(&out.encode()).unwrap();
+        assert_eq!(back.sid, 42);
+        assert_eq!(back.seq, 3);
+        assert_eq!(back.chunk_cycles, 777);
+        assert_eq!(back.predicted, 2);
+        assert_eq!(back.output, out.output);
+        // A 0-timestep chunk is a legal keepalive.
+        let empty = SessionChunkFrame { sid: 1, seq: 0, chunk: SpikeTrain::new(30, 0) };
+        assert_eq!(SessionChunkFrame::decode(&empty.encode()).unwrap().chunk.timesteps(), 0);
+        // Trailing garbage is rejected on every session payload.
+        let mut p = open.encode();
+        p.push(0);
+        assert!(SessionIdFrame::decode(&p).is_err());
+        let mut p = chunk.encode();
+        p.push(0);
+        assert!(SessionChunkFrame::decode(&p).is_err());
+        let mut p = out.encode();
+        p.push(0);
+        assert!(SessionOutFrame::decode(&p).is_err());
+        // Truncated prefixes are rejected, never panic.
+        let enc = chunk.encode();
+        for cut in 0..enc.len() {
+            assert!(SessionChunkFrame::decode(&enc[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
     fn kind_and_code_tables_roundtrip() {
-        for k in 1u8..=10 {
+        for k in 1u8..=14 {
             assert_eq!(FrameKind::from_u8(k).unwrap() as u8, k);
         }
         assert!(FrameKind::from_u8(0).is_none());
-        assert!(FrameKind::from_u8(11).is_none());
+        assert!(FrameKind::from_u8(15).is_none());
         for c in 1u8..=7 {
             let code = ErrorCode::from_u8(c).unwrap();
             assert_eq!(code as u8, c);

@@ -42,7 +42,7 @@
 use std::collections::HashMap;
 use std::io::{BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -51,7 +51,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::accel::Menage;
-use crate::coordinator::{request_id_of_error, Coordinator, Response};
+use crate::coordinator::{request_id_of_error, Backend, Coordinator, Response};
 use crate::fault::{lock_recover, ChaosTrigger, RecoveryStats, SystemChaos};
 use crate::shard::ShardedMenage;
 use crate::util::json::Json;
@@ -59,8 +59,10 @@ use crate::util::json::Json;
 use super::metrics::ServeMetrics;
 use super::protocol::{
     encode_frame, encode_stats_reply, ErrorCode, ErrorFrame, FrameKind, FrameReader,
-    InferRequest, InferResponse, DEFAULT_MAX_FRAME_LEN, MAGIC, NO_ID,
+    InferRequest, InferResponse, SessionChunkFrame, SessionIdFrame, DEFAULT_MAX_FRAME_LEN, MAGIC,
+    NO_ID,
 };
+use super::session::{SessionCmd, SessionHandle, SessionPool};
 
 /// Serving knobs. `Default` is sized for tests and small deployments;
 /// `menage serve` exposes each as a flag.
@@ -91,6 +93,13 @@ pub struct ServeConfig {
     /// Honor the SHUTDOWN frame (used by `loadgen --shutdown-server` and
     /// the `make smoke-serve` flow; off unless explicitly enabled).
     pub allow_remote_shutdown: bool,
+    /// Streaming-session lane cap: how many sessions can hold membrane
+    /// state resident at once (the session pool's lane-grid width). A
+    /// SESSION_OPEN past the cap is answered `ERROR Overload`.
+    pub session_lanes: usize,
+    /// Idle eviction: a resident session that has not received a chunk
+    /// for this long is evicted (its lane stats folded, its lane freed).
+    pub session_idle: Duration,
     /// Chaos injection knobs (worker panics, dropped/delayed responses,
     /// socket resets). Default is fully off: the production path pays one
     /// predicted-false branch per response.
@@ -108,6 +117,8 @@ impl Default for ServeConfig {
             poll_interval: Duration::from_millis(25),
             write_timeout: Duration::from_secs(10),
             allow_remote_shutdown: false,
+            session_lanes: 8,
+            session_idle: Duration::from_secs(60),
             chaos: SystemChaos::default(),
         }
     }
@@ -195,6 +206,14 @@ struct Shared {
     started: Instant,
     readers: Mutex<Vec<JoinHandle<()>>>,
     writers: Mutex<Vec<JoinHandle<()>>>,
+    /// Streaming-session ingress (absent on remote-shard servers, whose
+    /// membrane state lives in the shard-host processes): readers forward
+    /// decoded session commands here; the pool thread executes them and
+    /// replies straight onto each connection's writer channel.
+    sessions: Option<SessionHandle>,
+    /// Connection-id allocator: session ids are scoped per connection, so
+    /// every reader gets a unique id to key the pool's session table with.
+    next_conn: AtomicU64,
 }
 
 impl Shared {
@@ -257,6 +276,11 @@ impl Shared {
             }
             map.insert("recovery".to_string(), self.recovery.recovery_json());
             map.insert("faults".to_string(), self.recovery.faults_json());
+            // Streaming-session lifecycle counters + resident-lane gauge
+            // (STATS v3; absent on remote-shard servers, like `shards`).
+            if let Some(sessions) = &self.sessions {
+                map.insert("sessions".to_string(), sessions.to_json());
+            }
         }
         j
     }
@@ -269,6 +293,9 @@ pub struct Server {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     router: Option<JoinHandle<Vec<Menage>>>,
+    /// The streaming-session pool (local backends only); shut down after
+    /// the router so its chip joins the returned worker chips.
+    pool: Option<SessionPool>,
 }
 
 impl Server {
@@ -285,7 +312,8 @@ impl Server {
             timesteps: chip.timesteps,
             classes: chip.cores.last().expect("chip has cores").out_dim(),
         };
-        Self::start_inner(coord, model, None, None, listener, cfg)
+        let sessions = Some(Backend::Mono(chip.clone()));
+        Self::start_inner(coord, model, None, None, sessions, listener, cfg)
     }
 
     /// [`Self::start`] over a multi-chip sharded pipeline: every worker
@@ -310,7 +338,8 @@ impl Server {
             timesteps: chip.timesteps,
             classes: chip.output_dim(),
         };
-        Self::start_inner(coord, model, Some(chip.shards_json()), None, listener, cfg)
+        let sessions = Some(Backend::Sharded(chip.clone()));
+        Self::start_inner(coord, model, Some(chip.shards_json()), None, sessions, listener, cfg)
     }
 
     /// [`Self::start`] over a **distributed** pipeline of `shard-host`
@@ -337,11 +366,15 @@ impl Server {
             timesteps: pipeline.timesteps(),
             classes: pipeline.output_dim(),
         };
+        // No session pool: the membrane state lives in the shard-host
+        // processes, which this driver cannot pin to one client. Session
+        // frames are answered with ERROR Unsupported.
         Self::start_inner(
             coord,
             model,
             Some(pipeline.topology_json()),
             Some(pipeline.stats()),
+            None,
             listener,
             cfg,
         )
@@ -352,6 +385,7 @@ impl Server {
         model: ModelInfo,
         shards: Option<Json>,
         remote_links: Option<Arc<super::remote_shard::RemoteLinkStats>>,
+        session_backend: Option<Backend>,
         listener: TcpListener,
         cfg: ServeConfig,
     ) -> Result<Self> {
@@ -371,6 +405,16 @@ impl Server {
         let chaos_reset = ChaosTrigger::default();
         chaos_reset.arm(cfg.chaos.reset_conn_every);
 
+        let metrics = Arc::new(ServeMetrics::default());
+        let pool = session_backend.map(|backend| {
+            SessionPool::start(
+                backend,
+                Arc::clone(&metrics),
+                cfg.session_lanes,
+                cfg.session_idle,
+                cfg.poll_interval,
+            )
+        });
         let shared = Arc::new(Shared {
             handle: coord.handle(),
             coord_metrics: Arc::clone(&coord.metrics),
@@ -379,8 +423,10 @@ impl Server {
             chaos_drop,
             chaos_delay,
             chaos_reset,
+            sessions: pool.as_ref().map(|p| p.handle()),
+            next_conn: AtomicU64::new(0),
             cfg,
-            metrics: Arc::new(ServeMetrics::default()),
+            metrics,
             pending: Mutex::new(HashMap::new()),
             net_in_flight: AtomicUsize::new(0),
             stop_accept: AtomicBool::new(false),
@@ -404,7 +450,7 @@ impl Server {
             let shared = Arc::clone(&shared);
             std::thread::spawn(move || accept_loop(listener, &shared))
         };
-        Ok(Self { local_addr, shared, accept: Some(accept), router: Some(router) })
+        Ok(Self { local_addr, shared, accept: Some(accept), router: Some(router), pool })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -467,9 +513,16 @@ impl Server {
         }
         // Readers are gone: the router can drain without racing ingress.
         self.shared.router_stop.store(true, Ordering::Relaxed);
-        let chips = self.router.take()?.join().ok()?;
-        // The router cleared the pending map, so every writer's channel is
-        // closed and each writer exits after flushing.
+        let mut chips = self.router.take()?.join().ok()?;
+        // Session pool after the router (readers can no longer submit):
+        // its chip — resident lanes folded — joins the worker chips, so
+        // the energy report accounts for session-served work too.
+        if let Some(pool) = self.pool.take() {
+            chips.extend(pool.shutdown());
+        }
+        // The router cleared the pending map and the pool dropped its
+        // queued commands, so every writer's channel is closed and each
+        // writer exits after flushing.
         for h in std::mem::take(&mut *lock_recover(&self.shared.writers)) {
             h.join().ok()?;
         }
@@ -552,8 +605,15 @@ fn spawn_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
 
     let reader = {
         let shared = Arc::clone(shared);
+        let conn = shared.next_conn.fetch_add(1, Ordering::Relaxed);
         std::thread::spawn(move || {
-            reader_loop(&shared, stream, &tx);
+            reader_loop(&shared, conn, stream, &tx);
+            // The reader is the only session submitter for this
+            // connection, so once it exits the pool can safely evict the
+            // connection's resident sessions (stats folded, lanes freed).
+            if let Some(sessions) = &shared.sessions {
+                sessions.send(SessionCmd::ConnGone { conn });
+            }
             let m = &shared.metrics;
             m.connections_active.fetch_sub(1, Ordering::Relaxed);
         })
@@ -578,7 +638,7 @@ fn spawn_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
 /// if the client's queue is full (it isn't reading) or its writer is gone,
 /// the frame is dropped and counted — the router must never block on one
 /// connection's egress.
-fn queue_frame(m: &ServeMetrics, tx: &SyncSender<Vec<u8>>, frame: Vec<u8>) {
+pub(crate) fn queue_frame(m: &ServeMetrics, tx: &SyncSender<Vec<u8>>, frame: Vec<u8>) {
     match tx.try_send(frame) {
         Ok(()) => {}
         Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
@@ -599,7 +659,7 @@ fn send_error(
     queue_frame(m, tx, encode_frame(FrameKind::Error, &ef.encode()));
 }
 
-fn reader_loop(shared: &Arc<Shared>, mut stream: TcpStream, tx: &SyncSender<Vec<u8>>) {
+fn reader_loop(shared: &Arc<Shared>, conn: u64, mut stream: TcpStream, tx: &SyncSender<Vec<u8>>) {
     let m = &shared.metrics;
     let mut fr = FrameReader::new(shared.cfg.max_frame_len);
     loop {
@@ -647,6 +707,13 @@ fn reader_loop(shared: &Arc<Shared>, mut stream: TcpStream, tx: &SyncSender<Vec<
                     );
                 }
             }
+            Some(FrameKind::SessionOpen) => {
+                handle_session_control(shared, conn, tx, &frame.payload, true)
+            }
+            Some(FrameKind::SessionClose) => {
+                handle_session_control(shared, conn, tx, &frame.payload, false)
+            }
+            Some(FrameKind::SessionChunk) => handle_session_chunk(shared, conn, tx, &frame.payload),
             // Well-framed but not something a client may send: answer and
             // keep the connection (frame alignment is intact).
             Some(other) => {
@@ -667,6 +734,68 @@ fn reader_loop(shared: &Arc<Shared>, mut stream: TcpStream, tx: &SyncSender<Vec<
                     format!("unknown frame kind {}", frame.kind),
                 );
             }
+        }
+    }
+}
+
+/// Decode and forward a SESSION_OPEN (`opening`) or SESSION_CLOSE to the
+/// session pool. Servers without a pool (remote backends) answer
+/// `ERROR Unsupported`; a payload that fails to decode is `BadRequest`
+/// (the frame was well-delimited, so the connection stays usable).
+fn handle_session_control(
+    shared: &Arc<Shared>,
+    conn: u64,
+    tx: &SyncSender<Vec<u8>>,
+    payload: &[u8],
+    opening: bool,
+) {
+    let m = &shared.metrics;
+    let Some(sessions) = &shared.sessions else {
+        send_error(
+            m,
+            tx,
+            NO_ID,
+            ErrorCode::Unsupported,
+            "this server does not host streaming sessions (remote backend)",
+        );
+        return;
+    };
+    match SessionIdFrame::decode(payload) {
+        Ok(f) => sessions.send(if opening {
+            SessionCmd::Open { conn, sid: f.sid, tx: tx.clone() }
+        } else {
+            SessionCmd::Close { conn, sid: f.sid, tx: tx.clone() }
+        }),
+        Err(e) => {
+            ServeMetrics::bump(&m.rejected_bad_request);
+            send_error(m, tx, NO_ID, ErrorCode::BadRequest, format!("{e:#}"));
+        }
+    }
+}
+
+fn handle_session_chunk(shared: &Arc<Shared>, conn: u64, tx: &SyncSender<Vec<u8>>, payload: &[u8]) {
+    let m = &shared.metrics;
+    let Some(sessions) = &shared.sessions else {
+        send_error(
+            m,
+            tx,
+            NO_ID,
+            ErrorCode::Unsupported,
+            "this server does not host streaming sessions (remote backend)",
+        );
+        return;
+    };
+    match SessionChunkFrame::decode(payload) {
+        Ok(f) => sessions.send(SessionCmd::Chunk {
+            conn,
+            sid: f.sid,
+            seq: f.seq,
+            chunk: f.chunk,
+            tx: tx.clone(),
+        }),
+        Err(e) => {
+            ServeMetrics::bump(&m.rejected_bad_request);
+            send_error(m, tx, NO_ID, ErrorCode::BadRequest, format!("{e:#}"));
         }
     }
 }

@@ -1,0 +1,528 @@
+//! Server-side streaming sessions: suspend/resume inference over the wire.
+//!
+//! A session pins one **lane** of a dedicated backend clone for the
+//! lifetime of a client-side spike stream: each SESSION_CHUNK runs through
+//! the chip *without* resetting membranes first, so the lane's
+//! `SoaState` column (membrane / Neumaier error sidecar / dirty flags)
+//! carries across chunks and the concatenated stream is bit-identical to
+//! a one-shot [`Menage::run`] over the whole train
+//! (`tests/stream_differential.rs`).
+//!
+//! Topology: one pool thread owns one [`Backend`] clone with up to
+//! `capacity` session lanes. Connection readers decode session frames and
+//! forward typed commands over an mpsc channel; the pool executes chunks
+//! — batching chunks of *distinct* sessions that arrived together into a
+//! single lane-packed dispatch — and queues replies directly on each
+//! connection's bounded writer channel. Stateful work never touches the
+//! stateless coordinator queue, so ordinary INFER traffic can neither
+//! observe nor perturb resident membranes.
+//!
+//! Lifecycle and accounting invariants:
+//!
+//! * **Admission**: a SESSION_OPEN with no free lane is rejected with
+//!   `ERROR Overload` (id = sid); the client retries or falls back to
+//!   one-shot INFER.
+//! * **Ordering**: chunk sequence numbers are strict from 0. A gap,
+//!   replay, or reorder evicts the session with `ERROR BadRequest` — the
+//!   membrane state would be silently wrong for any other policy. The
+//!   connection itself stays usable.
+//! * **Eviction folds stats first**: every eviction path (CLOSE, seq
+//!   violation, connection teardown, idle timeout, pool shutdown) folds
+//!   the lane's per-lane [`CoreStats`](crate::neuracore::CoreStats) into
+//!   the chip totals *before* the lane is recycled, so session work can
+//!   never vanish from the energy report. The pool's chip is handed back
+//!   through [`SessionPool::shutdown`] and merged with the coordinator
+//!   workers' chips.
+//! * **Idle timeout**: a session with no chunk for `idle_timeout` is
+//!   evicted silently (the client discovers it as `BadRequest
+//!   unknown session` on its next chunk) so abandoned streams cannot pin
+//!   lanes forever.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::accel::{Menage, RunOutput};
+use crate::coordinator::Backend;
+use crate::snn::SpikeTrain;
+use crate::util::json::Json;
+
+use super::metrics::ServeMetrics;
+use super::protocol::{encode_frame, ErrorCode, ErrorFrame, FrameKind, SessionIdFrame, SessionOutFrame};
+use super::server::queue_frame;
+
+/// Commands a pool batch drains per wakeup before dispatching — bounds the
+/// latency any one chunk can be delayed by arrivals behind it.
+const CMD_BATCH: usize = 64;
+
+/// Session counters for the STATS `sessions` block. Monotonic except
+/// `resident`, which is the live lane-occupancy gauge.
+#[derive(Debug, Default)]
+pub struct SessionCounters {
+    /// Sessions successfully opened (lane granted).
+    pub opened: AtomicU64,
+    /// Sessions closed by an explicit SESSION_CLOSE.
+    pub closed: AtomicU64,
+    /// Sessions evicted without a close: sequence violations, connection
+    /// teardown, idle timeout.
+    pub evicted: AtomicU64,
+    /// SESSION_OPENs refused for lack of a free lane (`ERROR Overload`).
+    pub rejected: AtomicU64,
+    /// Chunks executed across all sessions.
+    pub chunks: AtomicU64,
+    /// Sessions currently resident (gauge, ≤ capacity).
+    pub resident: AtomicU64,
+}
+
+/// One client→pool command. Replies go straight onto the submitting
+/// connection's bounded writer channel (`tx`), never through the
+/// coordinator's results router.
+pub(crate) enum SessionCmd {
+    Open { conn: u64, sid: u64, tx: SyncSender<Vec<u8>> },
+    Chunk { conn: u64, sid: u64, seq: u64, chunk: SpikeTrain, tx: SyncSender<Vec<u8>> },
+    Close { conn: u64, sid: u64, tx: SyncSender<Vec<u8>> },
+    /// The connection's reader exited: evict every session it owned.
+    ConnGone { conn: u64 },
+}
+
+/// Cloneable ingress handle the connection readers use, plus the counter
+/// block the STATS snapshot reads.
+#[derive(Clone)]
+pub struct SessionHandle {
+    tx: Sender<SessionCmd>,
+    counters: Arc<SessionCounters>,
+    capacity: usize,
+}
+
+impl SessionHandle {
+    pub(crate) fn send(&self, cmd: SessionCmd) {
+        // A closed channel means the pool is shutting down; the reader's
+        // connection is about to die with it — nothing useful to report.
+        let _ = self.tx.send(cmd);
+    }
+
+    pub fn counters(&self) -> &SessionCounters {
+        &self.counters
+    }
+
+    /// The STATS `sessions` block.
+    pub fn to_json(&self) -> Json {
+        let c = &self.counters;
+        let g = |a: &AtomicU64| -> Json { (a.load(Ordering::Relaxed) as usize).into() };
+        Json::obj(vec![
+            ("capacity", self.capacity.into()),
+            ("opened", g(&c.opened)),
+            ("closed", g(&c.closed)),
+            ("evicted", g(&c.evicted)),
+            ("rejected", g(&c.rejected)),
+            ("chunks", g(&c.chunks)),
+            ("resident", g(&c.resident)),
+        ])
+    }
+}
+
+/// A resident session: its pinned lane, sequencing state, and the
+/// cumulative per-class spike counts the rolling `predicted` is read from.
+struct SessionSlot {
+    lane: usize,
+    next_seq: u64,
+    last_chunk: Instant,
+    class_counts: Vec<u64>,
+}
+
+/// The session pool: one thread, one backend clone, `capacity` lanes.
+/// Built by the server for local (mono/sharded) backends; absent on
+/// remote-shard servers, whose readers answer session frames with
+/// `ERROR Unsupported`.
+pub struct SessionPool {
+    handle: SessionHandle,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<Option<Menage>>>,
+}
+
+impl SessionPool {
+    pub(crate) fn start(
+        backend: Backend,
+        metrics: Arc<ServeMetrics>,
+        capacity: usize,
+        idle_timeout: Duration,
+        poll: Duration,
+    ) -> Self {
+        let counters = Arc::new(SessionCounters::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel();
+        let thread = {
+            let counters = Arc::clone(&counters);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                pool_loop(backend, rx, &metrics, &counters, &stop, capacity, idle_timeout, poll)
+            })
+        };
+        Self {
+            handle: SessionHandle { tx, counters, capacity: capacity.max(1) },
+            stop,
+            thread: Some(thread),
+        }
+    }
+
+    pub fn handle(&self) -> SessionHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the pool thread and hand back its chip: every resident
+    /// session's lane stats are folded in, so merging this chip with the
+    /// coordinator workers' chips accounts for all session work.
+    pub fn shutdown(mut self) -> Option<Menage> {
+        self.stop.store(true, Ordering::Relaxed);
+        self.thread.take().and_then(|t| t.join().ok()).flatten()
+    }
+}
+
+impl Drop for SessionPool {
+    /// A dropped (not shut-down) pool must not leave its thread parked on
+    /// the command channel; the thread is detached, not joined.
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn send_session_error(
+    m: &ServeMetrics,
+    tx: &SyncSender<Vec<u8>>,
+    sid: u64,
+    code: ErrorCode,
+    msg: impl Into<String>,
+) {
+    let ef = ErrorFrame::new(sid, code, msg);
+    queue_frame(m, tx, encode_frame(FrameKind::Error, &ef.encode()));
+}
+
+/// One staged chunk job awaiting a lane-packed dispatch.
+struct ChunkJob {
+    key: (u64, u64),
+    lane: usize,
+    seq: u64,
+    chunk: SpikeTrain,
+    tx: SyncSender<Vec<u8>>,
+}
+
+struct PoolState<'a> {
+    backend: Backend,
+    metrics: &'a ServeMetrics,
+    counters: &'a SessionCounters,
+    sessions: HashMap<(u64, u64), SessionSlot>,
+    /// Free lane indices; popped lowest-first so the lane grid grows only
+    /// as far as the peak concurrency actually reached.
+    free: Vec<usize>,
+    idle_timeout: Duration,
+}
+
+impl PoolState<'_> {
+    fn resident_gauge(&self) {
+        self.counters.resident.store(self.sessions.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Fold the lane's stats and recycle it. The fold-before-reuse order
+    /// is the satellite-4 invariant: session work must survive into the
+    /// chip totals no matter how the session ended.
+    fn retire(&mut self, key: (u64, u64), closed: bool) {
+        if let Some(slot) = self.sessions.remove(&key) {
+            self.backend.fold_session_lane(slot.lane);
+            self.free.push(slot.lane);
+            if closed {
+                self.counters.closed.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.counters.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+            self.resident_gauge();
+        }
+    }
+
+    fn open(&mut self, conn: u64, sid: u64, tx: &SyncSender<Vec<u8>>) {
+        let key = (conn, sid);
+        if self.sessions.contains_key(&key) {
+            send_session_error(
+                self.metrics,
+                tx,
+                sid,
+                ErrorCode::BadRequest,
+                format!("session {sid} is already open on this connection"),
+            );
+            return;
+        }
+        let Some(lane) = self.free.pop() else {
+            self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            send_session_error(
+                self.metrics,
+                tx,
+                sid,
+                ErrorCode::Overload,
+                format!("no free session lane ({} resident)", self.sessions.len()),
+            );
+            return;
+        };
+        if let Err(e) = self.backend.open_session_lane(lane) {
+            self.free.push(lane);
+            send_session_error(self.metrics, tx, sid, ErrorCode::Internal, format!("{e:#}"));
+            return;
+        }
+        let classes = match &self.backend {
+            Backend::Mono(c) => c.cores.last().map_or(0, |core| core.out_dim()),
+            Backend::Sharded(s) => s.output_dim(),
+            Backend::Remote(_) => 0,
+        };
+        self.sessions.insert(
+            key,
+            SessionSlot {
+                lane,
+                next_seq: 0,
+                last_chunk: Instant::now(),
+                class_counts: vec![0u64; classes],
+            },
+        );
+        self.counters.opened.fetch_add(1, Ordering::Relaxed);
+        self.resident_gauge();
+        // The open-ack is the request frame echoed back.
+        let ack = SessionIdFrame { sid };
+        queue_frame(self.metrics, tx, encode_frame(FrameKind::SessionOpen, &ack.encode()));
+    }
+
+    fn close(&mut self, conn: u64, sid: u64, tx: &SyncSender<Vec<u8>>) {
+        let key = (conn, sid);
+        if self.sessions.contains_key(&key) {
+            self.retire(key, true);
+            let ack = SessionIdFrame { sid };
+            queue_frame(self.metrics, tx, encode_frame(FrameKind::SessionClose, &ack.encode()));
+        } else {
+            send_session_error(
+                self.metrics,
+                tx,
+                sid,
+                ErrorCode::BadRequest,
+                format!("unknown session {sid}"),
+            );
+        }
+    }
+
+    fn conn_gone(&mut self, conn: u64) {
+        let keys: Vec<(u64, u64)> =
+            self.sessions.keys().filter(|k| k.0 == conn).copied().collect();
+        for key in keys {
+            self.retire(key, false);
+        }
+    }
+
+    fn evict_idle(&mut self) {
+        let idle = self.idle_timeout;
+        let keys: Vec<(u64, u64)> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.last_chunk.elapsed() > idle)
+            .map(|(k, _)| *k)
+            .collect();
+        for key in keys {
+            self.retire(key, false);
+        }
+    }
+
+    /// Validate one chunk command against its session. `Ok` advances the
+    /// sequence eagerly (the job WILL be dispatched by the caller);
+    /// `Err(())` means the reply has already been sent.
+    fn stage_chunk(
+        &mut self,
+        conn: u64,
+        sid: u64,
+        seq: u64,
+        chunk: SpikeTrain,
+        tx: SyncSender<Vec<u8>>,
+    ) -> Result<ChunkJob, ()> {
+        let key = (conn, sid);
+        let width = self.backend.input_dim();
+        let Some(slot) = self.sessions.get_mut(&key) else {
+            send_session_error(
+                self.metrics,
+                &tx,
+                sid,
+                ErrorCode::BadRequest,
+                format!("unknown session {sid} (never opened, or evicted)"),
+            );
+            return Err(());
+        };
+        if seq != slot.next_seq {
+            let expect = slot.next_seq;
+            self.retire(key, false);
+            send_session_error(
+                self.metrics,
+                &tx,
+                sid,
+                ErrorCode::BadRequest,
+                format!("chunk seq {seq}, expected {expect} — session evicted"),
+            );
+            return Err(());
+        }
+        if chunk.num_neurons != width {
+            self.retire(key, false);
+            send_session_error(
+                self.metrics,
+                &tx,
+                sid,
+                ErrorCode::BadRequest,
+                format!(
+                    "chunk has {} neurons, model expects {width} — session evicted",
+                    chunk.num_neurons
+                ),
+            );
+            return Err(());
+        }
+        slot.next_seq += 1;
+        slot.last_chunk = Instant::now();
+        let lane = slot.lane;
+        Ok(ChunkJob { key, lane, seq, chunk, tx })
+    }
+
+    /// Run one lane-packed dispatch over staged jobs (distinct lanes) and
+    /// reply per job with a SESSION_OUT carrying the chunk's cycles and
+    /// the session-cumulative predicted class.
+    fn dispatch(&mut self, mut jobs: Vec<ChunkJob>, outs: &mut Vec<RunOutput>) {
+        if jobs.is_empty() {
+            return;
+        }
+        jobs.sort_by_key(|j| j.lane);
+        let inputs: Vec<(usize, &SpikeTrain)> =
+            jobs.iter().map(|j| (j.lane, &j.chunk)).collect();
+        match self.backend.run_session_chunks_into(&inputs, outs) {
+            Ok(()) => {
+                for (j, out) in jobs.iter().zip(outs.iter()) {
+                    let slot = self
+                        .sessions
+                        .get_mut(&j.key)
+                        .expect("staged job's session is resident");
+                    for (class, n) in out.output().counts().into_iter().enumerate() {
+                        slot.class_counts[class] += n as u64;
+                    }
+                    // Rolling decision over everything streamed so far,
+                    // same tie-break as `SpikeTrain::argmax_class`.
+                    let mut best = 0usize;
+                    for (i, &v) in slot.class_counts.iter().enumerate() {
+                        if v > slot.class_counts[best] {
+                            best = i;
+                        }
+                    }
+                    self.counters.chunks.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.total_cycles.fetch_add(out.cycles, Ordering::Relaxed);
+                    self.metrics
+                        .events_in
+                        .fetch_add(j.chunk.total_spikes() as u64, Ordering::Relaxed);
+                    let reply = SessionOutFrame {
+                        sid: j.key.1,
+                        seq: j.seq,
+                        chunk_cycles: out.cycles,
+                        predicted: best as u32,
+                        output: out.output().clone(),
+                    };
+                    queue_frame(
+                        self.metrics,
+                        &j.tx,
+                        encode_frame(FrameKind::SessionOut, &reply.encode()),
+                    );
+                }
+            }
+            Err(e) => {
+                // Pre-validation makes this unreachable in practice; if the
+                // engine does fail, the lanes' membrane state can no longer
+                // be trusted — evict every session in the batch.
+                for j in jobs {
+                    self.retire(j.key, false);
+                    send_session_error(
+                        self.metrics,
+                        &j.tx,
+                        j.key.1,
+                        ErrorCode::Internal,
+                        format!("session chunk failed: {e:#}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pool_loop(
+    backend: Backend,
+    rx: Receiver<SessionCmd>,
+    metrics: &ServeMetrics,
+    counters: &SessionCounters,
+    stop: &AtomicBool,
+    capacity: usize,
+    idle_timeout: Duration,
+    poll: Duration,
+) -> Option<Menage> {
+    let mut st = PoolState {
+        backend,
+        metrics,
+        counters,
+        sessions: HashMap::new(),
+        free: (0..capacity.max(1)).rev().collect(),
+        idle_timeout,
+    };
+    let mut outs: Vec<RunOutput> = Vec::new();
+    let mut batch: Vec<SessionCmd> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        batch.clear();
+        match rx.recv_timeout(poll) {
+            Ok(cmd) => batch.push(cmd),
+            Err(RecvTimeoutError::Timeout) => {
+                st.evict_idle();
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        // Drain what arrived together so chunks of distinct sessions share
+        // one lane-packed dispatch (bounded: fairness over completeness).
+        while batch.len() < CMD_BATCH {
+            match rx.try_recv() {
+                Ok(cmd) => batch.push(cmd),
+                Err(_) => break,
+            }
+        }
+        // Commands run strictly in arrival order; only maximal runs of
+        // chunk commands touching *distinct* sessions collapse into one
+        // dispatch (a second chunk of the same session ends the run, so
+        // per-session ordering — and therefore the seq contract — holds).
+        let mut jobs: Vec<ChunkJob> = Vec::new();
+        for cmd in batch.drain(..) {
+            match cmd {
+                SessionCmd::Chunk { conn, sid, seq, chunk, tx } => {
+                    if jobs.iter().any(|j| j.key == (conn, sid)) {
+                        st.dispatch(std::mem::take(&mut jobs), &mut outs);
+                    }
+                    if let Ok(job) = st.stage_chunk(conn, sid, seq, chunk, tx) {
+                        jobs.push(job);
+                    }
+                }
+                other => {
+                    st.dispatch(std::mem::take(&mut jobs), &mut outs);
+                    match other {
+                        SessionCmd::Open { conn, sid, tx } => st.open(conn, sid, &tx),
+                        SessionCmd::Close { conn, sid, tx } => st.close(conn, sid, &tx),
+                        SessionCmd::ConnGone { conn } => st.conn_gone(conn),
+                        SessionCmd::Chunk { .. } => unreachable!("handled above"),
+                    }
+                }
+            }
+        }
+        st.dispatch(jobs, &mut outs);
+        st.evict_idle();
+    }
+    // Wind-down: fold every resident lane, then any lane-path residue, so
+    // the handed-back chip's core totals account for all session work.
+    let keys: Vec<(u64, u64)> = st.sessions.keys().copied().collect();
+    for key in keys {
+        st.retire(key, false);
+    }
+    st.backend.fold_lane_stats();
+    st.backend.into_chip()
+}

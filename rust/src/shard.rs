@@ -215,6 +215,22 @@ impl ShardedMenage {
     /// — same cores, same visit order, same double-buffered scratch
     /// discipline.
     pub fn run_into(&mut self, input: &SpikeTrain, out: &mut RunOutput) -> Result<()> {
+        self.run_chunk_into(input, false, out)
+    }
+
+    /// MIRROR of [`Menage::run_chunk_into`] across chips: run one chunk of
+    /// a longer event stream, suspending/resuming every core's membrane
+    /// state (instead of resetting) when `resume` — so a train split at
+    /// arbitrary chunk boundaries is bit-identical to one [`Self::run_into`]
+    /// on the concatenated train, including `boundary_events` accounting
+    /// (the cut frontier of a chunk seam is the same frontier the one-shot
+    /// run forwards at that step). Pinned by `tests/stream_differential.rs`.
+    pub fn run_chunk_into(
+        &mut self,
+        input: &SpikeTrain,
+        resume: bool,
+        out: &mut RunOutput,
+    ) -> Result<()> {
         if input.num_neurons != self.input_dim() {
             bail!(
                 "input has {} neurons, first shard expects {}",
@@ -229,7 +245,9 @@ impl ShardedMenage {
             let mut l = 0usize;
             for shard in self.shards.iter_mut() {
                 for core in shard.cores.iter_mut() {
-                    core.reset_membranes();
+                    if !resume {
+                        core.reset_membranes();
+                    }
                     out.trains[l].reset_to(core.out_dim(), t_steps);
                     l += 1;
                 }
@@ -268,7 +286,9 @@ impl ShardedMenage {
             }
             out.cycles += step_cycles;
         }
-        self.inputs_processed += 1;
+        if !resume {
+            self.inputs_processed += 1;
+        }
         Ok(())
     }
 
@@ -369,6 +389,126 @@ impl ShardedMenage {
             }
         }
         self.inputs_processed += b as u64;
+        Ok(())
+    }
+
+    /// MIRROR of [`Menage::open_session_lane`] across chips: prepare lane
+    /// `lane` on every shard's cores to host a streaming session.
+    pub fn open_session_lane(&mut self, lane: usize) {
+        for shard in self.shards.iter_mut() {
+            for core in shard.cores.iter_mut() {
+                core.ensure_lanes(lane + 1);
+                core.reset_lane(lane);
+            }
+        }
+        self.inputs_processed += 1;
+    }
+
+    /// MIRROR of [`Menage::fold_session_lane`] across chips.
+    pub fn fold_session_lane(&mut self, lane: usize) {
+        for shard in self.shards.iter_mut() {
+            shard.fold_session_lane(lane);
+        }
+    }
+
+    /// MIRROR of [`Menage::run_session_chunks_into`] across chips: one
+    /// chunk per listed session on its resident lane, boundary frontiers
+    /// forwarded shard-to-shard per (step, lane) with the same
+    /// distinct-source accounting as [`Self::run_lanes_into`], and **no**
+    /// lane resets — membrane state carries across chunk seams. Pinned by
+    /// `tests/stream_differential.rs`.
+    pub fn run_session_chunks_into(
+        &mut self,
+        jobs: &[(usize, &SpikeTrain)],
+        outs: &mut Vec<RunOutput>,
+    ) -> Result<()> {
+        let opened_lanes = self.shards[0].cores[0].num_lanes();
+        for (j, &(lane, chunk)) in jobs.iter().enumerate() {
+            if chunk.num_neurons != self.input_dim() {
+                bail!(
+                    "session lane {lane}: chunk has {} neurons, first shard expects {}",
+                    chunk.num_neurons,
+                    self.input_dim()
+                );
+            }
+            if j > 0 && jobs[j - 1].0 >= lane {
+                bail!("session job lanes must be strictly ascending");
+            }
+            if lane >= opened_lanes {
+                bail!("session lane {lane} was never opened");
+            }
+        }
+        let b = jobs.len();
+        outs.resize_with(b, RunOutput::default);
+        if b == 0 {
+            return Ok(());
+        }
+        let total = self.num_layers();
+        for (j, out) in outs.iter_mut().enumerate() {
+            let t_j = jobs[j].1.timesteps();
+            out.trains.resize_with(total, SpikeTrain::default);
+            let mut l = 0usize;
+            for shard in self.shards.iter() {
+                for core in shard.cores.iter() {
+                    out.trains[l].reset_to(core.out_dim(), t_j);
+                    l += 1;
+                }
+            }
+            out.cycles = 0;
+        }
+        let t_max = jobs.iter().map(|&(_, s)| s.timesteps()).max().unwrap_or(0);
+
+        let shards = &mut self.shards;
+        let scratch = &mut self.lane_scratch;
+        scratch.resize_with(b, Vec::new);
+        let prev = &mut self.lane_prev_cycles;
+        prev.resize(b, 0);
+        let boundary_events = &mut self.boundary_events;
+        let mut active_lanes: Vec<usize> = Vec::with_capacity(b);
+        let mut active_jobs: Vec<usize> = Vec::with_capacity(b);
+        let mut step_cycles = vec![0u64; b];
+        for t in 0..t_max {
+            active_lanes.clear();
+            active_jobs.clear();
+            for (j, &(lane, chunk)) in jobs.iter().enumerate() {
+                if t < chunk.timesteps() {
+                    active_lanes.push(lane);
+                    active_jobs.push(j);
+                }
+            }
+            for c in step_cycles.iter_mut() {
+                *c = 0;
+            }
+            let mut l = 0usize;
+            for (si, shard) in shards.iter_mut().enumerate() {
+                for (ci, core) in shard.cores.iter_mut().enumerate() {
+                    for (ai, &j) in active_jobs.iter().enumerate() {
+                        let lane = jobs[j].0;
+                        let events: &[u32] = if l == 0 {
+                            &jobs[j].1.spikes[t]
+                        } else {
+                            &outs[j].trains[l - 1].spikes[t]
+                        };
+                        if ci == 0 && si > 0 {
+                            // MIRROR of run_into: distinct sources only.
+                            boundary_events[si - 1] += distinct_sources(events);
+                        }
+                        core.push_events_lane(lane, events);
+                        prev[ai] = core.lane_stats(lane).cycles;
+                    }
+                    core.step_lanes_into(&active_lanes, &mut scratch[..active_lanes.len()]);
+                    for (ai, &j) in active_jobs.iter().enumerate() {
+                        let delta = core.lane_stats(jobs[j].0).cycles - prev[ai];
+                        step_cycles[j] = step_cycles[j].max(delta);
+                        std::mem::swap(&mut outs[j].trains[l].spikes[t], &mut scratch[ai]);
+                    }
+                    l += 1;
+                }
+            }
+            for &j in &active_jobs {
+                outs[j].cycles += step_cycles[j];
+            }
+        }
         Ok(())
     }
 

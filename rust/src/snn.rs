@@ -810,6 +810,17 @@ impl SpikeTrain {
         }
     }
 
+    /// Sub-train covering timesteps `range` of this train (same width).
+    ///
+    /// The canonical chunking helper for streaming sessions: a train
+    /// split at arbitrary step boundaries and streamed chunk-by-chunk
+    /// re-joins to exactly the original, which is what lets chunked
+    /// session runs be compared bit-for-bit against one-shot runs
+    /// (`tests/stream_differential.rs`, `menage loadgen --stream`).
+    pub fn slice_steps(&self, range: std::ops::Range<usize>) -> SpikeTrain {
+        SpikeTrain { num_neurons: self.num_neurons, spikes: self.spikes[range].to_vec() }
+    }
+
     /// Reshape in place for buffer reuse (the allocation-free batch path):
     /// sets the dimensions and empties every step's spike list while
     /// keeping the per-step `Vec` allocations alive.

@@ -221,6 +221,102 @@ fn prop_nonideal_lane_dirty_slot_invariant() {
     });
 }
 
+/// Streaming suspend/resume: a session chunk boundary is just a step
+/// seam (no membrane reset), so a lane suspended mid-stream and resumed
+/// later must uphold the clean ⇒ quiescent-fixed-point invariant across
+/// the seam — including when a *sibling* lane is recycled with
+/// `reset_lane` at the boundary (the session pool's lane-reuse path),
+/// checked against a `force_dense_sweep` oracle stepped in lockstep, in
+/// ideal and paper analog modes.
+#[test]
+fn prop_suspend_resume_preserves_dirty_slot_invariant() {
+    prop::check_n("dirty-slot-suspend-resume", 8, |rng| {
+        let lif = LifParams { beta: 0.9, v_threshold: 1.0, v_reset: 0.0 };
+        let in_dim = 8 + rng.below(20);
+        let out_dim = 4 + rng.below(16);
+        let layer = random_layer(in_dim, out_dim, lif, rng);
+        let cfg = accel(2 + rng.below(3), 1 + rng.below(4));
+        let analog =
+            if rng.bernoulli(0.5) { AnalogParams::ideal() } else { AnalogParams::paper() };
+        let mut fast = build_core_with(&layer, &cfg, false, &analog);
+        let mut oracle = build_core_with(&layer, &cfg, true, &analog);
+        assert!(fast.sweep_skip_enabled());
+        let b = 2;
+        fast.ensure_lanes(b);
+        oracle.ensure_lanes(b);
+        let active: Vec<usize> = (0..b).collect();
+        let mut bufs_a: Vec<Vec<u32>> = vec![Vec::new(); b];
+        let mut bufs_b: Vec<Vec<u32>> = vec![Vec::new(); b];
+        let mut drive = |fast: &mut NeuraCore,
+                         oracle: &mut NeuraCore,
+                         inputs: &[SpikeTrain],
+                         bufs_a: &mut Vec<Vec<u32>>,
+                         bufs_b: &mut Vec<Vec<u32>>,
+                         phase: &str|
+         -> Result<(), String> {
+            let t = inputs[0].timesteps();
+            for step in 0..t {
+                for i in 0..b {
+                    fast.push_events_lane(i, &inputs[i].spikes[step]);
+                    oracle.push_events_lane(i, &inputs[i].spikes[step]);
+                }
+                fast.step_lanes_into(&active, &mut bufs_a[..]);
+                oracle.step_lanes_into(&active, &mut bufs_b[..]);
+                if bufs_a != bufs_b {
+                    return Err(format!("{phase} step {step}: lane outputs diverge"));
+                }
+                for lane in 0..b {
+                    for round in 0..fast.rounds() {
+                        check_round(
+                            &fast.lane_slot_states(lane, round),
+                            &oracle.lane_slot_states(lane, round),
+                            lif.v_reset,
+                            &format!("{phase} step {step} lane {lane} round {round}"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        };
+
+        // Chunk 1: both lanes stream live sessions.
+        let mk = |rng: &mut Rng, t: usize| -> Vec<SpikeTrain> {
+            (0..b).map(|_| SpikeTrain::bernoulli(in_dim, t, 0.1 + rng.f64() * 0.3, rng)).collect()
+        };
+        let t1 = 2 + rng.below(4);
+        let c1 = mk(rng, t1);
+        drive(&mut fast, &mut oracle, &c1, &mut bufs_a, &mut bufs_b, "chunk1")?;
+
+        // Boundary: lane 0 suspends (state kept); lane 1's session ends
+        // and its slot is recycled for a new occupant.
+        fast.reset_lane(1);
+        oracle.reset_lane(1);
+        for round in 0..fast.rounds() {
+            for (slot, &(mem, acc, dirty)) in fast.lane_slot_states(1, round).iter().enumerate()
+            {
+                if mem.to_bits() != lif.v_reset.to_bits() || acc != 0 {
+                    return Err(format!(
+                        "recycled lane round {round} slot {slot} not quiescent \
+                         (mem={mem}, acc={acc})"
+                    ));
+                }
+                if dirty {
+                    return Err(format!(
+                        "recycled lane round {round} slot {slot} dirty under sweep-skip — \
+                         the new session would pay dense sweeps for a quiescent lane"
+                    ));
+                }
+            }
+        }
+
+        // Chunk 2: lane 0 resumes its suspended membranes, lane 1 starts
+        // a fresh session — the seam must be invisible to the invariant.
+        let t2 = 2 + rng.below(4);
+        let c2 = mk(rng, t2);
+        drive(&mut fast, &mut oracle, &c2, &mut bufs_a, &mut bufs_b, "chunk2")
+    });
+}
+
 /// When `v_reset` is not a fixed point of the leak, skipping must be
 /// disabled (every slot permanently dirty) and the invariant is vacuous —
 /// but the dense oracle must still agree bit-for-bit.

@@ -14,7 +14,8 @@ use std::io::Cursor;
 
 use menage::serve::protocol::{
     decode_stats_reply, write_frame, ErrorCode, ErrorFrame, FrameKind, FrameReader,
-    InferRequest, InferResponse, DEFAULT_MAX_FRAME_LEN,
+    InferRequest, InferResponse, SessionChunkFrame, SessionIdFrame, SessionOutFrame,
+    DEFAULT_MAX_FRAME_LEN,
 };
 use menage::snn::SpikeTrain;
 use menage::util::prop::check_n;
@@ -43,7 +44,7 @@ fn valid_stream(rng: &mut Rng) -> (Vec<u8>, usize, Vec<usize>) {
     let mut ends = Vec::new();
     let k = 1 + rng.below(5);
     for i in 0..k {
-        match rng.below(4) {
+        match rng.below(8) {
             0 => {
                 let req = InferRequest {
                     id: i as u64,
@@ -66,6 +67,33 @@ fn valid_stream(rng: &mut Rng) -> (Vec<u8>, usize, Vec<usize>) {
             2 => {
                 let e = ErrorFrame::new(i as u64, ErrorCode::Overload, "server busy");
                 write_frame(&mut buf, FrameKind::Error, &e.encode()).unwrap();
+            }
+            3 => {
+                let f = SessionIdFrame { sid: rng.next_u64() };
+                let kind = if rng.bernoulli(0.5) {
+                    FrameKind::SessionOpen
+                } else {
+                    FrameKind::SessionClose
+                };
+                write_frame(&mut buf, kind, &f.encode()).unwrap();
+            }
+            4 => {
+                let f = SessionChunkFrame {
+                    sid: rng.next_u64(),
+                    seq: rng.below(64) as u64,
+                    chunk: SpikeTrain::bernoulli(1 + rng.below(40), rng.below(8), 0.3, rng),
+                };
+                write_frame(&mut buf, FrameKind::SessionChunk, &f.encode()).unwrap();
+            }
+            5 => {
+                let f = SessionOutFrame {
+                    sid: rng.next_u64(),
+                    seq: rng.below(64) as u64,
+                    chunk_cycles: rng.next_u64() >> 32,
+                    predicted: rng.below(10) as u32,
+                    output: SpikeTrain::bernoulli(1 + rng.below(12), rng.below(6), 0.4, rng),
+                };
+                write_frame(&mut buf, FrameKind::SessionOut, &f.encode()).unwrap();
             }
             _ => write_frame(&mut buf, FrameKind::Ping, &[]).unwrap(),
         }
@@ -150,6 +178,47 @@ fn payload_decoders_total_over_random_bytes() {
         let _ = InferResponse::decode(&bytes);
         let _ = ErrorFrame::decode(&bytes);
         let _ = decode_stats_reply(&bytes);
+        let _ = SessionIdFrame::decode(&bytes);
+        let _ = SessionChunkFrame::decode(&bytes);
+        let _ = SessionOutFrame::decode(&bytes);
+        Ok(())
+    });
+}
+
+/// Mutating a well-formed SESSION_CHUNK payload (post-framing) either
+/// decodes to *some* valid chunk or errors — session decoders validate
+/// their trains exactly like the one-shot request decoder.
+#[test]
+fn mutated_session_payloads_decode_or_error() {
+    check_n("protocol-session-mutation", 256, |rng| {
+        let f = SessionChunkFrame {
+            sid: rng.next_u64(),
+            seq: rng.below(1_000) as u64,
+            chunk: SpikeTrain::bernoulli(1 + rng.below(30), 1 + rng.below(6), 0.3, rng),
+        };
+        let mut payload = f.encode();
+        let i = rng.below(payload.len());
+        payload[i] ^= 1 << rng.below(8);
+        if let Ok(back) = SessionChunkFrame::decode(&payload) {
+            back.chunk
+                .validate()
+                .map_err(|e| format!("decoder accepted an invalid chunk train: {e}"))?;
+        }
+        let out = SessionOutFrame {
+            sid: rng.next_u64(),
+            seq: rng.below(1_000) as u64,
+            chunk_cycles: rng.next_u64() >> 32,
+            predicted: rng.below(10) as u32,
+            output: SpikeTrain::bernoulli(1 + rng.below(12), 1 + rng.below(6), 0.4, rng),
+        };
+        let mut payload = out.encode();
+        let i = rng.below(payload.len());
+        payload[i] ^= 1 << rng.below(8);
+        if let Ok(back) = SessionOutFrame::decode(&payload) {
+            back.output
+                .validate()
+                .map_err(|e| format!("decoder accepted an invalid output train: {e}"))?;
+        }
         Ok(())
     });
 }

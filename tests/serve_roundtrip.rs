@@ -467,6 +467,13 @@ fn stats_snapshot_schema_is_pinned() {
         "recovery.requests_resubmitted",
         "recovery.worker_panics",
         "recovery.workers_respawned",
+        "sessions.capacity",
+        "sessions.chunks",
+        "sessions.closed",
+        "sessions.evicted",
+        "sessions.opened",
+        "sessions.rejected",
+        "sessions.resident",
         "stats_version",
         "throughput.events_per_s",
         "throughput.requests_per_s",
@@ -662,6 +669,112 @@ fn monolithic_stats_report_lane_occupancy() {
     assert_eq!(prof_shards.len(), 1);
     assert!(prof_shards[0].get("macs").unwrap().as_usize().unwrap() > 0);
     server.shutdown();
+}
+
+/// Streaming-session lifecycle over the wire, pinned against the STATS
+/// `sessions` block: open/chunk/close each move exactly one counter, a
+/// duplicate OPEN and an unknown-sid CHUNK are BadRequest *without*
+/// disturbing the resident session, and a sequence gap evicts — after
+/// which the sid is gone (further chunks are unknown-session errors).
+#[test]
+fn session_lifecycle_counters_and_sequencing() {
+    let server = start_server(ServeConfig {
+        session_lanes: 2,
+        ..ServeConfig::default()
+    });
+    let mut c = Client::connect(server.local_addr()).unwrap();
+
+    // v3 snapshot accepted by the validating poller; sessions block idle.
+    let stats = c.stats_versioned().unwrap();
+    let s = stats.get("sessions").unwrap();
+    assert_eq!(s.get("capacity").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(s.get("opened").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(s.get("resident").unwrap().as_usize().unwrap(), 0);
+
+    c.open_session(7).unwrap();
+    // Unknown sid: rejected, and session 7 is untouched.
+    let err = c.session_chunk(99, 0, &train_for(0, 0)).unwrap_err().to_string();
+    assert!(err.contains("[bad_request]"), "{err}");
+    let o0 = c.session_chunk(7, 0, &train_for(0, 0)).unwrap();
+    assert_eq!((o0.sid, o0.seq), (7, 0));
+    assert!((o0.predicted as usize) < 8);
+    let o1 = c.session_chunk(7, 1, &train_for(0, 1)).unwrap();
+    assert_eq!((o1.sid, o1.seq), (7, 1));
+    // Duplicate OPEN: BadRequest, but the resident session keeps running.
+    let err = c.open_session(7).unwrap_err().to_string();
+    assert!(err.contains("[bad_request]"), "{err}");
+    c.session_chunk(7, 2, &train_for(0, 2)).unwrap();
+    c.close_session(7).unwrap();
+
+    // Sequence gap on a fresh session: evicted, then unknown.
+    c.open_session(8).unwrap();
+    let err = c.session_chunk(8, 5, &train_for(0, 3)).unwrap_err().to_string();
+    assert!(err.contains("[bad_request]") && err.contains("expected 0"), "{err}");
+    let err = c.session_chunk(8, 0, &train_for(0, 4)).unwrap_err().to_string();
+    assert!(err.contains("[bad_request]"), "evicted sid must be unknown: {err}");
+
+    let stats = c.stats_versioned().unwrap();
+    let s = stats.get("sessions").unwrap();
+    assert_eq!(s.get("opened").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(s.get("closed").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(s.get("evicted").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(s.get("rejected").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(s.get("chunks").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(s.get("resident").unwrap().as_usize().unwrap(), 0);
+    server.shutdown();
+}
+
+/// Session admission control: at `session_lanes` capacity a further OPEN
+/// is ERROR Overload (counted in `sessions.rejected`), and closing a
+/// session frees its lane for the next occupant.
+#[test]
+fn session_open_overloads_at_lane_capacity() {
+    let server = start_server(ServeConfig {
+        session_lanes: 1,
+        ..ServeConfig::default()
+    });
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    c.open_session(1).unwrap();
+    let err = c.open_session(2).unwrap_err().to_string();
+    assert!(err.contains("[overload]"), "{err}");
+    c.close_session(1).unwrap();
+    c.open_session(2).unwrap();
+    c.close_session(2).unwrap();
+    let stats = c.stats().unwrap();
+    let s = stats.get("sessions").unwrap();
+    assert_eq!(s.get("opened").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(s.get("rejected").unwrap().as_usize().unwrap(), 1);
+    server.shutdown();
+}
+
+/// `Client::stats_versioned` fails loudly on a version mismatch — pinned
+/// against a minimal fake server answering STATS with a stale snapshot.
+#[test]
+fn stats_versioned_rejects_stale_server() {
+    use menage::serve::protocol::{encode_stats_reply, FrameReader};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut fr = FrameReader::new(1 << 20);
+        loop {
+            match fr.read_frame(&mut s) {
+                Ok(Some(f)) if FrameKind::from_u8(f.kind) == Some(FrameKind::Stats) => {
+                    let stale = Json::obj(vec![("stats_version", 2usize.into())]);
+                    write_frame(&mut s, FrameKind::StatsReply, &encode_stats_reply(&stale))
+                        .unwrap();
+                }
+                Ok(Some(_)) => {}
+                Ok(None) | Err(_) => break,
+            }
+        }
+    });
+    let mut c = Client::connect(addr).unwrap();
+    let err = c.stats_versioned().unwrap_err().to_string();
+    assert!(err.contains("stats_version 2"), "{err}");
+    assert!(err.contains(&format!("expects {STATS_VERSION}")), "{err}");
+    drop(c);
+    fake.join().unwrap();
 }
 
 /// SHUTDOWN frame: refused by default, honored (and visible to the

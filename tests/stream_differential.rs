@@ -1,0 +1,631 @@
+//! Differential harness pinning streaming (chunked, suspend/resume)
+//! execution to one-shot runs.
+//!
+//! The contract (see `Menage::run_chunk_into`): all cross-chunk state is
+//! the membrane plane — potentials plus the Neumaier error sidecar —
+//! because MEM_E drains fully within each step and spikes propagate
+//! through the core chain *within* a step. A chunk seam is therefore an
+//! ordinary step boundary, and splitting any event stream at arbitrary
+//! chunk boundaries must be **bit-identical** to one-shot execution over
+//! the concatenated train: every layer's spike train, the modeled cycle
+//! total, every core's folded `CoreStats`, and the hardware fault
+//! counters — in ideal *and* non-ideal analog mode, on dense *and*
+//! compressed-conv models, monolithic *and* sharded. The same holds for
+//! lane-resident sessions (`Menage::run_session_chunks_into`) under
+//! arbitrary interleavings with other sessions, and end-to-end over the
+//! serving layer's SESSION_OPEN/CHUNK/OUT frames.
+
+use std::time::Duration;
+
+use menage::accel::{Menage, RunOutput};
+use menage::analog::AnalogParams;
+use menage::config::{AcceleratorConfig, ModelConfig};
+use menage::fault::FaultPlan;
+use menage::mapping::Strategy;
+use menage::serve::{Client, ServeConfig, Server};
+use menage::shard::ShardedMenage;
+use menage::snn::{ConvSpec, QuantNetwork, SpikeTrain};
+use menage::util::prop;
+use menage::util::rng::Rng;
+
+fn model(sizes: &[usize], t: usize) -> ModelConfig {
+    ModelConfig {
+        name: "stream-diff".into(),
+        layer_sizes: sizes.to_vec(),
+        timesteps: t,
+        beta: 0.9,
+        v_threshold: 1.0,
+        v_reset: 0.0,
+    }
+}
+
+fn accel(cores: usize, m: usize, n: usize) -> AcceleratorConfig {
+    let mut c = AcceleratorConfig::accel1();
+    c.num_cores = cores;
+    c.a_neurons_per_core = m;
+    c.a_syns_per_core = m;
+    c.virtual_per_a_neuron = n;
+    c
+}
+
+/// Random chunk boundaries over a `t`-step train: `n` cuts drawn with
+/// replacement (duplicates produce legal 0-step chunks), plus the ends.
+fn random_cuts(rng: &mut Rng, t: usize, n: usize) -> Vec<usize> {
+    let mut cuts: Vec<usize> = (0..n).map(|_| rng.below(t + 1)).collect();
+    cuts.push(0);
+    cuts.push(t);
+    cuts.sort_unstable();
+    cuts
+}
+
+/// Split `input` at `cuts` (a sorted 0..=T boundary list) into chunks.
+fn chunks_of(input: &SpikeTrain, cuts: &[usize]) -> Vec<SpikeTrain> {
+    cuts.windows(2).map(|w| input.slice_steps(w[0]..w[1])).collect()
+}
+
+/// Concatenate per-chunk outputs back into one-shot shape: per layer, the
+/// chunk trains joined in order; cycles summed.
+fn concat_outputs(outs: &[RunOutput], layers: usize) -> (u64, Vec<SpikeTrain>) {
+    let mut cycles = 0u64;
+    let mut trains: Vec<SpikeTrain> = Vec::new();
+    for (k, out) in outs.iter().enumerate() {
+        cycles += out.cycles;
+        if k == 0 {
+            trains = out.trains.clone();
+        } else {
+            for (l, t) in out.trains.iter().enumerate() {
+                trains[l].spikes.extend(t.spikes.iter().cloned());
+            }
+        }
+    }
+    assert_eq!(trains.len(), layers);
+    (cycles, trains)
+}
+
+/// The core assertion: a chip fed `input` chunk-by-chunk (resuming the
+/// membrane plane between chunks) is bit-identical to a fresh chip's
+/// one-shot run — monolithic and sharded, with optional hardware faults.
+/// Returns an error string for the property driver.
+fn assert_chunked_equals_one_shot(
+    net: &QuantNetwork,
+    cfg: &AcceleratorConfig,
+    analog: &AnalogParams,
+    faults: Option<&FaultPlan>,
+    num_shards: usize,
+    input: &SpikeTrain,
+    cuts: &[usize],
+    tag: &str,
+) -> Result<(), String> {
+    let mut golden_chip = Menage::build(net, cfg, Strategy::IlpFlow, analog, 7)
+        .map_err(|e| format!("{tag}: mono build: {e}"))?;
+    let mut chunked_chip = golden_chip.clone();
+    if let Some(plan) = faults {
+        golden_chip.install_faults(plan);
+        chunked_chip.install_faults(plan);
+    }
+    let golden = golden_chip.run(input).map_err(|e| format!("{tag}: one-shot run: {e}"))?;
+
+    let chunks = chunks_of(input, cuts);
+    let mut outs: Vec<RunOutput> = Vec::new();
+    for (k, chunk) in chunks.iter().enumerate() {
+        let mut out = RunOutput::default();
+        chunked_chip
+            .run_chunk_into(chunk, k > 0, &mut out)
+            .map_err(|e| format!("{tag}: chunk {k}: {e}"))?;
+        outs.push(out);
+    }
+    let (cycles, trains) = concat_outputs(&outs, golden.trains.len());
+    if cycles != golden.cycles {
+        return Err(format!("{tag}: chunked cycles {cycles} != one-shot {}", golden.cycles));
+    }
+    for (l, (a, b)) in trains.iter().zip(&golden.trains).enumerate() {
+        if a.spikes != b.spikes {
+            return Err(format!("{tag}: layer {l} spike trains diverge (cuts {cuts:?})"));
+        }
+    }
+    for (l, (cc, gc)) in chunked_chip.cores.iter().zip(&golden_chip.cores).enumerate() {
+        if cc.stats != gc.stats {
+            return Err(format!(
+                "{tag}: core {l} CoreStats diverge:\n chunked: {:?}\n one-shot: {:?}",
+                cc.stats, gc.stats
+            ));
+        }
+    }
+    if chunked_chip.inputs_processed != golden_chip.inputs_processed {
+        return Err(format!(
+            "{tag}: chunked inputs_processed {} != one-shot {} (a chunked stream is ONE input)",
+            chunked_chip.inputs_processed, golden_chip.inputs_processed
+        ));
+    }
+    if chunked_chip.fault_counters() != golden_chip.fault_counters() {
+        return Err(format!(
+            "{tag}: fault counters diverge: chunked {:?} vs one-shot {:?}",
+            chunked_chip.fault_counters(),
+            golden_chip.fault_counters()
+        ));
+    }
+
+    // Sharded chunked execution against the same monolithic golden.
+    if num_shards > 0 {
+        let mut sharded = ShardedMenage::build(net, cfg, Strategy::IlpFlow, analog, 7, num_shards)
+            .map_err(|e| format!("{tag}: sharded build: {e}"))?;
+        if let Some(plan) = faults {
+            sharded.install_faults(plan);
+        }
+        let mut outs: Vec<RunOutput> = Vec::new();
+        for (k, chunk) in chunks.iter().enumerate() {
+            let mut out = RunOutput::default();
+            sharded
+                .run_chunk_into(chunk, k > 0, &mut out)
+                .map_err(|e| format!("{tag}: sharded chunk {k}: {e}"))?;
+            outs.push(out);
+        }
+        let (cycles, trains) = concat_outputs(&outs, golden.trains.len());
+        if cycles != golden.cycles {
+            return Err(format!(
+                "{tag}: sharded chunked cycles {cycles} != one-shot {}",
+                golden.cycles
+            ));
+        }
+        for (l, (a, b)) in trains.iter().zip(&golden.trains).enumerate() {
+            if a.spikes != b.spikes {
+                return Err(format!("{tag}: sharded layer {l} trains diverge (cuts {cuts:?})"));
+            }
+        }
+        let scores: Vec<_> = sharded.shards.iter().flat_map(|s| &s.cores).collect();
+        for (l, (sc, gc)) in scores.iter().zip(&golden_chip.cores).enumerate() {
+            if sc.stats != gc.stats {
+                return Err(format!("{tag}: sharded core {l} CoreStats diverge"));
+            }
+        }
+        if sharded.fault_counters() != golden_chip.fault_counters() {
+            return Err(format!("{tag}: sharded fault counters diverge"));
+        }
+    }
+    Ok(())
+}
+
+/// Randomized dense models × chunk boundaries, ideal analog mode,
+/// monolithic + sharded.
+#[test]
+fn prop_chunked_bit_identical_ideal() {
+    prop::check_n("chunked-vs-one-shot-ideal", 10, |rng| {
+        let l0 = 8 + rng.below(20);
+        let l1 = 4 + rng.below(12);
+        let l2 = 2 + rng.below(8);
+        let mcfg = model(&[l0, l1, l2], 3 + rng.below(6));
+        let net = QuantNetwork::random(&mcfg, 0.3 + rng.f64() * 0.5, rng);
+        let cfg = accel(2, 2 + rng.below(4), 2 + rng.below(4));
+        let t = 2 + rng.below(10);
+        let input = SpikeTrain::bernoulli(l0, t, 0.05 + rng.f64() * 0.4, rng);
+        let ncuts = 1 + rng.below(4);
+        let cuts = random_cuts(rng, t, ncuts);
+        let shards = 1 + rng.below(2);
+        assert_chunked_equals_one_shot(
+            &net,
+            &cfg,
+            &AnalogParams::ideal(),
+            None,
+            shards,
+            &input,
+            &cuts,
+            &format!("ideal k={shards}"),
+        )
+    });
+}
+
+/// Same property in non-ideal analog mode: resuming must carry the
+/// Neumaier error sidecar too, or accumulated compensation is lost at
+/// every chunk seam and the trains drift.
+#[test]
+fn prop_chunked_bit_identical_nonideal() {
+    prop::check_n("chunked-vs-one-shot-nonideal", 6, |rng| {
+        let l0 = 8 + rng.below(16);
+        let l1 = 4 + rng.below(10);
+        let l2 = 2 + rng.below(6);
+        let mcfg = model(&[l0, l1, l2], 3 + rng.below(5));
+        let net = QuantNetwork::random(&mcfg, 0.3 + rng.f64() * 0.4, rng);
+        let cfg = accel(2, 2 + rng.below(3), 2 + rng.below(3));
+        let t = 2 + rng.below(8);
+        let input = SpikeTrain::bernoulli(l0, t, 0.05 + rng.f64() * 0.35, rng);
+        let ncuts = 1 + rng.below(4);
+        let cuts = random_cuts(rng, t, ncuts);
+        let shards = 1 + rng.below(2);
+        assert_chunked_equals_one_shot(
+            &net,
+            &cfg,
+            &AnalogParams::paper(),
+            None,
+            shards,
+            &input,
+            &cuts,
+            &format!("nonideal k={shards}"),
+        )
+    });
+}
+
+/// Compressed-conv models (generator-based synapse rows) and injected
+/// hardware faults: the chunk seam must preserve the per-event fault RNG
+/// stream and the conv sweep accounting, both analog modes.
+#[test]
+fn chunked_conv_and_faulted_bit_identity() {
+    let spec = ConvSpec {
+        in_channels: 2,
+        in_h: 6,
+        in_w: 6,
+        out_channels: 3,
+        kernel_h: 3,
+        kernel_w: 3,
+        stride: 1,
+        padding: 1,
+    };
+    let mut rng = Rng::new(61);
+    let net = QuantNetwork::random_conv("stream-conv", &[spec], 4, 6, 0.3, &mut rng).unwrap();
+    let cfg = accel(net.layers.len(), 3, 3);
+    let dim = net.input_dim();
+    let plan = FaultPlan {
+        seed: 99,
+        stuck_row_frac: 0.3,
+        dead_slot_frac: 0.2,
+        bit_flip_p: 0.05,
+        drift_scale: 1.5,
+    };
+    for analog in [AnalogParams::ideal(), AnalogParams::paper()] {
+        for faults in [None, Some(&plan)] {
+            let t = 6;
+            let input = SpikeTrain::bernoulli(dim, t, 0.3, &mut rng);
+            let cuts = random_cuts(&mut rng, t, 3);
+            assert_chunked_equals_one_shot(
+                &net,
+                &cfg,
+                &analog,
+                faults,
+                0, // conv models shard along the layer chain; mono suffices here
+                &input,
+                &cuts,
+                &format!("conv faults={}", faults.is_some()),
+            )
+            .unwrap();
+        }
+    }
+    // The fault plan actually bites (the faulted identity is not vacuous).
+    let mut chip = Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 7).unwrap();
+    chip.install_faults(&plan);
+    chip.run(&SpikeTrain::bernoulli(dim, 6, 0.3, &mut rng)).unwrap();
+    let (stuck, dead, flips) = chip.fault_counters();
+    assert!(stuck + dead + flips > 0, "fault plan never fired");
+}
+
+/// Boundary edge cases: a single chunk (resume never taken), one chunk
+/// per step, 0-step chunks between every real chunk, and an entirely
+/// empty train.
+#[test]
+fn chunk_boundary_edge_cases() {
+    let mcfg = model(&[20, 12, 6], 6);
+    let mut rng = Rng::new(71);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let cfg = accel(2, 4, 4);
+    let t = 7;
+    let input = SpikeTrain::bernoulli(20, t, 0.3, &mut rng);
+    let per_step: Vec<usize> = (0..=t).collect();
+    let with_empties: Vec<usize> = vec![0, 0, 2, 2, 2, 5, t, t];
+    for analog in [AnalogParams::ideal(), AnalogParams::paper()] {
+        for (name, cuts) in [
+            ("single", vec![0, t]),
+            ("per-step", per_step.clone()),
+            ("with-empties", with_empties.clone()),
+        ] {
+            assert_chunked_equals_one_shot(
+                &net,
+                &cfg,
+                &analog,
+                None,
+                2,
+                &input,
+                &cuts,
+                &format!("edge {name}"),
+            )
+            .unwrap();
+        }
+        // 0-step everything: chunking an empty train is legal and inert.
+        let empty = SpikeTrain::new(20, 0);
+        assert_chunked_equals_one_shot(
+            &net,
+            &cfg,
+            &analog,
+            None,
+            2,
+            &empty,
+            &[0, 0, 0],
+            "edge empty-train",
+        )
+        .unwrap();
+    }
+}
+
+/// Lane-resident sessions under arbitrary interleaving: three sessions
+/// sharing one chip's lanes, their chunks dispatched in mixed rounds,
+/// must each be bit-identical to a dedicated chip running that session's
+/// concatenated train one-shot — and after folding every session lane,
+/// the shared chip's totals carry exactly the sum of the dedicated
+/// chips' work. Monolithic and sharded hosts.
+#[test]
+fn interleaved_session_lanes_match_dedicated_chips() {
+    let mcfg = model(&[24, 14, 6], 6);
+    let mut rng = Rng::new(81);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let cfg = accel(2, 4, 3);
+    for analog in [AnalogParams::ideal(), AnalogParams::paper()] {
+        // Per-session full trains and chunk boundary lists.
+        let trains: Vec<SpikeTrain> = (0..3)
+            .map(|s| SpikeTrain::bernoulli(24, 5 + s, 0.1 + 0.1 * s as f64, &mut rng))
+            .collect();
+        let all_cuts: Vec<Vec<usize>> = trains
+            .iter()
+            .map(|tr| random_cuts(&mut rng, tr.timesteps(), 2))
+            .collect();
+        let all_chunks: Vec<Vec<SpikeTrain>> =
+            trains.iter().zip(&all_cuts).map(|(tr, c)| chunks_of(tr, c)).collect();
+
+        let mono0 = Menage::build(&net, &cfg, Strategy::IlpFlow, &analog, 7).unwrap();
+        let mut host = mono0.clone();
+        let mut sharded_host =
+            ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &analog, 7, 2).unwrap();
+        for lane in 0..3 {
+            host.open_session_lane(lane);
+            sharded_host.open_session_lane(lane);
+        }
+        // Interleave: each round dispatches the next pending chunk of a
+        // varying subset of sessions (strictly ascending lanes per call).
+        let mut next = [0usize; 3];
+        let mut got: Vec<Vec<RunOutput>> = vec![Vec::new(), Vec::new(), Vec::new()];
+        let mut sgot: Vec<Vec<RunOutput>> = vec![Vec::new(), Vec::new(), Vec::new()];
+        let mut round = 0usize;
+        loop {
+            let mut jobs: Vec<(usize, &SpikeTrain)> = Vec::new();
+            for lane in 0..3 {
+                // Stagger: lane participates in a round unless skipped by
+                // a deterministic pattern, so rounds mix subsets.
+                if next[lane] < all_chunks[lane].len() && (round + lane) % 3 != 2 {
+                    jobs.push((lane, &all_chunks[lane][next[lane]]));
+                }
+            }
+            if jobs.is_empty() {
+                if (0..3).all(|l| next[l] >= all_chunks[l].len()) {
+                    break;
+                }
+                round += 1;
+                continue;
+            }
+            let mut outs = Vec::new();
+            host.run_session_chunks_into(&jobs, &mut outs).unwrap();
+            let mut souts = Vec::new();
+            sharded_host.run_session_chunks_into(&jobs, &mut souts).unwrap();
+            for (j, &(lane, _)) in jobs.iter().enumerate() {
+                got[lane].push(outs[j].clone());
+                sgot[lane].push(souts[j].clone());
+                next[lane] += 1;
+            }
+            round += 1;
+        }
+
+        // Each session vs a dedicated one-shot chip.
+        let mut dedicated_macs = 0u64;
+        for lane in 0..3 {
+            let mut dedicated = mono0.clone();
+            let golden = dedicated.run(&trains[lane]).unwrap();
+            for (tag, outs) in [("mono", &got[lane]), ("sharded", &sgot[lane])] {
+                let (cycles, ctrains) = concat_outputs(outs, golden.trains.len());
+                assert_eq!(cycles, golden.cycles, "{tag} session {lane}: cycles");
+                for (l, (a, b)) in ctrains.iter().zip(&golden.trains).enumerate() {
+                    assert_eq!(a.spikes, b.spikes, "{tag} session {lane} layer {l}");
+                }
+            }
+            // Per-lane stats equal the dedicated chip's scalar stats.
+            for (l, (hc, dc)) in host.cores.iter().zip(&dedicated.cores).enumerate() {
+                assert_eq!(hc.lane_stats(lane), &dc.stats, "session {lane} core {l}: stats");
+            }
+            dedicated_macs += dedicated.total_macs();
+        }
+
+        // Folding every lane surfaces the summed work on the shared hosts.
+        for lane in 0..3 {
+            host.fold_session_lane(lane);
+            sharded_host.fold_session_lane(lane);
+        }
+        assert_eq!(host.total_macs(), dedicated_macs, "mono host folded MACs");
+        assert_eq!(sharded_host.total_macs(), dedicated_macs, "sharded host folded MACs");
+        assert_eq!(host.inputs_processed, 3);
+        assert_eq!(sharded_host.inputs_processed, 3);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Serve-layer sessions over loopback TCP.
+// ---------------------------------------------------------------------
+
+fn serve_chip() -> Menage {
+    let mcfg = model(&[30, 16, 8], 6);
+    let cfg = accel(2, 4, 4);
+    let mut rng = Rng::new(8);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    Menage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 2).unwrap()
+}
+
+/// End-to-end: a session streamed over SESSION_CHUNK frames answers
+/// bit-identically to one-shot in-process execution of the concatenated
+/// train — chunk cycle deltas sum to the one-shot cycle total, the
+/// concatenated chunk outputs equal the one-shot output train, and the
+/// final running prediction is the one-shot prediction. Monolithic and
+/// sharded servers, several concurrent sessions per server.
+#[test]
+fn served_sessions_bit_identical_to_one_shot() {
+    let chip = serve_chip();
+    let mcfg = model(&[30, 16, 8], 6);
+    let mut rng = Rng::new(8);
+    let net = QuantNetwork::random(&mcfg, 0.5, &mut rng);
+    let cfg = accel(2, 4, 4);
+    let sharded =
+        ShardedMenage::build(&net, &cfg, Strategy::IlpFlow, &AnalogParams::ideal(), 2, 2)
+            .unwrap();
+    let scfg = || ServeConfig {
+        workers: 2,
+        lanes_per_worker: 2,
+        session_lanes: 4,
+        ..ServeConfig::default()
+    };
+    let mono_server = Server::start(&chip, "127.0.0.1:0", scfg()).unwrap();
+    let sharded_server = Server::start_sharded(&sharded, "127.0.0.1:0", scfg()).unwrap();
+
+    for (which, addr) in
+        [("mono", mono_server.local_addr()), ("sharded", sharded_server.local_addr())]
+    {
+        let mut client = Client::connect(addr).unwrap();
+        for s in 0..3u64 {
+            let mut rng = Rng::new(900 + s);
+            let t = 5 + s as usize;
+            let full = SpikeTrain::bernoulli(30, t, 0.25, &mut rng);
+            let mut local = serve_chip();
+            let golden = local.run(&full).unwrap();
+
+            client.open_session(s).unwrap();
+            let cuts = random_cuts(&mut rng, t, 2);
+            let mut cycles = 0u64;
+            let mut out_train = SpikeTrain::new(golden.output().num_neurons, 0);
+            let mut last_predicted = 0u32;
+            for (seq, chunk) in chunks_of(&full, &cuts).iter().enumerate() {
+                let out = client.session_chunk(s, seq as u64, chunk).unwrap();
+                cycles += out.chunk_cycles;
+                out_train.spikes.extend(out.output.spikes.iter().cloned());
+                last_predicted = out.predicted;
+            }
+            client.close_session(s).unwrap();
+
+            assert_eq!(cycles, golden.cycles, "{which} session {s}: cycles");
+            assert_eq!(out_train.spikes, golden.output().spikes, "{which} session {s}: output");
+            assert_eq!(
+                last_predicted as usize,
+                golden.predicted_class(),
+                "{which} session {s}: prediction"
+            );
+        }
+    }
+
+    // Session work is visible on the shutdown chips (stats folded on
+    // close, not lost with the lane).
+    let chips = mono_server.shutdown();
+    assert!(chips.iter().map(|c| c.total_macs()).sum::<u64>() > 0);
+    // 3 sessions = 3 logical inputs on the session host chip.
+    assert_eq!(chips.iter().map(|c| c.inputs_processed).sum::<u64>(), 3);
+    sharded_server.shutdown();
+}
+
+/// Pipelined session chunks (send-ahead without waiting) arrive in strict
+/// seq order and still match one-shot execution; stateless INFER traffic
+/// on the same server never perturbs resident session lanes.
+#[test]
+fn pipelined_session_chunks_with_concurrent_infer_traffic() {
+    let chip = serve_chip();
+    let server = Server::start(
+        &chip,
+        "127.0.0.1:0",
+        ServeConfig { workers: 2, lanes_per_worker: 2, session_lanes: 2, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let mut rng = Rng::new(907);
+    let t = 8;
+    let full = SpikeTrain::bernoulli(30, t, 0.25, &mut rng);
+    let mut local = serve_chip();
+    let golden = local.run(&full).unwrap();
+    let chunks = chunks_of(&full, &[0, 3, 3, 5, t]);
+
+    // A background connection hammers the stateless path meanwhile.
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let bg_stop = stop.clone();
+    let bg = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        let mut rng = Rng::new(911);
+        let mut n = 0u32;
+        while !bg_stop.load(std::sync::atomic::Ordering::Relaxed) {
+            let train = SpikeTrain::bernoulli(30, 3, 0.3, &mut rng);
+            c.infer(&train).unwrap();
+            n += 1;
+        }
+        n
+    });
+
+    let mut client = Client::connect(addr).unwrap();
+    client.open_session(42).unwrap();
+    for (seq, chunk) in chunks.iter().enumerate() {
+        client.send_session_chunk(42, seq as u64, chunk).unwrap();
+    }
+    let mut cycles = 0u64;
+    let mut out_train = SpikeTrain::new(golden.output().num_neurons, 0);
+    let mut seen = 0u64;
+    while (seen as usize) < chunks.len() {
+        match client.recv_reply().unwrap() {
+            menage::serve::Reply::SessionOut(out) => {
+                assert_eq!(out.sid, 42);
+                assert_eq!(out.seq, seen, "SESSION_OUT frames must arrive in seq order");
+                cycles += out.chunk_cycles;
+                out_train.spikes.extend(out.output.spikes.iter().cloned());
+                seen += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    client.close_session(42).unwrap();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let bg_n = bg.join().unwrap();
+    assert!(bg_n > 0, "background INFER traffic never ran");
+
+    assert_eq!(cycles, golden.cycles, "pipelined session: cycles");
+    assert_eq!(out_train.spikes, golden.output().spikes, "pipelined session: output");
+    server.shutdown();
+}
+
+/// Idle-timeout eviction: an abandoned session's lane is reclaimed (a new
+/// session can open at capacity 1), its work survives into the server's
+/// chip totals, and a late chunk for the evicted sid gets a clean
+/// BadRequest rather than stale lane state.
+#[test]
+fn idle_sessions_are_evicted_and_their_work_survives() {
+    let chip = serve_chip();
+    let server = Server::start(
+        &chip,
+        "127.0.0.1:0",
+        ServeConfig {
+            workers: 1,
+            lanes_per_worker: 1,
+            session_lanes: 1,
+            session_idle: Duration::from_millis(100),
+            poll_interval: Duration::from_millis(20),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let mut rng = Rng::new(917);
+
+    client.open_session(1).unwrap();
+    let chunk = SpikeTrain::bernoulli(30, 4, 0.3, &mut rng);
+    client.session_chunk(1, 0, &chunk).unwrap();
+    // Let the idle sweep reclaim the lane (never closed explicitly).
+    std::thread::sleep(Duration::from_millis(400));
+
+    // The lane is free again: a new session opens at capacity 1...
+    client.open_session(2).unwrap();
+    client.session_chunk(2, 0, &chunk).unwrap();
+    // ...and the evicted sid is gone (clean error, not stale state).
+    let err = client.session_chunk(1, 1, &chunk).unwrap_err().to_string();
+    assert!(err.contains("bad_request"), "{err}");
+    client.close_session(2).unwrap();
+
+    let chips = server.shutdown();
+    // Both sessions' work is in the totals: the evicted lane was folded
+    // before reuse, the closed one on close.
+    assert_eq!(chips.iter().map(|c| c.inputs_processed).sum::<u64>(), 2);
+    assert!(chips.iter().map(|c| c.total_macs()).sum::<u64>() > 0);
+}
